@@ -1,0 +1,94 @@
+//! Per-layer compression cost across methods and shapes — the paper's §3
+//! complexity claim: AWP's `O(d_out·d_in²)` GEMM iterations vs the
+//! Hessian-inverse (`O(d_in³)` + column sweeps) of SparseGPT/GPTQ, all on
+//! the same substrates. One bench per paper table's method set.
+//!
+//! ```bash
+//! cargo bench --bench compression
+//! ```
+
+use awp::compress::traits::{CompressionSpec, LayerCompressor};
+use awp::compress::{
+    awq::AwqQuant, gptq::Gptq, magnitude::MagnitudePrune, rtn::RtnQuant,
+    sequential::SequentialCombo, sparsegpt::SparseGpt, wanda::WandaPrune, AwpCpu,
+};
+use awp::tensor::Matrix;
+use awp::util::bench::bench;
+
+fn main() {
+    // the three weight-shape classes of the `small` model
+    let shapes = [(256usize, 256usize), (1024, 256), (256, 1024)];
+
+    println!("== Table 1/2 methods: pruning at 50% ==");
+    for &(m, k) in &shapes {
+        let w = Matrix::randn(m, k, 1);
+        let c = Matrix::randn_gram(k, 2);
+        let spec = CompressionSpec::prune(0.5);
+        let methods: Vec<(&str, Box<dyn LayerCompressor>)> = vec![
+            ("magnitude", Box::new(MagnitudePrune)),
+            ("wanda", Box::new(WandaPrune)),
+            ("sparsegpt", Box::new(SparseGpt::default())),
+            ("awp-cpu", Box::<AwpCpu>::default()),
+        ];
+        for (name, c_) in methods {
+            bench(&format!("prune50 {name} {m}x{k}"), 1.0, || {
+                c_.compress(&w, &c, &spec).unwrap();
+            });
+        }
+        println!();
+    }
+
+    println!("== Table 3 methods: INT4 quantization (group 32) ==");
+    for &(m, k) in &shapes[..2] {
+        let w = Matrix::randn(m, k, 3);
+        let c = Matrix::randn_gram(k, 4);
+        let spec = CompressionSpec::quant(4, 32);
+        let methods: Vec<(&str, Box<dyn LayerCompressor>)> = vec![
+            ("rtn", Box::new(RtnQuant)),
+            ("gptq", Box::new(Gptq::default())),
+            ("awq", Box::new(AwqQuant::default())),
+            ("awp-cpu", Box::<AwpCpu>::default()),
+        ];
+        for (name, c_) in methods {
+            bench(&format!("quant4 {name} {m}x{k}"), 1.0, || {
+                c_.compress(&w, &c, &spec).unwrap();
+            });
+        }
+        println!();
+    }
+
+    println!("== Table 4/5 methods: joint 50% + INT4 ==");
+    {
+        let (m, k) = (256, 256);
+        let w = Matrix::randn(m, k, 5);
+        let c = Matrix::randn_gram(k, 6);
+        let spec = CompressionSpec::joint(0.5, 4, 32);
+        let methods: Vec<(&str, Box<dyn LayerCompressor>)> = vec![
+            ("awq+wanda", Box::new(SequentialCombo::awq_then_wanda())),
+            ("wanda+awq", Box::new(SequentialCombo::wanda_then_awq())),
+            ("awp-cpu", Box::<AwpCpu>::default()),
+        ];
+        for (name, c_) in methods {
+            bench(&format!("joint50+int4 {name} {m}x{k}"), 1.5, || {
+                c_.compress(&w, &c, &spec).unwrap();
+            });
+        }
+    }
+
+    println!("\n== §3 cost scaling: AWP per-iteration GEMM vs Hessian inverse ==");
+    for &d in &[128usize, 256, 512, 1024] {
+        let w = Matrix::randn(128, d, 7);
+        // theta must differ from w everywhere or the residual zero-skip
+        // fast-path turns the bench into a no-op
+        let theta = Matrix::randn(128, d, 9);
+        let c = Matrix::randn_gram(d, 8);
+        let r = bench(&format!("awp pgd_step 128x{d}"), 0.5, || {
+            awp::tensor::ops::pgd_step(&w, &theta, &c, 0.1);
+        });
+        let flops = 2.0 * 128.0 * (d as f64) * (d as f64);
+        println!("    ↳ {:.1} GFLOP/s", r.gflops(flops));
+        bench(&format!("hessian-inverse chol {d}"), 0.5, || {
+            awp::compress::obs::hinv_upper_chol(&c, 0.01);
+        });
+    }
+}

@@ -1,0 +1,108 @@
+//! PJRT runtime benches: executable latency for every AOT program class
+//! plus actor-channel overhead — the L3↔artifact boundary of the perf
+//! pass. Skips cleanly when `artifacts/` is missing.
+//!
+//! ```bash
+//! make artifacts && cargo bench --bench runtime
+//! ```
+
+use std::sync::Arc;
+
+use awp::compress::awp::AwpBackend;
+use awp::compress::CpuBackend;
+use awp::runtime::{HloBackend, HostTensor, Manifest, Runtime};
+use awp::tensor::Matrix;
+use awp::trainer::init_checkpoint;
+use awp::util::bench::bench;
+use awp::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let Ok(manifest) = Manifest::load("artifacts") else {
+        eprintln!("no artifacts/ — run `make artifacts` first; skipping runtime bench");
+        return Ok(());
+    };
+    let manifest = Arc::new(manifest);
+    let runtime = Runtime::start()?;
+    let handle = runtime.handle();
+
+    println!("== AWP chunk programs (8 PGD iterations per call) vs CPU backend ==");
+    let hlo = HloBackend::new(handle.clone(), manifest.clone());
+    let cpu = CpuBackend;
+    for &(m, k) in &[(256usize, 256usize), (1024, 256), (256, 1024)] {
+        let w = Matrix::randn(m, k, 0);
+        let th = Matrix::zeros(m, k);
+        let c = Matrix::randn_gram(k, 1);
+        let eta = (2.0 / c.frob_norm()) as f32;
+        bench(&format!("hlo awp_prune chunk8 {m}x{k}"), 1.5, || {
+            hlo.prune_chunk(&w, &th, &c, eta, k / 2, 8).unwrap();
+        });
+        bench(&format!("cpu awp_prune chunk8 {m}x{k}"), 1.5, || {
+            cpu.prune_chunk(&w, &th, &c, eta, k / 2, 8).unwrap();
+        });
+    }
+
+    println!("\n== model programs ({} geometry) ==", "small");
+    let entry = manifest.model("small")?;
+    let mcfg = &entry.config;
+    let ck = init_checkpoint(mcfg, 0);
+    let params: Vec<HostTensor> = ck
+        .tensors
+        .iter()
+        .map(|(_, s, d)| HostTensor::vec_f32(d.clone(), s.clone()))
+        .collect();
+    let mut rng = Rng::new(2);
+    let tokens: Vec<i32> = (0..mcfg.batch * mcfg.seq_len)
+        .map(|_| rng.below(256) as i32)
+        .collect();
+    let tok_tensor = HostTensor::vec_i32(tokens, vec![mcfg.batch, mcfg.seq_len]);
+
+    let eval_path = manifest.model_program_path("small", "eval_loss")?;
+    let mut args = params.clone();
+    args.push(tok_tensor.clone());
+    bench("eval_loss small (4x128)", 2.0, || {
+        handle.execute("eval_loss", eval_path.clone(), args.clone()).unwrap();
+    });
+
+    let train_path = manifest.model_program_path("small", "train_step")?;
+    let zeros: Vec<HostTensor> = params
+        .iter()
+        .map(|t| HostTensor::vec_f32(vec![0.0; t.len()], t.shape().to_vec()))
+        .collect();
+    let mut targs = params.clone();
+    targs.extend(zeros.iter().cloned());
+    targs.extend(zeros.iter().cloned());
+    targs.push(tok_tensor.clone());
+    targs.push(HostTensor::scalar_f32(1e-3));
+    targs.push(HostTensor::scalar_f32(0.0));
+    bench("train_step small (4x128)", 2.0, || {
+        handle.execute("train_step", train_path.clone(), targs.clone()).unwrap();
+    });
+
+    let calib_path = manifest.model_program_path("small", "calib_capture")?;
+    let mut cargs = params.clone();
+    cargs.push(tok_tensor);
+    bench("calib_capture small (4x128)", 2.0, || {
+        handle.execute("calib_capture", calib_path.clone(), cargs.clone()).unwrap();
+    });
+
+    println!("\n== actor-channel overhead (marshal + queue, no compute) ==");
+    // smallest program available: decode_step on tiny
+    let tiny = manifest.model("tiny")?;
+    let dpath = manifest.model_program_path("tiny", "decode_step")?;
+    let tck = init_checkpoint(&tiny.config, 0);
+    let mut dargs: Vec<HostTensor> = tck
+        .tensors
+        .iter()
+        .map(|(_, s, d)| HostTensor::vec_f32(d.clone(), s.clone()))
+        .collect();
+    dargs.push(HostTensor::vec_i32(vec![65; tiny.config.decode_len],
+                                   vec![1, tiny.config.decode_len]));
+    bench("decode_step tiny (1x64)", 1.0, || {
+        handle.execute("decode_step", dpath.clone(), dargs.clone()).unwrap();
+    });
+
+    let stats = handle.stats()?;
+    println!("\nruntime totals: {} executions, exec {:.1}s, compile {:.1}s",
+             stats.executions, stats.exec_seconds, stats.compile_seconds);
+    Ok(())
+}

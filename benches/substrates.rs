@@ -1,0 +1,80 @@
+//! Substrate micro-benches: the L3 hot loops under the compression
+//! pipeline (GEMM panels, top-k, quant pack, Gram accumulation, corpus).
+//!
+//! ```bash
+//! cargo bench --bench substrates
+//! ```
+
+use awp::data::{Batcher, CorpusConfig, Split, SyntheticCorpus};
+use awp::quant::{pack_bits, quantize, QuantSpec};
+use awp::tensor::{ops, topk, Matrix};
+use awp::util::bench::bench;
+use awp::util::Rng;
+
+fn main() {
+    println!("== GEMM (thread-parallel blocked) ==");
+    for &n in &[128usize, 256, 512, 1024] {
+        let a = Matrix::randn(n, n, 0);
+        let b = Matrix::randn(n, n, 1);
+        let r = bench(&format!("matmul {n}x{n}x{n}"), 0.8, || {
+            std::hint::black_box(ops::matmul(&a, &b));
+        });
+        println!("    ↳ {:.1} GFLOP/s", r.gflops(2.0 * (n as f64).powi(3)));
+    }
+
+    println!("\n== fused pgd_step vs unfused (sub+matmul+scale+add) ==");
+    for &n in &[256usize, 1024] {
+        let w = Matrix::randn(256, n, 2);
+        let t = Matrix::randn(256, n, 3);
+        let c = Matrix::randn_gram(n, 4);
+        bench(&format!("pgd_step fused 256x{n}"), 0.8, || {
+            std::hint::black_box(ops::pgd_step(&w, &t, &c, 0.05));
+        });
+        bench(&format!("pgd_step unfused 256x{n}"), 0.8, || {
+            let r = ops::sub(&w, &t);
+            let g = ops::matmul(&r, &c);
+            std::hint::black_box(ops::add(&t, &ops::scale(&g, 0.05)));
+        });
+    }
+
+    println!("\n== projections ==");
+    let z = Matrix::randn(1024, 1024, 5);
+    bench("row_topk mask 1024x1024 k=512", 0.5, || {
+        std::hint::black_box(topk::hard_threshold_rows(&z, 512));
+    });
+    bench("quantize INT4 g32 1024x1024", 0.5, || {
+        std::hint::black_box(quantize(&z, QuantSpec::new(4, 32)));
+    });
+    let q = quantize(&z, QuantSpec::new(4, 32));
+    bench("pack INT4 codes 1M", 0.5, || {
+        std::hint::black_box(pack_bits(&q.codes, 4));
+    });
+
+    println!("\n== loss/grad reductions (stopping criterion path) ==");
+    let w = Matrix::randn(1024, 256, 6);
+    let t = topk::hard_threshold_rows(&w, 128);
+    let c = Matrix::randn_gram(256, 7);
+    bench("activation_loss 1024x256", 0.5, || {
+        std::hint::black_box(ops::activation_loss(&w, &t, &c));
+    });
+    bench("grad_frob_norm 1024x256", 0.5, || {
+        std::hint::black_box(ops::grad_frob_norm(&w, &t, &c));
+    });
+
+    println!("\n== data pipeline ==");
+    bench("corpus generate 1MiB", 1.0, || {
+        std::hint::black_box(SyntheticCorpus::generate(CorpusConfig {
+            total_bytes: 1 << 20,
+            ..Default::default()
+        }));
+    });
+    let corpus = SyntheticCorpus::generate(CorpusConfig {
+        total_bytes: 1 << 20,
+        ..Default::default()
+    });
+    let batcher = Batcher::new(&corpus, 4, 128);
+    let mut rng = Rng::new(0);
+    bench("batch sample 4x128", 0.2, || {
+        std::hint::black_box(batcher.sample(Split::Train, &mut rng));
+    });
+}

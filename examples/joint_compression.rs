@@ -1,0 +1,69 @@
+//! The §4.3 story in miniature: is "INT4 + 75% pruning" really better than
+//! "INT2"? (Both are ~2 bits/weight once the mask bit is counted.)
+//!
+//! ```bash
+//! cargo run --release --example joint_compression
+//! ```
+//!
+//! Runs on synthetic layers (no artifacts needed) and prints the
+//! activation-aware loss AND the real storage cost of each operating
+//! point, using the bit-packed formats from `awp::quant::pack` /
+//! `awp::sparse` so the bits-per-weight accounting is measured, not
+//! notional.
+
+use awp::compress::traits::{CompressionSpec, LayerCompressor};
+use awp::compress::AwpCpu;
+use awp::quant::{packed_size_bytes, quantize, QuantSpec};
+use awp::sparse::csr_from_dense;
+use awp::tensor::Matrix;
+
+/// Storage bytes for a joint (sparse + quantized) layer: packed codes for
+/// the survivors + per-group scales/zps + 1 mask bit per weight.
+fn joint_storage_bytes(theta: &Matrix, bits: u8, group: usize) -> usize {
+    let nnz = theta.nnz();
+    let n = theta.data.len();
+    let codes = packed_size_bytes(nnz, bits);
+    let groups = n / group;
+    let scales_zps = groups * 8; // f32 scale + f32 zp
+    let mask = n / 8;
+    codes + scales_zps + mask
+}
+
+fn main() -> anyhow::Result<()> {
+    let w = Matrix::randn(256, 256, 7);
+    let c = Matrix::randn_gram(256, 8);
+    let n = w.data.len();
+    let dense_bytes = 4 * n;
+    let awp = AwpCpu::default();
+
+    println!("layer 256x256, dense f32 = {} KiB\n", dense_bytes / 1024);
+    println!("{:28} {:>12} {:>10} {:>8}", "operating point", "act-loss",
+             "size KiB", "bits/w");
+
+    // INT2 straight quantization
+    let int2 = awp.compress(&w, &c, &CompressionSpec::quant(2, 32))?;
+    let q2 = quantize(&int2.theta, QuantSpec::new(2, 32));
+    let b2 = packed_size_bytes(q2.codes.len(), 2) + (n / 32) * 8;
+    println!("{:28} {:>12.2} {:>10.1} {:>8.2}", "AWP INT2", int2.stats.final_loss,
+             b2 as f64 / 1024.0, 8.0 * b2 as f64 / n as f64);
+
+    // INT4 + pruning at each §4.3 ratio
+    for ratio in [0.25, 0.5, 0.75] {
+        let spec = CompressionSpec::joint(ratio, 4, 32);
+        let out = awp.compress(&w, &c, &spec)?;
+        let bytes = joint_storage_bytes(&out.theta, 4, 32);
+        println!("{:28} {:>12.2} {:>10.1} {:>8.2}",
+                 format!("AWP INT4 + {:.0}% pruned", ratio * 100.0),
+                 out.stats.final_loss, bytes as f64 / 1024.0,
+                 8.0 * bytes as f64 / n as f64);
+    }
+
+    // CSR export of the 75% point (what a sparse engine would load)
+    let out = awp.compress(&w, &c, &CompressionSpec::joint(0.75, 4, 32))?;
+    let csr = csr_from_dense(&out.theta);
+    println!("\nCSR export of the 75% point: {} nnz, {} KiB (f32 values)",
+             csr.nnz(), csr.size_bytes() / 1024);
+    println!("\npaper's §4.3 finding to reproduce: the INT4+75% row should have \
+              LOWER loss than the INT2 row at comparable bits/weight.");
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! End-to-end driver (DESIGN.md §6): train a transformer LM from scratch
+//! via the AOT train-step executable, evaluate dense perplexity, run the
+//! full AWP compression pipeline (production HLO backend), re-evaluate,
+//! and generate a sample — all layers of the stack composing.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example train_compress_eval
+//! ```
+//!
+//! Uses the `tiny` model and short training so the whole demo finishes in
+//! a couple of minutes; `repro e2e` runs the same flow on `small` with the
+//! fully trained checkpoint.
+
+use std::sync::Arc;
+
+use awp::compress::awp::AwpHyper;
+use awp::compress::traits::CompressionSpec;
+use awp::config::RunConfig;
+use awp::coordinator::{calibrate, compress_model, make_compressor, Method};
+use awp::data::{Batcher, Split, SyntheticCorpus};
+use awp::eval::{generate, perplexity};
+use awp::runtime::{Manifest, Runtime};
+use awp::trainer::{self, TrainConfig};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = RunConfig::default();
+    let manifest = Arc::new(Manifest::load(&cfg.paths.artifacts)?);
+    let runtime = Runtime::start()?;
+    let handle = runtime.handle();
+    let model = "tiny";
+    let mcfg = manifest.model(model)?.config.clone();
+
+    println!("[1/5] generating corpus + training {model} ({} params)…",
+             mcfg.param_count());
+    let corpus = SyntheticCorpus::generate(cfg.corpus.clone());
+    let batcher = Batcher::new(&corpus, mcfg.batch, mcfg.seq_len);
+    let tc = TrainConfig { steps: 300, warmup: 30, log_every: 50, ..Default::default() };
+    let (ck, curve) = trainer::train(&handle, &manifest, model, &batcher, &tc)?;
+    println!("      loss curve: {:?}",
+             curve.iter().map(|(s, l)| format!("{s}:{l:.2}")).collect::<Vec<_>>());
+
+    println!("[2/5] dense perplexity…");
+    let dense = perplexity(&handle, &manifest, model, &ck, &batcher, Split::Val, 30)?;
+    println!("      dense ppl = {:.3} over {} tokens", dense.ppl, dense.tokens);
+
+    println!("[3/5] calibrating ({} batches)…", cfg.calib_batches);
+    let batches = batcher.calibration_set(cfg.calib_batches, 0xCA11B);
+    let grams = calibrate(&handle, &manifest, model, &ck, &batches)?;
+
+    println!("[4/5] AWP joint 50% + INT4 over the production HLO backend…");
+    let hyper = AwpHyper { group: manifest.awp_group, chunk: manifest.awp_chunk,
+                           ..AwpHyper::default() };
+    let compressor = make_compressor(Method::AwpHlo, hyper, Some((&handle, &manifest)))?;
+    let spec = CompressionSpec::joint(0.5, 4, manifest.awp_group);
+    let out = compress_model(&ck, &grams, compressor.as_ref(), &spec, true)?;
+    let ppl = perplexity(&handle, &manifest, model, &out.checkpoint, &batcher,
+                         Split::Val, 30)?;
+    println!("      compressed ppl = {:.3}  (dense {:.3}); pipeline {:.1}s, {} layers",
+             ppl.ppl, dense.ppl, out.seconds, out.reports.len());
+
+    println!("[5/5] sampling from the compressed model…");
+    let text = generate(&handle, &manifest, model, &out.checkpoint, "The ", 80)?;
+    println!("      {text:?}");
+
+    let stats = handle.stats()?;
+    println!("\nruntime: {} executions ({:.1}s exec, {:.1}s compile, {} programs)",
+             stats.executions, stats.exec_seconds, stats.compile_seconds,
+             stats.compilations);
+    Ok(())
+}

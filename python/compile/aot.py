@@ -1,0 +1,184 @@
+"""AOT lowering: every L2 program -> HLO text + artifacts/manifest.json.
+
+This is the ONLY entry point of the Python build path (``make artifacts``).
+The Rust coordinator is self-contained afterwards: it loads the HLO text via
+``HloModuleProto::from_text_file``, compiles on the PJRT CPU client, and
+executes — Python never runs on the request path.
+
+Interchange is HLO *text*, not serialized protos: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md). Programs are lowered with
+``return_tuple=True`` and unwrapped with ``to_tuple()`` on the Rust side.
+
+Emitted programs (see DESIGN.md §3 for the full table):
+
+* per model size: ``train_step``, ``eval_loss``, ``calib_capture``,
+  ``decode_step``;
+* per weight-shape class (deduped across sizes): ``awp_prune_{m}x{k}``,
+  ``awp_quant_{m}x{k}``, ``awp_joint_{m}x{k}`` (8 PGD iterations per call)
+  and a ``chunk=1`` pruning variant ``awp_prune1_{m}x{k}`` for Figure 1's
+  per-iteration loss series.
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import awp as awp_mod
+from . import model as model_mod
+from .model import MODEL_SIZES, ModelConfig
+
+GROUP_SIZE = 32     # quantization group (paper: 128 @ llama scale)
+AWP_CHUNK = 8       # PGD iterations folded into one executable call
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_program(fn, example_args, out_path: str) -> None:
+    # keep_unused: the HLO calling convention is positional over the FULL
+    # parameter list; without it jax DCEs dead inputs (e.g. ln_f in
+    # calib_capture, whose logits are discarded) and the Rust side's
+    # argument count no longer matches.
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def model_programs(cfg: ModelConfig, out_dir: str, manifest: dict,
+                   verbose: bool) -> None:
+    spec = model_mod.param_spec(cfg)
+    pshapes = [f32(s) for _, s in spec]
+    tokens = i32((cfg.batch, cfg.seq_len))
+    dec_tokens = i32((1, cfg.decode_len))
+    scalar = f32(())
+
+    progs = {
+        "train_step": (model_mod.make_train_step(cfg),
+                       pshapes * 3 + [tokens, scalar, scalar]),
+        "eval_loss": (model_mod.make_eval_loss(cfg), pshapes + [tokens]),
+        "calib_capture": (model_mod.make_calib_capture(cfg),
+                          pshapes + [tokens]),
+        "decode_step": (model_mod.make_decode_step(cfg),
+                        pshapes + [dec_tokens]),
+    }
+    entry = {
+        "config": cfg.to_json(),
+        "params": [{"name": n, "shape": list(s)} for n, s in spec],
+        "programs": {},
+    }
+    for pname, (fn, args) in progs.items():
+        fname = f"{pname}_{cfg.name}.hlo.txt"
+        t0 = time.time()
+        lower_program(fn, args, os.path.join(out_dir, fname))
+        if verbose:
+            print(f"  {fname:40s} {time.time() - t0:6.1f}s", flush=True)
+        entry["programs"][pname] = fname
+    manifest["models"][cfg.name] = entry
+
+
+def shape_classes():
+    """All (d_out, d_in) weight shapes across model sizes, deduped."""
+    shapes = set()
+    for cfg in MODEL_SIZES.values():
+        d, ff = cfg.d_model, cfg.d_ff
+        shapes.update({(d, d), (ff, d), (d, ff)})
+    return sorted(shapes)
+
+
+def awp_programs(out_dir: str, manifest: dict, verbose: bool) -> None:
+    manifest["awp"] = {"chunk": AWP_CHUNK, "group": GROUP_SIZE, "programs": {}}
+    for (m, k) in shape_classes():
+        w, th, c = f32((m, k)), f32((m, k)), f32((k, k))
+        eta, kk, qmax = f32(()), i32(()), f32(())
+        variants = {
+            f"awp_prune_{m}x{k}": (
+                partial(awp_mod.awp_prune_chunk, chunk=AWP_CHUNK),
+                [w, th, c, eta, kk]),
+            f"awp_prune1_{m}x{k}": (
+                partial(awp_mod.awp_prune_chunk, chunk=1),
+                [w, th, c, eta, kk]),
+            f"awp_quant_{m}x{k}": (
+                partial(awp_mod.awp_quant_chunk, chunk=AWP_CHUNK,
+                        group=GROUP_SIZE),
+                [w, th, c, eta, qmax]),
+            # chunk=1 variants: the quantization / joint PGD can drift after
+            # its early minimum (the INT grid is re-fit each projection), so
+            # the Rust driver steps once at a time and keeps the best iterate
+            # by rel_loss — mirroring the paper's small fixed budget (10 it).
+            f"awp_quant1_{m}x{k}": (
+                partial(awp_mod.awp_quant_chunk, chunk=1, group=GROUP_SIZE),
+                [w, th, c, eta, qmax]),
+            f"awp_joint_{m}x{k}": (
+                partial(awp_mod.awp_joint_chunk, chunk=AWP_CHUNK,
+                        group=GROUP_SIZE),
+                [w, th, c, eta, kk, qmax]),
+            f"awp_joint1_{m}x{k}": (
+                partial(awp_mod.awp_joint_chunk, chunk=1, group=GROUP_SIZE),
+                [w, th, c, eta, kk, qmax]),
+        }
+        for name, (fn, args) in variants.items():
+            fname = f"{name}.hlo.txt"
+            t0 = time.time()
+            lower_program(fn, args, os.path.join(out_dir, fname))
+            if verbose:
+                print(f"  {fname:40s} {time.time() - t0:6.1f}s", flush=True)
+            manifest["awp"]["programs"][name] = fname
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="tiny,small,medium",
+                    help="comma-separated model sizes to lower")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    verbose = not args.quiet
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"models": {}, "format": "hlo-text", "version": 1}
+
+    t0 = time.time()
+    for size in args.models.split(","):
+        cfg = MODEL_SIZES[size.strip()]
+        if verbose:
+            print(f"[aot] model programs: {cfg.name}", flush=True)
+        model_programs(cfg, args.out_dir, manifest, verbose)
+
+    if verbose:
+        print("[aot] awp programs", flush=True)
+    awp_programs(args.out_dir, manifest, verbose)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    if verbose:
+        n = sum(len(m["programs"]) for m in manifest["models"].values())
+        n += len(manifest["awp"]["programs"])
+        print(f"[aot] wrote {n} programs + manifest in "
+              f"{time.time() - t0:.1f}s -> {args.out_dir}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

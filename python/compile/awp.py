@@ -1,0 +1,89 @@
+"""Layer-2 AWP programs: chunked projected-gradient-descent steps.
+
+Algorithm 1 of the paper, specialised per constraint set:
+
+* ``awp_prune_chunk``  — Proj is row-wise hard thresholding (C_row, eq. 5);
+* ``awp_quant_chunk``  — Proj is the grouped INT grid (C_INTb);
+* ``awp_joint_chunk``  — Proj_INT(Proj_row(Z)), the paper's §4.3 composition.
+
+Each program runs ``chunk`` PGD iterations inside a ``lax.fori_loop`` (one
+HLO while-loop — no per-iteration host round-trip) and returns the iterate
+plus the two scalars the Rust coordinator needs:
+
+* ``rel_grad``  — ``||(W-Theta)C||_F / ||W||_F`` — the paper's stopping
+  criterion (threshold 1e-4, or max-iteration cap);
+* ``rel_loss``  — ``||(W-Theta)C^{1/2}||_F / ||W||_F`` — Figure 1's series,
+  computed via the trace identity (Appendix B) with no SVD.
+
+``k`` (sparsity per row) and ``qmax`` (INT levels) are *traced* scalars, so a
+single compiled executable per weight-shape class serves every pruning ratio
+and bit-width; the Rust side drives the §4.3 ramp schedule by simply varying
+``k`` call-to-call.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import kernels
+from .kernels.ref import topk_rows_ref as topk_rows  # L2 projection (XLA sort)
+
+
+def _stats(w, theta, c):
+    r = w - theta
+    g = r @ c
+    wn = jnp.sqrt(jnp.sum(w * w)) + 1e-30
+    rel_grad = jnp.sqrt(jnp.sum(g * g)) / wn
+    rel_loss = jnp.sqrt(jnp.maximum(jnp.sum(r * g), 0.0)) / wn
+    return rel_grad, rel_loss
+
+
+def awp_prune_chunk(w, theta, c, eta, k, *, chunk: int = 8):
+    """``chunk`` IHT iterations: Theta <- H_k(Theta + eta (W - Theta) C)."""
+
+    def body(_, th):
+        z = kernels.pgd_step(w, th, c, eta)
+        return topk_rows(z, k)
+
+    theta = lax.fori_loop(0, chunk, body, theta)
+    rel_grad, rel_loss = _stats(w, theta, c)
+    return theta, rel_grad, rel_loss
+
+
+def awp_quant_chunk(w, theta, c, eta, qmax, *, chunk: int = 8,
+                    group: int = 32):
+    """``chunk`` PGD iterations projected onto the grouped INT grid."""
+
+    def body(_, th):
+        z = kernels.pgd_step(w, th, c, eta)
+        return kernels.quant_project(z, qmax, group=group)
+
+    theta = lax.fori_loop(0, chunk, body, theta)
+    rel_grad, rel_loss = _stats(w, theta, c)
+    return theta, rel_grad, rel_loss
+
+
+def awp_joint_chunk(w, theta, c, eta, k, qmax, *, chunk: int = 8,
+                    group: int = 32):
+    """Joint pruning + quantization: Proj_INT(Proj_row(Z)) per iteration.
+
+    Matches §4.3: prune Z first (obtaining the sparsity mask implicitly),
+    quantize the pruned iterate, then re-apply the mask so zeros survive
+    quantization (the INT grid's zero-point may not be exact zero).
+
+    When ``qmax <= 0`` the quantization projection is skipped — the Rust
+    coordinator uses this for the first half of the §4.3 schedule (pure
+    pruning with a linearly ramped ratio) without a separate executable.
+    """
+
+    def body(_, th):
+        z = kernels.pgd_step(w, th, c, eta)
+        zp = topk_rows(z, k)
+        mask = (zp != 0.0).astype(zp.dtype)
+        zq = kernels.quant_project(zp, jnp.maximum(qmax, 1.0), group=group)
+        zq = zq * mask
+        return jnp.where(qmax > 0.0, zq, zp)
+
+    theta = lax.fori_loop(0, chunk, body, theta)
+    rel_grad, rel_loss = _stats(w, theta, c)
+    return theta, rel_grad, rel_loss

@@ -1,0 +1,21 @@
+"""Layer-1 Pallas kernels for the AWP hot path.
+
+Two kernels cover the per-iteration cost of Algorithm 1 in the paper:
+
+* :func:`pgd_step` — the fused gradient step ``Z = Theta + eta * (W - Theta) @ C``
+  (the ``O(d_out * d_in^2)`` term the paper calls out as the dominant cost).
+* :func:`quant_project` — the grouped affine INT-grid projection
+  ``Proj_{C_INTb}(Z)`` used for quantization and joint compression.
+
+Both are authored for TPU (BlockSpec HBM->VMEM schedule, MXU-shaped tiles)
+but lowered with ``interpret=True`` so the CPU PJRT plugin can execute the
+resulting HLO; see DESIGN.md §8 for the hardware-adaptation story.
+
+Pure-jnp oracles live in :mod:`compile.kernels.ref`.
+"""
+
+from .pgd_step import pgd_step
+from .quant_project import quant_project
+from . import ref
+
+__all__ = ["pgd_step", "quant_project", "ref"]

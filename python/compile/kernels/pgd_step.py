@@ -1,0 +1,107 @@
+"""Fused PGD gradient-step kernel: ``Z = Theta + eta * (W - Theta) @ C``.
+
+This is the dominant cost of AWP's Algorithm 1 — the paper notes the whole
+method is ``O(d_out * d_in^2)`` per iteration, i.e. one residual-GEMM against
+the activation Gram matrix ``C``, and stresses that (unlike OBC/SparseGPT/GPTQ)
+it needs neither an SVD of ``C`` nor a Hessian inverse.
+
+TPU mapping (DESIGN.md §8): the CUDA formulation ("run rows in parallel on the
+GPU") becomes a 3-d grid over ``(M/Tm, N/Tn, K/Tk)`` output/contraction tiles.
+
+* ``W`` and ``Theta`` tiles stream HBM->VMEM once per ``(m, k)``; the residual
+  ``W - Theta`` is formed *in VMEM* (never materialised in HBM — on an A100 the
+  paper's implementation would burn HBM bandwidth on it).
+* the ``(Tk, Tn)`` tile of ``C`` feeds the MXU systolic array; tile sizes
+  default to 128 jointly with the lane/sublane layout so the 128x128 MXU is
+  filled (f32 here; bf16 halves VMEM and doubles MXU rate if numerics allow).
+* the epilogue ``Theta + eta * acc`` fuses into the same kernel on the last
+  ``k`` step, so ``Z`` is written to HBM exactly once.
+
+VMEM footprint per step (f32, T=128): W + Theta_k + C + Theta_n + out tiles =
+5 * 128*128*4 B = 320 KiB, comfortably inside the ~16 MiB/core budget; the
+pipelined double-buffering Pallas inserts doubles the streamed tiles to
+~512 KiB. MXU utilisation estimate: the inner ``(128,128)x(128,128)`` matmul
+is exactly one MXU-shaped contraction per grid step, so the kernel is
+compute-bound for d_in >= 512 (arithmetic intensity ~64 FLOP/B at T=128).
+
+``interpret=True`` is mandatory on this image: real TPU lowering emits a
+Mosaic custom-call that the CPU PJRT plugin cannot execute.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_tile(dim: int, preferred: int) -> int:
+    """Largest tile <= preferred that divides dim (dims here are powers-of-two
+    multiples of 64 for the model shape classes; tests sweep odd sizes too)."""
+    t = min(preferred, dim)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def _pgd_kernel(nk: int, eta_ref, w_ref, tk_ref, c_ref, tn_ref, o_ref):
+    """One (m, n, k) grid step.
+
+    eta_ref: (1, 1) scalar  | w_ref, tk_ref: (Tm, Tk) tiles of W, Theta
+    c_ref:   (Tk, Tn) tile of C | tn_ref: (Tm, Tn) tile of Theta | o_ref: out.
+
+    The output tile for a fixed (m, n) stays resident in VMEM across the k
+    loop (its index map ignores k), so we accumulate partial products into it
+    directly: init to Theta on k == 0, add eta * (W - Theta)_mk @ C_kn each
+    step. After the last k step it holds Z = Theta + eta * (W - Theta) @ C.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = tn_ref[...]
+
+    resid = w_ref[...] - tk_ref[...]  # formed in VMEM, never hits HBM
+    # MXU contraction; preferred_element_type keeps the accumulator f32.
+    part = jnp.dot(resid, c_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] += eta_ref[0, 0] * part
+
+
+def pgd_step(w, theta, c, eta, *, tile_m: int = 128, tile_n: int = 128,
+             tile_k: int = 128, interpret: bool = True):
+    """``theta + eta * (w - theta) @ c`` with a fused Pallas kernel.
+
+    Args:
+      w, theta: ``(d_out, d_in)`` f32 — original and current weights.
+      c: ``(d_in, d_in)`` f32 — activation Gram matrix ``X X^T / n``.
+      eta: scalar f32 step size (traced; may vary at runtime).
+      tile_*: requested VMEM tile sizes; shrunk to divide the actual dims.
+
+    Returns:
+      ``(d_out, d_in)`` f32 ``Z`` — the pre-projection PGD iterate.
+    """
+    m, kdim = w.shape
+    k2, n = c.shape
+    assert kdim == k2 and k2 == n, f"C must be (d_in,d_in), got {c.shape}"
+    assert theta.shape == w.shape
+    tm = _pick_tile(m, tile_m)
+    tn = _pick_tile(n, tile_n)
+    tk = _pick_tile(kdim, tile_k)
+    nk = kdim // tk
+    eta_arr = jnp.asarray(eta, jnp.float32).reshape(1, 1)
+
+    grid = (m // tm, n // tn, nk)
+    return pl.pallas_call(
+        partial(_pgd_kernel, nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda mi, ni, ki: (0, 0)),      # eta
+            pl.BlockSpec((tm, tk), lambda mi, ni, ki: (mi, ki)),  # W
+            pl.BlockSpec((tm, tk), lambda mi, ni, ki: (mi, ki)),  # Theta (k)
+            pl.BlockSpec((tk, tn), lambda mi, ni, ki: (ki, ni)),  # C
+            pl.BlockSpec((tm, tn), lambda mi, ni, ki: (mi, ni)),  # Theta (n)
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(eta_arr, w, theta, c, theta)

@@ -1,0 +1,78 @@
+"""Grouped affine INT-grid projection kernel: ``Proj_{C_INTb}(Z)``.
+
+The paper's quantization constraint set is a per-group affine INT grid
+(group size 128 on Llama-scale models; 32 here to match the smaller d_in —
+the grouping *structure* is what matters). The projection of ``Z`` onto the
+grid is exactly round-to-nearest after per-group rescaling:
+
+    scale = (max - min) / qmax            (qmax = 2^bits - 1)
+    zp    = round(-min / scale)
+    q     = clamp(round(z / scale) + zp, 0, qmax)
+    proj  = (q - zp) * scale
+
+``qmax`` is passed as a traced scalar so ONE compiled executable serves
+INT2/INT3/INT4/INT8 — the Rust coordinator picks the bit-width at runtime.
+
+TPU mapping: purely elementwise + small per-group reductions -> VPU work, no
+MXU. The grid tiles rows only; each kernel invocation sees a ``(Tm, d_in)``
+slab reshaped to ``(Tm, n_groups, group)`` in VMEM registers. VMEM per step
+(f32, Tm=256, d_in=1536): in + out = 2 * 256*1536*4 B = 3 MiB — fine.
+
+interpret=True for CPU-PJRT executability (see pgd_step.py).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(group: int, qmax_ref, z_ref, o_ref):
+    z = z_ref[...]
+    tm, d = z.shape
+    g = z.reshape(tm, d // group, group)
+    qmax = qmax_ref[0, 0]
+    lo = jnp.min(g, axis=-1, keepdims=True)
+    hi = jnp.max(g, axis=-1, keepdims=True)
+    scale = (hi - lo) / qmax
+    # Flat group (hi == lo) -> scale 0; guard the divide, output collapses
+    # to lo which IS the group's single grid point.
+    safe = jnp.where(scale > 0.0, scale, 1.0)
+    zp = jnp.round(-lo / safe)
+    q = jnp.clip(jnp.round(g / safe) + zp, 0.0, qmax)
+    deq = (q - zp) * safe
+    deq = jnp.where(scale > 0.0, deq, lo)
+    o_ref[...] = deq.reshape(tm, d)
+
+
+def quant_project(z, qmax, *, group: int = 32, tile_m: int = 256,
+                  interpret: bool = True):
+    """Project ``z`` onto the per-group affine INT grid with ``qmax`` levels.
+
+    Args:
+      z: ``(d_out, d_in)`` f32; ``d_in`` must be a multiple of ``group``.
+      qmax: traced scalar f32 = ``2^bits - 1`` (e.g. 15.0 for INT4).
+      group: static quantization group size along ``d_in``.
+
+    Returns:
+      ``(d_out, d_in)`` f32 — nearest point of the INT grid (dequantized).
+    """
+    m, d = z.shape
+    assert d % group == 0, f"d_in={d} not a multiple of group={group}"
+    tm = min(tile_m, m)
+    while m % tm != 0:
+        tm -= 1
+    qmax_arr = jnp.asarray(qmax, jnp.float32).reshape(1, 1)
+
+    return pl.pallas_call(
+        partial(_quant_kernel, group),
+        grid=(m // tm,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda mi: (0, 0)),   # qmax
+            pl.BlockSpec((tm, d), lambda mi: (mi, 0)),  # Z row slab
+        ],
+        out_specs=pl.BlockSpec((tm, d), lambda mi: (mi, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        interpret=interpret,
+    )(qmax_arr, z)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every L1 kernel and L2 projection.
+
+These are the correctness ground truth: python/tests asserts the Pallas
+kernels match these to float tolerance across hypothesis-swept shapes, and
+the Rust test-suite cross-checks its pure-CPU AWP implementation against
+vectors generated from these (see rust/tests/).
+"""
+
+import jax.numpy as jnp
+import jax
+
+
+def pgd_step_ref(w, theta, c, eta):
+    """``theta + eta * (w - theta) @ c`` — oracle for kernels.pgd_step."""
+    return theta + eta * (w - theta) @ c
+
+
+def quant_project_ref(z, qmax, *, group: int = 32):
+    """Grouped affine round-to-nearest — oracle for kernels.quant_project."""
+    m, d = z.shape
+    g = z.reshape(m, d // group, group)
+    lo = jnp.min(g, axis=-1, keepdims=True)
+    hi = jnp.max(g, axis=-1, keepdims=True)
+    scale = (hi - lo) / qmax
+    safe = jnp.where(scale > 0.0, scale, 1.0)
+    zp = jnp.round(-lo / safe)
+    q = jnp.clip(jnp.round(g / safe) + zp, 0.0, qmax)
+    deq = jnp.where(scale > 0.0, (q - zp) * safe, lo)
+    return deq.reshape(m, d)
+
+
+def topk_rows_ref(z, k):
+    """Row-wise hard threshold: keep the k largest-|.| entries of each row.
+
+    Oracle for the L2 ``topk_rows`` projection (compile/awp.py). ``k`` is a
+    traced scalar; implemented by sorting |z| per row and thresholding at the
+    k-th largest value, which keeps >= k entries on exact ties (measure-zero
+    for float data; tests use tie-free inputs for the exact-k property).
+    """
+    absz = jnp.abs(z)
+    srt = jnp.sort(absz, axis=1)[:, ::-1]  # descending
+    kc = jnp.clip(k, 1, z.shape[1])
+    kth = jax.lax.dynamic_slice_in_dim(srt, kc - 1, 1, axis=1)
+    mask = absz >= kth
+    return jnp.where(mask, z, 0.0)
+
+
+def awp_loss_ref(w, theta, c):
+    """Activation-aware loss ``||(W - Theta) C^{1/2}||_F^2`` WITHOUT forming
+    ``C^{1/2}``: equals ``tr[(W-Theta) C (W-Theta)^T] = sum(R * (R @ C))``.
+
+    This identity (paper Appendix B) is what lets both the python and rust
+    sides track Figure-1's loss series with one GEMM instead of an SVD.
+    """
+    r = w - theta
+    return jnp.maximum(jnp.sum(r * (r @ c)), 0.0)

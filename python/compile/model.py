@@ -1,0 +1,282 @@
+"""Layer-2 JAX model: the transformer LM substrate.
+
+The paper compresses Llama-family checkpoints; we cannot ship those, so the
+repo trains its own pre-norm transformer LMs (DESIGN.md §2) and compresses
+them. Everything a Llama block exposes to layer-wise compression is here:
+RMSNorm, RoPE causal attention with separate q/k/v/o projections, a SiLU MLP,
+and a tied embedding head — i.e. four linear weight sites per block with the
+three shape classes ``(d,d)``, ``(ff,d)``, ``(d,ff)``.
+
+Exported programs (lowered by compile/aot.py, executed from Rust):
+
+* ``train_step``    — AdamW fwd/bwd update, donated params/opt-state.
+* ``eval_loss``     — summed next-token NLL + token count (perplexity in Rust).
+* ``calib_capture`` — per-site activation Gram updates ``X X^T`` (the ``C``
+  matrices of eq. (3)), accumulated across batches by the Rust coordinator.
+* ``decode_step``   — last-position logits for greedy generation.
+
+Parameters cross the HLO boundary as a *flat list* in ``param_names()``
+order; the same order is recorded in artifacts/manifest.json and used by
+rust/src/model/store.rs. Python never runs at serving/compression time.
+"""
+
+from dataclasses import dataclass, field, asdict
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# Config
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + AOT batch geometry for one model size."""
+
+    name: str
+    vocab: int = 256          # byte-level tokenizer (rust/src/data)
+    d_model: int = 256
+    n_heads: int = 8
+    n_layers: int = 4
+    d_ff: int = 1024
+    seq_len: int = 128        # train/eval/calib window
+    batch: int = 4            # train/eval/calib batch
+    decode_len: int = 64      # greedy-generation window
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def to_json(self) -> dict:
+        return asdict(self)
+
+
+# The three sizes stand in for the paper's model ladder (DESIGN.md §2):
+# tiny ~ Llama-3.2-1B analog, small ~ Llama-2-7B / 3.1-8B analog,
+# medium ~ Llama-2-13B analog.
+MODEL_SIZES: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig(name="tiny", d_model=128, n_heads=4, n_layers=4,
+                        d_ff=512),
+    "small": ModelConfig(name="small", d_model=256, n_heads=8, n_layers=4,
+                         d_ff=1024),
+    "medium": ModelConfig(name="medium", d_model=384, n_heads=8, n_layers=6,
+                          d_ff=1536),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic (name, shape) list — the HLO calling convention."""
+    spec: List[Tuple[str, Tuple[int, ...]]] = [("embed", (cfg.vocab, cfg.d_model))]
+    for i in range(cfg.n_layers):
+        p = f"blocks.{i}."
+        spec += [
+            (p + "ln1", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.d_model)),
+            (p + "wk", (cfg.d_model, cfg.d_model)),
+            (p + "wv", (cfg.d_model, cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2", (cfg.d_model,)),
+            (p + "w_up", (cfg.d_ff, cfg.d_model)),
+            (p + "w_down", (cfg.d_model, cfg.d_ff)),
+        ]
+    spec.append(("ln_f", (cfg.d_model,)))
+    return spec
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    return [n for n, _ in param_spec(cfg)]
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jax.Array]:
+    """Scaled-normal init (0.02 embeddings, 1/sqrt(fan_in) linears)."""
+    key = jax.random.PRNGKey(seed)
+    params: Dict[str, jax.Array] = {}
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name == "embed":
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            fan_in = shape[1]
+            params[name] = jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(fan_in)
+    return params
+
+
+def flatten(cfg: ModelConfig, params: Dict[str, jax.Array]) -> List[jax.Array]:
+    return [params[n] for n in param_names(cfg)]
+
+
+def unflatten(cfg: ModelConfig, flat) -> Dict[str, jax.Array]:
+    names = param_names(cfg)
+    assert len(flat) == len(names)
+    return dict(zip(names, flat))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+
+def _rmsnorm(x, g):
+    return x * g * lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def _rope(x, theta: float):
+    """Rotary embedding over (B, S, H, Dh)."""
+    b, s, h, dh = x.shape
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    pos = jnp.arange(s, dtype=jnp.float32)
+    ang = pos[:, None] * freqs[None, :]            # (S, half)
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def forward(cfg: ModelConfig, params: Dict[str, jax.Array], tokens,
+            capture: bool = False):
+    """Run the LM; returns logits ``(B, S, V)`` and (optionally) the per-site
+    activation Grams ``X X^T`` that define the compression objective."""
+    b, s = tokens.shape
+    x = params["embed"][tokens]                      # (B, S, d)
+    mask = jnp.tril(jnp.ones((s, s), jnp.float32))
+    neg = jnp.float32(-1e9)
+
+    grams = {"attn_in": [], "attn_out_in": [], "mlp_in": [], "mlp_down_in": []}
+
+    def gram(a):                                      # a: (B, S, D)
+        flat = a.reshape(-1, a.shape[-1])
+        return flat.T @ flat                          # (D, D), sum not mean
+
+    for i in range(cfg.n_layers):
+        p = f"blocks.{i}."
+        h = _rmsnorm(x, params[p + "ln1"])
+        if capture:
+            grams["attn_in"].append(gram(h))
+        q = (h @ params[p + "wq"].T).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        k = (h @ params[p + "wk"].T).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        v = (h @ params[p + "wv"].T).reshape(b, s, cfg.n_heads, cfg.head_dim)
+        q = _rope(q, cfg.rope_theta)
+        k = _rope(k, cfg.rope_theta)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(cfg.head_dim)
+        att = jnp.where(mask[None, None, :, :] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, cfg.d_model)
+        if capture:
+            grams["attn_out_in"].append(gram(o))
+        x = x + o @ params[p + "wo"].T
+
+        h = _rmsnorm(x, params[p + "ln2"])
+        if capture:
+            grams["mlp_in"].append(gram(h))
+        u = jax.nn.silu(h @ params[p + "w_up"].T)     # (B, S, ff)
+        if capture:
+            grams["mlp_down_in"].append(gram(u))
+        x = x + u @ params[p + "w_down"].T
+
+    x = _rmsnorm(x, params["ln_f"])
+    logits = x @ params["embed"].T                    # tied head
+    if capture:
+        stacked = {k2: jnp.stack(v2) for k2, v2 in grams.items()}
+        return logits, stacked
+    return logits
+
+
+def nll(cfg: ModelConfig, params, tokens):
+    """Summed next-token negative log-likelihood + token count."""
+    logits = forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = tokens[:, 1:]
+    picked = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return -jnp.sum(picked), jnp.float32(tgt.size)
+
+
+# ---------------------------------------------------------------------------
+# Exported programs (flat-list calling convention)
+
+ADAM_B1, ADAM_B2, ADAM_EPS, WEIGHT_DECAY = 0.9, 0.95, 1e-8, 0.01
+
+
+def make_train_step(cfg: ModelConfig):
+    """(params…, m…, v…, tokens, lr, step) -> (params'…, m'…, v'…, loss)."""
+    n = len(param_names(cfg))
+    names = param_names(cfg)
+
+    def program(*args):
+        flat_p, flat_m, flat_v = args[:n], args[n:2 * n], args[2 * n:3 * n]
+        tokens, lr, step = args[3 * n], args[3 * n + 1], args[3 * n + 2]
+        params = unflatten(cfg, list(flat_p))
+
+        def loss_fn(p):
+            total, count = nll(cfg, p, tokens)
+            return total / count
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - ADAM_B1 ** t
+        bc2 = 1.0 - ADAM_B2 ** t
+        new_p, new_m, new_v = [], [], []
+        for name, p, m, v in zip(names, flat_p, flat_m, flat_v):
+            g = grads[name]
+            m2 = ADAM_B1 * m + (1 - ADAM_B1) * g
+            v2 = ADAM_B2 * v + (1 - ADAM_B2) * g * g
+            upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + ADAM_EPS)
+            decay = 0.0 if name.endswith(("ln1", "ln2", "ln_f")) else WEIGHT_DECAY
+            new_p.append(p - lr * (upd + decay * p))
+            new_m.append(m2)
+            new_v.append(v2)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss,)
+
+    return program
+
+
+def make_eval_loss(cfg: ModelConfig):
+    """(params…, tokens) -> (sum_nll, token_count)."""
+    n = len(param_names(cfg))
+
+    def program(*args):
+        params = unflatten(cfg, list(args[:n]))
+        tokens = args[n]
+        return nll(cfg, params, tokens)
+
+    return program
+
+
+def make_calib_capture(cfg: ModelConfig):
+    """(params…, tokens) -> (attn_in, attn_out_in, mlp_in, mlp_down_in, count).
+
+    Gram outputs are SUMS of ``x x^T`` over the batch's tokens, shaped
+    ``(L, d, d)`` / ``(L, ff, ff)``; the Rust coordinator accumulates over
+    calibration batches and divides by the total token count to form the
+    paper's ``C = X X^T / n``.
+    """
+    n = len(param_names(cfg))
+
+    def program(*args):
+        params = unflatten(cfg, list(args[:n]))
+        tokens = args[n]
+        _, grams = forward(cfg, params, tokens, capture=True)
+        count = jnp.float32(tokens.shape[0] * tokens.shape[1])
+        return (grams["attn_in"], grams["attn_out_in"], grams["mlp_in"],
+                grams["mlp_down_in"], count)
+
+    return program
+
+
+def make_decode_step(cfg: ModelConfig):
+    """(params…, tokens(1, decode_len)) -> last-position logits (V,)."""
+    n = len(param_names(cfg))
+
+    def program(*args):
+        params = unflatten(cfg, list(args[:n]))
+        tokens = args[n]
+        logits = forward(cfg, params, tokens)
+        return (logits[0, -1, :],)
+
+    return program

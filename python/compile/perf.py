@@ -1,0 +1,105 @@
+"""Perf analysis for L1 (Pallas kernel structure) and L2 (lowered HLO).
+
+Run:  cd python && python -m compile.perf
+
+interpret=True gives CPU-numpy timings which are NOT a TPU proxy, so L1 is
+optimized *structurally*: this tool reports, per candidate tile config,
+
+* VMEM working set (streamed tiles + resident output tile, double-buffered)
+  against the ~16 MiB/core budget;
+* MXU-shape fit (tiles vs the 128x128 systolic array) and the implied
+  utilization of each contraction step;
+* arithmetic intensity (FLOP per HBM byte) → compute- vs memory-bound.
+
+For L2 it runs XLA's cost analysis on the lowered AWP chunk program and the
+train step: total FLOPs, bytes accessed, and the FLOP:byte ratio — the
+"no redundant recomputation / fused epilogue" check in DESIGN.md §9.
+Numbers land in EXPERIMENTS.md §Perf.
+"""
+
+import jax
+import jax.numpy as jnp
+from functools import partial
+
+from . import awp as awp_mod
+from . import model as model_mod
+from .model import MODEL_SIZES
+
+
+def l1_tile_report(shapes, tiles):
+    print("== L1 pgd_step tile analysis (f32) ==")
+    print(f"{'shape':>12} {'tile':>12} {'VMEM KiB':>9} {'MXU fill':>9} "
+          f"{'AI F/B':>7}  note")
+    budget = 16 * 1024  # KiB per TPU core
+    for (m, k) in shapes:
+        n = k
+        for (tm, tn, tk) in tiles:
+            tm_, tn_, tk_ = min(tm, m), min(tn, n), min(tk, k)
+            # resident: out tile; streamed (double-buffered x2): W, Θk, C, Θn
+            resident = tm_ * tn_ * 4
+            streamed = 2 * (tm_ * tk_ + tm_ * tk_ + tk_ * tn_ + tm_ * tn_) * 4
+            vmem_kib = (resident + streamed) / 1024
+            # MXU fill: each (tm x tk) @ (tk x tn) step vs 128x128 PEs
+            fill = min(tm_, 128) * min(tn_, 128) / (128 * 128)
+            # arithmetic intensity per grid step: 2*tm*tn*tk FLOP over
+            # (W + Θk + C tiles) HBM reads + out write amortised over k-steps
+            flop = 2 * tm_ * tn_ * tk_
+            bytes_ = (2 * tm_ * tk_ + tk_ * tn_) * 4
+            ai = flop / bytes_
+            note = "OK" if vmem_kib <= budget else "OVER VMEM"
+            if fill < 1.0:
+                note += ", MXU under-filled"
+            print(f"{m:>5}x{k:<6} {f'{tm_}/{tn_}/{tk_}':>12} {vmem_kib:>9.0f} "
+                  f"{fill:>8.0%} {ai:>7.1f}  {note}")
+    print()
+
+
+def l2_cost(name, fn, args):
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    flops = ca.get("flops", float("nan"))
+    bytes_ = ca.get("bytes accessed", float("nan"))
+    print(f"{name:>28}: {flops/1e9:8.3f} GFLOP  {bytes_/1e6:8.1f} MB  "
+          f"AI {flops/max(bytes_,1):6.1f} F/B")
+    return flops, bytes_
+
+
+def main():
+    shapes = [(256, 256), (1024, 256), (256, 1024), (1536, 384), (384, 1536)]
+    tiles = [(64, 64, 64), (128, 128, 128), (256, 128, 128), (128, 256, 128)]
+    l1_tile_report(shapes, tiles)
+
+    print("== L2 XLA cost analysis (lowered + compiled programs) ==")
+    f32 = lambda s: jax.ShapeDtypeStruct(s, jnp.float32)
+    i32 = lambda s: jax.ShapeDtypeStruct(s, jnp.int32)
+
+    for (m, k) in [(256, 256), (256, 1024)]:
+        w, c = f32((m, k)), f32((k, k))
+        flops, _ = l2_cost(
+            f"awp_prune chunk8 {m}x{k}",
+            partial(awp_mod.awp_prune_chunk, chunk=8),
+            [w, w, c, f32(()), i32(())])
+        # XLA's cost analysis counts a while-loop body ONCE regardless of
+        # trip count, so compare against one PGD body + the stats GEMM.
+        ideal_once = 2 * m * k * k + 2 * m * k * k
+        print(f"{'':>28}  body-once ideal {ideal_once/1e9:8.3f} GFLOP  "
+              f"overhead {flops/ideal_once - 1:+.1%}")
+
+    cfg = MODEL_SIZES["small"]
+    spec = model_mod.param_spec(cfg)
+    pshapes = [f32(s) for _, s in spec]
+    tokens = i32((cfg.batch, cfg.seq_len))
+    scalar = f32(())
+    l2_cost("train_step small", model_mod.make_train_step(cfg),
+            pshapes * 3 + [tokens, scalar, scalar])
+    l2_cost("eval_loss small", model_mod.make_eval_loss(cfg),
+            pshapes + [tokens])
+    l2_cost("calib_capture small", model_mod.make_calib_capture(cfg),
+            pshapes + [tokens])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""AOT pipeline: HLO-text emission and manifest integrity.
+
+Uses a temp dir with the tiny model only, so the suite stays fast; the full
+artifact set is exercised end-to-end by the Rust integration tests.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out),
+         "--models", "tiny", "--quiet"],
+        cwd=os.path.join(REPO, "python"), capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr
+    return out
+
+
+def test_manifest_exists_and_parses(built):
+    man = json.loads((built / "manifest.json").read_text())
+    assert man["format"] == "hlo-text"
+    assert "tiny" in man["models"]
+    assert man["awp"]["chunk"] >= 1
+    assert man["awp"]["group"] == 32
+
+
+def test_all_referenced_files_exist(built):
+    man = json.loads((built / "manifest.json").read_text())
+    files = list(man["awp"]["programs"].values())
+    for m in man["models"].values():
+        files += list(m["programs"].values())
+    for f in files:
+        p = built / f
+        assert p.exists() and p.stat().st_size > 100, f
+
+
+def test_hlo_text_is_parseable_shape(built):
+    """Every program is HLO text with an entry computation layout (what
+    HloModuleProto::from_text_file needs) and never a serialized proto."""
+    man = json.loads((built / "manifest.json").read_text())
+    for f in list(man["awp"]["programs"].values())[:4]:
+        head = (built / f).read_text()[:200]
+        assert head.startswith("HloModule"), f
+        assert "entry_computation_layout" in head, f
+
+
+def test_param_order_matches_model_spec(built):
+    from compile import model as M
+    man = json.loads((built / "manifest.json").read_text())
+    spec = M.param_spec(M.MODEL_SIZES["tiny"])
+    got = [(p["name"], tuple(p["shape"])) for p in man["models"]["tiny"]["params"]]
+    assert got == spec
+
+
+def test_calib_capture_keeps_unused_params(built):
+    """Regression: jax DCEs dead inputs (ln_f, last block's w_down are unused
+    by calib_capture) unless lowered with keep_unused=True; the Rust side
+    passes the FULL positional parameter list and would get an arity error.
+    Count parameters in the entry computation layout."""
+    from compile import model as M
+    man = json.loads((built / "manifest.json").read_text())
+    fname = man["models"]["tiny"]["programs"]["calib_capture"]
+    head = (built / fname).read_text()[:4000]
+    layout = head.split("entry_computation_layout={(")[1].split(")->")[0]
+    n_args = layout.count("f32[") + layout.count("s32[")
+    n_params = len(M.param_spec(M.MODEL_SIZES["tiny"]))
+    assert n_args == n_params + 1, f"{n_args} args vs {n_params} params + tokens"
+
+
+def test_awp_program_names_cover_all_shape_classes(built):
+    from compile import model as M
+    man = json.loads((built / "manifest.json").read_text())
+    progs = man["awp"]["programs"]
+    for cfg in [M.MODEL_SIZES["tiny"]]:
+        d, ff = cfg.d_model, cfg.d_ff
+        for (m, k) in [(d, d), (ff, d), (d, ff)]:
+            for mode in ["prune", "prune1", "quant", "quant1", "joint",
+                         "joint1"]:
+                assert f"awp_{mode}_{m}x{k}" in progs

@@ -1,0 +1,223 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (hypothesis-swept).
+
+This is the CORE correctness signal for the compute layer: every kernel that
+ends up inside an AOT artifact must match ref.py bit-for-bit-ish (f32 matmul
+reassociation tolerance) across shapes, tilings and parameter ranges.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+def psd_gram(rng, d, n_factor=2):
+    """A realistic activation Gram: C = X X^T / n, PSD with spread spectrum."""
+    x = rng.normal(size=(d, n_factor * d)) * np.exp(rng.normal(size=(d, 1)))
+    c = x @ x.T / (n_factor * d)
+    return jnp.asarray(c, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# pgd_step
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 12).map(lambda v: 8 * v),
+    k=st.integers(1, 12).map(lambda v: 8 * v),
+    tile=st.sampled_from([8, 16, 32, 64]),
+    eta=st.floats(0.0, 0.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pgd_step_matches_ref(m, k, tile, eta, seed):
+    rng = np.random.default_rng(seed)
+    w, th = rand(rng, m, k), rand(rng, m, k)
+    c = psd_gram(rng, k)
+    got = kernels.pgd_step(w, th, c, eta, tile_m=tile, tile_n=tile, tile_k=tile)
+    want = ref.pgd_step_ref(w, th, c, eta)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_pgd_step_eta_zero_is_identity():
+    rng = np.random.default_rng(0)
+    w, th, c = rand(rng, 64, 32), rand(rng, 64, 32), psd_gram(rng, 32)
+    out = kernels.pgd_step(w, th, c, 0.0)
+    np.testing.assert_allclose(out, th, atol=1e-6)
+
+
+def test_pgd_step_fixed_point():
+    """Theta == W is a fixed point of the gradient step for any eta."""
+    rng = np.random.default_rng(1)
+    w, c = rand(rng, 32, 32), psd_gram(rng, 32)
+    out = kernels.pgd_step(w, w, c, 0.3)
+    np.testing.assert_allclose(out, w, atol=1e-6)
+
+
+def test_pgd_step_non_square_tiles():
+    rng = np.random.default_rng(2)
+    w, th = rand(rng, 96, 160), rand(rng, 96, 160)
+    c = psd_gram(rng, 160)
+    got = kernels.pgd_step(w, th, c, 0.05, tile_m=32, tile_n=64, tile_k=16)
+    want = ref.pgd_step_ref(w, th, c, 0.05)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_pgd_step_tile_larger_than_dim_falls_back():
+    rng = np.random.default_rng(3)
+    w, th, c = rand(rng, 8, 8), rand(rng, 8, 8), psd_gram(rng, 8)
+    got = kernels.pgd_step(w, th, c, 0.1, tile_m=128, tile_n=128, tile_k=128)
+    np.testing.assert_allclose(got, ref.pgd_step_ref(w, th, c, 0.1),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_pgd_step_rejects_bad_gram_shape():
+    rng = np.random.default_rng(4)
+    with pytest.raises(AssertionError):
+        kernels.pgd_step(rand(rng, 8, 8), rand(rng, 8, 8),
+                         rand(rng, 8, 16), 0.1)
+
+
+def test_pgd_step_under_jit_and_grad_composes():
+    """The kernel must be traceable inside jit (it lives in a fori_loop)."""
+    rng = np.random.default_rng(5)
+    w, th, c = rand(rng, 16, 16), rand(rng, 16, 16), psd_gram(rng, 16)
+    f = jax.jit(lambda t: kernels.pgd_step(w, t, c, 0.1))
+    np.testing.assert_allclose(f(th), ref.pgd_step_ref(w, th, c, 0.1),
+                               rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# quant_project
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 8).map(lambda v: 4 * v),
+    groups=st.integers(1, 6),
+    group=st.sampled_from([8, 16, 32]),
+    bits=st.sampled_from([2, 3, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_project_matches_ref(m, groups, group, bits, seed):
+    rng = np.random.default_rng(seed)
+    z = rand(rng, m, groups * group) * 3.0
+    qmax = float(2**bits - 1)
+    got = kernels.quant_project(z, qmax, group=group)
+    want = ref.quant_project_ref(z, qmax, group=group)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(bits=st.sampled_from([2, 3, 4]), seed=st.integers(0, 2**31 - 1))
+def test_quant_project_grid_membership(bits, seed):
+    """Output lies on a (2^b)-point affine grid per group: the number of
+    distinct values within each group is at most 2^bits."""
+    rng = np.random.default_rng(seed)
+    z = rand(rng, 4, 64) * 2.0
+    qmax = float(2**bits - 1)
+    out = np.asarray(kernels.quant_project(z, qmax, group=16))
+    for row in out.reshape(4, 4, 16):
+        for grp in row:
+            assert len(np.unique(grp)) <= 2**bits
+
+
+def test_quant_project_idempotent():
+    """Projection is idempotent: Proj(Proj(z)) == Proj(z)."""
+    rng = np.random.default_rng(7)
+    z = rand(rng, 8, 64)
+    p1 = kernels.quant_project(z, 15.0, group=32)
+    p2 = kernels.quant_project(p1, 15.0, group=32)
+    np.testing.assert_allclose(p1, p2, atol=1e-5)
+
+
+def test_quant_project_flat_group():
+    """A constant group must survive exactly (scale=0 guard)."""
+    z = jnp.ones((2, 32), jnp.float32) * 0.7
+    out = kernels.quant_project(z, 15.0, group=32)
+    np.testing.assert_allclose(out, z, atol=1e-7)
+
+
+def test_quant_project_error_bounded_by_half_step():
+    rng = np.random.default_rng(8)
+    z = rand(rng, 16, 64)
+    qmax = 15.0
+    out = np.asarray(kernels.quant_project(z, qmax, group=32))
+    zg = np.asarray(z).reshape(16, 2, 32)
+    step = (zg.max(-1) - zg.min(-1)) / qmax    # per-group grid step
+    err = np.abs(out.reshape(16, 2, 32) - zg).max(-1)
+    assert (err <= step / 2 + 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# topk_rows (L2 projection, used inside all pruning programs)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 16),
+    d=st.integers(4, 64),
+    seed=st.integers(0, 2**31 - 1),
+    data=st.data(),
+)
+def test_topk_rows_exact_k(m, d, seed, data):
+    k = data.draw(st.integers(1, d))
+    rng = np.random.default_rng(seed)
+    # tie-free by construction: distinct magnitudes
+    mags = rng.permutation(m * d).reshape(m, d).astype(np.float32) + 1.0
+    signs = np.where(rng.random((m, d)) < 0.5, -1.0, 1.0)
+    z = jnp.asarray(mags * signs)
+    out = np.asarray(ref.topk_rows_ref(z, jnp.int32(k)))
+    nnz = (out != 0).sum(axis=1)
+    assert (nnz == k).all()
+    # surviving entries are exactly the k largest magnitudes, kept verbatim
+    za = np.abs(np.asarray(z))
+    for i in range(m):
+        keep = np.argsort(-za[i])[:k]
+        assert set(np.nonzero(out[i])[0]) == set(keep)
+        np.testing.assert_array_equal(out[i][keep], np.asarray(z)[i][keep])
+
+
+def test_topk_rows_k_ge_d_keeps_all():
+    rng = np.random.default_rng(9)
+    z = rand(rng, 4, 16)
+    out = ref.topk_rows_ref(z, jnp.int32(16))
+    np.testing.assert_allclose(out, z)
+
+
+def test_topk_rows_k_clamped_at_one():
+    rng = np.random.default_rng(10)
+    z = rand(rng, 4, 16)
+    out = np.asarray(ref.topk_rows_ref(z, jnp.int32(0)))
+    assert ((out != 0).sum(axis=1) <= 1).all()
+
+
+# ---------------------------------------------------------------------------
+# awp loss identity
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.integers(2, 24), seed=st.integers(0, 2**31 - 1))
+def test_awp_loss_trace_identity(d, seed):
+    """sum(R * (R@C)) == ||R C^{1/2}||_F^2 (Appendix B) — checked against an
+    explicit matrix square root via eigendecomposition."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(d + 3, d)).astype(np.float32)
+    th = rng.normal(size=(d + 3, d)).astype(np.float32)
+    c = np.asarray(psd_gram(rng, d), np.float64)
+    evals, evecs = np.linalg.eigh(c)
+    csqrt = evecs @ np.diag(np.sqrt(np.maximum(evals, 0))) @ evecs.T
+    want = np.linalg.norm((w - th).astype(np.float64) @ csqrt, "fro") ** 2
+    got = float(ref.awp_loss_ref(jnp.asarray(w), jnp.asarray(th),
+                                 jnp.asarray(c, jnp.float32)))
+    np.testing.assert_allclose(got, want, rtol=2e-3)

@@ -1,0 +1,137 @@
+"""L2 model semantics: shapes, loss sanity, training signal, Gram capture."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelConfig(name="test", d_model=64, n_heads=4, n_layers=2,
+                    d_ff=128, seq_len=32, batch=2)
+
+
+def toks(seed=0, cfg=CFG):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq_len)),
+                       jnp.int32)
+
+
+def test_param_spec_shapes_cover_all_sites():
+    spec = dict(M.param_spec(CFG))
+    assert spec["embed"] == (256, 64)
+    for i in range(CFG.n_layers):
+        assert spec[f"blocks.{i}.wq"] == (64, 64)
+        assert spec[f"blocks.{i}.w_up"] == (128, 64)
+        assert spec[f"blocks.{i}.w_down"] == (64, 128)
+    # 1 embed + 8 per block + final norm
+    assert len(spec) == 1 + 8 * CFG.n_layers + 1
+
+
+def test_flatten_unflatten_roundtrip():
+    params = M.init_params(CFG, 0)
+    flat = M.flatten(CFG, params)
+    back = M.unflatten(CFG, flat)
+    assert set(back) == set(params)
+    for k in params:
+        np.testing.assert_array_equal(back[k], params[k])
+
+
+def test_forward_shapes_and_finiteness():
+    params = M.init_params(CFG, 0)
+    logits = M.forward(CFG, params, toks())
+    assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_initial_nll_near_uniform():
+    params = M.init_params(CFG, 0)
+    total, count = M.nll(CFG, params, toks())
+    per_tok = float(total) / float(count)
+    assert abs(per_tok - np.log(CFG.vocab)) < 0.5
+
+
+def test_causality():
+    """Changing a future token must not affect past logits."""
+    params = M.init_params(CFG, 0)
+    t1 = toks(1)
+    t2 = t1.at[:, -1].set((t1[:, -1] + 7) % CFG.vocab)
+    l1 = M.forward(CFG, params, t1)
+    l2 = M.forward(CFG, params, t2)
+    np.testing.assert_allclose(l1[:, :-1, :], l2[:, :-1, :], atol=1e-5)
+
+
+def test_rope_makes_model_position_sensitive():
+    params = M.init_params(CFG, 0)
+    t = toks(2)
+    rolled = jnp.roll(t, 1, axis=1)
+    l1 = M.forward(CFG, params, t)
+    l2 = M.forward(CFG, params, rolled)
+    assert not np.allclose(np.asarray(l1[0, -1]), np.asarray(l2[0, -1]),
+                           atol=1e-4)
+
+
+def test_train_step_decreases_loss_on_repeated_batch():
+    params = M.init_params(CFG, 0)
+    flat = M.flatten(CFG, params)
+    zeros = [jnp.zeros_like(p) for p in flat]
+    step_fn = jax.jit(M.make_train_step(CFG))
+    t = toks(3)
+    n = len(flat)
+    state = list(flat) + list(zeros) + list(zeros)
+    losses = []
+    for s in range(8):
+        out = step_fn(*state, t, jnp.float32(3e-3), jnp.float32(s))
+        state = list(out[:-1])
+        losses.append(float(out[-1]))
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_calib_capture_grams_are_psd_and_correct_scale():
+    params = M.init_params(CFG, 0)
+    prog = M.make_calib_capture(CFG)
+    out = prog(*M.flatten(CFG, params), toks(4))
+    attn_in, attn_out_in, mlp_in, mlp_down_in, count = out
+    assert attn_in.shape == (CFG.n_layers, 64, 64)
+    assert mlp_down_in.shape == (CFG.n_layers, 128, 128)
+    assert float(count) == CFG.batch * CFG.seq_len
+    for g in [attn_in, attn_out_in, mlp_in, mlp_down_in]:
+        for layer in np.asarray(g):
+            np.testing.assert_allclose(layer, layer.T, atol=1e-3)
+            evals = np.linalg.eigvalsh(layer.astype(np.float64))
+            assert evals.min() > -1e-2 * max(1.0, evals.max())
+
+
+def test_calib_grams_match_manual_recompute():
+    """attn_in gram of layer 0 == X X^T of the ln1 output, by hand."""
+    params = M.init_params(CFG, 0)
+    t = toks(5)
+    prog = M.make_calib_capture(CFG)
+    attn_in = prog(*M.flatten(CFG, params), t)[0]
+    x = params["embed"][t]
+    h = x * params["blocks.0.ln1"] * jax.lax.rsqrt(
+        jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+    flat = h.reshape(-1, CFG.d_model)
+    np.testing.assert_allclose(attn_in[0], flat.T @ flat, rtol=1e-4, atol=1e-2)
+
+
+def test_decode_step_matches_forward():
+    cfg = M.ModelConfig(name="t", d_model=64, n_heads=4, n_layers=2,
+                        d_ff=128, seq_len=32, batch=2, decode_len=16)
+    params = M.init_params(cfg, 0)
+    rng = np.random.default_rng(6)
+    t = jnp.asarray(rng.integers(0, 256, (1, 16)), jnp.int32)
+    (logits,) = M.make_decode_step(cfg)(*M.flatten(cfg, params), t)
+    full = M.forward(cfg, params, t)
+    np.testing.assert_allclose(logits, full[0, -1], atol=1e-5)
+
+
+def test_model_sizes_param_counts():
+    """The ladder documented in DESIGN.md §2."""
+    for name, lo, hi in [("tiny", 0.7e6, 1.0e6), ("small", 3.0e6, 3.6e6),
+                         ("medium", 10.0e6, 11.5e6)]:
+        cfg = M.MODEL_SIZES[name]
+        n = sum(int(np.prod(s)) for _, s in M.param_spec(cfg))
+        assert lo < n < hi, (name, n)

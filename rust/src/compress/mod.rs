@@ -1,0 +1,38 @@
+//! Layer-wise compression methods.
+//!
+//! The paper's contribution (**AWP**, Algorithm 1) plus every baseline its
+//! evaluation compares against, all implemented from scratch on the same
+//! substrates so the comparisons are apples-to-apples:
+//!
+//! | method     | paper role                          | module          |
+//! |------------|-------------------------------------|-----------------|
+//! | AWP        | the contribution (PGD/IHT)          | `awp` (driver), `awp_cpu` (CPU backend), `runtime::hlo_backend` (AOT path) |
+//! | Magnitude  | non-activation-aware pruning        | `magnitude`     |
+//! | Wanda      | diag(C)-scaled pruning (+AWP init)  | `wanda`         |
+//! | SparseGPT  | OBS-based pruning                   | `sparsegpt`     |
+//! | RTN        | round-to-nearest quant (+AWP init)  | `rtn`           |
+//! | AWQ        | activation-aware scaled quant       | `awq`           |
+//! | GPTQ       | OBS-based quant                     | `gptq`          |
+//! | AWQ+Wanda, Wanda+AWQ | §4.3 sequential combos    | `sequential`    |
+//!
+//! Every method implements [`traits::LayerCompressor`]: given `(W, C, spec)`
+//! produce a compressed `Θ` in the constraint set plus bookkeeping stats.
+
+pub mod awp;
+pub mod awp_cpu;
+pub mod awq;
+pub mod gptq;
+pub mod magnitude;
+pub mod obs;
+pub mod rtn;
+pub mod schedule;
+pub mod sequential;
+pub mod sparsegpt;
+pub mod traits;
+pub mod wanda;
+
+pub use awp::{AwpBackend, AwpDriver, AwpHyper};
+pub use awp_cpu::{AwpCpu, CpuBackend};
+pub use traits::{
+    CompressStats, CompressedLayer, CompressionMode, CompressionSpec, LayerCompressor,
+};

@@ -1,0 +1,136 @@
+//! Shared Optimal-Brain-Surgeon machinery for SparseGPT and GPTQ.
+//!
+//! Both baselines follow Frantar et al.'s accelerated OBS recipe: work on
+//! the *inverse* Hessian `H⁻¹ = (C + λI)⁻¹`, take its upper Cholesky factor
+//! `U` (so `H⁻¹ = Uᵀ·U`), then sweep columns left → right. Freezing column
+//! `j` to value `q̂` (0 when pruned, a grid point when quantized) incurs
+//! error `e = (w_j − q̂)/U[j,j]`, which is optimally redistributed onto the
+//! *remaining* columns as `w[j+1:] −= e · U[j, j+1:]`.
+//!
+//! This is exactly the `O(d_in³)` Hessian-inverse pipeline the paper
+//! contrasts AWP's `O(d_out·d_in²)`-per-iteration GEMM against — kept on the
+//! same substrates so `benches/compression.rs` measures the real gap.
+
+use crate::linalg;
+use crate::tensor::Matrix;
+
+/// Upper Cholesky factor `U` of `(C + λ·mean(diag C)·I)⁻¹` with `H⁻¹=UᵀU`,
+/// plus the damping actually used.
+pub fn hinv_upper_chol(c: &Matrix, percdamp: f64) -> (Matrix, f64) {
+    let hinv = linalg::spd_inverse(c, percdamp.max(1e-8));
+    // our cholesky gives lower L with Hinv = L·Lᵀ ⇒ U = Lᵀ
+    let (ch, lambda) = linalg::cholesky_damped(&hinv, 0.0);
+    (ch.l.transpose(), lambda)
+}
+
+/// One row's OBS sweep state: the row is modified in place; `decide` is
+/// called once per column with the *current* (error-compensated) value and
+/// must return the frozen value for that column.
+pub fn sweep_row(row: &mut [f32], u: &Matrix, mut decide: impl FnMut(usize, f32) -> f32) {
+    let n = row.len();
+    debug_assert_eq!(u.rows, n);
+    for j in 0..n {
+        let q = row[j];
+        let qc = decide(j, q);
+        let d = u.at(j, j);
+        row[j] = qc;
+        if d.abs() < 1e-12 {
+            continue;
+        }
+        let err = (q - qc) / d;
+        if err == 0.0 {
+            continue;
+        }
+        let urow = u.row(j);
+        for t in j + 1..n {
+            row[t] -= err * urow[t];
+        }
+    }
+}
+
+/// Distribute a per-row prune budget over column blocks (SparseGPT's lazy
+/// mask selection): returns how many entries to prune in the block ending
+/// at `col_end`, given the cumulative target.
+pub fn block_prune_budget(total_prune: usize, d_in: usize, col_end: usize,
+                          pruned_so_far: usize) -> usize {
+    let target_cum =
+        ((total_prune as f64) * (col_end as f64) / (d_in as f64)).round() as usize;
+    target_cum.saturating_sub(pruned_so_far)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::matmul;
+
+    #[test]
+    fn hinv_chol_reconstructs_inverse() {
+        let c = Matrix::randn_gram(12, 0);
+        let (u, _) = hinv_upper_chol(&c, 0.01);
+        // UᵀU ≈ (C + damp)⁻¹ ⇒ (UᵀU)·C ≈ I (up to damping)
+        let hinv = matmul(&u.transpose(), &u);
+        let prod = matmul(&hinv, &c);
+        for i in 0..12 {
+            assert!((prod.at(i, i) - 1.0).abs() < 0.1, "diag {}", prod.at(i, i));
+        }
+    }
+
+    #[test]
+    fn upper_triangular() {
+        let c = Matrix::randn_gram(8, 1);
+        let (u, _) = hinv_upper_chol(&c, 0.01);
+        for i in 0..8 {
+            for j in 0..i {
+                assert_eq!(u.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_identity_decide_is_noop() {
+        let c = Matrix::randn_gram(6, 2);
+        let (u, _) = hinv_upper_chol(&c, 0.01);
+        let orig = [1.0f32, -2.0, 0.5, 3.0, -0.25, 0.1];
+        let mut row = orig;
+        sweep_row(&mut row, &u, |_, q| q);
+        assert_eq!(row, orig);
+    }
+
+    #[test]
+    fn sweep_error_compensation_beats_naive_zeroing() {
+        // zeroing the first half of a correlated row with OBS compensation
+        // must give lower activation loss than plain zeroing.
+        let w = Matrix::randn(24, 24, 3);
+        let c = Matrix::randn_gram(24, 4);
+        let (u, _) = hinv_upper_chol(&c, 0.01);
+        let mut wins = 0;
+        for i in 0..24 {
+            let mut obs_row = w.row(i).to_vec();
+            sweep_row(&mut obs_row, &u, |j, q| if j < 12 { 0.0 } else { q });
+            let mut naive_row = w.row(i).to_vec();
+            for v in naive_row.iter_mut().take(12) {
+                *v = 0.0;
+            }
+            let loss = |row: &[f32]| {
+                let th = Matrix::from_vec(1, 24, row.to_vec());
+                let wr = Matrix::from_vec(1, 24, w.row(i).to_vec());
+                crate::tensor::ops::activation_loss(&wr, &th, &c)
+            };
+            if loss(&obs_row) < loss(&naive_row) {
+                wins += 1;
+            }
+        }
+        assert!(wins >= 20, "OBS only won {wins}/24 rows");
+    }
+
+    #[test]
+    fn budget_distribution_sums_to_total() {
+        let d_in = 100;
+        let total = 37;
+        let mut pruned = 0;
+        for end in [32, 64, 100] {
+            pruned += block_prune_budget(total, d_in, end, pruned);
+        }
+        assert_eq!(pruned, total);
+    }
+}

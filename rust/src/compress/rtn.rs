@@ -1,0 +1,56 @@
+//! Round-To-Nearest quantization — the straightforward non-activation-aware
+//! baseline the paper uses as AWP's quantization initialiser (§4.2).
+
+use anyhow::{bail, Result};
+
+use super::traits::{CompressedLayer, CompressionMode, CompressionSpec, LayerCompressor};
+use crate::quant;
+use crate::tensor::Matrix;
+use crate::util::Timer;
+
+#[derive(Default)]
+pub struct RtnQuant;
+
+impl LayerCompressor for RtnQuant {
+    fn name(&self) -> &'static str {
+        "rtn"
+    }
+
+    fn compress(&self, w: &Matrix, c: &Matrix, spec: &CompressionSpec)
+        -> Result<CompressedLayer> {
+        let t = Timer::start("rtn");
+        let CompressionMode::Quant { spec: qs } = spec.mode else {
+            bail!("rtn only supports Quant mode");
+        };
+        let theta = quant::quantize_dequantize(w, qs);
+        Ok(CompressedLayer::from_theta(w, c, theta, 0, t.elapsed_s()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_decreases_with_bits() {
+        let w = Matrix::randn(16, 64, 0);
+        let c = Matrix::randn_gram(64, 1);
+        let mut prev = f64::MAX;
+        for bits in [2u8, 3, 4, 8] {
+            let out = RtnQuant
+                .compress(&w, &c, &CompressionSpec::quant(bits, 32))
+                .unwrap();
+            assert!(out.stats.final_loss < prev, "bits={bits}");
+            prev = out.stats.final_loss;
+        }
+    }
+
+    #[test]
+    fn satisfies_constraints() {
+        let w = Matrix::randn(8, 32, 2);
+        let c = Matrix::randn_gram(32, 3);
+        let spec = CompressionSpec::quant(4, 32);
+        let out = RtnQuant.compress(&w, &c, &spec).unwrap();
+        super::super::traits::check_constraints(&out.theta, &spec).unwrap();
+    }
+}

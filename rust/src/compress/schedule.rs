@@ -1,0 +1,94 @@
+//! The §4.3 joint-compression schedule: "in the first 25 iterations of
+//! purely pruning, we linearly increase the pruning ratio from 0% to the
+//! target pruning ratio, then keep this pruning ratio unchanged in the
+//! remaining 75 iterations", with quantization switched on from iteration
+//! 50 onward.
+
+/// Phase of one joint-compression iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JointPhase {
+    /// pruning only, ratio ramping up
+    Ramp,
+    /// pruning only, at target ratio
+    PruneHold,
+    /// joint pruning + quantization at target ratio
+    Joint,
+}
+
+/// The iteration schedule for joint pruning + quantization.
+#[derive(Clone, Copy, Debug)]
+pub struct JointSchedule {
+    pub total_iters: usize,
+    pub ramp_iters: usize,
+    pub prune_only_iters: usize,
+}
+
+impl Default for JointSchedule {
+    fn default() -> Self {
+        // paper §4.3: 25 ramp, 50 prune-only total, 100 overall
+        JointSchedule { total_iters: 100, ramp_iters: 25, prune_only_iters: 50 }
+    }
+}
+
+impl JointSchedule {
+    pub fn phase(&self, iter: usize) -> JointPhase {
+        if iter < self.ramp_iters {
+            JointPhase::Ramp
+        } else if iter < self.prune_only_iters {
+            JointPhase::PruneHold
+        } else {
+            JointPhase::Joint
+        }
+    }
+
+    /// Per-row keep count at `iter`, ramping linearly from `d_in` down to
+    /// `k_target` over the first `ramp_iters` iterations.
+    pub fn k_at(&self, iter: usize, d_in: usize, k_target: usize) -> usize {
+        if iter + 1 >= self.ramp_iters {
+            return k_target;
+        }
+        let frac = (iter + 1) as f64 / self.ramp_iters as f64;
+        let k = d_in as f64 - frac * (d_in - k_target) as f64;
+        (k.round() as usize).clamp(k_target, d_in)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_follow_paper() {
+        let s = JointSchedule::default();
+        assert_eq!(s.phase(0), JointPhase::Ramp);
+        assert_eq!(s.phase(24), JointPhase::Ramp);
+        assert_eq!(s.phase(25), JointPhase::PruneHold);
+        assert_eq!(s.phase(49), JointPhase::PruneHold);
+        assert_eq!(s.phase(50), JointPhase::Joint);
+        assert_eq!(s.phase(99), JointPhase::Joint);
+    }
+
+    #[test]
+    fn ramp_monotone_to_target() {
+        let s = JointSchedule::default();
+        let d_in = 256;
+        let k_target = 64;
+        let mut prev = d_in + 1;
+        for it in 0..s.total_iters {
+            let k = s.k_at(it, d_in, k_target);
+            assert!(k <= prev, "k must not increase");
+            assert!(k >= k_target);
+            prev = k;
+        }
+        assert_eq!(s.k_at(24, d_in, k_target), k_target);
+        assert_eq!(s.k_at(99, d_in, k_target), k_target);
+        // starts near full density
+        assert!(s.k_at(0, d_in, k_target) > d_in * 9 / 10);
+    }
+
+    #[test]
+    fn degenerate_ramp() {
+        let s = JointSchedule { total_iters: 10, ramp_iters: 1, prune_only_iters: 2 };
+        assert_eq!(s.k_at(0, 100, 30), 30);
+    }
+}

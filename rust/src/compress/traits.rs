@@ -1,0 +1,204 @@
+//! Common interface for layer-wise compressors.
+
+use anyhow::Result;
+
+use crate::quant::QuantSpec;
+use crate::tensor::{ops, Matrix};
+
+/// What to do to a layer. Ratios are *pruning ratios* `p` (fraction of zeros
+/// per row), matching the paper's tables; `k = (1-p)·d_in` per eq. (6).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CompressionMode {
+    /// row-k-sparse (`C_row`, eq. 5)
+    Prune { ratio: f64 },
+    /// grouped INT grid (`C_INTb`)
+    Quant { spec: QuantSpec },
+    /// intersection (§4.3)
+    Joint { ratio: f64, spec: QuantSpec },
+    /// NVIDIA 2:4 semi-structured sparsity (paper §5 future work): at most
+    /// 2 non-zeros in every aligned group of 4 along `d_in` (fixed 50%)
+    Structured24,
+}
+
+/// A compression request for one layer.
+#[derive(Clone, Copy, Debug)]
+pub struct CompressionSpec {
+    pub mode: CompressionMode,
+    pub seed: u64,
+}
+
+impl CompressionSpec {
+    pub fn prune(ratio: f64) -> Self {
+        assert!((0.0..1.0).contains(&ratio));
+        CompressionSpec { mode: CompressionMode::Prune { ratio }, seed: 0 }
+    }
+
+    pub fn quant(bits: u8, group: usize) -> Self {
+        CompressionSpec {
+            mode: CompressionMode::Quant { spec: QuantSpec::new(bits, group) },
+            seed: 0,
+        }
+    }
+
+    pub fn joint(ratio: f64, bits: u8, group: usize) -> Self {
+        assert!((0.0..1.0).contains(&ratio));
+        CompressionSpec {
+            mode: CompressionMode::Joint { ratio, spec: QuantSpec::new(bits, group) },
+            seed: 0,
+        }
+    }
+
+    /// per-row kept count for a given `d_in`
+    pub fn keep_k(&self, d_in: usize) -> Option<usize> {
+        match self.mode {
+            CompressionMode::Prune { ratio } | CompressionMode::Joint { ratio, .. } => {
+                Some((((1.0 - ratio) * d_in as f64).round() as usize).clamp(1, d_in))
+            }
+            CompressionMode::Quant { .. } | CompressionMode::Structured24 => None,
+        }
+    }
+
+    pub fn quant_spec(&self) -> Option<QuantSpec> {
+        match self.mode {
+            CompressionMode::Quant { spec } | CompressionMode::Joint { spec, .. } => Some(spec),
+            CompressionMode::Prune { .. } | CompressionMode::Structured24 => None,
+        }
+    }
+
+    pub fn structured24() -> Self {
+        CompressionSpec { mode: CompressionMode::Structured24, seed: 0 }
+    }
+}
+
+/// Bookkeeping returned with every compressed layer.
+#[derive(Clone, Debug, Default)]
+pub struct CompressStats {
+    /// activation-aware loss ‖(W−Θ)C½‖²_F at the end
+    pub final_loss: f64,
+    /// ‖(W−Θ)C½‖_F / ‖W‖_F (the Figure-1 metric)
+    pub rel_loss: f64,
+    /// PGD iterations executed (0 for one-shot methods)
+    pub iterations: usize,
+    /// wall-clock seconds for this layer
+    pub seconds: f64,
+    /// optional per-iteration rel-loss series (Figure 1)
+    pub loss_series: Vec<f64>,
+}
+
+/// Result of compressing one layer.
+#[derive(Clone, Debug)]
+pub struct CompressedLayer {
+    pub theta: Matrix,
+    pub stats: CompressStats,
+}
+
+impl CompressedLayer {
+    pub fn from_theta(w: &Matrix, c: &Matrix, theta: Matrix, iterations: usize,
+                      seconds: f64) -> Self {
+        let final_loss = ops::activation_loss(w, &theta, c);
+        let wn = w.frob_norm().max(1e-30);
+        CompressedLayer {
+            theta,
+            stats: CompressStats {
+                final_loss,
+                rel_loss: final_loss.sqrt() / wn,
+                iterations,
+                seconds,
+                loss_series: Vec::new(),
+            },
+        }
+    }
+}
+
+/// A layer-wise compressor: `(W, C, spec) -> Θ ∈ C`.
+pub trait LayerCompressor: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn compress(&self, w: &Matrix, c: &Matrix, spec: &CompressionSpec)
+        -> Result<CompressedLayer>;
+
+    /// Whether `check_constraints`' refit-based INT-grid check applies to
+    /// this method's output. False for methods whose grid is *not* the
+    /// min/max refit of their own output: AWQ (per-channel-scaled grid) and
+    /// GPTQ (grid fitted to the original W, while error compensation moves
+    /// group extrema). Their grid membership is asserted by their own unit
+    /// tests against their own grid definitions.
+    fn grid_refit_checkable(&self) -> bool {
+        true
+    }
+}
+
+/// Verify that `theta` satisfies `spec`'s constraint set (used by tests and
+/// the coordinator's assembly-time assertions).
+pub fn check_constraints(theta: &Matrix, spec: &CompressionSpec) -> Result<()> {
+    use anyhow::bail;
+    if let Some(k) = spec.keep_k(theta.cols) {
+        for i in 0..theta.rows {
+            let nnz = theta.row(i).iter().filter(|&&v| v != 0.0).count();
+            if nnz > k {
+                bail!("row {i} has {nnz} > k={k} nonzeros");
+            }
+        }
+    }
+    if matches!(spec.mode, CompressionMode::Structured24)
+        && !crate::sparse::check_2_4(theta)
+    {
+        bail!("2:4 pattern violated");
+    }
+    if let Some(qs) = spec.quant_spec() {
+        // Re-projection must be (nearly) a no-op. For Joint, zeros from the
+        // sparsity mask are off-grid but exact-zero is always representable
+        // (integer zero-point), so check only non-zero entries.
+        let reproj = crate::quant::quantize_dequantize(theta, qs);
+        for (i, (a, b)) in theta.data.iter().zip(&reproj.data).enumerate() {
+            if *a != 0.0 && (a - b).abs() > 1e-4 * a.abs().max(1e-3) {
+                bail!("entry {i} off-grid: {a} vs reprojected {b}");
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keep_k_rounding() {
+        let s = CompressionSpec::prune(0.5);
+        assert_eq!(s.keep_k(64), Some(32));
+        let s = CompressionSpec::prune(0.9);
+        assert_eq!(s.keep_k(64), Some(6));
+        // never zero
+        let s = CompressionSpec::prune(0.999);
+        assert_eq!(s.keep_k(64), Some(1));
+        assert_eq!(CompressionSpec::quant(4, 32).keep_k(64), None);
+    }
+
+    #[test]
+    fn joint_carries_both() {
+        let s = CompressionSpec::joint(0.75, 4, 32);
+        assert_eq!(s.keep_k(128), Some(32));
+        assert_eq!(s.quant_spec().unwrap().bits, 4);
+    }
+
+    #[test]
+    fn check_constraints_catches_violations() {
+        let theta = Matrix::randn(4, 16, 0);
+        assert!(check_constraints(&theta, &CompressionSpec::prune(0.5)).is_err());
+        let pruned = crate::tensor::topk::hard_threshold_rows(&theta, 8);
+        assert!(check_constraints(&pruned, &CompressionSpec::prune(0.5)).is_ok());
+        assert!(check_constraints(&theta, &CompressionSpec::quant(4, 16)).is_err());
+        let q = crate::quant::quantize_dequantize(&theta, QuantSpec::new(4, 16));
+        assert!(check_constraints(&q, &CompressionSpec::quant(4, 16)).is_ok());
+    }
+
+    #[test]
+    fn compressed_layer_stats() {
+        let w = Matrix::randn(8, 8, 1);
+        let c = Matrix::randn_gram(8, 2);
+        let out = CompressedLayer::from_theta(&w, &c, w.clone(), 3, 0.1);
+        assert_eq!(out.stats.final_loss, 0.0);
+        assert_eq!(out.stats.rel_loss, 0.0);
+        assert_eq!(out.stats.iterations, 3);
+    }
+}

@@ -1,0 +1,150 @@
+//! Run configuration: filesystem layout, per-model corpus/training presets,
+//! and JSON config-file overrides.
+//!
+//! Defaults are tuned so the full experiment suite runs on a laptop-class
+//! CPU; every field can be overridden by a JSON config file (see
+//! `configs/default.json`) or per-run CLI flags.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::data::CorpusConfig;
+use crate::trainer::TrainConfig;
+use crate::util::Json;
+
+/// Where everything lives.
+#[derive(Clone, Debug)]
+pub struct Paths {
+    pub artifacts: PathBuf,
+    pub checkpoints: PathBuf,
+    pub reports: PathBuf,
+}
+
+impl Default for Paths {
+    fn default() -> Self {
+        Paths {
+            artifacts: "artifacts".into(),
+            checkpoints: "checkpoints".into(),
+            reports: "reports".into(),
+        }
+    }
+}
+
+impl Paths {
+    pub fn checkpoint_file(&self, model: &str) -> PathBuf {
+        self.checkpoints.join(format!("{model}.awp"))
+    }
+
+    pub fn ensure_dirs(&self) -> Result<()> {
+        std::fs::create_dir_all(&self.checkpoints)?;
+        std::fs::create_dir_all(&self.reports)?;
+        Ok(())
+    }
+}
+
+/// Full run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub paths: Paths,
+    pub corpus: CorpusConfig,
+    /// training presets per model size (steps tuned to model cost)
+    pub train_steps_tiny: usize,
+    pub train_steps_small: usize,
+    pub train_steps_medium: usize,
+    pub lr_max: f64,
+    /// calibration batches (paper: 128 sequences; scaled to model size)
+    pub calib_batches: usize,
+    /// held-out eval windows per perplexity measurement
+    pub eval_batches: usize,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            paths: Paths::default(),
+            corpus: CorpusConfig::default(),
+            train_steps_tiny: 500,
+            train_steps_small: 500,
+            train_steps_medium: 300,
+            lr_max: 3e-3,
+            calib_batches: 16,
+            eval_batches: 40,
+            seed: 7,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn train_config(&self, model: &str) -> TrainConfig {
+        let steps = match model {
+            "tiny" => self.train_steps_tiny,
+            "small" => self.train_steps_small,
+            "medium" => self.train_steps_medium,
+            _ => self.train_steps_small,
+        };
+        TrainConfig {
+            steps,
+            lr_max: self.lr_max,
+            warmup: (steps / 10).max(1),
+            seed: self.seed,
+            log_every: (steps / 20).max(1),
+        }
+    }
+
+    /// Apply overrides from a JSON config file. Unknown keys are rejected
+    /// (typo safety).
+    pub fn load_overrides(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        let v = Json::parse(&text)?;
+        for (key, val) in v.as_obj()? {
+            match key.as_str() {
+                "artifacts" => self.paths.artifacts = val.as_str()?.into(),
+                "checkpoints" => self.paths.checkpoints = val.as_str()?.into(),
+                "reports" => self.paths.reports = val.as_str()?.into(),
+                "corpus_bytes" => self.corpus.total_bytes = val.as_usize()?,
+                "corpus_seed" => self.corpus.seed = val.as_usize()? as u64,
+                "vocab_words" => self.corpus.vocab_words = val.as_usize()?,
+                "markov_strength" => self.corpus.markov_strength = val.as_f64()?,
+                "train_steps_tiny" => self.train_steps_tiny = val.as_usize()?,
+                "train_steps_small" => self.train_steps_small = val.as_usize()?,
+                "train_steps_medium" => self.train_steps_medium = val.as_usize()?,
+                "lr_max" => self.lr_max = val.as_f64()?,
+                "calib_batches" => self.calib_batches = val.as_usize()?,
+                "eval_batches" => self.eval_batches = val.as_usize()?,
+                "seed" => self.seed = val.as_usize()? as u64,
+                other => anyhow::bail!("unknown config key '{other}'"),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = RunConfig::default();
+        assert!(c.train_config("tiny").steps >= 100);
+        assert!(c.train_config("medium").warmup >= 1);
+        assert_eq!(c.paths.checkpoint_file("small"),
+                   PathBuf::from("checkpoints/small.awp"));
+    }
+
+    #[test]
+    fn overrides_apply_and_reject_unknown() {
+        let dir = crate::util::tempdir::TempDir::new("cfg").unwrap();
+        let p = dir.path().join("c.json");
+        std::fs::write(&p, r#"{"train_steps_small": 42, "lr_max": 0.001}"#).unwrap();
+        let mut c = RunConfig::default();
+        c.load_overrides(&p).unwrap();
+        assert_eq!(c.train_steps_small, 42);
+        assert_eq!(c.lr_max, 0.001);
+        std::fs::write(&p, r#"{"nope": 1}"#).unwrap();
+        assert!(c.load_overrides(&p).is_err());
+    }
+}

@@ -1,0 +1,88 @@
+//! Calibration: estimate each site's input-activation Gram `C = X Xᵀ / n`.
+//!
+//! Mirrors the paper's §4.1 protocol (a small fixed calibration sample from
+//! the training distribution): the AOT `calib_capture` program returns the
+//! per-site Gram *sums* for one batch; the coordinator accumulates across
+//! batches in f64 and normalises by the total token count.
+
+use std::collections::HashMap;
+
+use anyhow::{ensure, Result};
+
+use crate::data::Batch;
+use crate::eval::perplexity::checkpoint_args;
+use crate::model::{Checkpoint, GramKey};
+use crate::runtime::{HostTensor, Manifest, RuntimeHandle};
+
+/// Per-site calibration Grams: `(gram kind, layer) → C`.
+pub struct Grams {
+    pub map: HashMap<(GramKey, usize), crate::tensor::Matrix>,
+    pub tokens: usize,
+}
+
+impl Grams {
+    pub fn get(&self, key: GramKey, layer: usize) -> Option<&crate::tensor::Matrix> {
+        self.map.get(&(key, layer))
+    }
+}
+
+const GRAM_ORDER: [GramKey; 4] =
+    [GramKey::AttnIn, GramKey::AttnOutIn, GramKey::MlpIn, GramKey::MlpDownIn];
+
+/// Run `calib_capture` over `batches` and accumulate the normalised Grams.
+pub fn calibrate(handle: &RuntimeHandle, manifest: &Manifest, model: &str,
+                 ck: &Checkpoint, batches: &[Batch]) -> Result<Grams> {
+    ensure!(!batches.is_empty(), "need at least one calibration batch");
+    let entry = manifest.model(model)?;
+    let path = manifest.model_program_path(model, "calib_capture")?;
+    let params = checkpoint_args(ck)?;
+    let n_layers = entry.config.n_layers;
+
+    // f64 accumulators keyed like the output stacks
+    let mut acc: HashMap<(GramKey, usize), Vec<f64>> = HashMap::new();
+    let mut dims: HashMap<GramKey, usize> = HashMap::new();
+    let mut total_tokens = 0.0f64;
+
+    for batch in batches {
+        let mut args = params.clone();
+        args.push(HostTensor::vec_i32(batch.tokens.clone(),
+                                      vec![batch.batch, batch.seq]));
+        let out = handle.execute("calib_capture", path.clone(), args)?;
+        ensure!(out.len() == 5, "calib_capture returned {} outputs", out.len());
+        total_tokens += out[4].scalar()?;
+        for (gi, key) in GRAM_ORDER.iter().enumerate() {
+            let stack = out[gi].to_matrix_stack()?;
+            ensure!(stack.len() == n_layers);
+            dims.insert(*key, stack[0].rows);
+            for (layer, m) in stack.into_iter().enumerate() {
+                let slot = acc
+                    .entry((*key, layer))
+                    .or_insert_with(|| vec![0.0; m.data.len()]);
+                for (a, &v) in slot.iter_mut().zip(&m.data) {
+                    *a += v as f64;
+                }
+            }
+        }
+    }
+
+    let mut map = HashMap::new();
+    for ((key, layer), sum) in acc {
+        let d = dims[&key];
+        let data: Vec<f32> = sum.iter().map(|&v| (v / total_tokens) as f32).collect();
+        map.insert((key, layer), crate::tensor::Matrix::from_vec(d, d, data));
+    }
+    Ok(Grams { map, tokens: total_tokens as usize })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gram_order_matches_capture_output_convention() {
+        // python/compile/model.py::make_calib_capture returns
+        // (attn_in, attn_out_in, mlp_in, mlp_down_in, count)
+        assert_eq!(GRAM_ORDER[0].index(), 0);
+        assert_eq!(GRAM_ORDER[3].index(), 3);
+    }
+}

@@ -1,0 +1,321 @@
+//! Experiment harness — regenerates every table and figure of the paper's
+//! evaluation section on this repo's substrate (see DESIGN.md §5 for the
+//! experiment index and the substitution notes).
+//!
+//! Each `table*` function produces the same rows/columns the paper reports;
+//! `fig1` emits the per-iteration activation-loss series. Results are
+//! written to `reports/` as console text, markdown and CSV.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::calibrate::{calibrate, Grams};
+use super::methods::{make_compressor, Method};
+use super::pipeline::compress_model;
+use crate::compress::awp::AwpHyper;
+use crate::compress::traits::CompressionSpec;
+use crate::config::RunConfig;
+use crate::data::{Batcher, Split, SyntheticCorpus};
+use crate::eval::perplexity::perplexity;
+use crate::model::Checkpoint;
+use crate::report::{series_csv, Table};
+use crate::runtime::{Manifest, RuntimeHandle};
+use crate::trainer;
+use crate::util::Timer;
+
+/// Shared state across experiments: runtime, manifest, corpus, trained
+/// checkpoints and calibration Grams (each produced once and reused).
+pub struct ExperimentCtx {
+    pub handle: RuntimeHandle,
+    pub manifest: Arc<Manifest>,
+    pub cfg: RunConfig,
+    corpus: Option<Arc<SyntheticCorpus>>,
+    batchers: HashMap<(usize, usize), Arc<Batcher>>,
+    checkpoints: HashMap<String, Arc<Checkpoint>>,
+    grams: HashMap<String, Arc<Grams>>,
+    dense_ppl: HashMap<String, f64>,
+}
+
+impl ExperimentCtx {
+    pub fn new(handle: RuntimeHandle, manifest: Arc<Manifest>, cfg: RunConfig) -> Self {
+        ExperimentCtx {
+            handle,
+            manifest,
+            cfg,
+            corpus: None,
+            batchers: HashMap::new(),
+            checkpoints: HashMap::new(),
+            grams: HashMap::new(),
+            dense_ppl: HashMap::new(),
+        }
+    }
+
+    fn corpus(&mut self) -> Arc<SyntheticCorpus> {
+        if self.corpus.is_none() {
+            let t = Timer::start("corpus");
+            self.corpus =
+                Some(Arc::new(SyntheticCorpus::generate(self.cfg.corpus.clone())));
+            eprintln!("[ctx] corpus generated {}", t.report());
+        }
+        self.corpus.as_ref().unwrap().clone()
+    }
+
+    pub fn batcher(&mut self, model: &str) -> Result<Arc<Batcher>> {
+        let mc = self.manifest.model(model)?.config.clone();
+        let key = (mc.batch, mc.seq_len);
+        if !self.batchers.contains_key(&key) {
+            let corpus = self.corpus();
+            self.batchers
+                .insert(key, Arc::new(Batcher::new(&corpus, mc.batch, mc.seq_len)));
+        }
+        Ok(self.batchers[&key].clone())
+    }
+
+    /// Load the trained checkpoint for `model`, training (and saving) it if
+    /// absent — training is part of the system, not an external input.
+    pub fn checkpoint(&mut self, model: &str) -> Result<Arc<Checkpoint>> {
+        if let Some(ck) = self.checkpoints.get(model) {
+            return Ok(ck.clone());
+        }
+        let path = self.cfg.paths.checkpoint_file(model);
+        let ck = if path.exists() {
+            eprintln!("[ctx] loading checkpoint {path:?}");
+            let ck = Checkpoint::load(&path)?;
+            ck.validate()?;
+            ck
+        } else {
+            eprintln!("[ctx] no checkpoint for '{model}' — training now");
+            self.cfg.paths.ensure_dirs()?;
+            let batcher = self.batcher(model)?;
+            let tc = self.cfg.train_config(model);
+            let (ck, _curve) =
+                trainer::train(&self.handle, &self.manifest, model, &batcher, &tc)?;
+            ck.save(&path).with_context(|| format!("saving {path:?}"))?;
+            ck
+        };
+        let ck = Arc::new(ck);
+        self.checkpoints.insert(model.to_string(), ck.clone());
+        Ok(ck)
+    }
+
+    pub fn grams(&mut self, model: &str) -> Result<Arc<Grams>> {
+        if let Some(g) = self.grams.get(model) {
+            return Ok(g.clone());
+        }
+        let ck = self.checkpoint(model)?;
+        let batcher = self.batcher(model)?;
+        let batches = batcher.calibration_set(self.cfg.calib_batches,
+                                              self.cfg.seed ^ 0xCA11B);
+        let t = Timer::start("calibrate");
+        let grams = calibrate(&self.handle, &self.manifest, model, &ck, &batches)?;
+        eprintln!("[ctx] calibrated '{model}' over {} tokens {}",
+                  grams.tokens, t.report());
+        let g = Arc::new(grams);
+        self.grams.insert(model.to_string(), g.clone());
+        Ok(g)
+    }
+
+    pub fn ppl(&mut self, model: &str, ck: &Checkpoint) -> Result<f64> {
+        let batcher = self.batcher(model)?;
+        let rep = perplexity(&self.handle, &self.manifest, model, ck, &batcher,
+                             Split::Val, self.cfg.eval_batches)?;
+        Ok(rep.ppl)
+    }
+
+    pub fn dense_ppl(&mut self, model: &str) -> Result<f64> {
+        if let Some(&p) = self.dense_ppl.get(model) {
+            return Ok(p);
+        }
+        let ck = self.checkpoint(model)?;
+        let p = self.ppl(model, &ck)?;
+        eprintln!("[ctx] dense ppl({model}) = {p:.3}");
+        self.dense_ppl.insert(model.to_string(), p);
+        Ok(p)
+    }
+
+    /// One table cell: compress `model` with `method` under `spec`, return
+    /// held-out perplexity.
+    pub fn cell(&mut self, model: &str, method: Method, spec: &CompressionSpec)
+        -> Result<f64> {
+        let ck = self.checkpoint(model)?;
+        let grams = self.grams(model)?;
+        let hyper = AwpHyper { group: self.manifest.awp_group,
+                               chunk: self.manifest.awp_chunk,
+                               ..AwpHyper::default() };
+        let compressor =
+            make_compressor(method, hyper, Some((&self.handle, &self.manifest)))?;
+        let t = Timer::start("cell");
+        let out = compress_model(&ck, &grams, compressor.as_ref(), spec, false)?;
+        let ppl = self.ppl(model, &out.checkpoint)?;
+        eprintln!("[cell] {model} {} {:?} → ppl {ppl:.3} ({:.1}s)",
+                  method.label(), spec.mode, t.elapsed_s());
+        Ok(ppl)
+    }
+
+    pub fn write_report(&self, name: &str, table: &Table) -> Result<()> {
+        self.cfg.paths.ensure_dirs()?;
+        let dir = &self.cfg.paths.reports;
+        std::fs::write(dir.join(format!("{name}.txt")), table.to_console())?;
+        std::fs::write(dir.join(format!("{name}.md")), table.to_markdown())?;
+        std::fs::write(dir.join(format!("{name}.csv")), table.to_csv())?;
+        println!("{}", table.to_console());
+        Ok(())
+    }
+}
+
+pub const PRUNE_RATIOS: [f64; 5] = [0.5, 0.6, 0.7, 0.8, 0.9];
+pub const JOINT_RATIOS: [f64; 3] = [0.25, 0.5, 0.75];
+
+/// Tables 1 & 2: pruning perplexity across ratios and methods.
+fn prune_table(ctx: &mut ExperimentCtx, name: &str, model: &str,
+               awp_method: Method) -> Result<Table> {
+    let dense = ctx.dense_ppl(model)?;
+    let cols: Vec<String> = PRUNE_RATIOS.iter().map(|r| format!("{:.0}%", r * 100.0)).collect();
+    let mut t = Table::new(
+        format!("{name}: ppl of pruned '{model}' (dense = {dense:.2})"),
+        "method", cols);
+    for method in [Method::Magnitude, Method::SparseGpt, Method::Wanda, awp_method] {
+        let mut cells = Vec::new();
+        for &ratio in &PRUNE_RATIOS {
+            let spec = CompressionSpec::prune(ratio);
+            cells.push(Some(ctx.cell(model, method, &spec)?));
+        }
+        t.push_row(method.label().to_uppercase(), cells);
+    }
+    Ok(t)
+}
+
+pub fn table1(ctx: &mut ExperimentCtx, awp: Method) -> Result<Table> {
+    let t = prune_table(ctx, "Table 1", "small", awp)?;
+    ctx.write_report("table1", &t)?;
+    Ok(t)
+}
+
+pub fn table2(ctx: &mut ExperimentCtx, awp: Method) -> Result<Table> {
+    let t = prune_table(ctx, "Table 2", "medium", awp)?;
+    ctx.write_report("table2", &t)?;
+    Ok(t)
+}
+
+/// Table 3: INT4/INT3/INT2 weight-only grouped quantization.
+pub fn table3(ctx: &mut ExperimentCtx, awp: Method) -> Result<Table> {
+    let model = "small";
+    let dense = ctx.dense_ppl(model)?;
+    let group = ctx.manifest.awp_group;
+    let mut t = Table::new(
+        format!("Table 3: ppl of quantized '{model}' (group={group}, dense = {dense:.2})"),
+        "method",
+        vec!["INT4".into(), "INT3".into(), "INT2".into()]);
+    for method in [Method::Rtn, Method::Gptq, Method::Awq, awp] {
+        let mut cells = Vec::new();
+        for bits in [4u8, 3, 2] {
+            let spec = CompressionSpec::quant(bits, group);
+            cells.push(Some(ctx.cell(model, method, &spec)?));
+        }
+        t.push_row(method.label().to_uppercase(), cells);
+    }
+    ctx.write_report("table3", &t)?;
+    Ok(t)
+}
+
+/// Tables 4 & 5: joint pruning + INT4 quantization.
+fn joint_table(ctx: &mut ExperimentCtx, name: &str, model: &str,
+               awp_method: Method) -> Result<Table> {
+    let dense = ctx.dense_ppl(model)?;
+    let group = ctx.manifest.awp_group;
+    let cols: Vec<String> = JOINT_RATIOS.iter().map(|r| format!("{:.0}%", r * 100.0)).collect();
+    let mut t = Table::new(
+        format!("{name}: ppl of pruned + INT4 '{model}' (dense = {dense:.2})"),
+        "method", cols);
+    for method in [Method::AwqThenWanda, Method::WandaThenAwq, awp_method] {
+        let mut cells = Vec::new();
+        for &ratio in &JOINT_RATIOS {
+            let spec = CompressionSpec::joint(ratio, 4, group);
+            cells.push(Some(ctx.cell(model, method, &spec)?));
+        }
+        t.push_row(method.label().to_uppercase(), cells);
+    }
+    Ok(t)
+}
+
+pub fn table4(ctx: &mut ExperimentCtx, awp: Method) -> Result<Table> {
+    let t = joint_table(ctx, "Table 4", "small", awp)?;
+    ctx.write_report("table4", &t)?;
+    Ok(t)
+}
+
+pub fn table5(ctx: &mut ExperimentCtx, awp: Method) -> Result<Table> {
+    let t = joint_table(ctx, "Table 5", "tiny", awp)?;
+    ctx.write_report("table5", &t)?;
+    Ok(t)
+}
+
+/// Ablation (paper §5 future work): unstructured 50% vs 2:4 semi-structured
+/// sparsity, per method. 2:4 constrains *where* zeros live, so it should
+/// cost some perplexity vs unstructured 50% at equal density — the
+/// acceleration-vs-quality trade-off the paper's future-work section is
+/// about.
+pub fn ablation24(ctx: &mut ExperimentCtx) -> Result<Table> {
+    let model = "small";
+    let dense = ctx.dense_ppl(model)?;
+    let mut t = Table::new(
+        format!("Ablation: unstructured 50% vs 2:4 on '{model}' (dense = {dense:.2})"),
+        "method",
+        vec!["unstructured 50%".into(), "2:4".into()]);
+    for method in [Method::Magnitude, Method::Wanda, Method::AwpCpu] {
+        let u = ctx.cell(model, method, &CompressionSpec::prune(0.5))?;
+        let s = ctx.cell(model, method, &CompressionSpec::structured24())?;
+        t.push_row(method.label().to_uppercase(), vec![Some(u), Some(s)]);
+    }
+    ctx.write_report("ablation24", &t)?;
+    Ok(t)
+}
+
+/// Figure 1: normalized activation-aware loss vs AWP iteration for one
+/// layer — run on the production HLO backend (chunk-1 program).
+pub fn fig1(ctx: &mut ExperimentCtx, layer_param: &str, ratio: f64)
+    -> Result<Vec<(f64, f64)>> {
+    let model = "small";
+    let ck = ctx.checkpoint(model)?;
+    let grams = ctx.grams(model)?;
+    let site = super::jobs::plan_jobs(&ck.config)
+        .jobs
+        .into_iter()
+        .map(|j| j.site)
+        .find(|s| s.param == layer_param)
+        .with_context(|| format!("no site {layer_param}"))?;
+    let w = ck.matrix(&site.param)?;
+    let c = grams.get(site.gram, site.layer).context("gram missing")?;
+    let hyper = AwpHyper {
+        track_series: true,
+        group: ctx.manifest.awp_group,
+        chunk: ctx.manifest.awp_chunk,
+        ..AwpHyper::default()
+    };
+    let compressor = make_compressor(Method::AwpHlo, hyper,
+                                     Some((&ctx.handle, &ctx.manifest)))?;
+    let spec = CompressionSpec::prune(ratio);
+    let out = compressor.compress(&w, c, &spec)?;
+    let points: Vec<(f64, f64)> = out
+        .stats
+        .loss_series
+        .iter()
+        .enumerate()
+        .map(|(i, &l)| (i as f64, l))
+        .collect();
+    ctx.cfg.paths.ensure_dirs()?;
+    std::fs::write(ctx.cfg.paths.reports.join("fig1.csv"),
+                   series_csv(("iteration", "rel_loss"), &points))?;
+    println!("# Figure 1: ||W·C½ − Θ(t)·C½||_F / ||W||_F on {layer_param} @ {:.0}%",
+             ratio * 100.0);
+    for (x, y) in points.iter().take(12) {
+        println!("  iter {x:3.0}  rel_loss {y:.5}");
+    }
+    if points.len() > 12 {
+        let (x, y) = points.last().unwrap();
+        println!("  ...\n  iter {x:3.0}  rel_loss {y:.5}");
+    }
+    Ok(points)
+}

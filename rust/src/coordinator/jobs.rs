@@ -1,0 +1,99 @@
+//! Site-job planning — the pure scheduling core of the pipeline, kept free
+//! of I/O so its invariants are directly property-testable (rust/tests/):
+//! every compressible site appears exactly once, its Gram key matches its
+//! input distribution, jobs are deterministically ordered, and the whole
+//! plan covers exactly the model's block-linear parameters.
+
+use crate::model::{sites, LayerSite, ModelConfig};
+
+/// One schedulable unit: compress `site` using the Gram at `gram_index`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Job {
+    pub id: usize,
+    pub site: LayerSite,
+}
+
+/// A full compression plan for a model.
+#[derive(Clone, Debug)]
+pub struct JobPlan {
+    pub jobs: Vec<Job>,
+}
+
+/// Deterministic plan: sites in block order, q/k/v/o before MLP — large
+/// `d_in` (MLP-down) sites scheduled *first* within each layer so the
+/// longest jobs start earliest on the worker pool (classic LPT heuristic).
+pub fn plan_jobs(cfg: &ModelConfig) -> JobPlan {
+    let mut all = sites::enumerate_sites(cfg);
+    all.sort_by_key(|s| {
+        // (layer, -cost) ordering: cost ≈ d_out·d_in²
+        let cost = (s.d_out as u64) * (s.d_in as u64) * (s.d_in as u64);
+        (s.layer, std::cmp::Reverse(cost), s.param.clone())
+    });
+    JobPlan {
+        jobs: all
+            .into_iter()
+            .enumerate()
+            .map(|(id, site)| Job { id, site })
+            .collect(),
+    }
+}
+
+impl JobPlan {
+    /// Total FLOP-ish cost (for progress estimation): Σ d_out·d_in².
+    pub fn total_cost(&self) -> u64 {
+        self.jobs
+            .iter()
+            .map(|j| (j.site.d_out as u64) * (j.site.d_in as u64).pow(2))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(), vocab: 256, d_model: 128, n_heads: 4, n_layers: 3,
+            d_ff: 512, seq_len: 64, batch: 2, decode_len: 32, rope_theta: 1e4,
+        }
+    }
+
+    #[test]
+    fn covers_every_site_once() {
+        let plan = plan_jobs(&cfg());
+        assert_eq!(plan.jobs.len(), 18);
+        let mut params: Vec<&str> =
+            plan.jobs.iter().map(|j| j.site.param.as_str()).collect();
+        params.sort();
+        params.dedup();
+        assert_eq!(params.len(), 18, "duplicate site in plan");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = plan_jobs(&cfg());
+        let b = plan_jobs(&cfg());
+        assert_eq!(a.jobs, b.jobs);
+    }
+
+    #[test]
+    fn lpt_within_layer() {
+        let plan = plan_jobs(&cfg());
+        // first job of each layer must be the most expensive site (mlp_down:
+        // d_in=512 ⇒ cost 128·512² > w_up 512·128² > attn 128·128²)
+        for l in 0..3 {
+            let first = plan.jobs.iter().find(|j| j.site.layer == l).unwrap();
+            assert!(first.site.param.ends_with("w_down"), "{}", first.site.param);
+        }
+    }
+
+    #[test]
+    fn ids_are_sequential() {
+        let plan = plan_jobs(&cfg());
+        for (i, j) in plan.jobs.iter().enumerate() {
+            assert_eq!(j.id, i);
+        }
+        assert!(plan.total_cost() > 0);
+    }
+}

@@ -1,0 +1,117 @@
+//! Method registry: the paper's full method matrix by name.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::compress::awp::AwpHyper;
+use crate::compress::{
+    awq::AwqQuant, gptq::Gptq, magnitude::MagnitudePrune, rtn::RtnQuant,
+    sequential::SequentialCombo, sparsegpt::SparseGpt, wanda::WandaPrune, AwpDriver,
+    CpuBackend, LayerCompressor,
+};
+use crate::runtime::{HloBackend, Manifest, RuntimeHandle};
+
+/// Every compression method the experiments reference.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Magnitude,
+    Wanda,
+    SparseGpt,
+    Rtn,
+    Awq,
+    Gptq,
+    AwqThenWanda,
+    WandaThenAwq,
+    /// AWP on the pure-Rust backend
+    AwpCpu,
+    /// AWP on the AOT/PJRT backend (the production path)
+    AwpHlo,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "magnitude" | "mag" => Method::Magnitude,
+            "wanda" => Method::Wanda,
+            "sparsegpt" => Method::SparseGpt,
+            "rtn" => Method::Rtn,
+            "awq" => Method::Awq,
+            "gptq" => Method::Gptq,
+            "awq+wanda" => Method::AwqThenWanda,
+            "wanda+awq" => Method::WandaThenAwq,
+            "awp" | "awp-hlo" => Method::AwpHlo,
+            "awp-cpu" => Method::AwpCpu,
+            other => bail!("unknown method '{other}'"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Magnitude => "magnitude",
+            Method::Wanda => "wanda",
+            Method::SparseGpt => "sparsegpt",
+            Method::Rtn => "rtn",
+            Method::Awq => "awq",
+            Method::Gptq => "gptq",
+            Method::AwqThenWanda => "awq+wanda",
+            Method::WandaThenAwq => "wanda+awq",
+            Method::AwpCpu => "awp-cpu",
+            Method::AwpHlo => "awp",
+        }
+    }
+}
+
+/// Build a compressor. `runtime` is required only for [`Method::AwpHlo`].
+pub fn make_compressor(
+    method: Method,
+    hyper: AwpHyper,
+    runtime: Option<(&RuntimeHandle, &Arc<Manifest>)>,
+) -> Result<Box<dyn LayerCompressor>> {
+    Ok(match method {
+        Method::Magnitude => Box::new(MagnitudePrune),
+        Method::Wanda => Box::new(WandaPrune),
+        Method::SparseGpt => Box::new(SparseGpt::default()),
+        Method::Rtn => Box::new(RtnQuant),
+        Method::Awq => Box::new(AwqQuant::default()),
+        Method::Gptq => Box::new(Gptq::default()),
+        Method::AwqThenWanda => Box::new(SequentialCombo::awq_then_wanda()),
+        Method::WandaThenAwq => Box::new(SequentialCombo::wanda_then_awq()),
+        Method::AwpCpu => Box::new(AwpDriver::with_hyper(CpuBackend, hyper)),
+        Method::AwpHlo => {
+            let Some((handle, manifest)) = runtime else {
+                bail!("awp (HLO backend) needs the PJRT runtime; use awp-cpu otherwise");
+            };
+            Box::new(AwpDriver::with_hyper(
+                HloBackend::new(handle.clone(), manifest.clone()),
+                hyper,
+            ))
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in [Method::Magnitude, Method::Wanda, Method::SparseGpt, Method::Rtn,
+                  Method::Awq, Method::Gptq, Method::AwqThenWanda,
+                  Method::WandaThenAwq, Method::AwpCpu] {
+            assert_eq!(Method::parse(m.label()).unwrap(), m);
+        }
+        assert_eq!(Method::parse("awp").unwrap(), Method::AwpHlo);
+        assert!(Method::parse("nope").is_err());
+    }
+
+    #[test]
+    fn cpu_methods_construct_without_runtime() {
+        for m in [Method::Magnitude, Method::Wanda, Method::SparseGpt, Method::Rtn,
+                  Method::Awq, Method::Gptq, Method::AwqThenWanda,
+                  Method::WandaThenAwq, Method::AwpCpu] {
+            assert!(make_compressor(m, AwpHyper::default(), None).is_ok());
+        }
+        assert!(make_compressor(Method::AwpHlo, AwpHyper::default(), None).is_err());
+    }
+}

@@ -1,0 +1,32 @@
+//! The Layer-3 coordinator — the system piece of this reproduction.
+//!
+//! Orchestrates the paper's full layer-wise post-training compression flow:
+//!
+//! ```text
+//!  checkpoint ──► calibrate ──► schedule layer jobs ──► assemble ──► eval
+//!                 (Gram C per   (one job per linear     (compressed
+//!                  input site)   site; method = AWP      checkpoint +
+//!                                or any baseline)        per-layer report)
+//! ```
+//!
+//! * `calibrate` — drives the AOT `calib_capture` program over the fixed
+//!   calibration sample and accumulates `C = XXᵀ/n` per site.
+//! * `jobs` — the site-job scheduler (pure logic, property-tested: every
+//!   site exactly once, Gram routing correct, deterministic order).
+//! * `methods` — name → compressor registry covering the paper's full
+//!   method matrix.
+//! * `pipeline` — end-to-end orchestration + assembly into a new checkpoint.
+//! * `experiments` — regenerates every table/figure of the paper's §4.
+
+pub mod calibrate;
+pub mod experiments;
+pub mod jobs;
+pub mod methods;
+pub mod pipeline;
+
+pub use experiments::ExperimentCtx;
+
+pub use calibrate::{calibrate, Grams};
+pub use jobs::{plan_jobs, JobPlan};
+pub use methods::{make_compressor, Method};
+pub use pipeline::{compress_model, PipelineResult};

@@ -1,0 +1,162 @@
+//! Train/val/calibration splits and sequence batching.
+
+use super::{ByteTokenizer, SyntheticCorpus};
+use crate::util::Rng;
+
+/// Which slice of the corpus a batch is drawn from. Mirrors the paper's
+/// protocol: calibration comes from the *training* distribution (C4/Pile),
+/// perplexity is measured on a held-out split (WikiText-2 validation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+    Calib,
+}
+
+/// A `(batch, seq)` block of token ids, row-major, ready to marshal into an
+/// `xla::Literal` of s32.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub batch: usize,
+    pub seq: usize,
+    pub tokens: Vec<i32>,
+}
+
+/// Deterministic batcher over the tokenized corpus.
+///
+/// Layout: `[ train | val | calib ]` contiguous regions (val/calib 10% each
+/// by default). Train batches sample random windows; val batches iterate
+/// sequential non-overlapping windows (stable perplexity); calib batches
+/// sample random windows from the calib region with a *fixed* seed, like
+/// the paper's fixed 128-sequence calibration sample.
+pub struct Batcher {
+    tokens: Vec<i32>,
+    train_end: usize,
+    val_end: usize,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl Batcher {
+    pub fn new(corpus: &SyntheticCorpus, batch: usize, seq: usize) -> Self {
+        let tokens = ByteTokenizer.encode(&corpus.bytes);
+        let n = tokens.len();
+        assert!(n > 20 * seq, "corpus too small for seq={seq}");
+        let train_end = n * 8 / 10;
+        let val_end = n * 9 / 10;
+        Batcher { tokens, train_end, val_end, batch, seq }
+    }
+
+    fn region(&self, split: Split) -> (usize, usize) {
+        match split {
+            Split::Train => (0, self.train_end),
+            Split::Val => (self.train_end, self.val_end),
+            Split::Calib => (self.val_end, self.tokens.len()),
+        }
+    }
+
+    /// Random-window batch (train/calib style) from `split`, deterministic
+    /// given `rng` state.
+    pub fn sample(&self, split: Split, rng: &mut Rng) -> Batch {
+        let (lo, hi) = self.region(split);
+        let span = hi - lo - self.seq;
+        let mut tokens = Vec::with_capacity(self.batch * self.seq);
+        for _ in 0..self.batch {
+            let start = lo + rng.below(span);
+            tokens.extend_from_slice(&self.tokens[start..start + self.seq]);
+        }
+        Batch { batch: self.batch, seq: self.seq, tokens }
+    }
+
+    /// Number of non-overlapping eval windows available in `split`.
+    pub fn eval_batches(&self, split: Split) -> usize {
+        let (lo, hi) = self.region(split);
+        (hi - lo) / (self.seq * self.batch)
+    }
+
+    /// The `idx`-th sequential non-overlapping batch of `split`.
+    pub fn eval_batch(&self, split: Split, idx: usize) -> Batch {
+        let (lo, _hi) = self.region(split);
+        let stride = self.seq * self.batch;
+        let start = lo + idx * stride;
+        let mut tokens = Vec::with_capacity(stride);
+        for b in 0..self.batch {
+            let s = start + b * self.seq;
+            tokens.extend_from_slice(&self.tokens[s..s + self.seq]);
+        }
+        Batch { batch: self.batch, seq: self.seq, tokens }
+    }
+
+    /// Fixed calibration set: `n` random-window batches with a dedicated
+    /// seed, independent of training RNG state.
+    pub fn calibration_set(&self, n: usize, seed: u64) -> Vec<Batch> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| self.sample(Split::Calib, &mut rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::CorpusConfig;
+
+    fn batcher() -> Batcher {
+        let corpus = SyntheticCorpus::generate(CorpusConfig {
+            total_bytes: 128 << 10,
+            ..Default::default()
+        });
+        Batcher::new(&corpus, 4, 64)
+    }
+
+    #[test]
+    fn batch_shape() {
+        let b = batcher();
+        let mut rng = Rng::new(0);
+        let batch = b.sample(Split::Train, &mut rng);
+        assert_eq!(batch.tokens.len(), 4 * 64);
+        assert!(batch.tokens.iter().all(|&t| (0..256).contains(&t)));
+    }
+
+    #[test]
+    fn splits_disjoint() {
+        let b = batcher();
+        let (t0, t1) = b.region(Split::Train);
+        let (v0, v1) = b.region(Split::Val);
+        let (c0, c1) = b.region(Split::Calib);
+        assert!(t0 < t1 && t1 == v0 && v0 < v1 && v1 == c0 && c0 < c1);
+        assert_eq!(c1, b.tokens.len());
+    }
+
+    #[test]
+    fn eval_batches_sequential_and_disjoint() {
+        let b = batcher();
+        let n = b.eval_batches(Split::Val);
+        assert!(n >= 2);
+        let b0 = b.eval_batch(Split::Val, 0);
+        let b1 = b.eval_batch(Split::Val, 1);
+        assert_ne!(b0.tokens, b1.tokens);
+        // deterministic
+        assert_eq!(b0.tokens, b.eval_batch(Split::Val, 0).tokens);
+    }
+
+    #[test]
+    fn calibration_set_fixed() {
+        let b = batcher();
+        let c1 = b.calibration_set(3, 7);
+        let c2 = b.calibration_set(3, 7);
+        for (a, bb) in c1.iter().zip(&c2) {
+            assert_eq!(a.tokens, bb.tokens);
+        }
+        let c3 = b.calibration_set(3, 8);
+        assert_ne!(c1[0].tokens, c3[0].tokens);
+    }
+
+    #[test]
+    fn train_sampling_varies() {
+        let b = batcher();
+        let mut rng = Rng::new(1);
+        let s1 = b.sample(Split::Train, &mut rng);
+        let s2 = b.sample(Split::Train, &mut rng);
+        assert_ne!(s1.tokens, s2.tokens);
+    }
+}

@@ -1,0 +1,14 @@
+//! Data substrate: synthetic corpus, byte tokenizer, splits and batching.
+//!
+//! Stands in for the paper's C4 (pruning calibration), Pile (quantization
+//! calibration) and WikiText-2 (perplexity eval) — see DESIGN.md §2 for why
+//! a Zipf–Markov synthetic corpus preserves the properties the experiments
+//! depend on (non-isotropic, cross-correlated activation Grams).
+
+pub mod batch;
+pub mod corpus;
+pub mod tokenizer;
+
+pub use batch::{Batch, Batcher, Split};
+pub use corpus::{CorpusConfig, SyntheticCorpus};
+pub use tokenizer::ByteTokenizer;

@@ -1,0 +1,55 @@
+//! Byte-level tokenizer (vocab = 256).
+//!
+//! Byte-level tokenization keeps the model's vocabulary tiny (the paper's
+//! Llama tokenizers would dwarf our models) while remaining a *real*
+//! tokenizer: decode(encode(x)) == x for arbitrary bytes, and perplexity-
+//! per-byte is a standard, well-defined metric.
+
+/// Identity byte tokenizer.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub const VOCAB: usize = 256;
+
+    pub fn encode(&self, text: &[u8]) -> Vec<i32> {
+        text.iter().map(|&b| b as i32).collect()
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> Vec<u8> {
+        tokens
+            .iter()
+            .map(|&t| u8::try_from(t.clamp(0, 255)).unwrap())
+            .collect()
+    }
+
+    pub fn decode_lossy_string(&self, tokens: &[i32]) -> String {
+        String::from_utf8_lossy(&self.decode(tokens)).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t = ByteTokenizer;
+        let text = b"Hello, AWP! \x00\xff".to_vec();
+        assert_eq!(t.decode(&t.encode(&text)), text);
+    }
+
+    #[test]
+    fn vocab_range() {
+        let t = ByteTokenizer;
+        let all: Vec<u8> = (0..=255).collect();
+        let toks = t.encode(&all);
+        assert!(toks.iter().all(|&x| (0..256).contains(&x)));
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let t = ByteTokenizer;
+        assert_eq!(t.decode(&[-5, 300]), vec![0u8, 255]);
+    }
+}

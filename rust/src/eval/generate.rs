@@ -1,0 +1,42 @@
+//! Greedy generation through the AOT `decode_step` executable — the
+//! user-facing proof that a compressed checkpoint still *is* a language
+//! model (used by `examples/generate_demo.rs`).
+
+use anyhow::{ensure, Result};
+
+use crate::data::ByteTokenizer;
+use crate::model::Checkpoint;
+use crate::runtime::{HostTensor, Manifest, RuntimeHandle};
+
+use super::perplexity::checkpoint_args;
+
+/// Greedily extend `prompt` by `n_tokens` bytes with a sliding
+/// `decode_len` window.
+pub fn generate(handle: &RuntimeHandle, manifest: &Manifest, model: &str,
+                ck: &Checkpoint, prompt: &str, n_tokens: usize) -> Result<String> {
+    let entry = manifest.model(model)?;
+    let window = entry.config.decode_len;
+    let path = manifest.model_program_path(model, "decode_step")?;
+    let params = checkpoint_args(ck)?;
+    let tok = ByteTokenizer;
+    let mut tokens: Vec<i32> = tok.encode(prompt.as_bytes());
+    ensure!(!tokens.is_empty(), "prompt must be non-empty");
+    for _ in 0..n_tokens {
+        // right-align the last `window` tokens (pad left with spaces)
+        let mut ctx = vec![b' ' as i32; window];
+        let take = tokens.len().min(window);
+        ctx[window - take..].copy_from_slice(&tokens[tokens.len() - take..]);
+        let mut args = params.clone();
+        args.push(HostTensor::vec_i32(ctx, vec![1, window]));
+        let out = handle.execute("decode_step", path.clone(), args)?;
+        let logits = out[0].as_f32()?;
+        let next = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap();
+        tokens.push(next);
+    }
+    Ok(tok.decode_lossy_string(&tokens))
+}

@@ -1,0 +1,10 @@
+//! Evaluation harness: held-out perplexity (the paper's metric), per-layer
+//! reconstruction reporting, and greedy generation.
+
+pub mod generate;
+pub mod perplexity;
+pub mod reconstruction;
+
+pub use generate::generate;
+pub use perplexity::{perplexity, PerplexityReport};
+pub use reconstruction::{layer_report, LayerReport};

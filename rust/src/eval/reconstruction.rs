@@ -1,0 +1,74 @@
+//! Per-layer reconstruction reporting: the activation-aware loss, sparsity
+//! and solver statistics for every compressed site — the audit trail behind
+//! each table cell (and the source of Figure 1's series).
+
+use crate::compress::CompressStats;
+use crate::model::LayerSite;
+use crate::sparse::SparsityStats;
+use crate::tensor::Matrix;
+
+/// One site's compression outcome.
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub param: String,
+    pub d_out: usize,
+    pub d_in: usize,
+    pub rel_loss: f64,
+    pub sparsity: f64,
+    pub row_uniform: bool,
+    pub iterations: usize,
+    pub seconds: f64,
+}
+
+pub fn layer_report(site: &LayerSite, theta: &Matrix, stats: &CompressStats)
+    -> LayerReport {
+    let sp = SparsityStats::of(theta);
+    LayerReport {
+        param: site.param.clone(),
+        d_out: site.d_out,
+        d_in: site.d_in,
+        rel_loss: stats.rel_loss,
+        sparsity: sp.ratio(),
+        row_uniform: sp.is_row_uniform(),
+        iterations: stats.iterations,
+        seconds: stats.seconds,
+    }
+}
+
+/// Aggregate a set of layer reports into (mean rel-loss, total seconds).
+pub fn summarize(reports: &[LayerReport]) -> (f64, f64) {
+    if reports.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = reports.iter().map(|r| r.rel_loss).sum::<f64>() / reports.len() as f64;
+    let secs = reports.iter().map(|r| r.seconds).sum();
+    (mean, secs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{GramKey, SiteKind};
+
+    #[test]
+    fn report_captures_sparsity() {
+        let site = LayerSite {
+            param: "blocks.0.wq".into(), layer: 0, kind: SiteKind::AttnQ,
+            d_out: 8, d_in: 8, gram: GramKey::AttnIn,
+        };
+        let theta = crate::tensor::topk::hard_threshold_rows(&Matrix::randn(8, 8, 0), 4);
+        let stats = CompressStats { rel_loss: 0.25, iterations: 10, seconds: 0.5,
+                                    ..Default::default() };
+        let r = layer_report(&site, &theta, &stats);
+        assert!((r.sparsity - 0.5).abs() < 1e-9);
+        assert!(r.row_uniform);
+        let (mean, secs) = summarize(&[r.clone(), r]);
+        assert!((mean - 0.25).abs() < 1e-12);
+        assert!((secs - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_summary() {
+        assert_eq!(summarize(&[]), (0.0, 0.0));
+    }
+}

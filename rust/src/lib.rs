@@ -1,0 +1,48 @@
+//! # awp — full-system reproduction of *AWP: Activation-Aware Weight Pruning
+//! # and Quantization with Projected Gradient Descent* (Liu et al., 2025)
+//!
+//! This crate is the Layer-3 coordinator of a three-layer Rust + JAX + Pallas
+//! stack (see `DESIGN.md`):
+//!
+//! * **L1** (`python/compile/kernels/`) — Pallas kernels for the PGD hot path
+//!   (`Z = Θ + η(W−Θ)C`) and the INT-grid projection;
+//! * **L2** (`python/compile/`) — the transformer LM, AdamW train step,
+//!   calibration Gram capture and chunked AWP programs, AOT-lowered to HLO
+//!   text by `make artifacts`;
+//! * **L3** (this crate) — everything at run time: PJRT runtime, training
+//!   loop, calibration orchestration, the layer-wise compression pipeline
+//!   with AWP and every baseline the paper compares against (Magnitude,
+//!   Wanda, SparseGPT, RTN, AWQ, GPTQ), perplexity evaluation, and the
+//!   experiment harness that regenerates each of the paper's tables/figures.
+//!
+//! Python never runs on the request path; after `make artifacts` the `repro`
+//! binary is self-contained.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use awp::compress::{awp_cpu::AwpCpu, traits::{LayerCompressor, CompressionSpec}};
+//! use awp::tensor::Matrix;
+//!
+//! // Compress one layer: W (d_out x d_in) against activation Gram C.
+//! let w = Matrix::randn(64, 64, 0);
+//! let c = Matrix::randn_gram(64, 1);
+//! let spec = CompressionSpec::prune(0.5);
+//! let out = AwpCpu::default().compress(&w, &c, &spec).unwrap();
+//! println!("activation-aware loss: {}", out.stats.final_loss);
+//! ```
+
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod linalg;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sparse;
+pub mod tensor;
+pub mod trainer;
+pub mod util;

@@ -1,0 +1,165 @@
+//! Cholesky factorization of symmetric positive-definite matrices.
+
+use crate::tensor::Matrix;
+
+/// Lower-triangular Cholesky factor `L` with `L·Lᵀ = A`.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    pub l: Matrix,
+}
+
+/// Factor an SPD matrix. Returns `None` when a non-positive pivot appears
+/// (matrix not positive definite to working precision) — callers then retry
+/// with damping via [`cholesky_damped`].
+pub fn cholesky(a: &Matrix) -> Option<Cholesky> {
+    assert_eq!(a.rows, a.cols, "cholesky needs a square matrix");
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            // accumulate in f64: calibration Grams are badly conditioned
+            let mut s = a.at(i, j) as f64;
+            for k in 0..j {
+                s -= (l.at(i, k) as f64) * (l.at(j, k) as f64);
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                *l.at_mut(i, j) = s.sqrt() as f32;
+            } else {
+                *l.at_mut(i, j) = (s / l.at(j, j) as f64) as f32;
+            }
+        }
+    }
+    Some(Cholesky { l })
+}
+
+/// Factor `A + λ·mean(diag A)·I`, escalating `λ` by 10× until the
+/// factorization succeeds — the same "percent-damping" trick SparseGPT and
+/// GPTQ apply to their Hessians. Returns the factor and the λ used.
+pub fn cholesky_damped(a: &Matrix, lambda0: f64) -> (Cholesky, f64) {
+    let n = a.rows;
+    let mean_diag =
+        (0..n).map(|i| a.at(i, i) as f64).sum::<f64>() / n as f64;
+    let mut lambda = lambda0;
+    for _ in 0..24 {
+        let mut damped = a.clone();
+        let add = (lambda * mean_diag.max(1e-12)) as f32;
+        for i in 0..n {
+            *damped.at_mut(i, i) += add;
+        }
+        if let Some(ch) = cholesky(&damped) {
+            return (ch, lambda);
+        }
+        lambda = if lambda == 0.0 { 1e-8 } else { lambda * 10.0 };
+    }
+    panic!("cholesky_damped failed to stabilise after 24 escalations");
+}
+
+/// Inverse of an SPD matrix via Cholesky: `A⁻¹ = L⁻ᵀ·L⁻¹`.
+pub fn spd_inverse(a: &Matrix, lambda0: f64) -> Matrix {
+    let n = a.rows;
+    let (ch, _) = cholesky_damped(a, lambda0);
+    // solve L·Y = I column by column, then Lᵀ·X = Y
+    let mut inv = Matrix::zeros(n, n);
+    for col in 0..n {
+        let mut e = vec![0.0f32; n];
+        e[col] = 1.0;
+        let y = super::solve::solve_lower(&ch.l, &e);
+        let x = super::solve::solve_upper_transposed(&ch.l, &y);
+        for i in 0..n {
+            *inv.at_mut(i, col) = x[i];
+        }
+    }
+    // symmetrise (numerical hygiene)
+    for i in 0..n {
+        for j in 0..i {
+            let v = 0.5 * (inv.at(i, j) + inv.at(j, i));
+            *inv.at_mut(i, j) = v;
+            *inv.at_mut(j, i) = v;
+        }
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::matmul;
+
+    fn assert_close(a: &Matrix, b: &Matrix, tol: f32) {
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() <= tol, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let c = Matrix::randn_gram(24, 0);
+        let ch = cholesky(&c).expect("gram is SPD");
+        let rec = matmul(&ch.l, &ch.l.transpose());
+        assert_close(&rec, &c, 1e-3);
+    }
+
+    #[test]
+    fn factor_is_lower_triangular() {
+        let c = Matrix::randn_gram(8, 1);
+        let ch = cholesky(&c).unwrap();
+        for i in 0..8 {
+            for j in i + 1..8 {
+                assert_eq!(ch.l.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let mut a = Matrix::eye(3);
+        *a.at_mut(2, 2) = -1.0;
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn damping_rescues_singular() {
+        // rank-deficient Gram: duplicate dimension
+        let mut c = Matrix::randn_gram(6, 2);
+        for j in 0..6 {
+            let v = c.at(0, j);
+            *c.at_mut(1, j) = v;
+        }
+        for i in 0..6 {
+            let v = c.at(i, 0);
+            *c.at_mut(i, 1) = v;
+        }
+        let (ch, lambda) = cholesky_damped(&c, 0.01);
+        assert!(lambda >= 0.01);
+        assert!(ch.l.at(5, 5).is_finite());
+    }
+
+    #[test]
+    fn inverse_times_matrix_is_identity() {
+        let c = Matrix::randn_gram(16, 3);
+        let inv = spd_inverse(&c, 0.0);
+        let prod = matmul(&inv, &c);
+        let eye = Matrix::eye(16);
+        for i in 0..16 {
+            for j in 0..16 {
+                let tol = if i == j { 2e-2 } else { 2e-2 };
+                assert!((prod.at(i, j) - eye.at(i, j)).abs() < tol,
+                        "({i},{j}): {}", prod.at(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_is_symmetric() {
+        let c = Matrix::randn_gram(10, 4);
+        let inv = spd_inverse(&c, 0.0);
+        for i in 0..10 {
+            for j in 0..10 {
+                assert!((inv.at(i, j) - inv.at(j, i)).abs() < 1e-6);
+            }
+        }
+    }
+}

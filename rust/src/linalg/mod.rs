@@ -1,0 +1,15 @@
+//! Linear-algebra substrate: Cholesky factorization, triangular solves and
+//! SPD inversion.
+//!
+//! The paper's strongest baselines (SparseGPT, GPTQ, both re-implemented in
+//! `compress/`) need the *inverse Hessian* `(C + λI)⁻¹` and its Cholesky
+//! factor — the exact computation the paper contrasts AWP against ("more
+//! efficient than inverting XXᵀ required in OBC, SparseGPT, GPTQ"). We build
+//! it from scratch so the cost comparison in `benches/compression.rs` is
+//! apples-to-apples on the same substrate.
+
+pub mod cholesky;
+pub mod solve;
+
+pub use cholesky::{cholesky, cholesky_damped, spd_inverse, Cholesky};
+pub use solve::{solve_lower, solve_upper};

@@ -1,0 +1,97 @@
+//! Triangular solves (forward/back substitution).
+
+use crate::tensor::Matrix;
+
+/// Solve `L·x = b` for lower-triangular `L`.
+pub fn solve_lower(l: &Matrix, b: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0f32; n];
+    for i in 0..n {
+        let mut s = b[i] as f64;
+        for j in 0..i {
+            s -= (l.at(i, j) as f64) * (x[j] as f64);
+        }
+        x[i] = (s / l.at(i, i) as f64) as f32;
+    }
+    x
+}
+
+/// Solve `U·x = b` for upper-triangular `U`.
+pub fn solve_upper(u: &Matrix, b: &[f32]) -> Vec<f32> {
+    let n = u.rows;
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut s = b[i] as f64;
+        for j in i + 1..n {
+            s -= (u.at(i, j) as f64) * (x[j] as f64);
+        }
+        x[i] = (s / u.at(i, i) as f64) as f32;
+    }
+    x
+}
+
+/// Solve `Lᵀ·x = b` given lower-triangular `L` (without materialising `Lᵀ`).
+pub fn solve_upper_transposed(l: &Matrix, b: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut s = b[i] as f64;
+        for j in i + 1..n {
+            // (Lᵀ)[i,j] = L[j,i]
+            s -= (l.at(j, i) as f64) * (x[j] as f64);
+        }
+        x[i] = (s / l.at(i, i) as f64) as f32;
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::cholesky;
+
+    #[test]
+    fn lower_solve_roundtrip() {
+        let c = Matrix::randn_gram(12, 0);
+        let l = cholesky(&c).unwrap().l;
+        let x_true: Vec<f32> = (0..12).map(|i| (i as f32) * 0.3 - 1.0).collect();
+        // b = L x
+        let mut b = vec![0.0f32; 12];
+        for i in 0..12 {
+            for j in 0..=i {
+                b[i] += l.at(i, j) * x_true[j];
+            }
+        }
+        let x = solve_lower(&l, &b);
+        for (a, t) in x.iter().zip(&x_true) {
+            assert!((a - t).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn upper_transposed_matches_explicit_transpose() {
+        let c = Matrix::randn_gram(9, 1);
+        let l = cholesky(&c).unwrap().l;
+        let b: Vec<f32> = (0..9).map(|i| (i as f32).sin()).collect();
+        let x1 = solve_upper_transposed(&l, &b);
+        let x2 = solve_upper(&l.transpose(), &b);
+        for (a, bb) in x1.iter().zip(&x2) {
+            assert!((a - bb).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn diagonal_system() {
+        let mut d = Matrix::zeros(3, 3);
+        *d.at_mut(0, 0) = 2.0;
+        *d.at_mut(1, 1) = 4.0;
+        *d.at_mut(2, 2) = 8.0;
+        let x = solve_lower(&d, &[2.0, 4.0, 8.0]);
+        assert_eq!(x, vec![1.0, 1.0, 1.0]);
+        let y = solve_upper(&d, &[2.0, 4.0, 8.0]);
+        assert_eq!(y, vec![1.0, 1.0, 1.0]);
+    }
+}

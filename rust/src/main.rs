@@ -1,0 +1,257 @@
+//! `repro` — the AWP reproduction CLI (Layer-3 entrypoint).
+//!
+//! ```text
+//! repro train   --model small [--steps N]
+//! repro eval    --model small [--checkpoint path]
+//! repro compress --model small --method awp --mode prune --ratio 0.5 [--bits 4]
+//! repro generate --model small --prompt "..." [--tokens N]
+//! repro experiment table1|table2|table3|table4|table5|fig1|all [--awp-backend cpu|hlo]
+//! repro e2e     # end-to-end driver: train → eval → compress → eval
+//! repro info    # artifacts / manifest summary
+//! ```
+//!
+//! Global flags: `--config <file.json>` (see rust/src/config), `--artifacts
+//! <dir>`. The CLI is hand-rolled (the image has no argument-parsing crate);
+//! see `Args` below.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use awp::compress::awp::AwpHyper;
+use awp::compress::traits::CompressionSpec;
+use awp::config::RunConfig;
+use awp::coordinator::experiments::{self, ExperimentCtx};
+use awp::coordinator::{compress_model, make_compressor, Method};
+use awp::data::Split;
+use awp::eval::{generate, perplexity};
+use awp::model::Checkpoint;
+use awp::runtime::{Manifest, Runtime};
+use awp::trainer;
+
+/// Minimal flag parser: positional subcommand + `--key value` pairs.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Args {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut it = std::env::args().skip(1).peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                flags.insert(key.to_string(), val);
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+            None => Ok(default),
+        }
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn run_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = RunConfig::default();
+    if let Some(path) = args.get("config") {
+        cfg.load_overrides(path)?;
+    }
+    if let Some(dir) = args.get("artifacts") {
+        cfg.paths.artifacts = dir.into();
+    }
+    Ok(cfg)
+}
+
+fn spec_from_args(args: &Args) -> Result<CompressionSpec> {
+    let mode = args.get_or("mode", "prune");
+    let ratio = args.get_f64("ratio", 0.5)?;
+    let bits = args.get_usize("bits", 4)? as u8;
+    let group = args.get_usize("group", 32)?;
+    Ok(match mode.as_str() {
+        "prune" => CompressionSpec::prune(ratio),
+        "quant" => CompressionSpec::quant(bits, group),
+        "joint" => CompressionSpec::joint(ratio, bits, group),
+        other => bail!("unknown --mode '{other}' (prune|quant|joint)"),
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let Some(cmd) = args.positional.first().cloned() else {
+        eprintln!("usage: repro <train|eval|compress|generate|experiment|e2e|info> [flags]");
+        std::process::exit(2);
+    };
+    let cfg = run_config(&args)?;
+    let manifest = Arc::new(Manifest::load(&cfg.paths.artifacts)?);
+    let runtime = Runtime::start()?;
+    let mut ctx = ExperimentCtx::new(runtime.handle(), manifest.clone(), cfg.clone());
+
+    match cmd.as_str() {
+        "info" => {
+            println!("artifacts: {:?}", cfg.paths.artifacts);
+            println!("awp chunk={} group={}", manifest.awp_chunk, manifest.awp_group);
+            let mut names: Vec<_> = manifest.models.keys().collect();
+            names.sort();
+            for name in names {
+                let e = manifest.model(name)?;
+                println!("model {name:8} d={} ff={} L={} params={}",
+                         e.config.d_model, e.config.d_ff, e.config.n_layers,
+                         e.config.param_count());
+            }
+            println!("awp programs: {}", manifest.awp_programs.len());
+        }
+        "train" => {
+            let model = args.get_or("model", "small");
+            let mut tc = cfg.train_config(&model);
+            if let Some(s) = args.get("steps") {
+                tc.steps = s.parse()?;
+                tc.warmup = (tc.steps / 10).max(1);
+            }
+            cfg.paths.ensure_dirs()?;
+            let batcher = ctx.batcher(&model)?;
+            let (ck, curve) =
+                trainer::train(&runtime.handle(), &manifest, &model, &batcher, &tc)?;
+            let path = cfg.paths.checkpoint_file(&model);
+            ck.save(&path)?;
+            println!("saved {path:?} (final loss {:.4})",
+                     curve.last().map(|(_, l)| *l).unwrap_or(f64::NAN));
+        }
+        "eval" => {
+            let model = args.get_or("model", "small");
+            let ck = match args.get("checkpoint") {
+                Some(p) => Arc::new(Checkpoint::load(p)?),
+                None => ctx.checkpoint(&model)?,
+            };
+            let batcher = ctx.batcher(&model)?;
+            let rep = perplexity(&runtime.handle(), &manifest, &model, &ck,
+                                 &batcher, Split::Val, cfg.eval_batches)?;
+            println!("ppl = {:.4}  (nll/token {:.4}, {} tokens, {} windows)",
+                     rep.ppl, rep.nll_per_token, rep.tokens, rep.batches);
+        }
+        "compress" => {
+            let model = args.get_or("model", "small");
+            let method = Method::parse(&args.get_or("method", "awp"))?;
+            let spec = spec_from_args(&args)?;
+            let ck = ctx.checkpoint(&model)?;
+            let grams = ctx.grams(&model)?;
+            let hyper = AwpHyper { group: manifest.awp_group,
+                                   chunk: manifest.awp_chunk,
+                                   ..AwpHyper::default() };
+            let compressor = make_compressor(method, hyper,
+                                             Some((&runtime.handle(), &manifest)))?;
+            let out = compress_model(&ck, &grams, compressor.as_ref(), &spec, true)?;
+            let dense = ctx.dense_ppl(&model)?;
+            let ppl = ctx.ppl(&model, &out.checkpoint)?;
+            println!("{} {:?}: ppl {dense:.3} → {ppl:.3}  ({:.1}s, {} layers)",
+                     method.label(), spec.mode, out.seconds, out.reports.len());
+            if let Some(path) = args.get("save") {
+                out.checkpoint.save(path)?;
+                println!("saved compressed checkpoint to {path}");
+            }
+        }
+        "generate" => {
+            let model = args.get_or("model", "small");
+            let prompt = args.get_or("prompt", "The ");
+            let n = args.get_usize("tokens", 120)?;
+            let ck = match args.get("checkpoint") {
+                Some(p) => Arc::new(Checkpoint::load(p)?),
+                None => ctx.checkpoint(&model)?,
+            };
+            let text = generate(&runtime.handle(), &manifest, &model, &ck, &prompt, n)?;
+            println!("{text}");
+        }
+        "experiment" => {
+            let which = args
+                .positional
+                .get(1)
+                .map(|s| s.as_str())
+                .unwrap_or("all")
+                .to_string();
+            let awp = match args.get_or("awp-backend", "cpu").as_str() {
+                // both backends are numerically interchangeable (verified in
+                // rust/tests/); cpu is the fast path on this testbed, hlo
+                // exercises the production AOT artifacts.
+                "cpu" => Method::AwpCpu,
+                "hlo" => Method::AwpHlo,
+                other => bail!("--awp-backend {other}? (cpu|hlo)"),
+            };
+            match which.as_str() {
+                "table1" => { experiments::table1(&mut ctx, awp)?; }
+                "table2" => { experiments::table2(&mut ctx, awp)?; }
+                "table3" => { experiments::table3(&mut ctx, awp)?; }
+                "table4" => { experiments::table4(&mut ctx, awp)?; }
+                "table5" => { experiments::table5(&mut ctx, awp)?; }
+                "fig1" => {
+                    let layer = args.get_or("layer", "blocks.1.wq");
+                    let ratio = args.get_f64("ratio", 0.5)?;
+                    experiments::fig1(&mut ctx, &layer, ratio)?;
+                }
+                "ablation24" => { experiments::ablation24(&mut ctx)?; }
+                "all" => {
+                    experiments::table1(&mut ctx, awp)?;
+                    experiments::table2(&mut ctx, awp)?;
+                    experiments::table3(&mut ctx, awp)?;
+                    experiments::table4(&mut ctx, awp)?;
+                    experiments::table5(&mut ctx, awp)?;
+                    experiments::fig1(&mut ctx, "blocks.1.wq", 0.5)?;
+                }
+                other => bail!("unknown experiment '{other}'"),
+            }
+        }
+        "e2e" => {
+            // end-to-end driver: train → dense ppl → AWP 50% + INT4 joint →
+            // compressed ppl → short generation (DESIGN.md §6).
+            let model = args.get_or("model", "small");
+            let ck = ctx.checkpoint(&model)?;
+            let dense = ctx.dense_ppl(&model)?;
+            println!("[e2e] dense ppl = {dense:.3}");
+            let grams = ctx.grams(&model)?;
+            let hyper = AwpHyper { group: manifest.awp_group,
+                                   chunk: manifest.awp_chunk,
+                                   ..AwpHyper::default() };
+            let spec = CompressionSpec::joint(0.5, 4, manifest.awp_group);
+            let compressor = make_compressor(Method::AwpHlo, hyper,
+                                             Some((&runtime.handle(), &manifest)))?;
+            let out = compress_model(&ck, &grams, compressor.as_ref(), &spec, true)?;
+            let ppl = ctx.ppl(&model, &out.checkpoint)?;
+            println!("[e2e] AWP joint 50% + INT4 (HLO backend): ppl = {ppl:.3} \
+                      ({:.1}s over {} layers)", out.seconds, out.reports.len());
+            let sample = generate(&runtime.handle(), &manifest, &model,
+                                  &out.checkpoint, "The ", 80)?;
+            println!("[e2e] sample from compressed model: {sample:?}");
+            let stats = runtime.handle().stats()?;
+            println!("[e2e] runtime: {} executions, {} compilations, \
+                      exec {:.1}s, compile {:.1}s",
+                     stats.executions, stats.compilations,
+                     stats.exec_seconds, stats.compile_seconds);
+        }
+        other => bail!("unknown command '{other}'"),
+    }
+    Ok(())
+}

@@ -1,0 +1,146 @@
+//! Transformer architecture config — the Rust mirror of
+//! `python/compile/model.py::ModelConfig`. The authoritative copy for a
+//! given artifact set is the one embedded in `artifacts/manifest.json`;
+//! this struct deserializes it and re-derives the parameter layout.
+
+use anyhow::Result;
+
+use crate::util::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub decode_len: usize,
+    pub rope_theta: f64,
+}
+
+impl ModelConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("vocab", Json::Num(self.vocab as f64)),
+            ("d_model", Json::Num(self.d_model as f64)),
+            ("n_heads", Json::Num(self.n_heads as f64)),
+            ("n_layers", Json::Num(self.n_layers as f64)),
+            ("d_ff", Json::Num(self.d_ff as f64)),
+            ("seq_len", Json::Num(self.seq_len as f64)),
+            ("batch", Json::Num(self.batch as f64)),
+            ("decode_len", Json::Num(self.decode_len as f64)),
+            ("rope_theta", Json::Num(self.rope_theta)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: v.expect("name")?.as_str()?.to_string(),
+            vocab: v.expect("vocab")?.as_usize()?,
+            d_model: v.expect("d_model")?.as_usize()?,
+            n_heads: v.expect("n_heads")?.as_usize()?,
+            n_layers: v.expect("n_layers")?.as_usize()?,
+            d_ff: v.expect("d_ff")?.as_usize()?,
+            seq_len: v.expect("seq_len")?.as_usize()?,
+            batch: v.expect("batch")?.as_usize()?,
+            decode_len: v.expect("decode_len")?.as_usize()?,
+            rope_theta: v.expect("rope_theta")?.as_f64()?,
+        })
+    }
+
+    /// Deterministic (name, shape) parameter list — must match
+    /// `model.param_spec` on the python side (asserted against the manifest
+    /// at load time in `runtime::manifest`).
+    pub fn param_spec(&self) -> Vec<(String, Vec<usize>)> {
+        let d = self.d_model;
+        let ff = self.d_ff;
+        let mut spec: Vec<(String, Vec<usize>)> =
+            vec![("embed".into(), vec![self.vocab, d])];
+        for i in 0..self.n_layers {
+            let p = format!("blocks.{i}.");
+            spec.push((format!("{p}ln1"), vec![d]));
+            spec.push((format!("{p}wq"), vec![d, d]));
+            spec.push((format!("{p}wk"), vec![d, d]));
+            spec.push((format!("{p}wv"), vec![d, d]));
+            spec.push((format!("{p}wo"), vec![d, d]));
+            spec.push((format!("{p}ln2"), vec![d]));
+            spec.push((format!("{p}w_up"), vec![ff, d]));
+            spec.push((format!("{p}w_down"), vec![d, ff]));
+        }
+        spec.push(("ln_f".into(), vec![d]));
+        spec
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.param_spec().iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+
+    /// Parameters inside transformer blocks (the compressible fraction).
+    pub fn block_param_count(&self) -> usize {
+        self.param_spec()
+            .iter()
+            .filter(|(n, _)| n.contains(".w"))
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> ModelConfig {
+        ModelConfig {
+            name: "small".into(),
+            vocab: 256,
+            d_model: 256,
+            n_heads: 8,
+            n_layers: 4,
+            d_ff: 1024,
+            seq_len: 128,
+            batch: 4,
+            decode_len: 64,
+            rope_theta: 10000.0,
+        }
+    }
+
+    #[test]
+    fn spec_order_matches_python_convention() {
+        let spec = small().param_spec();
+        assert_eq!(spec[0].0, "embed");
+        assert_eq!(spec[1].0, "blocks.0.ln1");
+        assert_eq!(spec[2].0, "blocks.0.wq");
+        assert_eq!(spec.last().unwrap().0, "ln_f");
+        assert_eq!(spec.len(), 1 + 8 * 4 + 1);
+    }
+
+    #[test]
+    fn param_counts() {
+        let c = small();
+        // 4 blocks * (4*d*d + 2*d*ff) + vocab*d + norms
+        let blocks = 4 * (4 * 256 * 256 + 2 * 256 * 1024);
+        assert_eq!(c.block_param_count(), blocks);
+        assert!(c.param_count() > blocks);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = small();
+        let s = c.to_json().to_string();
+        let back = ModelConfig::from_json(&Json::parse(&s).unwrap()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn from_json_rejects_missing_field() {
+        let mut j = small().to_json();
+        if let Json::Obj(kvs) = &mut j {
+            kvs.retain(|(k, _)| k != "d_model");
+        }
+        assert!(ModelConfig::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Model substrate: transformer configs (mirroring `python/compile/model.py`
+//! exactly), a named-tensor checkpoint format, and the enumeration of
+//! compressible weight sites that drives the layer-wise pipeline.
+
+pub mod config;
+pub mod sites;
+pub mod store;
+
+pub use config::ModelConfig;
+pub use sites::{GramKey, LayerSite, SiteKind};
+pub use store::Checkpoint;

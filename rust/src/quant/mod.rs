@@ -1,0 +1,17 @@
+//! Quantization substrate: grouped affine INT quantization and bit-packed
+//! storage.
+//!
+//! Matches the constraint set `C_INTb` of the paper (and the L1 kernel
+//! `quant_project.py`) exactly: per-group (along `d_in`) affine grids with
+//! `2^bits` levels, min/max-fitted scale and integer zero-point. `pack.rs`
+//! provides the bit-packed on-disk representation used to report real
+//! compressed sizes (the paper's "4 bits + 1 mask bit ≈ 2-bit equivalent"
+//! accounting in §4.3).
+
+pub mod grouped;
+pub mod pack;
+
+pub use grouped::{
+    dequantize, project_qmax, quantize, quantize_dequantize, GroupedQuant, QuantSpec,
+};
+pub use pack::{pack_bits, unpack_bits, packed_size_bytes};

@@ -1,0 +1,86 @@
+//! Bit-packing for quantized codes: `bits`-wide codes packed little-endian
+//! into a byte stream. This is what makes the compressed-size numbers in the
+//! experiment reports real rather than notional.
+
+/// Pack `codes` (each `< 2^bits`) into a little-endian bitstream.
+pub fn pack_bits(codes: &[u8], bits: u8) -> Vec<u8> {
+    assert!((1..=8).contains(&bits));
+    let total_bits = codes.len() * bits as usize;
+    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    let mut bitpos = 0usize;
+    for &c in codes {
+        debug_assert!(bits == 8 || (c as u16) < (1u16 << bits), "code {c} overflows {bits} bits");
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        out[byte] |= c << off;
+        if off + bits as usize > 8 {
+            out[byte + 1] |= c >> (8 - off);
+        }
+        bitpos += bits as usize;
+    }
+    out
+}
+
+/// Inverse of [`pack_bits`]; `n` is the number of codes to recover.
+pub fn unpack_bits(packed: &[u8], bits: u8, n: usize) -> Vec<u8> {
+    assert!((1..=8).contains(&bits));
+    let mask = if bits == 8 { 0xFFu16 } else { (1u16 << bits) - 1 };
+    let mut out = Vec::with_capacity(n);
+    let mut bitpos = 0usize;
+    for _ in 0..n {
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let mut v = (packed[byte] as u16) >> off;
+        if off + bits as usize > 8 && byte + 1 < packed.len() {
+            v |= (packed[byte + 1] as u16) << (8 - off);
+        }
+        out.push((v & mask) as u8);
+        bitpos += bits as usize;
+    }
+    out
+}
+
+/// Bytes needed for `n` codes at `bits` each.
+pub fn packed_size_bytes(n: usize, bits: u8) -> usize {
+    (n * bits as usize).div_ceil(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_all_widths() {
+        let mut rng = Rng::new(0);
+        for bits in 1..=8u8 {
+            let maxc = if bits == 8 { 256 } else { 1usize << bits };
+            let codes: Vec<u8> =
+                (0..1000).map(|_| rng.below(maxc) as u8).collect();
+            let packed = pack_bits(&codes, bits);
+            assert_eq!(packed.len(), packed_size_bytes(codes.len(), bits));
+            let back = unpack_bits(&packed, bits, codes.len());
+            assert_eq!(codes, back, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn packing_is_dense() {
+        // 8 codes at 3 bits = 24 bits = 3 bytes
+        let codes = vec![7u8; 8];
+        assert_eq!(pack_bits(&codes, 3).len(), 3);
+    }
+
+    #[test]
+    fn empty() {
+        assert!(pack_bits(&[], 4).is_empty());
+        assert!(unpack_bits(&[], 4, 0).is_empty());
+    }
+
+    #[test]
+    fn known_pattern_int4() {
+        let codes = vec![0x1u8, 0x2, 0x3, 0x4];
+        let packed = pack_bits(&codes, 4);
+        assert_eq!(packed, vec![0x21, 0x43]);
+    }
+}

@@ -1,0 +1,168 @@
+//! Paper-style table rendering for the experiment harness.
+//!
+//! Formats results the way the paper's tables do — including the
+//! order-of-magnitude shorthand for blown-up perplexities ("4e3", "1e4") —
+//! and emits both aligned console text and markdown for EXPERIMENTS.md.
+
+/// A rendered experiment table.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub col_header: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, Vec<Option<f64>>)>,
+}
+
+/// Format a perplexity the way the paper's tables do: two decimals below
+/// 100, order-of-magnitude shorthand above.
+pub fn paper_number(v: f64) -> String {
+    if !v.is_finite() {
+        return "NAN".into();
+    }
+    if v < 100.0 {
+        format!("{v:.2}")
+    } else {
+        let exp = v.abs().log10().floor() as i32;
+        let mant = (v / 10f64.powi(exp)).round() as i64;
+        if mant == 10 {
+            format!("1e{}", exp + 1)
+        } else {
+            format!("{mant}e{exp}")
+        }
+    }
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, col_header: impl Into<String>,
+               columns: Vec<String>) -> Self {
+        Table { title: title.into(), col_header: col_header.into(),
+                columns, rows: Vec::new() }
+    }
+
+    pub fn push_row(&mut self, label: impl Into<String>, cells: Vec<Option<f64>>) {
+        assert_eq!(cells.len(), self.columns.len());
+        self.rows.push((label.into(), cells));
+    }
+
+    fn cell(&self, v: &Option<f64>) -> String {
+        match v {
+            Some(x) => paper_number(*x),
+            None => "-".into(),
+        }
+    }
+
+    /// Aligned console rendering.
+    pub fn to_console(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        let mut label_w = self.col_header.len();
+        for (label, cells) in &self.rows {
+            label_w = label_w.max(label.len());
+            for (i, c) in cells.iter().enumerate() {
+                widths[i] = widths[i].max(self.cell(c).len());
+            }
+        }
+        let mut out = format!("# {}\n", self.title);
+        out += &format!("{:label_w$}", self.col_header);
+        for (c, w) in self.columns.iter().zip(&widths) {
+            out += &format!("  {c:>w$}");
+        }
+        out.push('\n');
+        for (label, cells) in &self.rows {
+            out += &format!("{label:label_w$}");
+            for (c, w) in cells.iter().zip(&widths) {
+                out += &format!("  {:>w$}", self.cell(c));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Markdown rendering (for EXPERIMENTS.md).
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("**{}**\n\n", self.title);
+        out += &format!("| {} |", self.col_header);
+        for c in &self.columns {
+            out += &format!(" {c} |");
+        }
+        out += "\n|---|";
+        for _ in &self.columns {
+            out += "---|";
+        }
+        out.push('\n');
+        for (label, cells) in &self.rows {
+            out += &format!("| {label} |");
+            for c in cells {
+                out += &format!(" {} |", self.cell(c));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV rendering (raw values, full precision — for plotting).
+    pub fn to_csv(&self) -> String {
+        let mut out = format!("{}", self.col_header);
+        for c in &self.columns {
+            out += &format!(",{c}");
+        }
+        out.push('\n');
+        for (label, cells) in &self.rows {
+            out += label;
+            for c in cells {
+                match c {
+                    Some(v) => out += &format!(",{v}"),
+                    None => out.push(','),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// A simple (x, y) series (Figure 1).
+pub fn series_csv(header: (&str, &str), points: &[(f64, f64)]) -> String {
+    let mut out = format!("{},{}\n", header.0, header.1);
+    for (x, y) in points {
+        out += &format!("{x},{y}\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_numbers_match_table_style() {
+        assert_eq!(paper_number(6.48), "6.48");
+        assert_eq!(paper_number(70.04), "70.04");
+        assert_eq!(paper_number(4212.0), "4e3");
+        assert_eq!(paper_number(14503.0), "1e4");
+        assert_eq!(paper_number(96400.0), "1e5"); // 9.64e4 rounds to 10e4 = 1e5
+        assert_eq!(paper_number(f64::NAN), "NAN");
+        assert_eq!(paper_number(123.0), "1e2");
+    }
+
+    #[test]
+    fn table_renders_all_formats() {
+        let mut t = Table::new("Test", "method",
+                               vec!["50%".into(), "90%".into()]);
+        t.push_row("wanda", vec![Some(6.48), Some(14000.0)]);
+        t.push_row("magnitude", vec![Some(14.89), None]);
+        let con = t.to_console();
+        assert!(con.contains("6.48") && con.contains("1e4") && con.contains("-"));
+        let md = t.to_markdown();
+        assert!(md.starts_with("**Test**"));
+        assert!(md.contains("| wanda | 6.48 | 1e4 |"));
+        let csv = t.to_csv();
+        assert!(csv.contains("wanda,6.48,14000"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("T", "m", vec!["a".into()]);
+        t.push_row("x", vec![Some(1.0), Some(2.0)]);
+    }
+}

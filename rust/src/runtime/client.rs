@@ -1,0 +1,207 @@
+//! The PJRT actor: one thread owns the client + executable cache; callers
+//! submit work through a cloneable [`RuntimeHandle`].
+//!
+//! Why an actor: the `xla` crate's handles wrap raw C pointers (not `Send`/
+//! `Sync`), and XLA's CPU backend already multi-threads each execution via
+//! its internal Eigen thread pool — so a single submission queue loses
+//! essentially no parallelism while keeping ownership trivially correct.
+//! Compilation is cached per program name; HLO text parses + compiles once
+//! per process and is then a hash-map lookup.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::tensor_host::HostTensor;
+
+enum Msg {
+    Exec {
+        /// program name (cache key)
+        name: String,
+        /// HLO file to compile on miss
+        path: PathBuf,
+        args: Vec<HostTensor>,
+        reply: mpsc::SyncSender<Result<Vec<HostTensor>>>,
+    },
+    Stats {
+        reply: mpsc::SyncSender<RuntimeStats>,
+    },
+    Shutdown,
+}
+
+/// Counters for the perf pass / progress reporting.
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub compilations: u64,
+    pub compile_seconds: f64,
+    pub exec_seconds: f64,
+}
+
+/// Cloneable handle to the PJRT actor thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: mpsc::Sender<Msg>,
+}
+
+/// Owns the actor thread; dropping shuts it down.
+pub struct Runtime {
+    handle: RuntimeHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Runtime {
+    /// Spawn the actor. Fails fast (on first use) if PJRT cannot start.
+    pub fn start() -> Result<Runtime> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-actor".into())
+            .spawn(move || actor_main(rx))
+            .context("spawning PJRT actor")?;
+        Ok(Runtime { handle: RuntimeHandle { tx }, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> RuntimeHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Runtime {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl RuntimeHandle {
+    /// Execute `name` (compiling `path` on first use) with `args`; returns
+    /// the program's outputs (the lowered tuple, already flattened).
+    pub fn execute(&self, name: &str, path: PathBuf, args: Vec<HostTensor>)
+        -> Result<Vec<HostTensor>> {
+        let (rtx, rrx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Msg::Exec { name: name.to_string(), path, args, reply: rtx })
+            .map_err(|_| anyhow!("PJRT actor is gone"))?;
+        rrx.recv().map_err(|_| anyhow!("PJRT actor dropped the reply"))?
+    }
+
+    pub fn stats(&self) -> Result<RuntimeStats> {
+        let (rtx, rrx) = mpsc::sync_channel(1);
+        self.tx.send(Msg::Stats { reply: rtx }).map_err(|_| anyhow!("actor gone"))?;
+        rrx.recv().map_err(|_| anyhow!("actor dropped reply"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// actor internals (xla types never leave this thread)
+
+fn actor_main(rx: mpsc::Receiver<Msg>) {
+    let mut state: Option<ActorState> = None;
+    let mut stats = RuntimeStats::default();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Exec { name, path, args, reply } => {
+                let result = (|| -> Result<Vec<HostTensor>> {
+                    if state.is_none() {
+                        let client = xla::PjRtClient::cpu()
+                            .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+                        state = Some(ActorState { client, cache: HashMap::new() });
+                    }
+                    let st = state.as_mut().unwrap();
+                    st.execute(&name, &path, args, &mut stats)
+                })();
+                let _ = reply.send(result);
+            }
+            Msg::Stats { reply } => {
+                let _ = reply.send(stats.clone());
+            }
+            Msg::Shutdown => break,
+        }
+    }
+}
+
+struct ActorState {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl ActorState {
+    fn execute(&mut self, name: &str, path: &PathBuf, args: Vec<HostTensor>,
+               stats: &mut RuntimeStats) -> Result<Vec<HostTensor>> {
+        if !self.cache.contains_key(name) {
+            let t0 = std::time::Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            stats.compilations += 1;
+            stats.compile_seconds += t0.elapsed().as_secs_f64();
+            self.cache.insert(name.to_string(), exe);
+        }
+        let exe = self.cache.get(name).unwrap();
+        // NOTE: we deliberately avoid `PjRtLoadedExecutable::execute(&[Literal])`:
+        // the vendored C wrapper `execute()` leaks every input device buffer
+        // (`buffer.release()` with no deleter — ~130 MB/step for the medium
+        // train loop, OOM within minutes). `execute_b` borrows buffers WE own,
+        // so they are freed by PjRtBuffer::drop; it also skips one host copy
+        // (slice → device instead of slice → literal → device).
+        let t0 = std::time::Instant::now();
+        let buffers: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .map(|t| to_buffer(&self.client, t))
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute_b::<xla::PjRtBuffer>(&buffers)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        drop(buffers);
+        let tuple = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("{name}: no output buffer"))?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{name}: to_literal: {e:?}"))?;
+        stats.executions += 1;
+        stats.exec_seconds += t0.elapsed().as_secs_f64();
+        // programs are lowered with return_tuple=True ⇒ single tuple output
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("{name}: detuple: {e:?}"))?;
+        parts.into_iter().map(|l| from_literal(&l)).collect()
+    }
+}
+
+fn to_buffer(client: &xla::PjRtClient, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+    match t {
+        HostTensor::F32 { shape, data } => client
+            .buffer_from_host_buffer::<f32>(data, shape, None)
+            .map_err(|e| anyhow!("host→device f32 {shape:?}: {e:?}")),
+        HostTensor::I32 { shape, data } => client
+            .buffer_from_host_buffer::<i32>(data, shape, None)
+            .map_err(|e| anyhow!("host→device i32 {shape:?}: {e:?}")),
+    }
+}
+
+fn from_literal(l: &xla::Literal) -> Result<HostTensor> {
+    let shape = l
+        .array_shape()
+        .map_err(|e| anyhow!("output shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => Ok(HostTensor::F32 {
+            shape: dims,
+            data: l.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?,
+        }),
+        xla::ElementType::S32 => Ok(HostTensor::I32 {
+            shape: dims,
+            data: l.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e:?}"))?,
+        }),
+        other => bail!("unsupported output dtype {other:?}"),
+    }
+}

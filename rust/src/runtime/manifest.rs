@@ -1,0 +1,160 @@
+//! `artifacts/manifest.json` — the contract between the python build path
+//! and the Rust runtime.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::ModelConfig;
+use crate::util::Json;
+
+/// One model's AOT entry.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub config: ModelConfig,
+    /// parameter order as lowered (must equal `config.param_spec()`)
+    pub params: Vec<(String, Vec<usize>)>,
+    /// program name (train_step, eval_loss, calib_capture, decode_step)
+    /// → artifact file name
+    pub programs: HashMap<String, String>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: HashMap<String, ModelEntry>,
+    /// AWP chunk length baked into the chunked programs
+    pub awp_chunk: usize,
+    /// quantization group size baked into the quant/joint programs
+    pub awp_group: usize,
+    /// awp program name (e.g. `awp_prune_256x256`) → artifact file name
+    pub awp_programs: HashMap<String, String>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text)?;
+        if v.expect("format")?.as_str()? != "hlo-text" {
+            bail!("unsupported artifact format");
+        }
+        let mut models = HashMap::new();
+        for (name, entry) in v.expect("models")?.as_obj()? {
+            let config = ModelConfig::from_json(entry.expect("config")?)?;
+            let mut params = Vec::new();
+            for p in entry.expect("params")?.as_arr()? {
+                let pname = p.expect("name")?.as_str()?.to_string();
+                let shape: Vec<usize> = p
+                    .expect("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|s| s.as_usize())
+                    .collect::<Result<_>>()?;
+                params.push((pname, shape));
+            }
+            // the AOT param order must equal the Rust mirror's param_spec —
+            // checkpoints are streamed positionally into HLO argument lists.
+            if params != config.param_spec() {
+                bail!("manifest param order for '{name}' diverges from ModelConfig::param_spec — python/rust model mirrors out of sync");
+            }
+            let mut programs = HashMap::new();
+            for (k, f) in entry.expect("programs")?.as_obj()? {
+                programs.insert(k.clone(), f.as_str()?.to_string());
+            }
+            models.insert(name.clone(), ModelEntry { config, params, programs });
+        }
+        let awp = v.expect("awp")?;
+        let mut awp_programs = HashMap::new();
+        for (k, f) in awp.expect("programs")?.as_obj()? {
+            awp_programs.insert(k.clone(), f.as_str()?.to_string());
+        }
+        Ok(Manifest {
+            dir,
+            models,
+            awp_chunk: awp.expect("chunk")?.as_usize()?,
+            awp_group: awp.expect("group")?.as_usize()?,
+            awp_programs,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model '{name}' not in manifest"))
+    }
+
+    /// Absolute path of a model program's HLO file.
+    pub fn model_program_path(&self, model: &str, program: &str) -> Result<PathBuf> {
+        let entry = self.model(model)?;
+        let f = entry
+            .programs
+            .get(program)
+            .with_context(|| format!("program '{program}' not lowered for '{model}'"))?;
+        Ok(self.dir.join(f))
+    }
+
+    /// Name + path of an AWP chunk program for a weight shape.
+    /// `mode` ∈ {prune, prune1, quant, quant1, joint, joint1}.
+    pub fn awp_program(&self, mode: &str, d_out: usize, d_in: usize)
+        -> Result<(String, PathBuf)> {
+        let name = format!("awp_{mode}_{d_out}x{d_in}");
+        let f = self
+            .awp_programs
+            .get(&name)
+            .with_context(|| format!("no AOT program '{name}' — re-run `make artifacts`"))?;
+        Ok((name, self.dir.join(f)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Integration-style test against the real artifacts when present;
+    /// silently skipped otherwise (CI without `make artifacts`).
+    fn real_manifest() -> Option<Manifest> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(dir).ok()
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let Some(m) = real_manifest() else { return };
+        assert!(m.models.contains_key("small"));
+        assert_eq!(m.awp_group, 32);
+        let entry = m.model("small").unwrap();
+        assert_eq!(entry.config.d_model, 256);
+        for p in ["train_step", "eval_loss", "calib_capture", "decode_step"] {
+            let path = m.model_program_path("small", p).unwrap();
+            assert!(path.exists(), "{path:?}");
+        }
+        for mode in ["prune", "prune1", "quant", "quant1", "joint", "joint1"] {
+            let (_, path) = m.awp_program(mode, 256, 256).unwrap();
+            assert!(path.exists());
+        }
+        assert!(m.awp_program("prune", 999, 999).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let dir = crate::util::tempdir::TempDir::new("man").unwrap();
+        std::fs::write(
+            dir.path().join("manifest.json"),
+            r#"{"format": "protobuf", "models": {}, "awp": {"chunk":8,"group":32,"programs":{}}}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(dir.path()).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let dir = crate::util::tempdir::TempDir::new("man2").unwrap();
+        let err = Manifest::load(dir.path()).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,28 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
+//! executes them from the Rust request path. Python never runs here.
+//!
+//! Structure:
+//!
+//! * `manifest` — parses `artifacts/manifest.json` (program index, model
+//!   configs, AWP chunk geometry) and cross-validates it against the Rust
+//!   `ModelConfig` mirror.
+//! * `tensor_host` — the `HostTensor` marshalling type that crosses the
+//!   actor boundary (xla handles are not `Send`).
+//! * `client` — the PJRT *actor*: a dedicated thread owning the
+//!   `PjRtClient` and a lazily-populated executable cache; callers talk to
+//!   it through a cloneable channel handle. XLA's CPU backend parallelises
+//!   each execution internally, so serialising submissions costs little and
+//!   buys determinism.
+//! * `hlo_backend` — [`crate::compress::AwpBackend`] implemented over the
+//!   actor: the production AWP path running the L1/L2-lowered chunk
+//!   programs.
+
+pub mod client;
+pub mod hlo_backend;
+pub mod manifest;
+pub mod tensor_host;
+
+pub use client::{Runtime, RuntimeHandle};
+pub use hlo_backend::HloBackend;
+pub use manifest::{Manifest, ModelEntry};
+pub use tensor_host::HostTensor;

@@ -1,0 +1,134 @@
+//! Host-side tensor payloads crossing the runtime-actor channel.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Matrix;
+
+/// A tensor that can cross threads (xla handles cannot).
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::I32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_matrix(m: &Matrix) -> Self {
+        HostTensor::F32 { shape: vec![m.rows, m.cols], data: m.data.clone() }
+    }
+
+    pub fn vec_f32(data: Vec<f32>, shape: Vec<usize>) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::F32 { shape, data }
+    }
+
+    pub fn vec_i32(data: Vec<i32>, shape: Vec<usize>) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::I32 { shape, data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f64> {
+        match self {
+            HostTensor::F32 { data, .. } if data.len() == 1 => Ok(data[0] as f64),
+            HostTensor::I32 { data, .. } if data.len() == 1 => Ok(data[0] as f64),
+            _ => bail!("not a scalar: shape {:?}", self.shape()),
+        }
+    }
+
+    pub fn to_matrix(&self) -> Result<Matrix> {
+        match self {
+            HostTensor::F32 { shape, data } if shape.len() == 2 => {
+                Ok(Matrix::from_vec(shape[0], shape[1], data.clone()))
+            }
+            _ => bail!("not a 2-D f32 tensor: {:?}", self.shape()),
+        }
+    }
+
+    /// Slice a `(L, d, d)` stack into per-layer matrices.
+    pub fn to_matrix_stack(&self) -> Result<Vec<Matrix>> {
+        match self {
+            HostTensor::F32 { shape, data } if shape.len() == 3 => {
+                let (l, r, c) = (shape[0], shape[1], shape[2]);
+                Ok((0..l)
+                    .map(|i| {
+                        Matrix::from_vec(r, c, data[i * r * c..(i + 1) * r * c].to_vec())
+                    })
+                    .collect())
+            }
+            _ => bail!("not a 3-D f32 tensor: {:?}", self.shape()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_roundtrip() {
+        let m = Matrix::randn(3, 4, 0);
+        let t = HostTensor::from_matrix(&m);
+        assert_eq!(t.to_matrix().unwrap(), m);
+        assert_eq!(t.shape(), &[3, 4]);
+    }
+
+    #[test]
+    fn scalars() {
+        assert_eq!(HostTensor::scalar_f32(2.5).scalar().unwrap(), 2.5);
+        assert_eq!(HostTensor::scalar_i32(-3).scalar().unwrap(), -3.0);
+        assert!(HostTensor::vec_f32(vec![1.0, 2.0], vec![2]).scalar().is_err());
+    }
+
+    #[test]
+    fn stack_slicing() {
+        let data: Vec<f32> = (0..2 * 3 * 3).map(|i| i as f32).collect();
+        let t = HostTensor::vec_f32(data, vec![2, 3, 3]);
+        let ms = t.to_matrix_stack().unwrap();
+        assert_eq!(ms.len(), 2);
+        assert_eq!(ms[1].at(0, 0), 9.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn vec_shape_mismatch_panics() {
+        HostTensor::vec_f32(vec![1.0; 5], vec![2, 2]);
+    }
+}

@@ -1,0 +1,151 @@
+//! Sparsity statistics and CSR export.
+
+use crate::tensor::Matrix;
+
+/// Per-matrix sparsity report used by the coordinator's assembly step and
+/// the experiment tables ("pruning ratio" columns).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparsityStats {
+    pub total: usize,
+    pub zeros: usize,
+    pub row_min_nnz: usize,
+    pub row_max_nnz: usize,
+}
+
+impl SparsityStats {
+    pub fn of(w: &Matrix) -> Self {
+        let mut zeros = 0usize;
+        let mut row_min = usize::MAX;
+        let mut row_max = 0usize;
+        for i in 0..w.rows {
+            let nnz = w.row(i).iter().filter(|&&v| v != 0.0).count();
+            zeros += w.cols - nnz;
+            row_min = row_min.min(nnz);
+            row_max = row_max.max(nnz);
+        }
+        SparsityStats {
+            total: w.rows * w.cols,
+            zeros,
+            row_min_nnz: if w.rows == 0 { 0 } else { row_min },
+            row_max_nnz: row_max,
+        }
+    }
+
+    pub fn ratio(&self) -> f64 {
+        self.zeros as f64 / self.total.max(1) as f64
+    }
+
+    /// True when every row has the same nnz — the paper's semi-structured
+    /// uniform-per-row property.
+    pub fn is_row_uniform(&self) -> bool {
+        self.row_min_nnz == self.row_max_nnz
+    }
+}
+
+/// Compressed Sparse Row view of a pruned matrix — what a deployment stack
+/// (e.g. the Cerebras-style sparse engine the paper cites) would ingest.
+#[derive(Clone, Debug)]
+pub struct SparseCsr {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<u32>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+pub fn csr_from_dense(w: &Matrix) -> SparseCsr {
+    let mut indptr = Vec::with_capacity(w.rows + 1);
+    let mut indices = Vec::new();
+    let mut values = Vec::new();
+    indptr.push(0u32);
+    for i in 0..w.rows {
+        for (j, &v) in w.row(i).iter().enumerate() {
+            if v != 0.0 {
+                indices.push(j as u32);
+                values.push(v);
+            }
+        }
+        indptr.push(indices.len() as u32);
+    }
+    SparseCsr { rows: w.rows, cols: w.cols, indptr, indices, values }
+}
+
+impl SparseCsr {
+    /// Dense reconstruction (for tests / eval).
+    pub fn to_dense(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for t in self.indptr[i] as usize..self.indptr[i + 1] as usize {
+                *out.at_mut(i, self.indices[t] as usize) = self.values[t];
+            }
+        }
+        out
+    }
+
+    /// y = A·x
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0f32; self.rows];
+        for i in 0..self.rows {
+            let mut s = 0.0f32;
+            for t in self.indptr[i] as usize..self.indptr[i + 1] as usize {
+                s += self.values[t] * x[self.indices[t] as usize];
+            }
+            y[i] = s;
+        }
+        y
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Storage bytes: values(f32) + indices(u32) + indptr(u32).
+    pub fn size_bytes(&self) -> usize {
+        4 * (self.values.len() + self.indices.len() + self.indptr.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::topk::hard_threshold_rows;
+
+    #[test]
+    fn stats_on_row_topk() {
+        let w = hard_threshold_rows(&Matrix::randn(10, 20, 0), 5);
+        let s = SparsityStats::of(&w);
+        assert_eq!(s.total, 200);
+        assert_eq!(s.zeros, 150);
+        assert!(s.is_row_uniform());
+        assert!((s.ratio() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csr_roundtrip() {
+        let w = hard_threshold_rows(&Matrix::randn(7, 13, 1), 4);
+        let csr = csr_from_dense(&w);
+        assert_eq!(csr.nnz(), 28);
+        assert_eq!(csr.to_dense(), w);
+    }
+
+    #[test]
+    fn csr_matvec_matches_dense() {
+        let w = hard_threshold_rows(&Matrix::randn(5, 8, 2), 3);
+        let csr = csr_from_dense(&w);
+        let x: Vec<f32> = (0..8).map(|i| i as f32 * 0.5 - 2.0).collect();
+        let y = csr.matvec(&x);
+        for i in 0..5 {
+            let want: f32 = w.row(i).iter().zip(&x).map(|(a, b)| a * b).sum();
+            assert!((y[i] - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let w = Matrix::zeros(3, 4);
+        let s = SparsityStats::of(&w);
+        assert_eq!(s.ratio(), 1.0);
+        assert_eq!(csr_from_dense(&w).nnz(), 0);
+    }
+}

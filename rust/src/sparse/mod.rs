@@ -1,0 +1,9 @@
+//! Sparsity substrate: masks, statistics, CSR export and the 2:4 structured
+//! pattern the paper names as future work (§5) — implemented here as an
+//! extension so the ablation benches can compare unstructured vs 2:4.
+
+pub mod mask;
+pub mod structured;
+
+pub use mask::{csr_from_dense, SparsityStats, SparseCsr};
+pub use structured::{project_2_4, check_2_4};

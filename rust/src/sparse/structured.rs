@@ -1,0 +1,76 @@
+//! NVIDIA-style 2:4 semi-structured sparsity — the paper's §5 future-work
+//! direction, implemented as an extension: in every aligned group of 4
+//! consecutive weights along `d_in`, at most 2 are non-zero.
+
+use crate::tensor::Matrix;
+
+/// Project onto the 2:4 pattern: keep the 2 largest-|.| entries of each
+/// aligned 4-group. `d_in` must be a multiple of 4.
+pub fn project_2_4(z: &Matrix) -> Matrix {
+    assert_eq!(z.cols % 4, 0, "2:4 needs d_in % 4 == 0");
+    let mut out = z.clone();
+    for i in 0..z.rows {
+        let row = out.row_mut(i);
+        for g in (0..row.len()).step_by(4) {
+            let quad = &mut row[g..g + 4];
+            // indices of the two smallest magnitudes
+            let mut idx = [0usize, 1, 2, 3];
+            idx.sort_by(|&a, &b| {
+                quad[b].abs().partial_cmp(&quad[a].abs()).unwrap()
+            });
+            quad[idx[2]] = 0.0;
+            quad[idx[3]] = 0.0;
+        }
+    }
+    out
+}
+
+/// Check the 2:4 invariant.
+pub fn check_2_4(w: &Matrix) -> bool {
+    if w.cols % 4 != 0 {
+        return false;
+    }
+    for i in 0..w.rows {
+        for g in (0..w.cols).step_by(4) {
+            let nnz = w.row(i)[g..g + 4].iter().filter(|&&v| v != 0.0).count();
+            if nnz > 2 {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn projection_satisfies_pattern() {
+        let z = Matrix::randn(6, 16, 0);
+        let p = project_2_4(&z);
+        assert!(check_2_4(&p));
+        assert!(!check_2_4(&z)); // randn almost surely violates it
+    }
+
+    #[test]
+    fn projection_keeps_largest_two() {
+        let z = Matrix::from_vec(1, 4, vec![1.0, -3.0, 0.5, 2.0]);
+        let p = project_2_4(&z);
+        assert_eq!(p.data, vec![0.0, -3.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn projection_idempotent() {
+        let z = Matrix::randn(3, 8, 1);
+        let p1 = project_2_4(&z);
+        assert_eq!(project_2_4(&p1), p1);
+    }
+
+    #[test]
+    fn exactly_half_sparsity() {
+        let z = Matrix::randn(4, 32, 2);
+        let p = project_2_4(&z);
+        assert!((p.sparsity() - 0.5).abs() < 1e-9);
+    }
+}

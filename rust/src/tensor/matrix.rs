@@ -1,0 +1,191 @@
+//! Row-major dense f32 matrix.
+
+use crate::util::Rng;
+
+/// Dense row-major matrix of `f32`.
+///
+/// The core container of the compression pipeline: weights `W`, iterates
+/// `Θ`, and activation Grams `C` are all `Matrix`. Kept deliberately plain
+/// (a `Vec<f32>` + dims) so slices map 1:1 onto XLA literals and the
+/// checkpoint format.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Matrix::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// Standard-normal entries (deterministic from seed).
+    pub fn randn(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let data = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        Matrix { rows, cols, data }
+    }
+
+    /// A synthetic-but-realistic activation Gram: `C = X Xᵀ / n` where the
+    /// rows of `X` have log-normal per-dimension scales (activation
+    /// "outliers" — the phenomenon AWQ/Wanda exploit and that separates
+    /// activation-aware methods from magnitude pruning in our tests).
+    pub fn randn_gram(dim: usize, seed: u64) -> Self {
+        let n = 4 * dim;
+        let mut rng = Rng::new(seed);
+        let scales: Vec<f32> =
+            (0..dim).map(|_| (0.75 * rng.normal()).exp() as f32).collect();
+        let mut x = Matrix::zeros(dim, n);
+        for i in 0..dim {
+            for j in 0..n {
+                x.data[i * n + j] = scales[i] * rng.normal() as f32;
+            }
+        }
+        let mut c = Matrix::zeros(dim, dim);
+        for i in 0..dim {
+            for j in i..dim {
+                let mut s = 0.0f64;
+                for t in 0..n {
+                    s += (x.data[i * n + t] * x.data[j * n + t]) as f64;
+                }
+                let v = (s / n as f64) as f32;
+                c.data[i * dim + j] = v;
+                c.data[j * dim + i] = v;
+            }
+        }
+        c
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn diag(&self) -> Vec<f32> {
+        assert_eq!(self.rows, self.cols);
+        (0..self.rows).map(|i| self.at(i, i)).collect()
+    }
+
+    /// Count of exactly-zero entries.
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / self.data.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let m = Matrix::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        assert_eq!(m.at(1, 2), 5.0);
+        assert_eq!(m.row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(m.shape(), (2, 3));
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn from_vec_checks_len() {
+        Matrix::from_vec(2, 2, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Matrix::randn(5, 7, 0);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn eye_diag() {
+        let e = Matrix::eye(4);
+        assert_eq!(e.diag(), vec![1.0; 4]);
+        assert_eq!(e.nnz(), 4);
+        assert!((e.sparsity() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gram_is_symmetric_and_diag_positive() {
+        let c = Matrix::randn_gram(16, 3);
+        for i in 0..16 {
+            assert!(c.at(i, i) > 0.0);
+            for j in 0..16 {
+                assert!((c.at(i, j) - c.at(j, i)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn gram_has_anisotropic_spectrum() {
+        // the log-normal scales must create a wide diagonal spread — this is
+        // the property that makes activation-aware methods win in our tests.
+        let c = Matrix::randn_gram(32, 7);
+        let d = c.diag();
+        let max = d.iter().cloned().fold(f32::MIN, f32::max);
+        let min = d.iter().cloned().fold(f32::MAX, f32::min);
+        assert!(max / min > 4.0, "spread {max}/{min}");
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        assert_eq!(Matrix::randn(3, 3, 9), Matrix::randn(3, 3, 9));
+        assert_ne!(Matrix::randn(3, 3, 9), Matrix::randn(3, 3, 10));
+    }
+}

@@ -1,0 +1,14 @@
+//! Dense f32 tensor substrate.
+//!
+//! Every baseline compressor (Wanda, SparseGPT, GPTQ, …) and the pure-CPU
+//! AWP reference operate on these matrices; the PJRT path marshals them
+//! to/from `xla::Literal`s. Row-major, contiguous, no broadcasting magic —
+//! exactly what layer-wise compression needs: `(d_out, d_in)` weights and
+//! `(d_in, d_in)` Grams.
+
+pub mod matrix;
+pub mod ops;
+pub mod topk;
+
+pub use matrix::Matrix;
+pub use topk::{row_topk_mask, row_topk_threshold};

@@ -1,0 +1,297 @@
+//! Matrix operations: blocked + rayon-parallel GEMM and the handful of
+//! fused kernels the compression hot paths need on the CPU side.
+//!
+//! The pure-Rust AWP reference (`compress::awp_cpu`) and all baselines are
+//! built on these; `matmul` is cache-blocked and parallelised over row
+//! panels because `(W−Θ)·C` at `(1536, 384)·(384, 384)`-ish sizes dominates
+//! their profile (see EXPERIMENTS.md §Perf).
+
+use super::Matrix;
+use crate::util::parallel::{par_chunks_mut, par_map};
+
+/// Blocked, thread-parallel `A·B` (row panels scheduled dynamically).
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut out = Matrix::zeros(m, n);
+    const KB: usize = 64; // k-panel: keeps a B panel hot in L1/L2
+    par_chunks_mut(&mut out.data, n, |i, orow| {
+        let arow = &a.data[i * k..(i + 1) * k];
+        for k0 in (0..k).step_by(KB) {
+            let k1 = (k0 + KB).min(k);
+            let mut kk = k0;
+            // 4-way k-unroll: one pass over the output row consumes four B
+            // rows, quartering the orow read/write traffic (perf pass §L3;
+            // see EXPERIMENTS.md §Perf for before/after).
+            while kk + 4 <= k1 {
+                let a0 = arow[kk];
+                let a1 = arow[kk + 1];
+                let a2 = arow[kk + 2];
+                let a3 = arow[kk + 3];
+                if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+                    let b0 = &b.data[kk * n..kk * n + n];
+                    let b1 = &b.data[(kk + 1) * n..(kk + 1) * n + n];
+                    let b2 = &b.data[(kk + 2) * n..(kk + 2) * n + n];
+                    let b3 = &b.data[(kk + 3) * n..(kk + 3) * n + n];
+                    for j in 0..n {
+                        orow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                    }
+                }
+                kk += 4;
+            }
+            while kk < k1 {
+                let av = arow[kk];
+                if av != 0.0 {
+                    let brow = &b.data[kk * n..kk * n + n];
+                    for j in 0..n {
+                        orow[j] += av * brow[j];
+                    }
+                }
+                kk += 1;
+            }
+        }
+    });
+    out
+}
+
+/// `out = theta + eta * (w - theta) * c` — the CPU mirror of the L1 Pallas
+/// kernel (`python/compile/kernels/pgd_step.py`), fused the same way: the
+/// residual is formed per row panel and never materialised.
+pub fn pgd_step(w: &Matrix, theta: &Matrix, c: &Matrix, eta: f32) -> Matrix {
+    assert_eq!(w.shape(), theta.shape());
+    assert_eq!(c.rows, c.cols);
+    assert_eq!(w.cols, c.rows);
+    let (m, k) = w.shape();
+    let n = k;
+    let mut out = Matrix::zeros(m, n);
+    par_chunks_mut(&mut out.data, n, |i, orow| {
+        let wrow = &w.data[i * k..(i + 1) * k];
+        let trow = &theta.data[i * k..(i + 1) * k];
+        orow.copy_from_slice(trow);
+        let mut kk = 0;
+        // same 4-way unroll as matmul (see EXPERIMENTS.md §Perf)
+        while kk + 4 <= k {
+            let r0 = eta * (wrow[kk] - trow[kk]);
+            let r1 = eta * (wrow[kk + 1] - trow[kk + 1]);
+            let r2 = eta * (wrow[kk + 2] - trow[kk + 2]);
+            let r3 = eta * (wrow[kk + 3] - trow[kk + 3]);
+            if r0 != 0.0 || r1 != 0.0 || r2 != 0.0 || r3 != 0.0 {
+                let c0 = &c.data[kk * n..kk * n + n];
+                let c1 = &c.data[(kk + 1) * n..(kk + 1) * n + n];
+                let c2 = &c.data[(kk + 2) * n..(kk + 2) * n + n];
+                let c3 = &c.data[(kk + 3) * n..(kk + 3) * n + n];
+                for j in 0..n {
+                    orow[j] += r0 * c0[j] + r1 * c1[j] + r2 * c2[j] + r3 * c3[j];
+                }
+            }
+            kk += 4;
+        }
+        while kk < k {
+            let r = eta * (wrow[kk] - trow[kk]);
+            if r != 0.0 {
+                let crow = &c.data[kk * n..kk * n + n];
+                for j in 0..n {
+                    orow[j] += r * crow[j];
+                }
+            }
+            kk += 1;
+        }
+    });
+    out
+}
+
+/// Activation-aware loss `‖(W−Θ)C½‖_F² = Σ R∘(R·C)` (paper Appendix B) —
+/// no matrix square root needed.
+pub fn activation_loss(w: &Matrix, theta: &Matrix, c: &Matrix) -> f64 {
+    assert_eq!(w.shape(), theta.shape());
+    let (m, k) = w.shape();
+    par_map(m, |i| {
+            let wrow = &w.data[i * k..(i + 1) * k];
+            let trow = &theta.data[i * k..(i + 1) * k];
+            // row_g = r · C ; contribution = r ∘ row_g
+            let mut acc = 0.0f64;
+            let mut g = vec![0.0f32; k];
+            for kk in 0..k {
+                let r = wrow[kk] - trow[kk];
+                if r == 0.0 {
+                    continue;
+                }
+                let crow = &c.data[kk * k..kk * k + k];
+                for j in 0..k {
+                    g[j] += r * crow[j];
+                }
+            }
+            for kk in 0..k {
+                acc += ((wrow[kk] - trow[kk]) * g[kk]) as f64;
+            }
+            acc
+    })
+    .into_iter()
+    .sum::<f64>()
+    .max(0.0)
+}
+
+/// Frobenius norm of the gradient `(W−Θ)C` (the paper's stopping criterion
+/// numerator), computed without materialising the full product when Θ is
+/// sparse.
+pub fn grad_frob_norm(w: &Matrix, theta: &Matrix, c: &Matrix) -> f64 {
+    let (m, k) = w.shape();
+    par_map(m, |i| {
+            let wrow = &w.data[i * k..(i + 1) * k];
+            let trow = &theta.data[i * k..(i + 1) * k];
+            let mut g = vec![0.0f32; k];
+            for kk in 0..k {
+                let r = wrow[kk] - trow[kk];
+                if r == 0.0 {
+                    continue;
+                }
+                let crow = &c.data[kk * k..kk * k + k];
+                for j in 0..k {
+                    g[j] += r * crow[j];
+                }
+            }
+            g.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+    })
+    .into_iter()
+    .sum::<f64>()
+    .sqrt()
+}
+
+pub fn add(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.shape(), b.shape());
+    Matrix {
+        rows: a.rows,
+        cols: a.cols,
+        data: a.data.iter().zip(&b.data).map(|(x, y)| x + y).collect(),
+    }
+}
+
+pub fn sub(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.shape(), b.shape());
+    Matrix {
+        rows: a.rows,
+        cols: a.cols,
+        data: a.data.iter().zip(&b.data).map(|(x, y)| x - y).collect(),
+    }
+}
+
+pub fn scale(a: &Matrix, s: f32) -> Matrix {
+    Matrix { rows: a.rows, cols: a.cols, data: a.data.iter().map(|&x| x * s).collect() }
+}
+
+/// Column-wise scaling: `out[:, j] = a[:, j] * s[j]` (AWQ / Wanda scaling).
+pub fn scale_cols(a: &Matrix, s: &[f32]) -> Matrix {
+    assert_eq!(a.cols, s.len());
+    let mut out = a.clone();
+    for i in 0..a.rows {
+        let row = out.row_mut(i);
+        for j in 0..a.cols {
+            row[j] *= s[j];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a.at(i, k) * b.at(k, j);
+                }
+                *out.at_mut(i, j) = s;
+            }
+        }
+        out
+    }
+
+    fn assert_close(a: &Matrix, b: &Matrix, tol: f32) {
+        assert_eq!(a.shape(), b.shape());
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() <= tol, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let a = Matrix::randn(17, 33, 0);
+        let b = Matrix::randn(33, 9, 1);
+        assert_close(&matmul(&a, &b), &naive_matmul(&a, &b), 1e-4);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::randn(8, 8, 2);
+        assert_close(&matmul(&a, &Matrix::eye(8)), &a, 1e-6);
+    }
+
+    #[test]
+    fn pgd_step_matches_composition() {
+        let w = Matrix::randn(12, 16, 3);
+        let t = Matrix::randn(12, 16, 4);
+        let c = Matrix::randn_gram(16, 5);
+        let eta = 0.07;
+        let got = pgd_step(&w, &t, &c, eta);
+        let want = add(&t, &scale(&matmul(&sub(&w, &t), &c), eta));
+        assert_close(&got, &want, 1e-4);
+    }
+
+    #[test]
+    fn pgd_step_fixed_point_at_w() {
+        let w = Matrix::randn(6, 6, 6);
+        let c = Matrix::randn_gram(6, 7);
+        assert_close(&pgd_step(&w, &w, &c, 0.5), &w, 1e-6);
+    }
+
+    #[test]
+    fn activation_loss_matches_definition() {
+        // ‖R·C½‖² == tr(R C Rᵀ); check against explicit R·C·Rᵀ trace.
+        let w = Matrix::randn(5, 8, 8);
+        let t = Matrix::randn(5, 8, 9);
+        let c = Matrix::randn_gram(8, 10);
+        let r = sub(&w, &t);
+        let rc = matmul(&r, &c);
+        let mut want = 0.0f64;
+        for i in 0..5 {
+            for j in 0..8 {
+                want += (r.at(i, j) * rc.at(i, j)) as f64;
+            }
+        }
+        let got = activation_loss(&w, &t, &c);
+        assert!((got - want).abs() < 1e-3 * want.abs().max(1.0));
+    }
+
+    #[test]
+    fn activation_loss_zero_iff_equal() {
+        let w = Matrix::randn(4, 4, 11);
+        let c = Matrix::randn_gram(4, 12);
+        assert_eq!(activation_loss(&w, &w, &c), 0.0);
+        let t = Matrix::zeros(4, 4);
+        assert!(activation_loss(&w, &t, &c) > 0.0);
+    }
+
+    #[test]
+    fn grad_norm_matches_matmul() {
+        let w = Matrix::randn(7, 10, 13);
+        let t = Matrix::randn(7, 10, 14);
+        let c = Matrix::randn_gram(10, 15);
+        let g = matmul(&sub(&w, &t), &c);
+        let want = g.frob_norm();
+        let got = grad_frob_norm(&w, &t, &c);
+        assert!((got - want).abs() < 1e-4 * want);
+    }
+
+    #[test]
+    fn scale_cols_basic() {
+        let a = Matrix::from_fn(2, 3, |_, _| 1.0);
+        let s = vec![1.0, 2.0, 3.0];
+        let out = scale_cols(&a, &s);
+        assert_eq!(out.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(out.row(1), &[1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,124 @@
+//! Row-wise top-k selection — the hard-thresholding projection `H_k` of the
+//! paper's `C_row` constraint set (eq. 5), plus score-based variants used by
+//! Wanda and magnitude pruning.
+
+use super::Matrix;
+
+/// Threshold value of the k-th largest |entry| in `row` (k >= 1).
+/// O(n) average via quickselect on a scratch buffer.
+pub fn row_topk_threshold(row: &[f32], k: usize) -> f32 {
+    assert!(k >= 1 && k <= row.len());
+    let mut mags: Vec<f32> = row.iter().map(|v| v.abs()).collect();
+    let idx = k - 1;
+    // select_nth_unstable_by sorts descending around the pivot
+    mags.select_nth_unstable_by(idx, |a, b| b.partial_cmp(a).unwrap());
+    mags[idx]
+}
+
+/// Boolean keep-mask of the k largest-|.| entries per row of `scores`.
+///
+/// Exact-k even under ties: ties at the threshold are broken by column
+/// order, so every row keeps exactly `min(k, cols)` entries — the semi-
+/// structured uniform-per-row sparsity the paper adopts from Wanda.
+pub fn row_topk_mask(scores: &Matrix, k: usize) -> Vec<bool> {
+    let (m, n) = scores.shape();
+    let k = k.min(n);
+    let mut mask = vec![false; m * n];
+    if k == 0 {
+        return mask;
+    }
+    for i in 0..m {
+        let row = scores.row(i);
+        let thr = row_topk_threshold(row, k);
+        let mrow = &mut mask[i * n..(i + 1) * n];
+        let mut kept = 0usize;
+        // first pass: strictly above threshold
+        for j in 0..n {
+            if row[j].abs() > thr {
+                mrow[j] = true;
+                kept += 1;
+            }
+        }
+        // second pass: fill remaining slots with at-threshold entries
+        for j in 0..n {
+            if kept == k {
+                break;
+            }
+            if !mrow[j] && row[j].abs() == thr {
+                mrow[j] = true;
+                kept += 1;
+            }
+        }
+        debug_assert_eq!(kept, k);
+    }
+    mask
+}
+
+/// Apply a keep-mask in place: zero everything not kept.
+pub fn apply_mask(w: &mut Matrix, mask: &[bool]) {
+    assert_eq!(mask.len(), w.data.len());
+    for (v, &keep) in w.data.iter_mut().zip(mask) {
+        if !keep {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Hard-threshold `z` to the k largest-|.| entries per row (projection onto
+/// `C_row`), returning a new matrix.
+pub fn hard_threshold_rows(z: &Matrix, k: usize) -> Matrix {
+    let mask = row_topk_mask(z, k);
+    let mut out = z.clone();
+    apply_mask(&mut out, &mask);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_is_kth_largest() {
+        let row = [3.0, -1.0, 4.0, -1.5, 0.5];
+        assert_eq!(row_topk_threshold(&row, 1), 4.0);
+        assert_eq!(row_topk_threshold(&row, 2), 3.0);
+        assert_eq!(row_topk_threshold(&row, 3), 1.5);
+        assert_eq!(row_topk_threshold(&row, 5), 0.5);
+    }
+
+    #[test]
+    fn mask_exact_k_with_ties() {
+        let m = Matrix::from_vec(1, 4, vec![1.0, 1.0, 1.0, 1.0]);
+        let mask = row_topk_mask(&m, 2);
+        assert_eq!(mask.iter().filter(|&&b| b).count(), 2);
+    }
+
+    #[test]
+    fn mask_keeps_largest() {
+        let m = Matrix::from_vec(2, 4, vec![0.1, -5.0, 2.0, 0.3, 7.0, 0.0, -0.2, 1.0]);
+        let mask = row_topk_mask(&m, 2);
+        assert_eq!(&mask[..4], &[false, true, true, false]);
+        assert_eq!(&mask[4..], &[true, false, false, true]);
+    }
+
+    #[test]
+    fn hard_threshold_rowwise_sparsity() {
+        let z = Matrix::randn(10, 32, 0);
+        let out = hard_threshold_rows(&z, 8);
+        for i in 0..10 {
+            let nnz = out.row(i).iter().filter(|&&v| v != 0.0).count();
+            assert_eq!(nnz, 8);
+        }
+        // kept entries are unchanged
+        for (a, b) in z.data.iter().zip(&out.data) {
+            assert!(*b == 0.0 || a == b);
+        }
+    }
+
+    #[test]
+    fn k_zero_and_k_full() {
+        let z = Matrix::randn(3, 5, 1);
+        assert_eq!(hard_threshold_rows(&z, 0).nnz(), 0);
+        assert_eq!(hard_threshold_rows(&z, 5), z);
+    }
+}

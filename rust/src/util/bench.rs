@@ -1,0 +1,87 @@
+//! Micro-benchmark harness (the image carries no criterion): warmup +
+//! repeated timing, reporting min/median/mean. Used by `benches/*.rs`
+//! (`cargo bench`) and the perf pass in EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min_s: f64,
+    pub median_s: f64,
+    pub mean_s: f64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!("{:44} {:>5}x  min {:>10}  median {:>10}  mean {:>10}",
+                self.name, self.iters, fmt_s(self.min_s), fmt_s(self.median_s),
+                fmt_s(self.mean_s))
+    }
+
+    /// throughput helper: GFLOP/s at `flops` per iteration (median)
+    pub fn gflops(&self, flops: f64) -> f64 {
+        flops / self.median_s / 1e9
+    }
+}
+
+pub fn fmt_s(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+/// Time `f` with auto-scaled iteration count targeting ~`budget_s` seconds
+/// of measurement (min 3 iterations), after one warmup call.
+pub fn bench(name: &str, budget_s: f64, mut f: impl FnMut()) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_s / once).ceil() as usize).clamp(3, 10_000);
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let result = BenchResult {
+        name: name.to_string(),
+        iters,
+        min_s: times[0],
+        median_s: times[times.len() / 2],
+        mean_s: times.iter().sum::<f64>() / times.len() as f64,
+    };
+    println!("{}", result.line());
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-ish", 0.01, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.min_s <= r.median_s && r.median_s <= r.mean_s * 2.0);
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_s(5e-9).ends_with("ns"));
+        assert!(fmt_s(5e-6).ends_with("µs"));
+        assert!(fmt_s(5e-3).ends_with("ms"));
+        assert!(fmt_s(5.0).ends_with("s"));
+    }
+}

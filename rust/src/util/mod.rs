@@ -1,0 +1,12 @@
+//! Small shared utilities: deterministic RNG, timing, logging helpers.
+
+pub mod bench;
+pub mod json;
+pub mod parallel;
+pub mod rng;
+pub mod tempdir;
+pub mod timer;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use timer::Timer;

@@ -1,0 +1,38 @@
+//! Wall-clock section timing for the coordinator's progress reporting.
+
+use std::time::Instant;
+
+/// A labelled stopwatch; used by the pipeline to report per-phase timings
+/// (calibration, per-layer compression, evaluation) in experiment logs.
+pub struct Timer {
+    label: String,
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start(label: impl Into<String>) -> Self {
+        Timer { label: label.into(), start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn report(&self) -> String {
+        format!("[{}] {:.2}s", self.label, self.elapsed_s())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start("x");
+        let a = t.elapsed_s();
+        let b = t.elapsed_s();
+        assert!(b >= a);
+        assert!(t.report().starts_with("[x]"));
+    }
+}

@@ -1,0 +1,185 @@
+//! Integration over the real AOT artifacts + PJRT runtime.
+//!
+//! These tests need `artifacts/` (run `make artifacts`); each skips
+//! gracefully when it is absent so `cargo test` stays green pre-build.
+
+use std::sync::Arc;
+
+use awp::compress::awp::AwpBackend;
+use awp::compress::CpuBackend;
+use awp::coordinator::calibrate;
+use awp::data::{Batcher, CorpusConfig, Split, SyntheticCorpus};
+use awp::eval::{generate, perplexity};
+use awp::model::GramKey;
+use awp::runtime::{HloBackend, Manifest, Runtime};
+use awp::tensor::Matrix;
+use awp::trainer::{self, TrainConfig};
+
+fn setup() -> Option<(Arc<Manifest>, Runtime)> {
+    let manifest = Manifest::load("artifacts").ok()?;
+    let runtime = Runtime::start().ok()?;
+    Some((Arc::new(manifest), runtime))
+}
+
+fn small_batcher() -> Batcher {
+    let corpus = SyntheticCorpus::generate(CorpusConfig {
+        total_bytes: 512 << 10,
+        ..Default::default()
+    });
+    Batcher::new(&corpus, 4, 128)
+}
+
+#[test]
+fn hlo_and_cpu_awp_backends_agree() {
+    let Some((manifest, runtime)) = setup() else { return };
+    let hlo = HloBackend::new(runtime.handle(), manifest);
+    let cpu = CpuBackend;
+    let w = Matrix::randn(256, 256, 0);
+    let th = Matrix::zeros(256, 256);
+    let c = Matrix::randn_gram(256, 1);
+    let eta = (2.0 / c.frob_norm()) as f32;
+
+    // prune: 8 iterations (one chunk program call)
+    let (ta, ga, la) = hlo.prune_chunk(&w, &th, &c, eta, 128, 8).unwrap();
+    let (tb, gb, lb) = cpu.prune_chunk(&w, &th, &c, eta, 128, 8).unwrap();
+    assert!((ga - gb).abs() < 1e-4 && (la - lb).abs() < 1e-4);
+    let max = ta.data.iter().zip(&tb.data).map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max < 1e-3, "prune theta diverged: {max}");
+
+    // quant single step
+    let (qa, _, _) = hlo.quant_chunk(&w, &w, &c, eta, 15.0, 32, 1).unwrap();
+    let (qb, _, _) = cpu.quant_chunk(&w, &w, &c, eta, 15.0, 32, 1).unwrap();
+    let max = qa.data.iter().zip(&qb.data).map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max < 1e-4, "quant theta diverged: {max}");
+
+    // joint with ramp-style varying k: 3 iterations via 1-step programs
+    let (ja, _, _) = hlo.joint_chunk(&w, &th, &c, eta, 64, 15.0, 32, 3).unwrap();
+    let (jb, _, _) = cpu.joint_chunk(&w, &th, &c, eta, 64, 15.0, 32, 3).unwrap();
+    let max = ja.data.iter().zip(&jb.data).map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max < 2e-3, "joint theta diverged: {max}");
+}
+
+#[test]
+fn hlo_iteration_decomposition_composes() {
+    // 11 iterations = chunk(8) + 3 single calls; must equal CPU's 11.
+    let Some((manifest, runtime)) = setup() else { return };
+    let hlo = HloBackend::new(runtime.handle(), manifest);
+    let cpu = CpuBackend;
+    let w = Matrix::randn(128, 128, 5);
+    let th = Matrix::zeros(128, 128);
+    let c = Matrix::randn_gram(128, 6);
+    let eta = (2.0 / c.frob_norm()) as f32;
+    let (ta, _, _) = hlo.prune_chunk(&w, &th, &c, eta, 64, 11).unwrap();
+    let (tb, _, _) = cpu.prune_chunk(&w, &th, &c, eta, 64, 11).unwrap();
+    let max = ta.data.iter().zip(&tb.data).map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max < 1e-3, "{max}");
+}
+
+#[test]
+fn training_reduces_loss_and_eval_matches() {
+    let Some((manifest, runtime)) = setup() else { return };
+    let batcher = small_batcher();
+    let tc = TrainConfig { steps: 40, warmup: 5, log_every: 1000, seed: 3,
+                           lr_max: 3e-3 };
+    let (ck, curve) =
+        trainer::train(&runtime.handle(), &manifest, "small", &batcher, &tc).unwrap();
+    let first = curve.first().unwrap().1;
+    let last = curve.last().unwrap().1;
+    assert!(first > 5.0 && first < 6.2, "init loss ≈ ln(256), got {first}");
+    assert!(last < first - 1.0, "no learning: {first} → {last}");
+    // eval perplexity consistent with train loss ballpark
+    let rep = perplexity(&runtime.handle(), &manifest, "small", &ck, &batcher,
+                         Split::Val, 8).unwrap();
+    assert!(rep.ppl < 60.0, "ppl {}", rep.ppl);
+    assert!(rep.ppl > 1.5);
+    // deterministic evaluation
+    let rep2 = perplexity(&runtime.handle(), &manifest, "small", &ck, &batcher,
+                          Split::Val, 8).unwrap();
+    assert_eq!(rep.ppl, rep2.ppl);
+}
+
+#[test]
+fn untrained_model_ppl_is_near_vocab() {
+    let Some((manifest, runtime)) = setup() else { return };
+    let batcher = small_batcher();
+    let ck = trainer::init_checkpoint(&manifest.model("small").unwrap().config, 0);
+    let rep = perplexity(&runtime.handle(), &manifest, "small", &ck, &batcher,
+                         Split::Val, 4).unwrap();
+    assert!(rep.ppl > 150.0 && rep.ppl < 400.0, "ppl {}", rep.ppl);
+}
+
+#[test]
+fn calibration_grams_are_psd_and_scaled() {
+    let Some((manifest, runtime)) = setup() else { return };
+    let batcher = small_batcher();
+    let ck = trainer::init_checkpoint(&manifest.model("small").unwrap().config, 1);
+    let batches = batcher.calibration_set(3, 99);
+    let grams = calibrate(&runtime.handle(), &manifest, "small", &ck, &batches)
+        .unwrap();
+    assert_eq!(grams.tokens, 3 * 4 * 128);
+    let cfg = &manifest.model("small").unwrap().config;
+    assert_eq!(grams.map.len(), 4 * cfg.n_layers);
+    for ((key, layer), c) in &grams.map {
+        let d = match key {
+            GramKey::MlpDownIn => cfg.d_ff,
+            _ => cfg.d_model,
+        };
+        assert_eq!(c.shape(), (d, d), "{key:?} {layer}");
+        // symmetric, positive diagonal
+        for i in 0..d.min(32) {
+            assert!(c.at(i, i) >= -1e-4, "{key:?}[{layer}] diag {}", c.at(i, i));
+        }
+        // determinism: same calibration set, same gram
+    }
+    let grams2 = calibrate(&runtime.handle(), &manifest, "small", &ck, &batches)
+        .unwrap();
+    let a = grams.get(GramKey::AttnIn, 0).unwrap();
+    let b = grams2.get(GramKey::AttnIn, 0).unwrap();
+    assert_eq!(a.data, b.data);
+}
+
+#[test]
+fn generation_is_deterministic_and_prompt_preserving() {
+    let Some((manifest, runtime)) = setup() else { return };
+    let ck = trainer::init_checkpoint(&manifest.model("tiny").unwrap().config, 7);
+    let t1 = generate(&runtime.handle(), &manifest, "tiny", &ck, "Hello", 10).unwrap();
+    let t2 = generate(&runtime.handle(), &manifest, "tiny", &ck, "Hello", 10).unwrap();
+    assert_eq!(t1, t2);
+    assert!(t1.starts_with("Hello"));
+    // 10 generated byte-tokens; an untrained model may emit invalid UTF-8
+    // which the lossy decode can merge into replacement chars, so only
+    // bound the char count.
+    let extra = t1.chars().count() - "Hello".chars().count();
+    assert!(extra >= 4 && extra <= 10, "extra chars {extra}");
+}
+
+#[test]
+fn runtime_stats_track_executions() {
+    let Some((manifest, runtime)) = setup() else { return };
+    let handle = runtime.handle();
+    let before = handle.stats().unwrap().executions;
+    let hlo = HloBackend::new(handle.clone(), manifest);
+    let w = Matrix::randn(128, 128, 9);
+    let c = Matrix::randn_gram(128, 10);
+    hlo.prune_chunk(&w, &Matrix::zeros(128, 128), &c, 0.01, 64, 8).unwrap();
+    let after = handle.stats().unwrap();
+    assert_eq!(after.executions, before + 1);
+    assert!(after.exec_seconds > 0.0);
+}
+
+#[test]
+fn missing_program_is_a_clean_error() {
+    let Some((manifest, runtime)) = setup() else { return };
+    let hlo = HloBackend::new(runtime.handle(), manifest);
+    // shape class that was never lowered
+    let w = Matrix::randn(96, 96, 11);
+    let c = Matrix::randn_gram(96, 12);
+    let err = hlo.prune_chunk(&w, &Matrix::zeros(96, 96), &c, 0.01, 48, 8);
+    assert!(err.is_err());
+    let msg = format!("{:#}", err.unwrap_err());
+    assert!(msg.contains("make artifacts"), "{msg}");
+}

@@ -1,0 +1,307 @@
+//! Property tests (seeded random sweeps — the image carries no proptest
+//! crate, so the harness is a deterministic shrinking-free sweep; failures
+//! print the seed for replay).
+//!
+//! Invariants covered:
+//! * projections: exact row sparsity, INT-grid membership, idempotence,
+//!   joint-mask survival, 2:4 pattern;
+//! * solver: AWP never worsens its initialiser; constraint satisfaction
+//!   for every mode × ratio × bits; chunk composition;
+//! * substrates: Cholesky reconstruction/solve residuals, pack/unpack,
+//!   JSON fuzz round-trips, checkpoint save/load;
+//! * coordinator: job plans cover all sites exactly once with correct
+//!   Gram routing on random architectures.
+
+use awp::compress::awp::AwpBackend;
+use awp::compress::traits::{check_constraints, CompressionSpec, LayerCompressor};
+use awp::compress::{AwpCpu, CpuBackend};
+use awp::coordinator::plan_jobs;
+use awp::linalg;
+use awp::model::ModelConfig;
+use awp::quant::{self, QuantSpec};
+use awp::sparse;
+use awp::tensor::{ops, topk, Matrix};
+use awp::util::{Json, Rng};
+
+const SWEEPS: usize = 20;
+
+fn rand_dims(rng: &mut Rng) -> (usize, usize) {
+    (8 + rng.below(56), 32 * (1 + rng.below(4))) // d_in multiple of 32
+}
+
+#[test]
+fn prop_topk_exact_row_sparsity() {
+    for seed in 0..SWEEPS as u64 {
+        let mut rng = Rng::new(seed);
+        let (m, n) = rand_dims(&mut rng);
+        let k = 1 + rng.below(n);
+        let z = Matrix::randn(m, n, seed + 100);
+        let out = topk::hard_threshold_rows(&z, k);
+        for i in 0..m {
+            let nnz = out.row(i).iter().filter(|&&v| v != 0.0).count();
+            assert_eq!(nnz, k, "seed={seed} row={i}");
+        }
+        // idempotent
+        assert_eq!(topk::hard_threshold_rows(&out, k), out, "seed={seed}");
+    }
+}
+
+#[test]
+fn prop_quant_grid_membership_and_idempotence() {
+    for seed in 0..SWEEPS as u64 {
+        let mut rng = Rng::new(seed);
+        let (m, n) = rand_dims(&mut rng);
+        let bits = [2u8, 3, 4, 8][rng.below(4)];
+        let group = [8usize, 16, 32][rng.below(3)];
+        let z = Matrix::randn(m, n, seed + 200);
+        let spec = QuantSpec::new(bits, group);
+        let q = quant::quantize_dequantize(&z, spec);
+        let q2 = quant::quantize_dequantize(&q, spec);
+        for (a, b) in q.data.iter().zip(&q2.data) {
+            assert!((a - b).abs() < 1e-5, "seed={seed} not idempotent");
+        }
+        // grid membership: ≤ 2^bits distinct values per group
+        if bits < 8 {
+            for i in 0..m {
+                for g in (0..n).step_by(group) {
+                    let mut vals: Vec<f32> = q.row(i)[g..g + group].to_vec();
+                    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    vals.dedup_by(|a, b| (*a - *b).abs() < 1e-6);
+                    assert!(vals.len() <= (1usize << bits), "seed={seed}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_awp_constraints_all_modes() {
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed);
+        let m = 8 + rng.below(24);
+        let n = 32 * (1 + rng.below(2));
+        let w = Matrix::randn(m, n, seed + 300);
+        let c = Matrix::randn_gram(n, seed + 400);
+        let awp = AwpCpu::default();
+        let ratio = [0.25, 0.5, 0.75, 0.9][rng.below(4)];
+        let bits = [2u8, 3, 4][rng.below(3)];
+        for spec in [
+            CompressionSpec::prune(ratio),
+            CompressionSpec::quant(bits, 32),
+            CompressionSpec::joint(ratio, bits, 32),
+        ] {
+            let out = awp.compress(&w, &c, &spec).unwrap();
+            check_constraints(&out.theta, &spec)
+                .unwrap_or_else(|e| panic!("seed={seed} {spec:?}: {e}"));
+            assert!(out.stats.final_loss.is_finite());
+        }
+    }
+}
+
+#[test]
+fn prop_awp_prune_never_worse_than_wanda_init() {
+    let mut worse = 0;
+    for seed in 0..12u64 {
+        let w = Matrix::randn(24, 64, seed + 500);
+        let c = Matrix::randn_gram(64, seed + 600);
+        let ratio = 0.5 + 0.1 * (seed % 4) as f64;
+        let out = AwpCpu::default()
+            .compress(&w, &c, &CompressionSpec::prune(ratio))
+            .unwrap();
+        let wanda = awp::compress::wanda::wanda_loss(&w, &c, ratio);
+        if out.stats.final_loss > wanda * 1.001 {
+            worse += 1;
+        }
+    }
+    assert!(worse <= 1, "AWP worse than its init on {worse}/12 problems");
+}
+
+#[test]
+fn prop_chunk_composition() {
+    // a*8 + b*1 decompositions agree with straight iteration
+    let b = CpuBackend;
+    for seed in 0..6u64 {
+        let w = Matrix::randn(16, 32, seed + 700);
+        let c = Matrix::randn_gram(32, seed + 800);
+        let th0 = topk::hard_threshold_rows(&w, 16);
+        let eta = (2.0 / c.frob_norm()) as f32;
+        let (a, _, _) = b.prune_chunk(&w, &th0, &c, eta, 16, 13).unwrap();
+        let (mut t, _, _) = b.prune_chunk(&w, &th0, &c, eta, 16, 8).unwrap();
+        for _ in 0..5 {
+            t = b.prune_chunk(&w, &t, &c, eta, 16, 1).unwrap().0;
+        }
+        for (x, y) in a.data.iter().zip(&t.data) {
+            assert!((x - y).abs() < 1e-4, "seed={seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_cholesky_reconstruction_and_solve() {
+    for seed in 0..SWEEPS as u64 {
+        let mut rng = Rng::new(seed);
+        let n = 4 + rng.below(28);
+        let c = Matrix::randn_gram(n, seed + 900);
+        let ch = linalg::cholesky(&c).unwrap_or_else(|| {
+            panic!("seed={seed}: gram not SPD?")
+        });
+        let rec = ops::matmul(&ch.l, &ch.l.transpose());
+        let rel: f64 = ops::sub(&rec, &c).frob_norm() / c.frob_norm().max(1e-12);
+        assert!(rel < 1e-3, "seed={seed} rel={rel}");
+        // random solve residual
+        let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut b = vec![0.0f32; n];
+        for i in 0..n {
+            for j in 0..=i {
+                b[i] += ch.l.at(i, j) * x[j];
+            }
+        }
+        let got = linalg::solve_lower(&ch.l, &b);
+        for (a, t) in got.iter().zip(&x) {
+            assert!((a - t).abs() < 1e-2 * t.abs().max(1.0), "seed={seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_pack_roundtrip_random() {
+    for seed in 0..SWEEPS as u64 {
+        let mut rng = Rng::new(seed);
+        let bits = 1 + rng.below(8) as u8;
+        let n = rng.below(5000);
+        let maxc = if bits == 8 { 256 } else { 1usize << bits };
+        let codes: Vec<u8> = (0..n).map(|_| rng.below(maxc.max(1)) as u8).collect();
+        let packed = quant::pack_bits(&codes, bits);
+        assert_eq!(quant::unpack_bits(&packed, bits, n), codes, "seed={seed}");
+    }
+}
+
+#[test]
+fn prop_json_fuzz_roundtrip() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.uniform() < 0.5),
+            2 => Json::Num((rng.normal() * 100.0 * 8.0).round() / 8.0),
+            3 => {
+                let n = rng.below(12);
+                let extra = rng.below(4);
+                let mut s: String = (0..n)
+                    .map(|_| char::from_u32(32 + rng.below(90) as u32).unwrap())
+                    .collect();
+                s.extend("\"\\\né".chars().take(extra));
+                Json::Str(s)
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj((0..rng.below(5)).map(|i| {
+                (format!("k{i}"), random_json(rng, depth - 1))
+            }).collect()),
+        }
+    }
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed);
+        let v = random_json(&mut rng, 3);
+        let s = v.to_string();
+        let back = Json::parse(&s).unwrap_or_else(|e| panic!("seed={seed}: {e}\n{s}"));
+        assert_eq!(back, v, "seed={seed}\n{s}");
+    }
+}
+
+#[test]
+fn prop_job_plan_on_random_architectures() {
+    for seed in 0..SWEEPS as u64 {
+        let mut rng = Rng::new(seed);
+        let cfg = ModelConfig {
+            name: format!("r{seed}"),
+            vocab: 256,
+            d_model: 32 * (1 + rng.below(8)),
+            n_heads: 4,
+            n_layers: 1 + rng.below(8),
+            d_ff: 32 * (1 + rng.below(16)),
+            seq_len: 64,
+            batch: 2,
+            decode_len: 32,
+            rope_theta: 1e4,
+        };
+        let plan = plan_jobs(&cfg);
+        assert_eq!(plan.jobs.len(), 6 * cfg.n_layers, "seed={seed}");
+        let spec: std::collections::HashMap<String, Vec<usize>> =
+            cfg.param_spec().into_iter().collect();
+        let mut seen = std::collections::HashSet::new();
+        for job in &plan.jobs {
+            assert!(seen.insert(job.site.param.clone()), "dup {}", job.site.param);
+            assert_eq!(spec[&job.site.param], vec![job.site.d_out, job.site.d_in]);
+            // gram dimension must equal the site's d_in
+            let gram_dim = match job.site.gram {
+                awp::model::GramKey::MlpDownIn => cfg.d_ff,
+                _ => cfg.d_model,
+            };
+            assert_eq!(job.site.d_in, gram_dim, "seed={seed} {}", job.site.param);
+        }
+    }
+}
+
+#[test]
+fn prop_joint_zeros_survive_quantization() {
+    let b = CpuBackend;
+    for seed in 0..10u64 {
+        let w = Matrix::randn(12, 64, seed + 1100);
+        let c = Matrix::randn_gram(64, seed + 1200);
+        let th0 = topk::hard_threshold_rows(&w, 16);
+        let (th, _, _) = b
+            .joint_chunk(&w, &th0, &c, 0.01, 16, 15.0, 32, 4)
+            .unwrap();
+        let stats = sparse::SparsityStats::of(&th);
+        assert!(stats.row_max_nnz <= 16, "seed={seed}: {}", stats.row_max_nnz);
+    }
+}
+
+#[test]
+fn prop_2_4_projection_after_awp() {
+    // future-work extension: 2:4 pattern composes with AWP output
+    for seed in 0..6u64 {
+        let w = Matrix::randn(16, 32, seed + 1300);
+        let c = Matrix::randn_gram(32, seed + 1400);
+        let out = AwpCpu::default()
+            .compress(&w, &c, &CompressionSpec::prune(0.5))
+            .unwrap();
+        let p = sparse::project_2_4(&out.theta);
+        assert!(sparse::check_2_4(&p), "seed={seed}");
+        // 2:4 of a 50%-row-sparse matrix keeps at most the same mass
+        assert!(p.nnz() <= out.theta.nnz());
+    }
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_random_configs() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(seed);
+        let cfg = ModelConfig {
+            name: format!("ck{seed}"),
+            vocab: 64,
+            d_model: 16 * (1 + rng.below(4)),
+            n_heads: 2,
+            n_layers: 1 + rng.below(3),
+            d_ff: 32 * (1 + rng.below(4)),
+            seq_len: 16,
+            batch: 1,
+            decode_len: 8,
+            rope_theta: 1e4,
+        };
+        let mut ck = awp::trainer::init_checkpoint(&cfg, seed);
+        ck.meta.insert("k".into(), format!("v{seed}"));
+        let dir = std::env::temp_dir().join(format!("awp-prop-ck-{seed}-{}",
+                                                    std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.awp");
+        ck.save(&path).unwrap();
+        let back = awp::model::Checkpoint::load(&path).unwrap();
+        back.validate().unwrap();
+        assert_eq!(back.config, cfg);
+        for ((n1, s1, d1), (n2, s2, d2)) in ck.tensors.iter().zip(&back.tensors) {
+            assert_eq!((n1, s1), (n2, s2));
+            assert_eq!(d1, d2, "seed={seed} tensor {n1}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
