@@ -1,7 +1,10 @@
 //! Per-layer compression cost across methods and shapes — the paper's §3
 //! complexity claim: AWP's `O(d_out·d_in²)` GEMM iterations vs the
 //! Hessian-inverse (`O(d_in³)` + column sweeps) of SparseGPT/GPTQ, all on
-//! the same substrates. One bench per paper table's method set.
+//! the same substrates. One bench per paper table's method set, plus a
+//! pipeline-level scaling case (same tiny model, `--jobs` 1/2/4 through
+//! the layer-job executor) so BENCH_*.json tracks executor speedup over
+//! time.
 //!
 //! ```bash
 //! cargo bench --bench compression
@@ -71,6 +74,47 @@ fn main() {
         for (name, c_) in methods {
             bench(&format!("joint50+int4 {name} {m}x{k}"), 1.5, || {
                 c_.compress(&w, &c, &spec).unwrap();
+            });
+        }
+    }
+
+    println!("\n== pipeline scaling: layer-job executor, same model at --jobs 1/2/4 ==");
+    {
+        use awp::coordinator::calibrate::Grams;
+        use awp::coordinator::{compress_model_with, Executor};
+        use awp::model::{GramKey, ModelConfig};
+        use std::collections::HashMap;
+
+        // multi-layer tiny model: enough independent layer jobs for the
+        // pool to overlap (12 sites, LPT-ordered)
+        let cfg = ModelConfig {
+            name: "bench".into(), vocab: 64, d_model: 128, n_heads: 4,
+            n_layers: 2, d_ff: 512, seq_len: 16, batch: 1, decode_len: 8,
+            rope_theta: 1e4,
+        };
+        let ck = awp::trainer::init_checkpoint(&cfg, 7);
+        let mut map = HashMap::new();
+        for l in 0..cfg.n_layers {
+            for key in [GramKey::AttnIn, GramKey::AttnOutIn, GramKey::MlpIn] {
+                map.insert((key, l),
+                           Matrix::randn_gram(cfg.d_model, 10 * l as u64 + key.index() as u64));
+            }
+            map.insert((GramKey::MlpDownIn, l), Matrix::randn_gram(cfg.d_ff, 77 + l as u64));
+        }
+        let grams = Grams { map, tokens: 4096 };
+        let spec = CompressionSpec::prune(0.5);
+        let compressor = AwpCpu::default();
+        for jobs in [1usize, 2, 4] {
+            let exec = Executor::with_workers(jobs);
+            if exec.workers() != jobs {
+                // with_workers clamps to the thread budget — flag it so a
+                // plateau in the BENCH series is attributable
+                println!("    (jobs={jobs} clamped to {} workers by the \
+                          thread budget)", exec.workers());
+            }
+            bench(&format!("pipeline awp-cpu prune50 jobs={jobs}"), 2.0, || {
+                compress_model_with(&ck, &grams, &compressor, &spec, false, &exec)
+                    .unwrap();
             });
         }
     }

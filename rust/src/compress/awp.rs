@@ -48,7 +48,8 @@ pub trait AwpBackend: Send + Sync {
     /// artifact set covers the paper's evaluated constraint sets).
     fn prune24_chunk(&self, _w: &Matrix, _theta: &Matrix, _c: &Matrix,
                      _eta: f32, _iters: usize) -> Result<(Matrix, f64, f64)> {
-        anyhow::bail!("2:4 structured pruning is not supported by this backend                        (use awp-cpu)")
+        anyhow::bail!("2:4 structured pruning is not supported by this backend \
+                       (use awp-cpu)")
     }
 
     fn backend_name(&self) -> &'static str;
@@ -112,12 +113,19 @@ impl<B: AwpBackend> AwpDriver<B> {
         ops::activation_loss(w, theta, c).sqrt() / w.frob_norm().max(1e-30)
     }
 
-    /// §4.1 pruning: Wanda init, η = 2/‖C‖_F, stop at tol or 200 iters.
-    fn run_prune(&self, w: &Matrix, c: &Matrix, k: usize)
-        -> Result<(Matrix, CompressStats)> {
+    /// The shared §4.1 IHT driver loop: chunked backend steps from `init`
+    /// with the paper's step size and stopping rule (rel-grad < tol or 200
+    /// iters), optional per-iteration series tracking. `step(θ, iters)`
+    /// performs `iters` backend iterations and returns
+    /// `(Θ', rel_grad, rel_loss)` — the only thing that differs between
+    /// the row-k and 2:4 constraint sets.
+    fn run_iht<S>(&self, w: &Matrix, c: &Matrix, init: Matrix, step: S)
+        -> Result<(Matrix, CompressStats)>
+    where
+        S: Fn(&Matrix, usize) -> Result<(Matrix, f64, f64)>,
+    {
         let h = &self.hyper;
-        let eta = (h.prune_eta_scale / c.frob_norm().max(1e-30)) as f32;
-        let mut theta = wanda::wanda_prune(w, c, k);
+        let mut theta = init;
         let mut series = Vec::new();
         if h.track_series {
             series.push(Self::rel_loss(w, &theta, c));
@@ -126,11 +134,10 @@ impl<B: AwpBackend> AwpDriver<B> {
         let mut iters = 0usize;
         let mut rel = f64::MAX;
         while iters < h.prune_max_iters {
-            let step = chunk.min(h.prune_max_iters - iters);
-            let (t2, rel_grad, rel_loss) =
-                self.backend.prune_chunk(w, &theta, c, eta, k, step)?;
+            let n = chunk.min(h.prune_max_iters - iters);
+            let (t2, rel_grad, rel_loss) = step(&theta, n)?;
             theta = t2;
-            iters += step;
+            iters += n;
             rel = rel_grad;
             if h.track_series {
                 series.push(rel_loss);
@@ -143,36 +150,23 @@ impl<B: AwpBackend> AwpDriver<B> {
                                    rel_loss: rel, ..Default::default() }))
     }
 
+    /// §4.1 pruning: Wanda init, η = 2/‖C‖_F, stop at tol or 200 iters.
+    fn run_prune(&self, w: &Matrix, c: &Matrix, k: usize)
+        -> Result<(Matrix, CompressStats)> {
+        let eta = (self.hyper.prune_eta_scale / c.frob_norm().max(1e-30)) as f32;
+        self.run_iht(w, c, wanda::wanda_prune(w, c, k), |theta, iters| {
+            self.backend.prune_chunk(w, theta, c, eta, k, iters)
+        })
+    }
+
     /// §5 future-work extension: IHT with the 2:4 structured projection,
     /// initialised from the Wanda-2:4 mask; same step size / stopping rule
     /// as §4.1 pruning.
     fn run_prune24(&self, w: &Matrix, c: &Matrix) -> Result<(Matrix, CompressStats)> {
-        let h = &self.hyper;
-        let eta = (h.prune_eta_scale / c.frob_norm().max(1e-30)) as f32;
-        let mut theta = wanda::wanda_prune_2_4(w, c);
-        let mut series = Vec::new();
-        if h.track_series {
-            series.push(Self::rel_loss(w, &theta, c));
-        }
-        let chunk = if h.track_series { 1 } else { h.chunk.max(1) };
-        let mut iters = 0usize;
-        let mut rel = f64::MAX;
-        while iters < h.prune_max_iters {
-            let step = chunk.min(h.prune_max_iters - iters);
-            let (t2, rel_grad, rel_loss) =
-                self.backend.prune24_chunk(w, &theta, c, eta, step)?;
-            theta = t2;
-            iters += step;
-            rel = rel_grad;
-            if h.track_series {
-                series.push(rel_loss);
-            }
-            if rel_grad < h.prune_tol {
-                break;
-            }
-        }
-        Ok((theta, CompressStats { iterations: iters, loss_series: series,
-                                   rel_loss: rel, ..Default::default() }))
+        let eta = (self.hyper.prune_eta_scale / c.frob_norm().max(1e-30)) as f32;
+        self.run_iht(w, c, wanda::wanda_prune_2_4(w, c), |theta, iters| {
+            self.backend.prune24_chunk(w, theta, c, eta, iters)
+        })
     }
 
     /// §4.2 quantization: RTN init, η = 1.5/‖C‖_F, 10 iterations, keeping

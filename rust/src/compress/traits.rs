@@ -127,6 +127,23 @@ pub trait LayerCompressor: Send + Sync {
     }
 }
 
+/// Which constraint set to re-check on a compressor's output (the
+/// pipeline's `verify` pass). The INT-grid refit check only applies to
+/// methods whose grid is the min/max fit of their own output (see
+/// [`LayerCompressor::grid_refit_checkable`]); for the others, still verify
+/// the sparsity half of the spec. `None` ⇒ nothing checkable.
+pub fn verification_spec(compressor: &dyn LayerCompressor, spec: &CompressionSpec)
+    -> Option<CompressionSpec> {
+    if compressor.grid_refit_checkable() {
+        return Some(*spec);
+    }
+    match spec.mode {
+        CompressionMode::Prune { .. } | CompressionMode::Structured24 => Some(*spec),
+        CompressionMode::Joint { ratio, .. } => Some(CompressionSpec::prune(ratio)),
+        CompressionMode::Quant { .. } => None,
+    }
+}
+
 /// Verify that `theta` satisfies `spec`'s constraint set (used by tests and
 /// the coordinator's assembly-time assertions).
 pub fn check_constraints(theta: &Matrix, spec: &CompressionSpec) -> Result<()> {
@@ -190,6 +207,33 @@ mod tests {
         assert!(check_constraints(&theta, &CompressionSpec::quant(4, 16)).is_err());
         let q = crate::quant::quantize_dequantize(&theta, QuantSpec::new(4, 16));
         assert!(check_constraints(&q, &CompressionSpec::quant(4, 16)).is_ok());
+    }
+
+    #[test]
+    fn verification_spec_respects_refit_checkability() {
+        struct NotCheckable;
+        impl LayerCompressor for NotCheckable {
+            fn name(&self) -> &'static str {
+                "nc"
+            }
+            fn compress(&self, w: &Matrix, c: &Matrix, _spec: &CompressionSpec)
+                -> Result<CompressedLayer> {
+                Ok(CompressedLayer::from_theta(w, c, w.clone(), 0, 0.0))
+            }
+            fn grid_refit_checkable(&self) -> bool {
+                false
+            }
+        }
+        let nc = NotCheckable;
+        // non-checkable grid ⇒ quant check skipped, sparsity half kept
+        assert!(verification_spec(&nc, &CompressionSpec::quant(4, 32)).is_none());
+        let js = verification_spec(&nc, &CompressionSpec::joint(0.5, 4, 32)).unwrap();
+        assert!(matches!(js.mode, CompressionMode::Prune { .. }));
+        assert!(verification_spec(&nc, &CompressionSpec::prune(0.5)).is_some());
+        // checkable methods re-check the spec as-is
+        let m = crate::compress::magnitude::MagnitudePrune;
+        let qs = verification_spec(&m, &CompressionSpec::quant(4, 32)).unwrap();
+        assert!(matches!(qs.mode, CompressionMode::Quant { .. }));
     }
 
     #[test]

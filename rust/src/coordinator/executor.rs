@@ -1,0 +1,358 @@
+//! The layer-job execution engine — the worker pool the scheduler in
+//! [`super::jobs`] was designed for.
+//!
+//! `plan_jobs` emits jobs in LPT order (longest first); this module runs
+//! them on a dynamic pool: an atomic cursor over the job list hands the
+//! next job to whichever worker frees up first, so the LPT order turns
+//! into the classic makespan heuristic. Three guarantees the pipeline and
+//! the experiment harness rely on:
+//!
+//! * **Determinism** — results are reassembled in submission (plan) order,
+//!   so reports and checkpoint assembly are identical to a sequential run
+//!   regardless of completion order or worker count.
+//! * **Fail-fast with attribution** — the first failure flips an abort
+//!   flag (no new jobs start; in-flight jobs finish), and the error
+//!   surfaced is the *lowest-index* failure, wrapped with that job's
+//!   label, so "which site failed" survives the parallel run.
+//! * **Bounded threads** — outer workers × inner GEMM threads ≤ the
+//!   machine budget (`AWP_THREADS` or available parallelism): each worker
+//!   runs its job inside [`with_thread_budget`], shrinking the row-panel
+//!   parallelism of `tensor::ops` as the worker count grows instead of
+//!   oversubscribing cores. Budgets nest, so an executor built *inside* a
+//!   budgeted worker (e.g. a per-cell `compress_model` under a table
+//!   sweep) sizes itself from the enclosing budget automatically.
+//!
+//! See `EXECUTOR_DESIGN.md` for the design note.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::util::parallel::{num_threads, with_thread_budget};
+use crate::util::Timer;
+
+/// Per-job wall-clock telemetry, reported in submission order.
+#[derive(Clone, Debug)]
+pub struct JobStats {
+    /// submission index (== position in the `JobPlan` / cell list)
+    pub index: usize,
+    /// human-readable job label (site param name, table-cell name, …)
+    pub label: String,
+    /// wall-clock seconds for this job alone
+    pub seconds: f64,
+    /// which pool worker ran it (0 for the sequential fast path)
+    pub worker: usize,
+}
+
+/// Everything a pool run produces: per-job results in submission order,
+/// per-job telemetry, and the wall-clock of the whole run.
+pub struct ExecReport<T> {
+    pub results: Vec<T>,
+    pub stats: Vec<JobStats>,
+    pub seconds: f64,
+}
+
+/// A sized worker pool: `workers` outer job slots, each allowed
+/// `inner_threads` threads of nested parallelism.
+#[derive(Clone, Copy, Debug)]
+pub struct Executor {
+    workers: usize,
+    inner_threads: usize,
+}
+
+impl Executor {
+    /// Build from an explicit `--jobs` request (`Some(n)`) or the ambient
+    /// thread budget (`None` ⇒ one worker per budget thread). Workers are
+    /// clamped to the budget — `--jobs 8` under `AWP_THREADS=2` gets 2
+    /// workers, keeping outer × inner ≤ the budget instead of
+    /// oversubscribing. The inner budget is what's left after the split:
+    /// `total / workers`, at least 1.
+    pub fn new(jobs: Option<usize>) -> Self {
+        let total = num_threads().max(1);
+        let workers = jobs.unwrap_or(total).clamp(1, total);
+        Executor { workers, inner_threads: (total / workers).max(1) }
+    }
+
+    /// `n` outer workers (clamped to the ambient budget, which also funds
+    /// the inner split) — the `--jobs N` entry point.
+    pub fn with_workers(n: usize) -> Self {
+        Executor::new(Some(n))
+    }
+
+    /// One worker, full inner budget: byte-for-byte the sequential path.
+    pub fn sequential() -> Self {
+        Executor::new(Some(1))
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn inner_threads(&self) -> usize {
+        self.inner_threads
+    }
+
+    /// Run `job(0..n)` on the pool. `label(i)` names job `i` for telemetry
+    /// and error attribution. Results come back in index order; the first
+    /// error (lowest index among failures) aborts the run.
+    ///
+    /// When `n` is smaller than the pool, the idle workers' share of the
+    /// thread budget is re-granted to the jobs that do run (a 1-cell run
+    /// on an 8-thread default executor gets all 8 threads for its GEMMs,
+    /// not `8 / 8 = 1`).
+    pub fn run<T, F, L>(&self, n: usize, label: L, job: F) -> Result<ExecReport<T>>
+    where
+        T: Send,
+        F: Fn(usize) -> Result<T> + Sync,
+        L: Fn(usize) -> String + Sync,
+    {
+        let timer = Timer::start("executor");
+        let workers = self.workers.min(n.max(1));
+        // re-split this executor's total budget over the workers actually used
+        let inner = ((self.workers * self.inner_threads) / workers).max(1);
+        if workers <= 1 {
+            return self.run_sequential(n, inner, &label, &job, timer);
+        }
+
+        let cursor = AtomicUsize::new(0);
+        let abort = AtomicBool::new(false);
+        let done: Mutex<Vec<(usize, T, JobStats)>> = Mutex::new(Vec::with_capacity(n));
+        let failures: Mutex<Vec<(usize, anyhow::Error)>> = Mutex::new(Vec::new());
+        std::thread::scope(|scope| {
+            for wid in 0..workers {
+                let (cursor, abort) = (&cursor, &abort);
+                let (done, failures) = (&done, &failures);
+                let (job, label) = (&job, &label);
+                scope.spawn(move || {
+                    with_thread_budget(inner, || loop {
+                        if abort.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let t = Timer::start("job");
+                        match job(i) {
+                            Ok(v) => {
+                                let stats = JobStats {
+                                    index: i,
+                                    label: label(i),
+                                    seconds: t.elapsed_s(),
+                                    worker: wid,
+                                };
+                                done.lock().unwrap().push((i, v, stats));
+                            }
+                            Err(e) => {
+                                abort.store(true, Ordering::Relaxed);
+                                failures.lock().unwrap().push((i, e));
+                            }
+                        }
+                    });
+                });
+            }
+        });
+
+        let completed = done.into_inner().unwrap();
+        let mut failures = failures.into_inner().unwrap();
+        if !failures.is_empty() {
+            // deterministic attribution: surface the lowest-index failure
+            failures.sort_by_key(|(i, _)| *i);
+            let n_failed = failures.len();
+            let (i, err) = failures.remove(0);
+            return Err(err.context(format!(
+                "job {i} ({}) failed; aborted with {} of {n} jobs done \
+                 ({n_failed} failed)",
+                label(i),
+                completed.len(),
+            )));
+        }
+        debug_assert_eq!(completed.len(), n, "pool lost a job result");
+        let mut completed = completed;
+        completed.sort_unstable_by_key(|(i, _, _)| *i);
+        let mut results = Vec::with_capacity(n);
+        let mut stats = Vec::with_capacity(n);
+        for (_, v, s) in completed {
+            results.push(v);
+            stats.push(s);
+        }
+        Ok(ExecReport { results, stats, seconds: timer.elapsed_s() })
+    }
+
+    /// Single-worker path: same loop, same budget discipline, no threads —
+    /// this is the bit-identical reference the parallel path is tested
+    /// against (and what `--jobs 1` / `AWP_THREADS=1` select).
+    fn run_sequential<T, F, L>(&self, n: usize, inner: usize, label: &L, job: &F,
+                               timer: Timer) -> Result<ExecReport<T>>
+    where
+        F: Fn(usize) -> Result<T>,
+        L: Fn(usize) -> String,
+    {
+        let mut results = Vec::with_capacity(n);
+        let mut stats = Vec::with_capacity(n);
+        for i in 0..n {
+            let t = Timer::start("job");
+            match with_thread_budget(inner, || job(i)) {
+                Ok(v) => {
+                    results.push(v);
+                    stats.push(JobStats {
+                        index: i,
+                        label: label(i),
+                        seconds: t.elapsed_s(),
+                        worker: 0,
+                    });
+                }
+                Err(e) => {
+                    return Err(e.context(format!(
+                        "job {i} ({}) failed; aborted with {i} of {n} jobs \
+                         done (1 failed)",
+                        label(i),
+                    )));
+                }
+            }
+        }
+        Ok(ExecReport { results, stats, seconds: timer.elapsed_s() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::bail;
+
+    fn label(i: usize) -> String {
+        format!("job-{i}")
+    }
+
+    #[test]
+    fn results_come_back_in_index_order() {
+        let exec = Executor::with_workers(4);
+        // jittered job durations so completion order ≠ submission order
+        let rep = exec
+            .run(33, label, |i| {
+                std::thread::sleep(std::time::Duration::from_micros(
+                    ((i * 7919) % 5) as u64 * 200,
+                ));
+                Ok(i * i)
+            })
+            .unwrap();
+        assert_eq!(rep.results.len(), 33);
+        for (i, v) in rep.results.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+        for (i, s) in rep.stats.iter().enumerate() {
+            assert_eq!(s.index, i);
+            assert_eq!(s.label, format!("job-{i}"));
+            assert!(s.seconds >= 0.0);
+        }
+    }
+
+    #[test]
+    fn sequential_and_parallel_agree() {
+        let f = |i: usize| -> Result<usize> { Ok(i + 100) };
+        let a = Executor::sequential().run(20, label, f).unwrap();
+        let b = Executor::with_workers(4).run(20, label, f).unwrap();
+        assert_eq!(a.results, b.results);
+    }
+
+    #[test]
+    fn failure_aborts_and_names_the_job() {
+        let exec = Executor::with_workers(4);
+        let err = exec
+            .run(40, label, |i| {
+                if i == 11 {
+                    bail!("synthetic failure");
+                }
+                Ok(i)
+            })
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("job-11"), "{msg}");
+        assert!(msg.contains("synthetic failure"), "{msg}");
+    }
+
+    #[test]
+    fn sequential_failure_names_the_job_too() {
+        let err = Executor::sequential()
+            .run(5, label, |i| {
+                if i == 3 {
+                    bail!("boom");
+                }
+                Ok(i)
+            })
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("job-3"), "{msg}");
+    }
+
+    #[test]
+    fn empty_run_is_fine() {
+        let rep = Executor::with_workers(4)
+            .run(0, label, |_| Ok(0usize))
+            .unwrap();
+        assert!(rep.results.is_empty());
+        assert!(rep.stats.is_empty());
+    }
+
+    #[test]
+    fn budget_split_bounds_product() {
+        use crate::util::parallel::with_thread_budget;
+        with_thread_budget(8, || {
+            for jobs in 1..=8usize {
+                let e = Executor::with_workers(jobs);
+                assert_eq!(e.workers(), jobs);
+                assert!(e.workers() * e.inner_threads() <= 8,
+                        "jobs={jobs} inner={}", e.inner_threads());
+                assert!(e.inner_threads() >= 1);
+            }
+            // default: one worker per budget thread, inner collapses to 1
+            let e = Executor::new(None);
+            assert_eq!(e.workers(), 8);
+            assert_eq!(e.inner_threads(), 1);
+            // --jobs 1 keeps the whole budget for the inner GEMMs
+            let e = Executor::sequential();
+            assert_eq!(e.inner_threads(), 8);
+            // over-asking is clamped to the budget, never oversubscribed
+            let e = Executor::with_workers(16);
+            assert_eq!(e.workers(), 8);
+            assert_eq!(e.inner_threads(), 1);
+        });
+    }
+
+    #[test]
+    fn small_runs_reclaim_the_idle_workers_budget() {
+        use crate::util::parallel::{current_thread_budget, with_thread_budget};
+        with_thread_budget(8, || {
+            let exec = Executor::new(None); // 8 workers × 1 inner
+            // a single job gets the whole budget back, not 8/8 = 1
+            let rep = exec
+                .run(1, label, |_| Ok(current_thread_budget()))
+                .unwrap();
+            assert_eq!(rep.results, vec![Some(8)]);
+            // two jobs split it evenly
+            let rep = exec
+                .run(2, label, |_| Ok(current_thread_budget()))
+                .unwrap();
+            assert_eq!(rep.results, vec![Some(4), Some(4)]);
+        });
+    }
+
+    #[test]
+    fn workers_see_the_inner_budget() {
+        use crate::util::parallel::current_thread_budget;
+        with_thread_budget_outer(|| {
+            let exec = Executor::with_workers(2);
+            let rep = exec
+                .run(4, label, |_| Ok(current_thread_budget()))
+                .unwrap();
+            for b in rep.results {
+                assert_eq!(b, Some(exec.inner_threads()));
+            }
+        });
+    }
+
+    fn with_thread_budget_outer(f: impl FnOnce()) {
+        crate::util::parallel::with_thread_budget(4, f)
+    }
+}

@@ -5,6 +5,14 @@
 //! Each `table*` function produces the same rows/columns the paper reports;
 //! `fig1` emits the per-iteration activation-loss series. Results are
 //! written to `reports/` as console text, markdown and CSV.
+//!
+//! Table sweeps submit their cells through the shared layer-job
+//! [`Executor`] (`--jobs N`): each cell is one pool job (compress + eval),
+//! the nested per-cell pipeline runs sequentially inside the cell's thread
+//! budget, and the memoized checkpoint/Gram/batcher state is shared across
+//! cells via `Arc` rather than recomputed. Cell results come back in
+//! submission order, so the rendered tables are identical to a sequential
+//! run at any worker count.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -12,8 +20,9 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use super::calibrate::{calibrate, Grams};
+use super::executor::Executor;
 use super::methods::{make_compressor, Method};
-use super::pipeline::compress_model;
+use super::pipeline::compress_model_with;
 use crate::compress::awp::AwpHyper;
 use crate::compress::traits::CompressionSpec;
 use crate::config::RunConfig;
@@ -26,11 +35,13 @@ use crate::trainer;
 use crate::util::Timer;
 
 /// Shared state across experiments: runtime, manifest, corpus, trained
-/// checkpoints and calibration Grams (each produced once and reused).
+/// checkpoints and calibration Grams (each produced once and reused), plus
+/// the executor table sweeps and pipeline runs are submitted through.
 pub struct ExperimentCtx {
     pub handle: RuntimeHandle,
     pub manifest: Arc<Manifest>,
     pub cfg: RunConfig,
+    executor: Executor,
     corpus: Option<Arc<SyntheticCorpus>>,
     batchers: HashMap<(usize, usize), Arc<Batcher>>,
     checkpoints: HashMap<String, Arc<Checkpoint>>,
@@ -44,12 +55,23 @@ impl ExperimentCtx {
             handle,
             manifest,
             cfg,
+            executor: Executor::new(None),
             corpus: None,
             batchers: HashMap::new(),
             checkpoints: HashMap::new(),
             grams: HashMap::new(),
             dense_ppl: HashMap::new(),
         }
+    }
+
+    /// Size the worker pool (the `--jobs N` flag; `None` ⇒ ambient budget).
+    pub fn set_jobs(&mut self, jobs: Option<usize>) {
+        self.executor = Executor::new(jobs);
+    }
+
+    /// The executor cell sweeps and pipeline runs go through.
+    pub fn executor(&self) -> Executor {
+        self.executor
     }
 
     fn corpus(&mut self) -> Arc<SyntheticCorpus> {
@@ -139,19 +161,47 @@ impl ExperimentCtx {
     /// held-out perplexity.
     pub fn cell(&mut self, model: &str, method: Method, spec: &CompressionSpec)
         -> Result<f64> {
+        Ok(self.cells(model, &[(method, *spec)])?[0])
+    }
+
+    /// A batch of table cells, run through the shared executor: one pool
+    /// job per `(method, spec)` cell. The trained checkpoint, Grams and
+    /// batcher are produced (or fetched from cache) once up front and
+    /// shared across cells via `Arc`; each cell builds its compressor,
+    /// runs the per-cell pipeline *sequentially* inside its thread budget,
+    /// and evaluates held-out perplexity. Results are in `specs` order.
+    pub fn cells(&mut self, model: &str, specs: &[(Method, CompressionSpec)])
+        -> Result<Vec<f64>> {
+        // memoized shared state, resolved before the parallel section
         let ck = self.checkpoint(model)?;
         let grams = self.grams(model)?;
+        let batcher = self.batcher(model)?;
+        let handle = self.handle.clone();
+        let manifest = self.manifest.clone();
+        let eval_batches = self.cfg.eval_batches;
         let hyper = AwpHyper { group: self.manifest.awp_group,
                                chunk: self.manifest.awp_chunk,
                                ..AwpHyper::default() };
-        let compressor =
-            make_compressor(method, hyper, Some((&self.handle, &self.manifest)))?;
-        let t = Timer::start("cell");
-        let out = compress_model(&ck, &grams, compressor.as_ref(), spec, false)?;
-        let ppl = self.ppl(model, &out.checkpoint)?;
-        eprintln!("[cell] {model} {} {:?} → ppl {ppl:.3} ({:.1}s)",
-                  method.label(), spec.mode, t.elapsed_s());
-        Ok(ppl)
+        let run = self.executor.run(
+            specs.len(),
+            |i| format!("{} {:?}", specs[i].0.label(), specs[i].1.mode),
+            |i| {
+                let (method, spec) = specs[i];
+                let compressor =
+                    make_compressor(method, hyper, Some((&handle, &manifest)))?;
+                let t = Timer::start("cell");
+                // cell-level parallelism owns the budget split; the nested
+                // pipeline runs its layer jobs sequentially within it
+                let out = compress_model_with(&ck, &grams, compressor.as_ref(),
+                                              &spec, false, &Executor::sequential())?;
+                let rep = perplexity(&handle, &manifest, model, &out.checkpoint,
+                                     &batcher, Split::Val, eval_batches)?;
+                eprintln!("[cell] {model} {} {:?} → ppl {:.3} ({:.1}s)",
+                          method.label(), spec.mode, rep.ppl, t.elapsed_s());
+                Ok(rep.ppl)
+            },
+        )?;
+        Ok(run.results)
     }
 
     pub fn write_report(&self, name: &str, table: &Table) -> Result<()> {
@@ -168,6 +218,25 @@ impl ExperimentCtx {
 pub const PRUNE_RATIOS: [f64; 5] = [0.5, 0.6, 0.7, 0.8, 0.9];
 pub const JOINT_RATIOS: [f64; 3] = [0.25, 0.5, 0.75];
 
+/// Run a `methods × specs` sweep through [`ExperimentCtx::cells`] as one
+/// flat row-major cell list and append one table row per method — the
+/// shared body of every table/ablation generator.
+fn sweep_into(ctx: &mut ExperimentCtx, t: &mut Table, model: &str,
+              methods: &[Method], specs: &[CompressionSpec]) -> Result<()> {
+    let mut cells = Vec::with_capacity(methods.len() * specs.len());
+    for &method in methods {
+        for &spec in specs {
+            cells.push((method, spec));
+        }
+    }
+    let ppls = ctx.cells(model, &cells)?;
+    for (method, row) in methods.iter().zip(ppls.chunks(specs.len())) {
+        t.push_row(method.label().to_uppercase(),
+                   row.iter().map(|&p| Some(p)).collect());
+    }
+    Ok(())
+}
+
 /// Tables 1 & 2: pruning perplexity across ratios and methods.
 fn prune_table(ctx: &mut ExperimentCtx, name: &str, model: &str,
                awp_method: Method) -> Result<Table> {
@@ -176,14 +245,10 @@ fn prune_table(ctx: &mut ExperimentCtx, name: &str, model: &str,
     let mut t = Table::new(
         format!("{name}: ppl of pruned '{model}' (dense = {dense:.2})"),
         "method", cols);
-    for method in [Method::Magnitude, Method::SparseGpt, Method::Wanda, awp_method] {
-        let mut cells = Vec::new();
-        for &ratio in &PRUNE_RATIOS {
-            let spec = CompressionSpec::prune(ratio);
-            cells.push(Some(ctx.cell(model, method, &spec)?));
-        }
-        t.push_row(method.label().to_uppercase(), cells);
-    }
+    let methods = [Method::Magnitude, Method::SparseGpt, Method::Wanda, awp_method];
+    let specs: Vec<CompressionSpec> =
+        PRUNE_RATIOS.iter().map(|&r| CompressionSpec::prune(r)).collect();
+    sweep_into(ctx, &mut t, model, &methods, &specs)?;
     Ok(t)
 }
 
@@ -208,14 +273,10 @@ pub fn table3(ctx: &mut ExperimentCtx, awp: Method) -> Result<Table> {
         format!("Table 3: ppl of quantized '{model}' (group={group}, dense = {dense:.2})"),
         "method",
         vec!["INT4".into(), "INT3".into(), "INT2".into()]);
-    for method in [Method::Rtn, Method::Gptq, Method::Awq, awp] {
-        let mut cells = Vec::new();
-        for bits in [4u8, 3, 2] {
-            let spec = CompressionSpec::quant(bits, group);
-            cells.push(Some(ctx.cell(model, method, &spec)?));
-        }
-        t.push_row(method.label().to_uppercase(), cells);
-    }
+    let methods = [Method::Rtn, Method::Gptq, Method::Awq, awp];
+    let specs: Vec<CompressionSpec> =
+        [4u8, 3, 2].iter().map(|&b| CompressionSpec::quant(b, group)).collect();
+    sweep_into(ctx, &mut t, model, &methods, &specs)?;
     ctx.write_report("table3", &t)?;
     Ok(t)
 }
@@ -229,14 +290,10 @@ fn joint_table(ctx: &mut ExperimentCtx, name: &str, model: &str,
     let mut t = Table::new(
         format!("{name}: ppl of pruned + INT4 '{model}' (dense = {dense:.2})"),
         "method", cols);
-    for method in [Method::AwqThenWanda, Method::WandaThenAwq, awp_method] {
-        let mut cells = Vec::new();
-        for &ratio in &JOINT_RATIOS {
-            let spec = CompressionSpec::joint(ratio, 4, group);
-            cells.push(Some(ctx.cell(model, method, &spec)?));
-        }
-        t.push_row(method.label().to_uppercase(), cells);
-    }
+    let methods = [Method::AwqThenWanda, Method::WandaThenAwq, awp_method];
+    let specs: Vec<CompressionSpec> =
+        JOINT_RATIOS.iter().map(|&r| CompressionSpec::joint(r, 4, group)).collect();
+    sweep_into(ctx, &mut t, model, &methods, &specs)?;
     Ok(t)
 }
 
@@ -264,11 +321,9 @@ pub fn ablation24(ctx: &mut ExperimentCtx) -> Result<Table> {
         format!("Ablation: unstructured 50% vs 2:4 on '{model}' (dense = {dense:.2})"),
         "method",
         vec!["unstructured 50%".into(), "2:4".into()]);
-    for method in [Method::Magnitude, Method::Wanda, Method::AwpCpu] {
-        let u = ctx.cell(model, method, &CompressionSpec::prune(0.5))?;
-        let s = ctx.cell(model, method, &CompressionSpec::structured24())?;
-        t.push_row(method.label().to_uppercase(), vec![Some(u), Some(s)]);
-    }
+    let methods = [Method::Magnitude, Method::Wanda, Method::AwpCpu];
+    let specs = [CompressionSpec::prune(0.5), CompressionSpec::structured24()];
+    sweep_into(ctx, &mut t, model, &methods, &specs)?;
     ctx.write_report("ablation24", &t)?;
     Ok(t)
 }

@@ -13,6 +13,15 @@ pub struct Job {
     pub site: LayerSite,
 }
 
+impl Job {
+    /// FLOP-ish cost model shared by the LPT sort, progress estimation and
+    /// the executor's telemetry: one PGD iteration is a `(d_out, d_in) ·
+    /// (d_in, d_in)` GEMM, so cost ≈ `d_out·d_in²`.
+    pub fn cost(&self) -> u64 {
+        (self.site.d_out as u64) * (self.site.d_in as u64) * (self.site.d_in as u64)
+    }
+}
+
 /// A full compression plan for a model.
 #[derive(Clone, Debug)]
 pub struct JobPlan {
@@ -39,12 +48,9 @@ pub fn plan_jobs(cfg: &ModelConfig) -> JobPlan {
 }
 
 impl JobPlan {
-    /// Total FLOP-ish cost (for progress estimation): Σ d_out·d_in².
+    /// Total FLOP-ish cost (for progress estimation): Σ [`Job::cost`].
     pub fn total_cost(&self) -> u64 {
-        self.jobs
-            .iter()
-            .map(|j| (j.site.d_out as u64) * (j.site.d_in as u64).pow(2))
-            .sum()
+        self.jobs.iter().map(Job::cost).sum()
     }
 }
 
@@ -85,6 +91,19 @@ mod tests {
         for l in 0..3 {
             let first = plan.jobs.iter().find(|j| j.site.layer == l).unwrap();
             assert!(first.site.param.ends_with("w_down"), "{}", first.site.param);
+        }
+    }
+
+    #[test]
+    fn cost_is_non_increasing_within_layer() {
+        // the executor's atomic cursor walks the plan in order, so LPT only
+        // works if Job::cost agrees with the sort key used by plan_jobs
+        let plan = plan_jobs(&cfg());
+        for pair in plan.jobs.windows(2) {
+            if pair[0].site.layer == pair[1].site.layer {
+                assert!(pair[0].cost() >= pair[1].cost(),
+                        "{} before {}", pair[0].site.param, pair[1].site.param);
+            }
         }
     }
 

@@ -63,26 +63,30 @@ impl Method {
 }
 
 /// Build a compressor. `runtime` is required only for [`Method::AwpHlo`].
+///
+/// Returns an `Arc` (compressors are stateless and `Send + Sync`) so one
+/// instance can be shared across the executor's worker pool and across
+/// table cells without rebuilding per job.
 pub fn make_compressor(
     method: Method,
     hyper: AwpHyper,
     runtime: Option<(&RuntimeHandle, &Arc<Manifest>)>,
-) -> Result<Box<dyn LayerCompressor>> {
+) -> Result<Arc<dyn LayerCompressor>> {
     Ok(match method {
-        Method::Magnitude => Box::new(MagnitudePrune),
-        Method::Wanda => Box::new(WandaPrune),
-        Method::SparseGpt => Box::new(SparseGpt::default()),
-        Method::Rtn => Box::new(RtnQuant),
-        Method::Awq => Box::new(AwqQuant::default()),
-        Method::Gptq => Box::new(Gptq::default()),
-        Method::AwqThenWanda => Box::new(SequentialCombo::awq_then_wanda()),
-        Method::WandaThenAwq => Box::new(SequentialCombo::wanda_then_awq()),
-        Method::AwpCpu => Box::new(AwpDriver::with_hyper(CpuBackend, hyper)),
+        Method::Magnitude => Arc::new(MagnitudePrune),
+        Method::Wanda => Arc::new(WandaPrune),
+        Method::SparseGpt => Arc::new(SparseGpt::default()),
+        Method::Rtn => Arc::new(RtnQuant),
+        Method::Awq => Arc::new(AwqQuant::default()),
+        Method::Gptq => Arc::new(Gptq::default()),
+        Method::AwqThenWanda => Arc::new(SequentialCombo::awq_then_wanda()),
+        Method::WandaThenAwq => Arc::new(SequentialCombo::wanda_then_awq()),
+        Method::AwpCpu => Arc::new(AwpDriver::with_hyper(CpuBackend, hyper)),
         Method::AwpHlo => {
             let Some((handle, manifest)) = runtime else {
                 bail!("awp (HLO backend) needs the PJRT runtime; use awp-cpu otherwise");
             };
-            Box::new(AwpDriver::with_hyper(
+            Arc::new(AwpDriver::with_hyper(
                 HloBackend::new(handle.clone(), manifest.clone()),
                 hyper,
             ))

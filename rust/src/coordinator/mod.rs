@@ -13,12 +13,18 @@
 //!   calibration sample and accumulates `C = XXᵀ/n` per site.
 //! * `jobs` — the site-job scheduler (pure logic, property-tested: every
 //!   site exactly once, Gram routing correct, deterministic order).
+//! * `executor` — the layer-job worker pool the scheduler feeds: dynamic
+//!   (atomic-cursor) dispatch over the LPT order, per-job telemetry,
+//!   fail-fast error attribution, deterministic output order, and the
+//!   outer-workers × inner-GEMM-threads budget split.
 //! * `methods` — name → compressor registry covering the paper's full
 //!   method matrix.
 //! * `pipeline` — end-to-end orchestration + assembly into a new checkpoint.
-//! * `experiments` — regenerates every table/figure of the paper's §4.
+//! * `experiments` — regenerates every table/figure of the paper's §4
+//!   (table sweeps submit their cells through the executor).
 
 pub mod calibrate;
+pub mod executor;
 pub mod experiments;
 pub mod jobs;
 pub mod methods;
@@ -27,6 +33,7 @@ pub mod pipeline;
 pub use experiments::ExperimentCtx;
 
 pub use calibrate::{calibrate, Grams};
-pub use jobs::{plan_jobs, JobPlan};
+pub use executor::{ExecReport, Executor, JobStats};
+pub use jobs::{plan_jobs, Job, JobPlan};
 pub use methods::{make_compressor, Method};
-pub use pipeline::{compress_model, PipelineResult};
+pub use pipeline::{compress_model, compress_model_with, PipelineResult};

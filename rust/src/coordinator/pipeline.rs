@@ -1,10 +1,19 @@
-//! End-to-end compression pipeline: plan → compress every site → assemble.
+//! End-to-end compression pipeline: plan → compress every site on the
+//! layer-job executor → assemble.
+//!
+//! Every `(W, C)` site is an independent PGD problem, so the jobs run on
+//! [`Executor`]'s worker pool; assembly happens afterwards in plan order,
+//! which keeps the reports and the produced checkpoint identical to a
+//! sequential run regardless of worker count or completion order.
 
 use anyhow::{Context, Result};
 
 use super::calibrate::Grams;
+use super::executor::{Executor, JobStats};
 use super::jobs::plan_jobs;
-use crate::compress::traits::{check_constraints, CompressionSpec, LayerCompressor};
+use crate::compress::traits::{
+    check_constraints, verification_spec, CompressionSpec, LayerCompressor,
+};
 use crate::eval::reconstruction::{layer_report, LayerReport};
 use crate::model::Checkpoint;
 use crate::util::Timer;
@@ -13,7 +22,18 @@ use crate::util::Timer;
 pub struct PipelineResult {
     pub checkpoint: Checkpoint,
     pub reports: Vec<LayerReport>,
+    /// per-job executor telemetry (wall-clock, worker id), in plan order
+    pub job_stats: Vec<JobStats>,
     pub seconds: f64,
+}
+
+/// Compress every block-linear site of `ck` with `compressor` under `spec`
+/// on the ambient executor (`AWP_THREADS`-sized pool). See
+/// [`compress_model_with`] for the fully-specified variant.
+pub fn compress_model(ck: &Checkpoint, grams: &Grams,
+                      compressor: &dyn LayerCompressor, spec: &CompressionSpec,
+                      verify: bool) -> Result<PipelineResult> {
+    compress_model_with(ck, grams, compressor, spec, verify, &Executor::new(None))
 }
 
 /// Compress every block-linear site of `ck` with `compressor` under `spec`,
@@ -21,58 +41,63 @@ pub struct PipelineResult {
 /// paper compresses transformer-block weights only).
 ///
 /// `verify` re-checks the constraint set on every produced Θ before it is
-/// installed (cheap; catches method/spec mismatches at the source).
-pub fn compress_model(ck: &Checkpoint, grams: &Grams,
-                      compressor: &dyn LayerCompressor, spec: &CompressionSpec,
-                      verify: bool) -> Result<PipelineResult> {
+/// installed (cheap; catches method/spec mismatches at the source). The
+/// check runs inside each layer job, so it parallelises with the
+/// compression itself.
+///
+/// Jobs are submitted to `exec` in the plan's LPT order; a failing site
+/// aborts the run with that site's param name in the error chain.
+pub fn compress_model_with(ck: &Checkpoint, grams: &Grams,
+                           compressor: &dyn LayerCompressor,
+                           spec: &CompressionSpec, verify: bool,
+                           exec: &Executor) -> Result<PipelineResult> {
     let timer = Timer::start("pipeline");
     let plan = plan_jobs(&ck.config);
+    let jobs = &plan.jobs;
+    let check_spec = if verify { verification_spec(compressor, spec) } else { None };
+    let run = exec.run(
+        jobs.len(),
+        |i| jobs[i].site.param.clone(),
+        |i| {
+            let site = &jobs[i].site;
+            let w = ck
+                .matrix(&site.param)
+                .with_context(|| format!("loading {}", site.param))?;
+            let c = grams
+                .get(site.gram, site.layer)
+                .with_context(|| format!("missing Gram for {}", site.param))?;
+            let result = compressor
+                .compress(&w, c, spec)
+                .with_context(|| format!("compressing {}", site.param))?;
+            if let Some(cs) = check_spec {
+                check_constraints(&result.theta, &cs)
+                    .with_context(|| format!("constraint violation at {}", site.param))?;
+            }
+            let report = layer_report(site, &result.theta, &result.stats);
+            Ok((report, result.theta.data))
+        },
+    )?;
+
+    // deterministic assembly: install results in plan order, regardless of
+    // the order workers finished them
     let mut out = Checkpoint {
         config: ck.config.clone(),
         tensors: ck.tensors.clone(),
         meta: ck.meta.clone(),
     };
-    let mut reports = Vec::with_capacity(plan.jobs.len());
-    for job in &plan.jobs {
-        let site = &job.site;
-        let w = ck
-            .matrix(&site.param)
-            .with_context(|| format!("loading {}", site.param))?;
-        let c = grams
-            .get(site.gram, site.layer)
-            .with_context(|| format!("missing Gram for {}", site.param))?;
-        let result = compressor
-            .compress(&w, c, spec)
-            .with_context(|| format!("compressing {}", site.param))?;
-        if verify {
-            // the INT-grid refit check only applies to methods whose grid is
-            // the min/max fit of their own output (see LayerCompressor docs);
-            // for the others, still verify the sparsity half of the spec.
-            use crate::compress::traits::CompressionMode;
-            let check_spec = if compressor.grid_refit_checkable() {
-                Some(*spec)
-            } else {
-                match spec.mode {
-                    CompressionMode::Prune { .. } | CompressionMode::Structured24 => {
-                        Some(*spec)
-                    }
-                    CompressionMode::Joint { ratio, .. } => {
-                        Some(CompressionSpec::prune(ratio))
-                    }
-                    CompressionMode::Quant { .. } => None,
-                }
-            };
-            if let Some(cs) = check_spec {
-                check_constraints(&result.theta, &cs)
-                    .with_context(|| format!("constraint violation at {}", site.param))?;
-            }
-        }
-        reports.push(layer_report(site, &result.theta, &result.stats));
-        out.set(&site.param, result.theta.data)
-            .with_context(|| format!("installing {}", site.param))?;
+    let mut reports = Vec::with_capacity(jobs.len());
+    for (job, (report, theta)) in jobs.iter().zip(run.results) {
+        out.set(&job.site.param, theta)
+            .with_context(|| format!("installing {}", job.site.param))?;
+        reports.push(report);
     }
     out.meta.insert("compressed_with".into(), compressor.name().to_string());
-    Ok(PipelineResult { checkpoint: out, reports, seconds: timer.elapsed_s() })
+    Ok(PipelineResult {
+        checkpoint: out,
+        reports,
+        job_stats: run.stats,
+        seconds: timer.elapsed_s(),
+    })
 }
 
 #[cfg(test)]
@@ -108,6 +133,7 @@ mod tests {
         let spec = CompressionSpec::prune(0.5);
         let out = compress_model(&ck, &grams, &MagnitudePrune, &spec, true).unwrap();
         assert_eq!(out.reports.len(), sites::enumerate_sites(&cfg).len());
+        assert_eq!(out.job_stats.len(), out.reports.len());
         // every block weight 50% sparse
         for s in sites::enumerate_sites(&cfg) {
             let m = out.checkpoint.matrix(&s.param).unwrap();
@@ -127,5 +153,29 @@ mod tests {
         let spec = CompressionSpec::prune(0.5);
         let err = compress_model(&ck, &grams, &MagnitudePrune, &spec, false);
         assert!(err.is_err());
+        // the failing site's name survives executor aggregation
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("w_down"), "{msg}");
+    }
+
+    #[test]
+    fn reports_follow_plan_order_at_any_worker_count() {
+        let cfg = tiny_cfg();
+        let ck = crate::trainer::init_checkpoint(&cfg, 0);
+        let grams = synthetic_grams(&cfg);
+        let spec = CompressionSpec::prune(0.5);
+        let plan = plan_jobs(&cfg);
+        for workers in [1usize, 4] {
+            let out = compress_model_with(&ck, &grams, &MagnitudePrune, &spec,
+                                          false, &Executor::with_workers(workers))
+                .unwrap();
+            for (job, rep) in plan.jobs.iter().zip(&out.reports) {
+                assert_eq!(job.site.param, rep.param, "workers={workers}");
+            }
+            for (i, s) in out.job_stats.iter().enumerate() {
+                assert_eq!(s.index, i);
+                assert_eq!(s.label, plan.jobs[i].site.param);
+            }
+        }
     }
 }

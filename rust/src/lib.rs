@@ -18,6 +18,27 @@
 //! Python never runs on the request path; after `make artifacts` the `repro`
 //! binary is self-contained.
 //!
+//! ## Parallelism and the thread budget
+//!
+//! Every `(W, C)` site is an independent PGD problem, so the coordinator
+//! runs layer jobs (and whole experiment-table cells) on a worker pool —
+//! [`coordinator::executor::Executor`]. Two knobs control it:
+//!
+//! * **`AWP_THREADS`** (env) — the machine thread budget. Everything
+//!   parallel in the crate (the executor's workers *and* the GEMM
+//!   row-panel threads in [`tensor::ops`]) derives from it; unset, it
+//!   defaults to the available parallelism.
+//! * **`--jobs N`** (CLI) — how many of those threads become *outer*
+//!   layer-job/table-cell workers.
+//!
+//! The budget rule: **outer workers × inner GEMM threads ≤ `AWP_THREADS`**.
+//! The executor grants each worker `AWP_THREADS / jobs` inner threads
+//! (min 1), so the inner GEMM parallelism shrinks as the outer worker
+//! count grows instead of oversubscribing cores. `--jobs 1` (or
+//! `AWP_THREADS=1`) reproduces the sequential path bit-for-bit; outputs
+//! are deterministic at *any* worker count (results are reassembled in
+//! plan order — see `EXECUTOR_DESIGN.md`).
+//!
 //! ## Quick tour
 //!
 //! ```no_run

@@ -11,8 +11,12 @@
 //! ```
 //!
 //! Global flags: `--config <file.json>` (see rust/src/config), `--artifacts
-//! <dir>`. The CLI is hand-rolled (the image has no argument-parsing crate);
-//! see `Args` below.
+//! <dir>`, `--jobs N` (size of the layer-job/table-cell worker pool;
+//! default = thread budget, i.e. `AWP_THREADS` or the machine parallelism —
+//! the executor splits the budget so outer workers × inner GEMM threads
+//! stay ≤ it). `repro compress` also takes `--timings` to print the
+//! per-layer executor telemetry. The CLI is hand-rolled (the image has no
+//! argument-parsing crate); see `Args` below.
 
 use std::sync::Arc;
 
@@ -22,7 +26,7 @@ use awp::compress::awp::AwpHyper;
 use awp::compress::traits::CompressionSpec;
 use awp::config::RunConfig;
 use awp::coordinator::experiments::{self, ExperimentCtx};
-use awp::coordinator::{compress_model, make_compressor, Method};
+use awp::coordinator::{compress_model_with, make_compressor, Method};
 use awp::data::Split;
 use awp::eval::{generate, perplexity};
 use awp::model::Checkpoint;
@@ -111,6 +115,11 @@ fn main() -> Result<()> {
     let manifest = Arc::new(Manifest::load(&cfg.paths.artifacts)?);
     let runtime = Runtime::start()?;
     let mut ctx = ExperimentCtx::new(runtime.handle(), manifest.clone(), cfg.clone());
+    let jobs = match args.get("jobs") {
+        Some(v) => Some(v.parse::<usize>().with_context(|| format!("--jobs {v}"))?),
+        None => None,
+    };
+    ctx.set_jobs(jobs);
 
     match cmd.as_str() {
         "info" => {
@@ -165,11 +174,24 @@ fn main() -> Result<()> {
                                    ..AwpHyper::default() };
             let compressor = make_compressor(method, hyper,
                                              Some((&runtime.handle(), &manifest)))?;
-            let out = compress_model(&ck, &grams, compressor.as_ref(), &spec, true)?;
+            let exec = ctx.executor();
+            let out = compress_model_with(&ck, &grams, compressor.as_ref(), &spec,
+                                          true, &exec)?;
             let dense = ctx.dense_ppl(&model)?;
             let ppl = ctx.ppl(&model, &out.checkpoint)?;
-            println!("{} {:?}: ppl {dense:.3} → {ppl:.3}  ({:.1}s, {} layers)",
-                     method.label(), spec.mode, out.seconds, out.reports.len());
+            println!("{} {:?}: ppl {dense:.3} → {ppl:.3}  ({:.1}s, {} layers, \
+                      {} workers × {} threads)",
+                     method.label(), spec.mode, out.seconds, out.reports.len(),
+                     exec.workers(), exec.inner_threads());
+            if args.get("timings").is_some() {
+                let rows: Vec<(String, f64)> = out
+                    .job_stats
+                    .iter()
+                    .map(|s| (s.label.clone(), s.seconds))
+                    .collect();
+                println!("{}", awp::report::timing_table("layer-job timings", &rows)
+                                   .to_console());
+            }
             if let Some(path) = args.get("save") {
                 out.checkpoint.save(path)?;
                 println!("saved compressed checkpoint to {path}");
@@ -238,7 +260,8 @@ fn main() -> Result<()> {
             let spec = CompressionSpec::joint(0.5, 4, manifest.awp_group);
             let compressor = make_compressor(Method::AwpHlo, hyper,
                                              Some((&runtime.handle(), &manifest)))?;
-            let out = compress_model(&ck, &grams, compressor.as_ref(), &spec, true)?;
+            let out = compress_model_with(&ck, &grams, compressor.as_ref(), &spec,
+                                          true, &ctx.executor())?;
             let ppl = ctx.ppl(&model, &out.checkpoint)?;
             println!("[e2e] AWP joint 50% + INT4 (HLO backend): ppl = {ppl:.3} \
                       ({:.1}s over {} layers)", out.seconds, out.reports.len());

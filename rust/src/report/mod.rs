@@ -120,6 +120,21 @@ impl Table {
     }
 }
 
+/// Per-job wall-clock telemetry from an executor run (`repro compress
+/// --timings`): one row per layer job with its seconds and share of the
+/// summed job time (> 100%·wall-clock total means the pool overlapped work).
+pub fn timing_table(title: impl Into<String>, jobs: &[(String, f64)]) -> Table {
+    let total: f64 = jobs.iter().map(|(_, s)| *s).sum();
+    let mut t = Table::new(title, "job",
+                           vec!["seconds".into(), "share %".into()]);
+    for (label, secs) in jobs {
+        let share = if total > 0.0 { 100.0 * secs / total } else { 0.0 };
+        t.push_row(label.clone(), vec![Some(*secs), Some(share)]);
+    }
+    t.push_row("TOTAL", vec![Some(total), Some(100.0)]);
+    t
+}
+
 /// A simple (x, y) series (Figure 1).
 pub fn series_csv(header: (&str, &str), points: &[(f64, f64)]) -> String {
     let mut out = format!("{},{}\n", header.0, header.1);
@@ -157,6 +172,19 @@ mod tests {
         assert!(md.contains("| wanda | 6.48 | 1e4 |"));
         let csv = t.to_csv();
         assert!(csv.contains("wanda,6.48,14000"));
+    }
+
+    #[test]
+    fn timing_table_shares_sum() {
+        let t = timing_table("T", &[("a".into(), 3.0), ("b".into(), 1.0)]);
+        assert_eq!(t.rows.len(), 3); // two jobs + TOTAL
+        assert_eq!(t.rows[0].1[1], Some(75.0));
+        assert_eq!(t.rows[1].1[1], Some(25.0));
+        assert_eq!(t.rows[2].1[0], Some(4.0));
+        // no jobs ⇒ no division by zero
+        let empty = timing_table("E", &[]);
+        assert_eq!(empty.rows.len(), 1);
+        assert_eq!(empty.rows[0].1[0], Some(0.0));
     }
 
     #[test]

@@ -7,12 +7,20 @@
 //! essentially no parallelism while keeping ownership trivially correct.
 //! Compilation is cached per program name; HLO text parses + compiles once
 //! per process and is then a hash-map lookup.
+//!
+//! The `xla` dependency is feature-gated (`pjrt`): without it the actor is
+//! a stub that answers every `execute` with a clear error, so the CPU-only
+//! pipeline (awp-cpu + every baseline) builds and runs on machines without
+//! the native XLA toolchain.
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc;
 
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::bail;
+use anyhow::{anyhow, Context, Result};
 
 use super::tensor_host::HostTensor;
 
@@ -99,6 +107,31 @@ impl RuntimeHandle {
 // ---------------------------------------------------------------------------
 // actor internals (xla types never leave this thread)
 
+/// Stub actor, compiled when the crate is built without the `pjrt`
+/// feature (no native XLA toolchain): every program execution fails with
+/// a clear error, stats stay at zero. The CPU-backend pipeline (awp-cpu
+/// and all baselines) never submits work here.
+#[cfg(not(feature = "pjrt"))]
+fn actor_main(rx: mpsc::Receiver<Msg>) {
+    let stats = RuntimeStats::default();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Exec { name, reply, .. } => {
+                let _ = reply.send(Err(anyhow!(
+                    "program '{name}': PJRT runtime unavailable (crate built \
+                     without the `pjrt` feature); CPU-backend methods do not \
+                     need it"
+                )));
+            }
+            Msg::Stats { reply } => {
+                let _ = reply.send(stats.clone());
+            }
+            Msg::Shutdown => break,
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
 fn actor_main(rx: mpsc::Receiver<Msg>) {
     let mut state: Option<ActorState> = None;
     let mut stats = RuntimeStats::default();
@@ -124,11 +157,13 @@ fn actor_main(rx: mpsc::Receiver<Msg>) {
     }
 }
 
+#[cfg(feature = "pjrt")]
 struct ActorState {
     client: xla::PjRtClient,
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "pjrt")]
 impl ActorState {
     fn execute(&mut self, name: &str, path: &PathBuf, args: Vec<HostTensor>,
                stats: &mut RuntimeStats) -> Result<Vec<HostTensor>> {
@@ -177,6 +212,7 @@ impl ActorState {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn to_buffer(client: &xla::PjRtClient, t: &HostTensor) -> Result<xla::PjRtBuffer> {
     match t {
         HostTensor::F32 { shape, data } => client
@@ -188,6 +224,7 @@ fn to_buffer(client: &xla::PjRtClient, t: &HostTensor) -> Result<xla::PjRtBuffer
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn from_literal(l: &xla::Literal) -> Result<HostTensor> {
     let shape = l
         .array_shape()

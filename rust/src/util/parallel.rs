@@ -2,14 +2,59 @@
 //! parallel-for and a work-stealing-ish chunked map built on `std::thread`.
 //!
 //! Used by the tensor GEMM row-panels and the coordinator's layer-job
-//! worker pool. Thread count defaults to the machine's parallelism and can
-//! be pinned via `AWP_THREADS` (useful for the perf-pass scaling study).
+//! worker pool (`coordinator::executor`). Thread count defaults to the
+//! machine's parallelism and can be pinned via `AWP_THREADS` (useful for
+//! the perf-pass scaling study).
+//!
+//! ## Thread budgets (outer × inner ≤ `AWP_THREADS`)
+//!
+//! Two levels of parallelism coexist: the executor's *outer* layer-job
+//! workers and the *inner* GEMM row-panel threads each job spawns through
+//! [`par_map`]/[`par_chunks_mut`]. To keep the product bounded by the
+//! machine budget instead of oversubscribing cores, a worker thread runs
+//! its job inside [`with_thread_budget`]`(inner, ..)`; every parallel
+//! primitive consults the calling thread's budget (via [`num_threads`])
+//! before falling back to `AWP_THREADS` / available parallelism. Budgets
+//! nest: an executor created inside a budgeted scope sizes itself from the
+//! scope's budget, so job-level parallelism composes with the GEMM
+//! parallelism in `tensor::ops` automatically.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-/// Number of worker threads to use.
+thread_local! {
+    /// Per-thread cap on how many threads parallel primitives may use.
+    /// `None` ⇒ fall back to `AWP_THREADS` / available parallelism.
+    static THREAD_BUDGET: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// The calling thread's inner-parallelism budget, if one is in force.
+pub fn current_thread_budget() -> Option<usize> {
+    THREAD_BUDGET.with(|b| b.get())
+}
+
+/// Run `f` with this thread's parallelism budget capped at `n` (≥ 1).
+/// Restores the previous budget afterwards (also on panic), so budgeted
+/// scopes nest.
+pub fn with_thread_budget<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<usize>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            THREAD_BUDGET.with(|b| b.set(self.0));
+        }
+    }
+    let prev = THREAD_BUDGET.with(|b| b.replace(Some(n.max(1))));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// Number of worker threads to use: the calling thread's budget if one is
+/// set, else `AWP_THREADS`, else the machine's available parallelism.
 pub fn num_threads() -> usize {
+    if let Some(n) = current_thread_budget() {
+        return n.max(1);
+    }
     if let Ok(v) = std::env::var("AWP_THREADS") {
         if let Ok(n) = v.parse::<usize>() {
             return n.max(1);
@@ -20,29 +65,42 @@ pub fn num_threads() -> usize {
 
 /// Parallel map over `0..n` with dynamic (atomic-counter) scheduling.
 /// `f(i)` must be independent per index. Results come back in index order.
+///
+/// Scheduling granularity is a contiguous *chunk* of indices; each worker
+/// writes a finished chunk back with one lock acquisition (no per-element
+/// locking — the results are reassembled in chunk order at the end).
 pub fn par_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
     let threads = num_threads().min(n.max(1));
     if threads <= 1 || n <= 1 {
         return (0..n).map(f).collect();
     }
+    // ~4 chunks per worker keeps the tail balanced without lock churn
+    let chunk = n.div_ceil(threads * 4).max(1);
+    let n_chunks = n.div_ceil(chunk);
     let counter = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let done: Mutex<Vec<(usize, Vec<T>)>> = Mutex::new(Vec::with_capacity(n_chunks));
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
-                let i = counter.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
+                let ci = counter.fetch_add(1, Ordering::Relaxed);
+                if ci >= n_chunks {
                     break;
                 }
-                let v = f(i);
-                *slots[i].lock().unwrap() = Some(v);
+                let lo = ci * chunk;
+                let hi = (lo + chunk).min(n);
+                let vals: Vec<T> = (lo..hi).map(&f).collect();
+                done.lock().unwrap().push((ci, vals));
             });
         }
     });
-    slots
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker died before filling slot"))
-        .collect()
+    let mut parts = done.into_inner().unwrap();
+    debug_assert_eq!(parts.len(), n_chunks, "worker died before finishing");
+    parts.sort_unstable_by_key(|(ci, _)| *ci);
+    let mut out = Vec::with_capacity(n);
+    for (_, mut vals) in parts {
+        out.append(&mut vals);
+    }
+    out
 }
 
 /// Parallel for-each over mutable, disjoint chunks of a slice (static
@@ -99,6 +157,18 @@ mod tests {
     }
 
     #[test]
+    fn par_map_non_divisible_lengths() {
+        // exercise chunk-boundary reassembly across awkward sizes
+        for n in [2usize, 3, 7, 31, 97, 101, 1000] {
+            let out = par_map(n, |i| 3 * i + 1);
+            assert_eq!(out.len(), n);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, 3 * i + 1, "n={n}");
+            }
+        }
+    }
+
+    #[test]
     fn par_chunks_mut_covers_all() {
         let mut data = vec![0u32; 97]; // non-divisible length
         par_chunks_mut(&mut data, 10, |i, c| {
@@ -115,5 +185,44 @@ mod tests {
     fn num_threads_env_override() {
         // can't set env safely in parallel tests; just check default sanity
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn budget_caps_num_threads_and_restores() {
+        assert_eq!(current_thread_budget(), None);
+        let inside = with_thread_budget(2, || {
+            assert_eq!(current_thread_budget(), Some(2));
+            // nesting: inner budget wins, outer restored after
+            with_thread_budget(1, || assert_eq!(num_threads(), 1));
+            assert_eq!(current_thread_budget(), Some(2));
+            num_threads()
+        });
+        assert_eq!(inside, 2);
+        assert_eq!(current_thread_budget(), None);
+    }
+
+    #[test]
+    fn budget_is_per_thread() {
+        with_thread_budget(1, || {
+            // a freshly spawned thread does not inherit the budget
+            let child = std::thread::spawn(current_thread_budget);
+            assert_eq!(child.join().unwrap(), None);
+            assert_eq!(current_thread_budget(), Some(1));
+        });
+    }
+
+    #[test]
+    fn budget_zero_clamps_to_one() {
+        with_thread_budget(0, || {
+            assert_eq!(num_threads(), 1);
+        });
+    }
+
+    #[test]
+    fn par_map_respects_budget_of_one() {
+        // budget 1 ⇒ sequential fast path; results identical either way
+        let seq = with_thread_budget(1, || par_map(50, |i| i * 2));
+        let par = par_map(50, |i| i * 2);
+        assert_eq!(seq, par);
     }
 }

@@ -1,0 +1,64 @@
+//! The `AWP_THREADS` env knob: pipeline outputs must be bit-identical at
+//! `AWP_THREADS=1` and `AWP_THREADS=4` through the ambient (env-sized)
+//! executor.
+//!
+//! This is deliberately the *only* test in this binary: integration-test
+//! files compile to separate processes, and `std::env::set_var` is only
+//! safe when no other thread in the process reads the environment
+//! concurrently (glibc `setenv` vs `getenv` races are UB). Within this
+//! single test the mutations happen strictly between pipeline runs, while
+//! all worker threads are joined.
+
+use std::collections::HashMap;
+
+use awp::compress::traits::CompressionSpec;
+use awp::compress::AwpCpu;
+use awp::coordinator::calibrate::Grams;
+use awp::coordinator::compress_model;
+use awp::model::{Checkpoint, GramKey, ModelConfig};
+use awp::tensor::Matrix;
+
+fn setup() -> (Checkpoint, Grams) {
+    let cfg = ModelConfig {
+        name: "t".into(), vocab: 64, d_model: 32, n_heads: 2, n_layers: 2,
+        d_ff: 64, seq_len: 16, batch: 1, decode_len: 8, rope_theta: 1e4,
+    };
+    let ck = awp::trainer::init_checkpoint(&cfg, 11);
+    let mut map = HashMap::new();
+    for l in 0..cfg.n_layers {
+        for key in [GramKey::AttnIn, GramKey::AttnOutIn, GramKey::MlpIn] {
+            map.insert((key, l),
+                       Matrix::randn_gram(cfg.d_model, 5 * l as u64 + key.index() as u64));
+        }
+        map.insert((GramKey::MlpDownIn, l), Matrix::randn_gram(cfg.d_ff, 55 + l as u64));
+    }
+    (ck, Grams { map, tokens: 2048 })
+}
+
+#[test]
+fn awp_threads_env_matches_across_settings() {
+    let (ck, grams) = setup();
+    let spec = CompressionSpec::prune(0.5);
+    let compressor = AwpCpu::default();
+    std::env::set_var("AWP_THREADS", "1");
+    let one = compress_model(&ck, &grams, &compressor, &spec, true).unwrap();
+    std::env::set_var("AWP_THREADS", "4");
+    let four = compress_model(&ck, &grams, &compressor, &spec, true).unwrap();
+    std::env::remove_var("AWP_THREADS");
+
+    assert_eq!(one.checkpoint.tensors.len(), four.checkpoint.tensors.len());
+    for ((n1, s1, d1), (n2, s2, d2)) in
+        one.checkpoint.tensors.iter().zip(&four.checkpoint.tensors) {
+        assert_eq!(n1, n2);
+        assert_eq!(s1, s2, "{n1}");
+        for (i, (x, y)) in d1.iter().zip(d2.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{n1}[{i}]: {x} vs {y}");
+        }
+    }
+    assert_eq!(one.checkpoint.meta, four.checkpoint.meta);
+    for (r1, r2) in one.reports.iter().zip(&four.reports) {
+        assert_eq!(r1.param, r2.param);
+        assert_eq!(r1.rel_loss.to_bits(), r2.rel_loss.to_bits(), "{}", r1.param);
+        assert_eq!(r1.sparsity.to_bits(), r2.sparsity.to_bits(), "{}", r1.param);
+    }
+}

@@ -1,0 +1,123 @@
+//! The parallel pipeline's contract with the sequential one: running the
+//! layer jobs on the executor's worker pool must change *nothing* about
+//! the output — checkpoint bytes, report vector and its order are
+//! identical at any worker count — and a mid-plan failure must still name
+//! the failing site.
+//!
+//! (The `AWP_THREADS` env-knob variant of the bit-identity check lives in
+//! its own binary, `awp_threads_env.rs`, because mutating the environment
+//! is only safe in a process whose other threads don't read it.)
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+use awp::compress::traits::{CompressedLayer, CompressionSpec, LayerCompressor};
+use awp::compress::AwpCpu;
+use awp::coordinator::calibrate::Grams;
+use awp::coordinator::{compress_model_with, plan_jobs, Executor};
+use awp::model::{Checkpoint, GramKey, ModelConfig};
+use awp::tensor::Matrix;
+
+fn cfg() -> ModelConfig {
+    // d_model/d_ff are multiples of the quant group (32) so the joint-spec
+    // verify pass can re-project every site
+    ModelConfig {
+        name: "t".into(), vocab: 64, d_model: 32, n_heads: 2, n_layers: 2,
+        d_ff: 64, seq_len: 16, batch: 1, decode_len: 8, rope_theta: 1e4,
+    }
+}
+
+fn setup() -> (Checkpoint, Grams) {
+    let cfg = cfg();
+    let ck = awp::trainer::init_checkpoint(&cfg, 11);
+    let mut map = HashMap::new();
+    for l in 0..cfg.n_layers {
+        for key in [GramKey::AttnIn, GramKey::AttnOutIn, GramKey::MlpIn] {
+            map.insert((key, l),
+                       Matrix::randn_gram(cfg.d_model, 5 * l as u64 + key.index() as u64));
+        }
+        map.insert((GramKey::MlpDownIn, l), Matrix::randn_gram(cfg.d_ff, 55 + l as u64));
+    }
+    (ck, Grams { map, tokens: 2048 })
+}
+
+fn assert_checkpoints_bitwise_equal(a: &Checkpoint, b: &Checkpoint, tag: &str) {
+    assert_eq!(a.tensors.len(), b.tensors.len(), "{tag}");
+    for ((n1, s1, d1), (n2, s2, d2)) in a.tensors.iter().zip(&b.tensors) {
+        assert_eq!(n1, n2, "{tag}");
+        assert_eq!(s1, s2, "{tag}: {n1}");
+        assert_eq!(d1.len(), d2.len(), "{tag}: {n1}");
+        for (i, (x, y)) in d1.iter().zip(d2.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}: {n1}[{i}]: {x} vs {y}");
+        }
+    }
+    assert_eq!(a.meta, b.meta, "{tag}");
+}
+
+fn assert_runs_identical(compressor: &dyn LayerCompressor, spec: &CompressionSpec,
+                         tag: &str) {
+    let (ck, grams) = setup();
+    let seq = compress_model_with(&ck, &grams, compressor, spec, true,
+                                  &Executor::with_workers(1))
+        .unwrap();
+    let par = compress_model_with(&ck, &grams, compressor, spec, true,
+                                  &Executor::with_workers(4))
+        .unwrap();
+    assert_checkpoints_bitwise_equal(&seq.checkpoint, &par.checkpoint, tag);
+    // report vector: same order, same values (seconds is wall-clock, skip)
+    assert_eq!(seq.reports.len(), par.reports.len(), "{tag}");
+    for (r1, r2) in seq.reports.iter().zip(&par.reports) {
+        assert_eq!(r1.param, r2.param, "{tag}");
+        assert_eq!(r1.rel_loss.to_bits(), r2.rel_loss.to_bits(), "{tag}: {}", r1.param);
+        assert_eq!(r1.sparsity.to_bits(), r2.sparsity.to_bits(), "{tag}: {}", r1.param);
+        assert_eq!(r1.iterations, r2.iterations, "{tag}: {}", r1.param);
+    }
+    // telemetry is labelled in plan order on both paths
+    let plan = plan_jobs(&ck.config);
+    for (job, (s1, s2)) in plan.jobs.iter()
+        .zip(seq.job_stats.iter().zip(&par.job_stats)) {
+        assert_eq!(s1.label, job.site.param, "{tag}");
+        assert_eq!(s2.label, job.site.param, "{tag}");
+    }
+}
+
+#[test]
+fn parallel_pipeline_is_bit_identical_to_sequential() {
+    // iterative PGD method — the realistic workload
+    assert_runs_identical(&AwpCpu::default(), &CompressionSpec::prune(0.6), "awp");
+    // one-shot joint spec exercises the verify path's spec rewrite too
+    assert_runs_identical(&AwpCpu::default(), &CompressionSpec::joint(0.5, 4, 32),
+                          "awp-joint");
+}
+
+/// Fails on every `w_down` site (the only sites with `d_in == d_ff`).
+struct FailOnMlpDown;
+
+impl LayerCompressor for FailOnMlpDown {
+    fn name(&self) -> &'static str {
+        "fail-on-mlp-down"
+    }
+
+    fn compress(&self, w: &Matrix, c: &Matrix, spec: &CompressionSpec)
+        -> Result<CompressedLayer> {
+        if w.cols == cfg().d_ff {
+            anyhow::bail!("synthetic mid-plan failure");
+        }
+        awp::compress::magnitude::MagnitudePrune.compress(w, c, spec)
+    }
+}
+
+#[test]
+fn mid_plan_failure_surfaces_the_site_param() {
+    let (ck, grams) = setup();
+    let spec = CompressionSpec::prune(0.5);
+    for workers in [1usize, 4] {
+        let err = compress_model_with(&ck, &grams, &FailOnMlpDown, &spec, false,
+                                      &Executor::with_workers(workers))
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("w_down"), "workers={workers}: {msg}");
+        assert!(msg.contains("synthetic mid-plan failure"),
+                "workers={workers}: {msg}");
+    }
+}
