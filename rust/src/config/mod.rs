@@ -19,6 +19,9 @@ pub struct Paths {
     pub artifacts: PathBuf,
     pub checkpoints: PathBuf,
     pub reports: PathBuf,
+    /// calibration-artifact cache (`coordinator::cache`); `--cache-dir`
+    /// overrides, `--no-cache` disables persistence
+    pub gram_cache: PathBuf,
 }
 
 impl Default for Paths {
@@ -27,6 +30,7 @@ impl Default for Paths {
             artifacts: "artifacts".into(),
             checkpoints: "checkpoints".into(),
             reports: "reports".into(),
+            gram_cache: "cache/grams".into(),
         }
     }
 }
@@ -77,6 +81,14 @@ impl Default for RunConfig {
 }
 
 impl RunConfig {
+    /// Seed for drawing the fixed calibration sample — a stream distinct
+    /// from training/eval. Defined once here because it is ALSO part of
+    /// the gram-cache key (`coordinator::cache::CalibSpec`): the key and
+    /// the sampling must never diverge.
+    pub fn calib_seed(&self) -> u64 {
+        self.seed ^ 0xCA11B
+    }
+
     pub fn train_config(&self, model: &str) -> TrainConfig {
         let steps = match model {
             "tiny" => self.train_steps_tiny,
@@ -104,6 +116,7 @@ impl RunConfig {
                 "artifacts" => self.paths.artifacts = val.as_str()?.into(),
                 "checkpoints" => self.paths.checkpoints = val.as_str()?.into(),
                 "reports" => self.paths.reports = val.as_str()?.into(),
+                "gram_cache" => self.paths.gram_cache = val.as_str()?.into(),
                 "corpus_bytes" => self.corpus.total_bytes = val.as_usize()?,
                 "corpus_seed" => self.corpus.seed = val.as_usize()? as u64,
                 "vocab_words" => self.corpus.vocab_words = val.as_usize()?,
@@ -139,11 +152,13 @@ mod tests {
     fn overrides_apply_and_reject_unknown() {
         let dir = crate::util::tempdir::TempDir::new("cfg").unwrap();
         let p = dir.path().join("c.json");
-        std::fs::write(&p, r#"{"train_steps_small": 42, "lr_max": 0.001}"#).unwrap();
+        std::fs::write(&p, r#"{"train_steps_small": 42, "lr_max": 0.001,
+                               "gram_cache": "elsewhere/grams"}"#).unwrap();
         let mut c = RunConfig::default();
         c.load_overrides(&p).unwrap();
         assert_eq!(c.train_steps_small, 42);
         assert_eq!(c.lr_max, 0.001);
+        assert_eq!(c.paths.gram_cache, PathBuf::from("elsewhere/grams"));
         std::fs::write(&p, r#"{"nope": 1}"#).unwrap();
         assert!(c.load_overrides(&p).is_err());
     }

@@ -1,0 +1,606 @@
+//! Calibration-artifact cache — persist and share activation Grams.
+//!
+//! The calibration protocol is deterministic (fixed corpus, fixed seed,
+//! fixed batch config), so a model's Grams are a pure function of
+//! `(checkpoint, calibration config)`. Recomputing them on every run
+//! re-executes `calib_capture` over the whole calibration set through the
+//! PJRT actor — the single most serialising step of a sweep. This module
+//! removes that waste with two layers:
+//!
+//! * **memory** — an `Arc`-shared, per-key once-cell map: concurrent
+//!   experiment cells (and cross-model sweep jobs) asking for the same
+//!   model's Grams block only on that key's slot, never on each other, and
+//!   the Grams are computed exactly once per process;
+//! * **disk** — an `AWPGRAM1` container under `--cache-dir`, keyed by a
+//!   content hash of (model id, checkpoint fingerprint, calibration
+//!   config); a warm run loads Grams without a single `calib_capture`
+//!   execution. Corrupt or stale files are discarded and recomputed.
+//!
+//! ### Key schema
+//!
+//! ```text
+//! key = fnv64(model, checkpoint.fingerprint(), CalibSpec.fingerprint())
+//!   CalibSpec = corpus {bytes, seed, vocab_words, zipf_s, branching,
+//!               markov_strength} + calib {batches, seed} + model {batch,
+//!               seq} + provider ("calib_capture" | "synthetic")
+//! file  = <model>-<key:016x>.grams
+//!   magic "AWPGRAM1" | u64 header_len | header JSON | f32 LE gram data
+//!   header: {version, model, checkpoint, calib, tokens,
+//!            entries: [{gram, layer, dim, offset}, ...]}
+//! ```
+//!
+//! Within a file, entries are indexed by `(GramKey, layer)` — the same
+//! granularity `Grams::get` serves the pipeline at. Loads re-validate the
+//! identity fields against the requested key, so an FNV collision (or a
+//! hand-copied file) degrades to a recompute, never to wrong Grams.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use super::calibrate::Grams;
+use crate::config::RunConfig;
+use crate::model::{GramKey, ModelConfig};
+use crate::tensor::Matrix;
+use crate::util::{Fnv64, Json};
+
+const MAGIC: &[u8; 8] = b"AWPGRAM1";
+const VERSION: usize = 1;
+
+// ---------------------------------------------------------------------------
+// key schema
+
+/// Everything the calibration pass depends on besides the checkpoint.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CalibSpec {
+    pub corpus_bytes: usize,
+    pub corpus_seed: u64,
+    pub vocab_words: usize,
+    pub zipf_s: f64,
+    pub branching: usize,
+    pub markov_strength: f64,
+    pub calib_batches: usize,
+    pub calib_seed: u64,
+    pub batch: usize,
+    pub seq: usize,
+    /// which provider produced the Grams (`calib_capture` vs `synthetic`)
+    /// — keeps runtime-free synthetic Grams from ever colliding with real
+    /// calibration artifacts in a shared cache dir
+    pub provider: String,
+}
+
+impl CalibSpec {
+    /// The calibration configuration of a run, for `model`'s batch shape.
+    pub fn from_run(cfg: &RunConfig, mc: &ModelConfig, provider: &str) -> CalibSpec {
+        CalibSpec {
+            corpus_bytes: cfg.corpus.total_bytes,
+            corpus_seed: cfg.corpus.seed,
+            vocab_words: cfg.corpus.vocab_words,
+            zipf_s: cfg.corpus.zipf_s,
+            branching: cfg.corpus.branching,
+            markov_strength: cfg.corpus.markov_strength,
+            calib_batches: cfg.calib_batches,
+            calib_seed: cfg.calib_seed(),
+            batch: mc.batch,
+            seq: mc.seq_len,
+            provider: provider.to_string(),
+        }
+    }
+
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_usize(self.corpus_bytes);
+        h.write_u64(self.corpus_seed);
+        h.write_usize(self.vocab_words);
+        h.write_f64(self.zipf_s);
+        h.write_usize(self.branching);
+        h.write_f64(self.markov_strength);
+        h.write_usize(self.calib_batches);
+        h.write_u64(self.calib_seed);
+        h.write_usize(self.batch);
+        h.write_usize(self.seq);
+        h.write_str(&self.provider);
+        h.finish()
+    }
+}
+
+/// Full identity of one model's calibration Grams.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct GramCacheKey {
+    pub model: String,
+    /// [`crate::model::Checkpoint::fingerprint`]
+    pub checkpoint: u64,
+    /// [`CalibSpec::fingerprint`]
+    pub calib: u64,
+}
+
+impl GramCacheKey {
+    pub fn hash(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_str(&self.model);
+        h.write_u64(self.checkpoint);
+        h.write_u64(self.calib);
+        h.finish()
+    }
+
+    /// Cache file name: `<model>-<hash:016x>.grams`.
+    pub fn file_name(&self) -> String {
+        let safe: String = self
+            .model
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+            .collect();
+        format!("{safe}-{:016x}.grams", self.hash())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// disk codec
+
+/// Serialise `grams` under `key` into `dir` (created if absent). Writes to
+/// a unique temp file first and renames, so concurrent processes warming
+/// the same cache never observe a half-written artifact.
+pub fn store_grams(dir: &Path, key: &GramCacheKey, grams: &Grams) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating cache dir {dir:?}"))?;
+    let path = dir.join(key.file_name());
+
+    // deterministic entry order: (gram index, layer)
+    let mut keys: Vec<(GramKey, usize)> = grams.map.keys().copied().collect();
+    keys.sort_by_key(|(g, l)| (g.index(), *l));
+
+    let mut entries = Vec::with_capacity(keys.len());
+    let mut offset = 0usize;
+    for (g, l) in &keys {
+        let m = &grams.map[&(*g, *l)];
+        if m.rows != m.cols {
+            bail!("gram {:?}[{l}] is not square: {}x{}", g, m.rows, m.cols);
+        }
+        entries.push(Json::obj(vec![
+            ("gram", Json::Num(g.index() as f64)),
+            ("layer", Json::Num(*l as f64)),
+            ("dim", Json::Num(m.rows as f64)),
+            ("offset", Json::Num(offset as f64)),
+        ]));
+        offset += m.data.len();
+    }
+    let header = Json::obj(vec![
+        ("version", Json::Num(VERSION as f64)),
+        ("model", Json::Str(key.model.clone())),
+        ("checkpoint", Json::Str(format!("{:016x}", key.checkpoint))),
+        ("calib", Json::Str(format!("{:016x}", key.calib))),
+        ("tokens", Json::Num(grams.tokens as f64)),
+        ("entries", Json::Arr(entries)),
+    ]);
+    let hjson = header.to_string().into_bytes();
+
+    let tmp = dir.join(format!("{}.tmp.{}", key.file_name(), std::process::id()));
+    {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&(hjson.len() as u64).to_le_bytes())?;
+        f.write_all(&hjson)?;
+        for (g, l) in &keys {
+            let data = &grams.map[&(*g, *l)].data;
+            let mut buf = Vec::with_capacity(data.len() * 4);
+            for v in data {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            f.write_all(&buf)?;
+        }
+    }
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("installing cache file {path:?}"))?;
+    Ok(path)
+}
+
+/// Load the Grams for `key` from `dir`. `Ok(None)` when no file exists;
+/// `Err` when the file exists but is corrupt, truncated, or belongs to a
+/// different identity (hash collision / stale copy) — callers treat both
+/// as a miss, but the `Err` is logged so disk rot is visible.
+pub fn load_grams(dir: &Path, key: &GramCacheKey) -> Result<Option<Grams>> {
+    let path = dir.join(key.file_name());
+    let mut f = match std::fs::File::open(&path) {
+        Ok(f) => std::io::BufReader::new(f),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e).with_context(|| format!("open {path:?}")),
+    };
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic).context("reading magic")?;
+    if &magic != MAGIC {
+        bail!("{path:?}: not an AWP gram cache file (bad magic)");
+    }
+    let mut lenb = [0u8; 8];
+    f.read_exact(&mut lenb).context("reading header length")?;
+    let hlen = u64::from_le_bytes(lenb) as usize;
+    if hlen > 64 << 20 {
+        bail!("{path:?}: implausible header length {hlen}");
+    }
+    let mut hjson = vec![0u8; hlen];
+    f.read_exact(&mut hjson).context("reading header")?;
+    let header = Json::parse(std::str::from_utf8(&hjson)?)?;
+    if header.expect("version")?.as_usize()? != VERSION {
+        bail!("{path:?}: unsupported cache version");
+    }
+    // identity check: never serve Grams across models/checkpoints/configs
+    let model = header.expect("model")?.as_str()?;
+    let ck = header.expect("checkpoint")?.as_str()?;
+    let calib = header.expect("calib")?.as_str()?;
+    if model != key.model
+        || ck != format!("{:016x}", key.checkpoint)
+        || calib != format!("{:016x}", key.calib)
+    {
+        bail!("{path:?}: cache identity mismatch (stale file or hash collision)");
+    }
+    let tokens = header.expect("tokens")?.as_usize()?;
+    let mut rest = Vec::new();
+    f.read_to_end(&mut rest)?;
+    let mut map = HashMap::new();
+    for e in header.expect("entries")?.as_arr()? {
+        let gi = e.expect("gram")?.as_usize()?;
+        let gram = GramKey::from_index(gi)
+            .with_context(|| format!("{path:?}: bad gram index {gi}"))?;
+        let layer = e.expect("layer")?.as_usize()?;
+        let dim = e.expect("dim")?.as_usize()?;
+        let offset = e.expect("offset")?.as_usize()?;
+        // header fields are untrusted: checked arithmetic so a corrupt file
+        // degrades to the Err-and-recompute path, never a panic or a
+        // wrapped-past-the-bounds-check read
+        if dim == 0 || dim > 1 << 20 {
+            bail!("{path:?}: implausible gram dim {dim}");
+        }
+        let len = dim
+            .checked_mul(dim)
+            .with_context(|| format!("{path:?}: dim overflow"))?;
+        let (start, end) = offset
+            .checked_mul(4)
+            .and_then(|s| len.checked_mul(4).and_then(|l| s.checked_add(l))
+                             .map(|e| (s, e)))
+            .with_context(|| format!("{path:?}: offset overflow"))?;
+        if end > rest.len() {
+            bail!("{path:?}: truncated ({:?}[{layer}] needs {end} bytes)", gram);
+        }
+        let data: Vec<f32> = rest[start..end]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        if map.insert((gram, layer), Matrix::from_vec(dim, dim, data)).is_some() {
+            bail!("{path:?}: duplicate entry {:?}[{layer}]", gram);
+        }
+    }
+    Ok(Some(Grams { map, tokens }))
+}
+
+// ---------------------------------------------------------------------------
+// keyed once-cells (the Arc-shared memory layer)
+
+/// A concurrent per-key once-map: `get_or_try_init` runs the initialiser
+/// exactly once per key; callers racing on the *same* key block on that
+/// key's slot only, callers on different keys proceed independently. A
+/// failed initialisation leaves the slot empty, so the next caller retries.
+pub struct KeyedOnce<K, V> {
+    slots: Mutex<HashMap<K, Arc<Mutex<Option<V>>>>>,
+}
+
+impl<K: Eq + std::hash::Hash + Clone, V: Clone> KeyedOnce<K, V> {
+    pub fn new() -> Self {
+        KeyedOnce { slots: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn get_or_try_init(&self, key: &K, init: impl FnOnce() -> Result<V>)
+        -> Result<V> {
+        let slot = {
+            let mut slots = self.slots.lock().unwrap();
+            slots
+                .entry(key.clone())
+                .or_insert_with(|| Arc::new(Mutex::new(None)))
+                .clone()
+        };
+        let mut guard = slot.lock().unwrap();
+        if let Some(v) = guard.as_ref() {
+            return Ok(v.clone());
+        }
+        let v = init()?;
+        *guard = Some(v.clone());
+        Ok(v)
+    }
+
+    /// The cached value, if already initialised (never runs an initialiser).
+    pub fn get(&self, key: &K) -> Option<V> {
+        let slot = self.slots.lock().unwrap().get(key).cloned()?;
+        let guard = slot.lock().unwrap();
+        guard.clone()
+    }
+}
+
+impl<K: Eq + std::hash::Hash + Clone, V: Clone> Default for KeyedOnce<K, V> {
+    fn default() -> Self {
+        KeyedOnce::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the cache proper
+
+/// Hit/miss counters (snapshot of [`GramCache::counts`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheCounts {
+    pub mem_hits: u64,
+    pub disk_hits: u64,
+    pub misses: u64,
+}
+
+/// Two-layer calibration-Gram cache: Arc-shared memory in front of an
+/// optional on-disk store. Safe to share across threads (the experiment
+/// executor's workers all hold the same `Arc<GramCache>`). The memory
+/// layer is a [`KeyedOnce`] keyed by the *full* [`GramCacheKey`] (not its
+/// 64-bit hash), so an FNV collision can never serve one model's Grams
+/// for another — on disk the identity check inside [`load_grams`]
+/// provides the same guarantee.
+pub struct GramCache {
+    dir: Option<PathBuf>,
+    slots: KeyedOnce<GramCacheKey, Arc<Grams>>,
+    mem_hits: AtomicU64,
+    disk_hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl GramCache {
+    /// `dir = Some(..)` enables the disk layer (`--cache-dir`); `None`
+    /// keeps the in-process memory layer only (`--no-cache`).
+    pub fn new(dir: Option<PathBuf>) -> GramCache {
+        GramCache {
+            dir,
+            slots: KeyedOnce::new(),
+            mem_hits: AtomicU64::new(0),
+            disk_hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Memory-only cache (no persistence).
+    pub fn memory_only() -> GramCache {
+        GramCache::new(None)
+    }
+
+    pub fn dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    pub fn counts(&self) -> CacheCounts {
+        CacheCounts {
+            mem_hits: self.mem_hits.load(Ordering::Relaxed),
+            disk_hits: self.disk_hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Fetch the Grams for `key`, computing them with `compute` on a full
+    /// miss. Resolution order: memory → disk → compute (+ write-back).
+    /// Concurrent callers with the same key compute once (the
+    /// [`KeyedOnce`] slot serializes them); a failing `compute` is
+    /// propagated and retried by the next caller.
+    pub fn get_or_compute(
+        &self,
+        key: &GramCacheKey,
+        compute: impl FnOnce() -> Result<Grams>,
+    ) -> Result<Arc<Grams>> {
+        let hash = key.hash();
+        let mut initialised = false;
+        let g = self.slots.get_or_try_init(key, || {
+            initialised = true;
+            if let Some(dir) = &self.dir {
+                match load_grams(dir, key) {
+                    Ok(Some(g)) => {
+                        self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                        eprintln!("[cache] gram cache hit (disk) for '{}' \
+                                   [{hash:016x}] — skipping calibration", key.model);
+                        return Ok(Arc::new(g));
+                    }
+                    Ok(None) => {}
+                    Err(e) => {
+                        eprintln!("[cache] discarding unreadable cache file for \
+                                   '{}' [{hash:016x}]: {e:#}", key.model);
+                    }
+                }
+            }
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            eprintln!("[cache] gram cache miss for '{}' [{hash:016x}] — calibrating",
+                      key.model);
+            let g = Arc::new(compute()?);
+            if let Some(dir) = &self.dir {
+                match store_grams(dir, key, &g) {
+                    Ok(path) => eprintln!("[cache] stored Grams for '{}' at {path:?}",
+                                          key.model),
+                    Err(e) => eprintln!("[cache] failed to persist Grams for \
+                                         '{}': {e:#}", key.model),
+                }
+            }
+            Ok(g)
+        })?;
+        if !initialised {
+            self.mem_hits.fetch_add(1, Ordering::Relaxed);
+            eprintln!("[cache] gram cache hit (memory) for '{}' [{hash:016x}]",
+                      key.model);
+        }
+        Ok(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::calibrate::synthetic_grams;
+    use crate::util::tempdir::TempDir;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(), vocab: 32, d_model: 16, n_heads: 2, n_layers: 2,
+            d_ff: 32, seq_len: 8, batch: 1, decode_len: 8, rope_theta: 1e4,
+        }
+    }
+
+    fn key(ck: u64, calib: u64) -> GramCacheKey {
+        GramCacheKey { model: "t".into(), checkpoint: ck, calib }
+    }
+
+    #[test]
+    fn disk_roundtrip_is_bit_exact() {
+        let dir = TempDir::new("gramcache").unwrap();
+        let grams = synthetic_grams(&cfg(), 3);
+        let k = key(1, 2);
+        store_grams(dir.path(), &k, &grams).unwrap();
+        let back = load_grams(dir.path(), &k).unwrap().unwrap();
+        assert_eq!(back.tokens, grams.tokens);
+        assert_eq!(back.map.len(), grams.map.len());
+        for (gk, m) in &grams.map {
+            let b = &back.map[gk];
+            assert_eq!(m.shape(), b.shape());
+            for (x, y) in m.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn absent_file_is_a_clean_miss() {
+        let dir = TempDir::new("gramcache").unwrap();
+        assert!(load_grams(dir.path(), &key(1, 2)).unwrap().is_none());
+    }
+
+    #[test]
+    fn corrupt_and_mismatched_files_error() {
+        let dir = TempDir::new("gramcache").unwrap();
+        let k = key(1, 2);
+        // garbage
+        std::fs::write(dir.path().join(k.file_name()), b"garbage").unwrap();
+        assert!(load_grams(dir.path(), &k).is_err());
+        // truncated: store then chop the data region
+        let grams = synthetic_grams(&cfg(), 3);
+        let path = store_grams(dir.path(), &k, &grams).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 64]).unwrap();
+        assert!(load_grams(dir.path(), &k).is_err());
+        // identity mismatch: valid file renamed under a different key's name
+        let k2 = key(9, 2);
+        store_grams(dir.path(), &k, &grams).unwrap();
+        std::fs::rename(dir.path().join(k.file_name()),
+                        dir.path().join(k2.file_name()))
+            .unwrap();
+        assert!(load_grams(dir.path(), &k2).is_err());
+    }
+
+    #[test]
+    fn key_hash_tracks_every_component() {
+        let base = key(1, 2).hash();
+        assert_eq!(base, key(1, 2).hash());
+        assert_ne!(base, key(3, 2).hash());
+        assert_ne!(base, key(1, 3).hash());
+        let other = GramCacheKey { model: "u".into(), checkpoint: 1, calib: 2 };
+        assert_ne!(base, other.hash());
+    }
+
+    #[test]
+    fn calib_spec_fingerprint_tracks_config() {
+        let rc = RunConfig::default();
+        let mc = cfg();
+        let base = CalibSpec::from_run(&rc, &mc, "calib_capture").fingerprint();
+        assert_eq!(base, CalibSpec::from_run(&rc, &mc, "calib_capture").fingerprint());
+        let mut rc2 = RunConfig::default();
+        rc2.calib_batches += 1;
+        assert_ne!(base, CalibSpec::from_run(&rc2, &mc, "calib_capture").fingerprint());
+        let mut rc3 = RunConfig::default();
+        rc3.corpus.seed ^= 1;
+        assert_ne!(base, CalibSpec::from_run(&rc3, &mc, "calib_capture").fingerprint());
+        let mut rc4 = RunConfig::default();
+        rc4.seed ^= 1; // calibration sampling seed
+        assert_ne!(base, CalibSpec::from_run(&rc4, &mc, "calib_capture").fingerprint());
+        assert_ne!(base, CalibSpec::from_run(&rc, &mc, "synthetic").fingerprint());
+    }
+
+    #[test]
+    fn memory_layer_computes_once_under_contention() {
+        use std::sync::atomic::AtomicUsize;
+        let cache = Arc::new(GramCache::memory_only());
+        let calls = Arc::new(AtomicUsize::new(0));
+        let k = key(7, 8);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let (cache, calls, k) = (cache.clone(), calls.clone(), k.clone());
+                s.spawn(move || {
+                    cache
+                        .get_or_compute(&k, || {
+                            calls.fetch_add(1, Ordering::SeqCst);
+                            Ok(synthetic_grams(&cfg(), 3))
+                        })
+                        .unwrap();
+                });
+            }
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+        let c = cache.counts();
+        assert_eq!(c.misses, 1);
+        assert_eq!(c.mem_hits, 7);
+    }
+
+    #[test]
+    fn failed_compute_is_retried() {
+        let cache = GramCache::memory_only();
+        let k = key(7, 8);
+        assert!(cache.get_or_compute(&k, || anyhow::bail!("boom")).is_err());
+        let g = cache.get_or_compute(&k, || Ok(synthetic_grams(&cfg(), 3))).unwrap();
+        assert!(!g.map.is_empty());
+    }
+
+    #[test]
+    fn warm_disk_cache_never_invokes_the_provider() {
+        let dir = TempDir::new("gramcache").unwrap();
+        let k = key(4, 5);
+        let cold = GramCache::new(Some(dir.path().to_path_buf()));
+        cold.get_or_compute(&k, || Ok(synthetic_grams(&cfg(), 3))).unwrap();
+        // a fresh process (fresh memory layer) with the same dir: the
+        // provider must not run — this is the "warm run skips calib_capture"
+        // guarantee, with a bailing provider standing in for the runtime
+        let warm = GramCache::new(Some(dir.path().to_path_buf()));
+        let g = warm
+            .get_or_compute(&k, || anyhow::bail!("calib_capture must not run"))
+            .unwrap();
+        assert_eq!(g.map.len(), 8);
+        assert_eq!(warm.counts(), CacheCounts { mem_hits: 0, disk_hits: 1, misses: 0 });
+    }
+
+    #[test]
+    fn corrupt_file_degrades_to_recompute_and_heals() {
+        let dir = TempDir::new("gramcache").unwrap();
+        let k = key(4, 5);
+        std::fs::create_dir_all(dir.path()).unwrap();
+        std::fs::write(dir.path().join(k.file_name()), b"AWPGRAM1junk").unwrap();
+        let cache = GramCache::new(Some(dir.path().to_path_buf()));
+        let g = cache.get_or_compute(&k, || Ok(synthetic_grams(&cfg(), 3))).unwrap();
+        assert_eq!(cache.counts().misses, 1);
+        // the rewrite healed the file: a fresh cache now disk-hits
+        let healed = GramCache::new(Some(dir.path().to_path_buf()));
+        let g2 = healed
+            .get_or_compute(&k, || anyhow::bail!("should be healed"))
+            .unwrap();
+        assert_eq!(g.tokens, g2.tokens);
+    }
+
+    #[test]
+    fn keyed_once_initialises_once_per_key() {
+        let once: KeyedOnce<String, usize> = KeyedOnce::new();
+        let a = once.get_or_try_init(&"a".to_string(), || Ok(1)).unwrap();
+        let b = once.get_or_try_init(&"a".to_string(), || Ok(2)).unwrap();
+        assert_eq!((a, b), (1, 1));
+        assert_eq!(once.get(&"a".to_string()), Some(1));
+        assert_eq!(once.get(&"b".to_string()), None);
+        assert!(once.get_or_try_init(&"c".to_string(), || anyhow::bail!("x")).is_err());
+        assert_eq!(once.get_or_try_init(&"c".to_string(), || Ok(3)).unwrap(), 3);
+    }
+}

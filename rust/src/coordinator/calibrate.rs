@@ -26,8 +26,28 @@ impl Grams {
     }
 }
 
-const GRAM_ORDER: [GramKey; 4] =
-    [GramKey::AttnIn, GramKey::AttnOutIn, GramKey::MlpIn, GramKey::MlpDownIn];
+const GRAM_ORDER: [GramKey; 4] = GramKey::ALL;
+
+/// Deterministic runtime-free Grams for every site of `cfg` — the
+/// calibration provider behind `repro … --synthetic` (CI runners without
+/// AOT artifacts) and the cache/pipeline tests. Seeded per `(model name,
+/// gram kind, layer)` so distinct models/sites get distinct-but-stable
+/// activation statistics with the usual log-normal outlier structure.
+pub fn synthetic_grams(cfg: &crate::model::ModelConfig, seed: u64) -> Grams {
+    let mut map = HashMap::new();
+    let name_salt = crate::util::hash::fnv64(cfg.name.as_bytes());
+    for layer in 0..cfg.n_layers {
+        for key in GramKey::ALL {
+            let dim = match key {
+                GramKey::MlpDownIn => cfg.d_ff,
+                _ => cfg.d_model,
+            };
+            let s = seed ^ name_salt ^ (((layer as u64) << 8) | key.index() as u64);
+            map.insert((key, layer), crate::tensor::Matrix::randn_gram(dim, s));
+        }
+    }
+    Grams { map, tokens: cfg.batch * cfg.seq_len }
+}
 
 /// Run `calib_capture` over `batches` and accumulate the normalised Grams.
 pub fn calibrate(handle: &RuntimeHandle, manifest: &Manifest, model: &str,
@@ -77,6 +97,32 @@ pub fn calibrate(handle: &RuntimeHandle, manifest: &Manifest, model: &str,
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn synthetic_grams_cover_every_site_deterministically() {
+        let cfg = crate::model::ModelConfig {
+            name: "t".into(), vocab: 32, d_model: 16, n_heads: 2, n_layers: 2,
+            d_ff: 32, seq_len: 8, batch: 1, decode_len: 8, rope_theta: 1e4,
+        };
+        let a = synthetic_grams(&cfg, 7);
+        assert_eq!(a.map.len(), 4 * cfg.n_layers);
+        for site in crate::model::sites::enumerate_sites(&cfg) {
+            let c = a.get(site.gram, site.layer).unwrap();
+            assert_eq!(c.rows, site.d_in, "{}", site.param);
+        }
+        // bit-stable across calls; sensitive to seed and model name
+        let b = synthetic_grams(&cfg, 7);
+        assert_eq!(a.get(GramKey::AttnIn, 0).unwrap().data,
+                   b.get(GramKey::AttnIn, 0).unwrap().data);
+        let c = synthetic_grams(&cfg, 8);
+        assert_ne!(a.get(GramKey::AttnIn, 0).unwrap().data,
+                   c.get(GramKey::AttnIn, 0).unwrap().data);
+        let mut cfg2 = cfg.clone();
+        cfg2.name = "u".into();
+        let d = synthetic_grams(&cfg2, 7);
+        assert_ne!(a.get(GramKey::AttnIn, 0).unwrap().data,
+                   d.get(GramKey::AttnIn, 0).unwrap().data);
+    }
 
     #[test]
     fn gram_order_matches_capture_output_convention() {

@@ -24,7 +24,7 @@
 //!
 //! See `EXECUTOR_DESIGN.md` for the design note.
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use anyhow::Result;
@@ -43,6 +43,10 @@ pub struct JobStats {
     pub seconds: f64,
     /// which pool worker ran it (0 for the sequential fast path)
     pub worker: usize,
+    /// the job's FLOP-ish cost weight ([`super::jobs::Job::cost`]; 1 for
+    /// unweighted runs) — feeds the cost-weighted progress line and
+    /// `report::timing_table_weighted`
+    pub cost: u64,
 }
 
 /// Everything a pool run produces: per-job results in submission order,
@@ -59,6 +63,9 @@ pub struct ExecReport<T> {
 pub struct Executor {
     workers: usize,
     inner_threads: usize,
+    /// emit a cost-weighted progress/ETA line as jobs complete (CLI runs;
+    /// off by default so library/test use stays quiet)
+    progress: bool,
 }
 
 impl Executor {
@@ -71,7 +78,7 @@ impl Executor {
     pub fn new(jobs: Option<usize>) -> Self {
         let total = num_threads().max(1);
         let workers = jobs.unwrap_or(total).clamp(1, total);
-        Executor { workers, inner_threads: (total / workers).max(1) }
+        Executor { workers, inner_threads: (total / workers).max(1), progress: false }
     }
 
     /// `n` outer workers (clamped to the ambient budget, which also funds
@@ -93,6 +100,17 @@ impl Executor {
         self.inner_threads
     }
 
+    /// Same pool, with the cost-weighted progress/ETA line switched on/off
+    /// (consumed by `run_weighted`; the CLI enables it, tests leave it off).
+    pub fn with_progress(mut self, on: bool) -> Self {
+        self.progress = on;
+        self
+    }
+
+    pub fn progress(&self) -> bool {
+        self.progress
+    }
+
     /// Run `job(0..n)` on the pool. `label(i)` names job `i` for telemetry
     /// and error attribution. Results come back in index order; the first
     /// error (lowest index among failures) aborts the run.
@@ -107,23 +125,45 @@ impl Executor {
         F: Fn(usize) -> Result<T> + Sync,
         L: Fn(usize) -> String + Sync,
     {
+        self.run_weighted(n, |_| 1, label, job)
+    }
+
+    /// [`Executor::run`] with a per-job cost weight (`Job::cost`-style
+    /// FLOP estimates). Costs drive the progress/ETA line — "fraction of
+    /// total *cost* completed" tracks wall-clock far better than job
+    /// counts when job sizes vary (one `w_down` site outweighs a whole
+    /// attention block) — and are recorded in each job's [`JobStats`].
+    pub fn run_weighted<T, F, L, C>(&self, n: usize, cost: C, label: L, job: F)
+        -> Result<ExecReport<T>>
+    where
+        T: Send,
+        F: Fn(usize) -> Result<T> + Sync,
+        L: Fn(usize) -> String + Sync,
+        C: Fn(usize) -> u64 + Sync,
+    {
         let timer = Timer::start("executor");
+        let total_cost: u64 = (0..n).map(|i| cost(i).max(1)).sum();
         let workers = self.workers.min(n.max(1));
         // re-split this executor's total budget over the workers actually used
         let inner = ((self.workers * self.inner_threads) / workers).max(1);
         if workers <= 1 {
-            return self.run_sequential(n, inner, &label, &job, timer);
+            return self.run_sequential(n, inner, total_cost, &cost, &label, &job,
+                                       timer);
         }
 
         let cursor = AtomicUsize::new(0);
         let abort = AtomicBool::new(false);
+        let done_cost = AtomicU64::new(0);
+        let done_jobs = AtomicUsize::new(0);
         let done: Mutex<Vec<(usize, T, JobStats)>> = Mutex::new(Vec::with_capacity(n));
         let failures: Mutex<Vec<(usize, anyhow::Error)>> = Mutex::new(Vec::new());
         std::thread::scope(|scope| {
             for wid in 0..workers {
                 let (cursor, abort) = (&cursor, &abort);
                 let (done, failures) = (&done, &failures);
-                let (job, label) = (&job, &label);
+                let (done_cost, done_jobs) = (&done_cost, &done_jobs);
+                let (job, label, cost) = (&job, &label, &cost);
+                let timer = &timer;
                 scope.spawn(move || {
                     with_thread_budget(inner, || loop {
                         if abort.load(Ordering::Relaxed) {
@@ -136,13 +176,21 @@ impl Executor {
                         let t = Timer::start("job");
                         match job(i) {
                             Ok(v) => {
+                                let c = cost(i).max(1);
                                 let stats = JobStats {
                                     index: i,
                                     label: label(i),
                                     seconds: t.elapsed_s(),
                                     worker: wid,
+                                    cost: c,
                                 };
                                 done.lock().unwrap().push((i, v, stats));
+                                let dc = done_cost.fetch_add(c, Ordering::Relaxed) + c;
+                                let dj = done_jobs.fetch_add(1, Ordering::Relaxed) + 1;
+                                if self.progress {
+                                    eprintln!("{}", crate::report::progress_line(
+                                        dj, n, dc, total_cost, timer.elapsed_s()));
+                                }
                             }
                             Err(e) => {
                                 abort.store(true, Ordering::Relaxed);
@@ -183,25 +231,35 @@ impl Executor {
     /// Single-worker path: same loop, same budget discipline, no threads —
     /// this is the bit-identical reference the parallel path is tested
     /// against (and what `--jobs 1` / `AWP_THREADS=1` select).
-    fn run_sequential<T, F, L>(&self, n: usize, inner: usize, label: &L, job: &F,
-                               timer: Timer) -> Result<ExecReport<T>>
+    fn run_sequential<T, F, L, C>(&self, n: usize, inner: usize, total_cost: u64,
+                                  cost: &C, label: &L, job: &F, timer: Timer)
+        -> Result<ExecReport<T>>
     where
         F: Fn(usize) -> Result<T>,
         L: Fn(usize) -> String,
+        C: Fn(usize) -> u64,
     {
         let mut results = Vec::with_capacity(n);
         let mut stats = Vec::with_capacity(n);
+        let mut done_cost = 0u64;
         for i in 0..n {
             let t = Timer::start("job");
             match with_thread_budget(inner, || job(i)) {
                 Ok(v) => {
+                    let c = cost(i).max(1);
                     results.push(v);
                     stats.push(JobStats {
                         index: i,
                         label: label(i),
                         seconds: t.elapsed_s(),
                         worker: 0,
+                        cost: c,
                     });
+                    done_cost += c;
+                    if self.progress {
+                        eprintln!("{}", crate::report::progress_line(
+                            i + 1, n, done_cost, total_cost, timer.elapsed_s()));
+                    }
                 }
                 Err(e) => {
                     return Err(e.context(format!(
@@ -284,6 +342,30 @@ mod tests {
             .unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("job-3"), "{msg}");
+    }
+
+    #[test]
+    fn weighted_run_records_costs_in_index_order() {
+        for workers in [1usize, 4] {
+            let rep = Executor::with_workers(workers)
+                .run_weighted(9, |i| (i as u64 + 1) * 100, label, |i| Ok(i))
+                .unwrap();
+            assert_eq!(rep.results, (0..9).collect::<Vec<_>>());
+            for (i, s) in rep.stats.iter().enumerate() {
+                assert_eq!(s.cost, (i as u64 + 1) * 100, "workers={workers}");
+            }
+        }
+        // zero costs are clamped so the ETA denominator never vanishes
+        let rep = Executor::sequential()
+            .run_weighted(3, |_| 0, label, |i| Ok(i))
+            .unwrap();
+        assert!(rep.stats.iter().all(|s| s.cost == 1));
+    }
+
+    #[test]
+    fn unweighted_run_has_unit_costs() {
+        let rep = Executor::with_workers(2).run(4, label, |i| Ok(i)).unwrap();
+        assert!(rep.stats.iter().all(|s| s.cost == 1));
     }
 
     #[test]

@@ -6,23 +6,30 @@
 //! `fig1` emits the per-iteration activation-loss series. Results are
 //! written to `reports/` as console text, markdown and CSV.
 //!
-//! Table sweeps submit their cells through the shared layer-job
-//! [`Executor`] (`--jobs N`): each cell is one pool job (compress + eval),
-//! the nested per-cell pipeline runs sequentially inside the cell's thread
-//! budget, and the memoized checkpoint/Gram/batcher state is shared across
-//! cells via `Arc` rather than recomputed. Cell results come back in
-//! submission order, so the rendered tables are identical to a sequential
-//! run at any worker count.
+//! Sweeps are scheduled **cross-model** through the shared layer-job
+//! [`Executor`] (`--jobs N`) via [`super::sweep`]: `experiment all` hands
+//! all five tables to one pool — per-model preparation (train/load
+//! checkpoint, calibration Grams through the [`super::cache`] subsystem,
+//! dense perplexity) runs as one executor job per model, then every
+//! `(table, method, spec)` cell of every table runs as one cost-weighted
+//! pool job. Cell results come back in submission order, so the rendered
+//! tables are identical to a sequential run at any worker count.
+//!
+//! All memoized state (corpus, batchers, checkpoints, Grams, dense ppl)
+//! lives behind `Arc`-shared keyed once-cells, so the harness is `&self`
+//! throughout and concurrent jobs share rather than recompute.
 
-use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use anyhow::{Context, Result};
 
-use super::calibrate::{calibrate, Grams};
+use super::cache::{CalibSpec, GramCache, GramCacheKey, KeyedOnce};
+use super::calibrate::{calibrate, synthetic_grams, Grams};
 use super::executor::Executor;
+use super::jobs::plan_jobs;
 use super::methods::{make_compressor, Method};
 use super::pipeline::compress_model_with;
+use super::sweep::{self, TableSpec};
 use crate::compress::awp::AwpHyper;
 use crate::compress::traits::CompressionSpec;
 use crate::config::RunConfig;
@@ -35,18 +42,24 @@ use crate::trainer;
 use crate::util::Timer;
 
 /// Shared state across experiments: runtime, manifest, corpus, trained
-/// checkpoints and calibration Grams (each produced once and reused), plus
-/// the executor table sweeps and pipeline runs are submitted through.
+/// checkpoints, calibration Grams (behind the two-layer gram cache) and
+/// dense-perplexity baselines — each produced once and shared via `Arc`
+/// across every concurrent sweep job — plus the executor all sweeps and
+/// pipeline runs are submitted through.
 pub struct ExperimentCtx {
     pub handle: RuntimeHandle,
     pub manifest: Arc<Manifest>,
     pub cfg: RunConfig,
     executor: Executor,
-    corpus: Option<Arc<SyntheticCorpus>>,
-    batchers: HashMap<(usize, usize), Arc<Batcher>>,
-    checkpoints: HashMap<String, Arc<Checkpoint>>,
-    grams: HashMap<String, Arc<Grams>>,
-    dense_ppl: HashMap<String, f64>,
+    /// runtime-free mode: untrained checkpoints + synthetic Grams, no
+    /// perplexity eval (CI runners without AOT artifacts)
+    synthetic: bool,
+    cache: Arc<GramCache>,
+    corpus: OnceLock<Arc<SyntheticCorpus>>,
+    batchers: KeyedOnce<(usize, usize), Arc<Batcher>>,
+    checkpoints: KeyedOnce<String, Arc<Checkpoint>>,
+    fingerprints: KeyedOnce<String, u64>,
+    dense_ppl: KeyedOnce<String, f64>,
 }
 
 impl ExperimentCtx {
@@ -56,17 +69,43 @@ impl ExperimentCtx {
             manifest,
             cfg,
             executor: Executor::new(None),
-            corpus: None,
-            batchers: HashMap::new(),
-            checkpoints: HashMap::new(),
-            grams: HashMap::new(),
-            dense_ppl: HashMap::new(),
+            synthetic: false,
+            cache: Arc::new(GramCache::memory_only()),
+            corpus: OnceLock::new(),
+            batchers: KeyedOnce::new(),
+            checkpoints: KeyedOnce::new(),
+            fingerprints: KeyedOnce::new(),
+            dense_ppl: KeyedOnce::new(),
         }
     }
 
     /// Size the worker pool (the `--jobs N` flag; `None` ⇒ ambient budget).
     pub fn set_jobs(&mut self, jobs: Option<usize>) {
-        self.executor = Executor::new(jobs);
+        self.executor = Executor::new(jobs).with_progress(self.executor.progress());
+    }
+
+    /// Toggle the executor's cost-weighted progress/ETA line (CLI runs).
+    pub fn set_progress(&mut self, on: bool) {
+        self.executor = self.executor.with_progress(on);
+    }
+
+    /// Install the calibration-artifact cache (`--cache-dir`/`--no-cache`).
+    pub fn set_cache(&mut self, cache: Arc<GramCache>) {
+        self.cache = cache;
+    }
+
+    pub fn cache(&self) -> &GramCache {
+        &self.cache
+    }
+
+    /// Runtime-free synthetic mode: untrained checkpoints and synthetic
+    /// Grams (the calibration cache still runs the full key/disk path).
+    pub fn set_synthetic(&mut self, on: bool) {
+        self.synthetic = on;
+    }
+
+    pub fn synthetic(&self) -> bool {
+        self.synthetic
     }
 
     /// The executor cell sweeps and pipeline runs go through.
@@ -74,134 +113,195 @@ impl ExperimentCtx {
         self.executor
     }
 
-    fn corpus(&mut self) -> Arc<SyntheticCorpus> {
-        if self.corpus.is_none() {
-            let t = Timer::start("corpus");
-            self.corpus =
-                Some(Arc::new(SyntheticCorpus::generate(self.cfg.corpus.clone())));
-            eprintln!("[ctx] corpus generated {}", t.report());
-        }
-        self.corpus.as_ref().unwrap().clone()
+    fn corpus(&self) -> Arc<SyntheticCorpus> {
+        self.corpus
+            .get_or_init(|| {
+                let t = Timer::start("corpus");
+                let c = Arc::new(SyntheticCorpus::generate(self.cfg.corpus.clone()));
+                eprintln!("[ctx] corpus generated {}", t.report());
+                c
+            })
+            .clone()
     }
 
-    pub fn batcher(&mut self, model: &str) -> Result<Arc<Batcher>> {
+    pub fn batcher(&self, model: &str) -> Result<Arc<Batcher>> {
         let mc = self.manifest.model(model)?.config.clone();
         let key = (mc.batch, mc.seq_len);
-        if !self.batchers.contains_key(&key) {
+        self.batchers.get_or_try_init(&key, || {
             let corpus = self.corpus();
-            self.batchers
-                .insert(key, Arc::new(Batcher::new(&corpus, mc.batch, mc.seq_len)));
-        }
-        Ok(self.batchers[&key].clone())
+            Ok(Arc::new(Batcher::new(&corpus, mc.batch, mc.seq_len)))
+        })
     }
 
     /// Load the trained checkpoint for `model`, training (and saving) it if
-    /// absent — training is part of the system, not an external input.
-    pub fn checkpoint(&mut self, model: &str) -> Result<Arc<Checkpoint>> {
-        if let Some(ck) = self.checkpoints.get(model) {
-            return Ok(ck.clone());
-        }
-        let path = self.cfg.paths.checkpoint_file(model);
-        let ck = if path.exists() {
-            eprintln!("[ctx] loading checkpoint {path:?}");
-            let ck = Checkpoint::load(&path)?;
-            ck.validate()?;
-            ck
-        } else {
-            eprintln!("[ctx] no checkpoint for '{model}' — training now");
-            self.cfg.paths.ensure_dirs()?;
-            let batcher = self.batcher(model)?;
-            let tc = self.cfg.train_config(model);
-            let (ck, _curve) =
-                trainer::train(&self.handle, &self.manifest, model, &batcher, &tc)?;
-            ck.save(&path).with_context(|| format!("saving {path:?}"))?;
-            ck
-        };
-        let ck = Arc::new(ck);
-        self.checkpoints.insert(model.to_string(), ck.clone());
-        Ok(ck)
+    /// absent — training is part of the system, not an external input. In
+    /// synthetic mode the checkpoint is the deterministic init (no
+    /// training, no runtime).
+    pub fn checkpoint(&self, model: &str) -> Result<Arc<Checkpoint>> {
+        self.checkpoints.get_or_try_init(&model.to_string(), || {
+            let mc = self.manifest.model(model)?.config.clone();
+            if self.synthetic {
+                eprintln!("[ctx] synthetic checkpoint for '{model}' (untrained)");
+                return Ok(Arc::new(trainer::init_checkpoint(&mc, self.cfg.seed)));
+            }
+            let path = self.cfg.paths.checkpoint_file(model);
+            let ck = if path.exists() {
+                eprintln!("[ctx] loading checkpoint {path:?}");
+                let ck = Checkpoint::load(&path)?;
+                ck.validate()?;
+                ck
+            } else {
+                eprintln!("[ctx] no checkpoint for '{model}' — training now");
+                self.cfg.paths.ensure_dirs()?;
+                let batcher = self.batcher(model)?;
+                let tc = self.cfg.train_config(model);
+                let (ck, _curve) = trainer::train(&self.handle, &self.manifest,
+                                                  model, &batcher, &tc)?;
+                ck.save(&path).with_context(|| format!("saving {path:?}"))?;
+                ck
+            };
+            Ok(Arc::new(ck))
+        })
     }
 
-    pub fn grams(&mut self, model: &str) -> Result<Arc<Grams>> {
-        if let Some(g) = self.grams.get(model) {
-            return Ok(g.clone());
-        }
+    /// Checkpoint content fingerprint, hashed once per model per process.
+    fn fingerprint(&self, model: &str) -> Result<u64> {
+        self.fingerprints.get_or_try_init(&model.to_string(), || {
+            Ok(self.checkpoint(model)?.fingerprint())
+        })
+    }
+
+    /// The gram-cache key identifying `model`'s calibration artifacts
+    /// under the current run configuration.
+    pub fn gram_key(&self, model: &str) -> Result<GramCacheKey> {
+        let mc = &self.manifest.model(model)?.config;
+        let provider = if self.synthetic { "synthetic" } else { "calib_capture" };
+        Ok(GramCacheKey {
+            model: model.to_string(),
+            checkpoint: self.fingerprint(model)?,
+            calib: CalibSpec::from_run(&self.cfg, mc, provider).fingerprint(),
+        })
+    }
+
+    /// Calibration Grams for `model`, through the two-layer cache:
+    /// memory → disk (`--cache-dir`) → run `calib_capture` over the fixed
+    /// calibration set (or synthesize, in synthetic mode). The cache's
+    /// memory layer IS the per-process memo — the ctx adds no second one,
+    /// so its hit counters reflect real sharing across cells.
+    pub fn grams(&self, model: &str) -> Result<Arc<Grams>> {
+        let key = self.gram_key(model)?;
         let ck = self.checkpoint(model)?;
-        let batcher = self.batcher(model)?;
-        let batches = batcher.calibration_set(self.cfg.calib_batches,
-                                              self.cfg.seed ^ 0xCA11B);
-        let t = Timer::start("calibrate");
-        let grams = calibrate(&self.handle, &self.manifest, model, &ck, &batches)?;
-        eprintln!("[ctx] calibrated '{model}' over {} tokens {}",
-                  grams.tokens, t.report());
-        let g = Arc::new(grams);
-        self.grams.insert(model.to_string(), g.clone());
-        Ok(g)
+        self.cache.get_or_compute(&key, || {
+            if self.synthetic {
+                return Ok(synthetic_grams(&ck.config, self.cfg.seed));
+            }
+            let batcher = self.batcher(model)?;
+            let batches = batcher.calibration_set(self.cfg.calib_batches,
+                                                  self.cfg.calib_seed());
+            let t = Timer::start("calibrate");
+            let grams = calibrate(&self.handle, &self.manifest, model, &ck,
+                                  &batches)?;
+            eprintln!("[ctx] calibrated '{model}' over {} tokens {}",
+                      grams.tokens, t.report());
+            Ok(grams)
+        })
     }
 
-    pub fn ppl(&mut self, model: &str, ck: &Checkpoint) -> Result<f64> {
+    pub fn ppl(&self, model: &str, ck: &Checkpoint) -> Result<f64> {
         let batcher = self.batcher(model)?;
         let rep = perplexity(&self.handle, &self.manifest, model, ck, &batcher,
                              Split::Val, self.cfg.eval_batches)?;
         Ok(rep.ppl)
     }
 
-    pub fn dense_ppl(&mut self, model: &str) -> Result<f64> {
-        if let Some(&p) = self.dense_ppl.get(model) {
-            return Ok(p);
+    pub fn dense_ppl(&self, model: &str) -> Result<f64> {
+        self.dense_ppl.get_or_try_init(&model.to_string(), || {
+            let ck = self.checkpoint(model)?;
+            let p = self.ppl(model, &ck)?;
+            eprintln!("[ctx] dense ppl({model}) = {p:.3}");
+            Ok(p)
+        })
+    }
+
+    /// One cross-model-sweep preparation job: everything a model's cells
+    /// need, produced once and shared (checkpoint, Grams, dense baseline).
+    pub fn prepare_model(&self, model: &str) -> Result<()> {
+        self.checkpoint(model)?;
+        self.grams(model)?;
+        if !self.synthetic {
+            self.dense_ppl(model)?;
         }
-        let ck = self.checkpoint(model)?;
-        let p = self.ppl(model, &ck)?;
-        eprintln!("[ctx] dense ppl({model}) = {p:.3}");
-        self.dense_ppl.insert(model.to_string(), p);
-        Ok(p)
+        Ok(())
+    }
+
+    fn hyper(&self) -> AwpHyper {
+        AwpHyper { group: self.manifest.awp_group,
+                   chunk: self.manifest.awp_chunk,
+                   ..AwpHyper::default() }
     }
 
     /// One table cell: compress `model` with `method` under `spec`, return
-    /// held-out perplexity.
-    pub fn cell(&mut self, model: &str, method: Method, spec: &CompressionSpec)
+    /// held-out perplexity (or, in synthetic mode, the mean per-layer
+    /// reconstruction loss — perplexity needs the runtime). The nested
+    /// pipeline runs sequentially inside the calling sweep job's budget.
+    pub fn eval_cell(&self, model: &str, method: Method, spec: &CompressionSpec)
         -> Result<f64> {
-        Ok(self.cells(model, &[(method, *spec)])?[0])
-    }
-
-    /// A batch of table cells, run through the shared executor: one pool
-    /// job per `(method, spec)` cell. The trained checkpoint, Grams and
-    /// batcher are produced (or fetched from cache) once up front and
-    /// shared across cells via `Arc`; each cell builds its compressor,
-    /// runs the per-cell pipeline *sequentially* inside its thread budget,
-    /// and evaluates held-out perplexity. Results are in `specs` order.
-    pub fn cells(&mut self, model: &str, specs: &[(Method, CompressionSpec)])
-        -> Result<Vec<f64>> {
-        // memoized shared state, resolved before the parallel section
         let ck = self.checkpoint(model)?;
         let grams = self.grams(model)?;
+        let compressor = make_compressor(method, self.hyper(),
+                                         Some((&self.handle, &self.manifest)))?;
+        let t = Timer::start("cell");
+        let out = compress_model_with(&ck, &grams, compressor.as_ref(), spec,
+                                      false, &Executor::sequential())?;
+        if self.synthetic {
+            let mean_loss = out.reports.iter().map(|r| r.rel_loss).sum::<f64>()
+                / out.reports.len().max(1) as f64;
+            eprintln!("[cell] {model} {} {} → rel_loss {mean_loss:.4} ({:.1}s) \
+                       [synthetic]", method.label(), sweep::spec_tag(spec),
+                      t.elapsed_s());
+            return Ok(mean_loss);
+        }
         let batcher = self.batcher(model)?;
-        let handle = self.handle.clone();
-        let manifest = self.manifest.clone();
-        let eval_batches = self.cfg.eval_batches;
-        let hyper = AwpHyper { group: self.manifest.awp_group,
-                               chunk: self.manifest.awp_chunk,
-                               ..AwpHyper::default() };
-        let run = self.executor.run(
-            specs.len(),
-            |i| format!("{} {:?}", specs[i].0.label(), specs[i].1.mode),
-            |i| {
-                let (method, spec) = specs[i];
-                let compressor =
-                    make_compressor(method, hyper, Some((&handle, &manifest)))?;
-                let t = Timer::start("cell");
-                // cell-level parallelism owns the budget split; the nested
-                // pipeline runs its layer jobs sequentially within it
-                let out = compress_model_with(&ck, &grams, compressor.as_ref(),
-                                              &spec, false, &Executor::sequential())?;
-                let rep = perplexity(&handle, &manifest, model, &out.checkpoint,
-                                     &batcher, Split::Val, eval_batches)?;
-                eprintln!("[cell] {model} {} {:?} → ppl {:.3} ({:.1}s)",
-                          method.label(), spec.mode, rep.ppl, t.elapsed_s());
-                Ok(rep.ppl)
-            },
+        let rep = perplexity(&self.handle, &self.manifest, model, &out.checkpoint,
+                             &batcher, Split::Val, self.cfg.eval_batches)?;
+        eprintln!("[cell] {model} {} {} → ppl {:.3} ({:.1}s)", method.label(),
+                  sweep::spec_tag(spec), rep.ppl, t.elapsed_s());
+        Ok(rep.ppl)
+    }
+
+    /// FLOP-ish cost of one of `model`'s cells: the model's full layer-job
+    /// plan cost (every cell compresses every site once).
+    pub fn cell_cost(&self, model: &str) -> u64 {
+        self.manifest
+            .model(model)
+            .map(|e| plan_jobs(&e.config).total_cost())
+            .unwrap_or(1)
+    }
+
+    fn table_title(&self, t: &TableSpec) -> String {
+        match self.dense_ppl.get(&t.model) {
+            Some(d) => format!("{} '{}' ({}dense = {d:.2})", t.title_prefix,
+                               t.model, t.title_extra),
+            None => format!("{} '{}' ({}dense = n/a)", t.title_prefix, t.model,
+                            t.title_extra),
+        }
+    }
+
+    /// Schedule `tables` as one cross-model sweep on the shared executor
+    /// (see [`sweep::run_tables`]) and write each report.
+    pub fn run_tables(&self, tables: &[TableSpec]) -> Result<Vec<Table>> {
+        let out = sweep::run_tables(
+            &self.executor,
+            tables,
+            |m| self.prepare_model(m),
+            |c| self.eval_cell(&c.model, c.method, &c.spec),
+            |c| self.cell_cost(&c.model),
+            |t| self.table_title(t),
         )?;
-        Ok(run.results)
+        for (spec, table) in tables.iter().zip(&out) {
+            self.write_report(&spec.name, table)?;
+        }
+        Ok(out)
     }
 
     pub fn write_report(&self, name: &str, table: &Table) -> Result<()> {
@@ -218,95 +318,50 @@ impl ExperimentCtx {
 pub const PRUNE_RATIOS: [f64; 5] = [0.5, 0.6, 0.7, 0.8, 0.9];
 pub const JOINT_RATIOS: [f64; 3] = [0.25, 0.5, 0.75];
 
-/// Run a `methods × specs` sweep through [`ExperimentCtx::cells`] as one
-/// flat row-major cell list and append one table row per method — the
-/// shared body of every table/ablation generator.
-fn sweep_into(ctx: &mut ExperimentCtx, t: &mut Table, model: &str,
-              methods: &[Method], specs: &[CompressionSpec]) -> Result<()> {
-    let mut cells = Vec::with_capacity(methods.len() * specs.len());
-    for &method in methods {
-        for &spec in specs {
-            cells.push((method, spec));
-        }
-    }
-    let ppls = ctx.cells(model, &cells)?;
-    for (method, row) in methods.iter().zip(ppls.chunks(specs.len())) {
-        t.push_row(method.label().to_uppercase(),
-                   row.iter().map(|&p| Some(p)).collect());
-    }
-    Ok(())
-}
-
 /// Tables 1 & 2: pruning perplexity across ratios and methods.
-fn prune_table(ctx: &mut ExperimentCtx, name: &str, model: &str,
-               awp_method: Method) -> Result<Table> {
-    let dense = ctx.dense_ppl(model)?;
-    let cols: Vec<String> = PRUNE_RATIOS.iter().map(|r| format!("{:.0}%", r * 100.0)).collect();
-    let mut t = Table::new(
-        format!("{name}: ppl of pruned '{model}' (dense = {dense:.2})"),
-        "method", cols);
-    let methods = [Method::Magnitude, Method::SparseGpt, Method::Wanda, awp_method];
-    let specs: Vec<CompressionSpec> =
-        PRUNE_RATIOS.iter().map(|&r| CompressionSpec::prune(r)).collect();
-    sweep_into(ctx, &mut t, model, &methods, &specs)?;
-    Ok(t)
-}
-
-pub fn table1(ctx: &mut ExperimentCtx, awp: Method) -> Result<Table> {
-    let t = prune_table(ctx, "Table 1", "small", awp)?;
-    ctx.write_report("table1", &t)?;
-    Ok(t)
-}
-
-pub fn table2(ctx: &mut ExperimentCtx, awp: Method) -> Result<Table> {
-    let t = prune_table(ctx, "Table 2", "medium", awp)?;
-    ctx.write_report("table2", &t)?;
-    Ok(t)
+fn prune_spec(name: &str, num: &str, model: &str, awp: Method) -> TableSpec {
+    TableSpec {
+        name: name.into(),
+        model: model.into(),
+        col_header: "method".into(),
+        columns: PRUNE_RATIOS.iter().map(|r| format!("{:.0}%", r * 100.0)).collect(),
+        methods: vec![Method::Magnitude, Method::SparseGpt, Method::Wanda, awp],
+        specs: PRUNE_RATIOS.iter().map(|&r| CompressionSpec::prune(r)).collect(),
+        title_prefix: format!("{num}: ppl of pruned"),
+        title_extra: String::new(),
+    }
 }
 
 /// Table 3: INT4/INT3/INT2 weight-only grouped quantization.
-pub fn table3(ctx: &mut ExperimentCtx, awp: Method) -> Result<Table> {
-    let model = "small";
-    let dense = ctx.dense_ppl(model)?;
-    let group = ctx.manifest.awp_group;
-    let mut t = Table::new(
-        format!("Table 3: ppl of quantized '{model}' (group={group}, dense = {dense:.2})"),
-        "method",
-        vec!["INT4".into(), "INT3".into(), "INT2".into()]);
-    let methods = [Method::Rtn, Method::Gptq, Method::Awq, awp];
-    let specs: Vec<CompressionSpec> =
-        [4u8, 3, 2].iter().map(|&b| CompressionSpec::quant(b, group)).collect();
-    sweep_into(ctx, &mut t, model, &methods, &specs)?;
-    ctx.write_report("table3", &t)?;
-    Ok(t)
+fn quant_spec(model: &str, awp: Method, group: usize) -> TableSpec {
+    TableSpec {
+        name: "table3".into(),
+        model: model.into(),
+        col_header: "method".into(),
+        columns: vec!["INT4".into(), "INT3".into(), "INT2".into()],
+        methods: vec![Method::Rtn, Method::Gptq, Method::Awq, awp],
+        specs: [4u8, 3, 2].iter().map(|&b| CompressionSpec::quant(b, group)).collect(),
+        title_prefix: "Table 3: ppl of quantized".into(),
+        title_extra: format!("group={group}, "),
+    }
 }
 
 /// Tables 4 & 5: joint pruning + INT4 quantization.
-fn joint_table(ctx: &mut ExperimentCtx, name: &str, model: &str,
-               awp_method: Method) -> Result<Table> {
-    let dense = ctx.dense_ppl(model)?;
-    let group = ctx.manifest.awp_group;
-    let cols: Vec<String> = JOINT_RATIOS.iter().map(|r| format!("{:.0}%", r * 100.0)).collect();
-    let mut t = Table::new(
-        format!("{name}: ppl of pruned + INT4 '{model}' (dense = {dense:.2})"),
-        "method", cols);
-    let methods = [Method::AwqThenWanda, Method::WandaThenAwq, awp_method];
-    let specs: Vec<CompressionSpec> =
-        JOINT_RATIOS.iter().map(|&r| CompressionSpec::joint(r, 4, group)).collect();
-    sweep_into(ctx, &mut t, model, &methods, &specs)?;
-    Ok(t)
-}
-
-pub fn table4(ctx: &mut ExperimentCtx, awp: Method) -> Result<Table> {
-    let t = joint_table(ctx, "Table 4", "small", awp)?;
-    ctx.write_report("table4", &t)?;
-    Ok(t)
-}
-
-pub fn table5(ctx: &mut ExperimentCtx, awp: Method) -> Result<Table> {
-    let t = joint_table(ctx, "Table 5", "tiny", awp)?;
-    ctx.write_report("table5", &t)?;
-    Ok(t)
+fn joint_spec(name: &str, num: &str, model: &str, awp: Method, group: usize)
+    -> TableSpec {
+    TableSpec {
+        name: name.into(),
+        model: model.into(),
+        col_header: "method".into(),
+        columns: JOINT_RATIOS.iter().map(|r| format!("{:.0}%", r * 100.0)).collect(),
+        methods: vec![Method::AwqThenWanda, Method::WandaThenAwq, awp],
+        specs: JOINT_RATIOS
+            .iter()
+            .map(|&r| CompressionSpec::joint(r, 4, group))
+            .collect(),
+        title_prefix: format!("{num}: ppl of pruned + INT4"),
+        title_extra: String::new(),
+    }
 }
 
 /// Ablation (paper §5 future work): unstructured 50% vs 2:4 semi-structured
@@ -314,23 +369,74 @@ pub fn table5(ctx: &mut ExperimentCtx, awp: Method) -> Result<Table> {
 /// cost some perplexity vs unstructured 50% at equal density — the
 /// acceleration-vs-quality trade-off the paper's future-work section is
 /// about.
-pub fn ablation24(ctx: &mut ExperimentCtx) -> Result<Table> {
-    let model = "small";
-    let dense = ctx.dense_ppl(model)?;
-    let mut t = Table::new(
-        format!("Ablation: unstructured 50% vs 2:4 on '{model}' (dense = {dense:.2})"),
-        "method",
-        vec!["unstructured 50%".into(), "2:4".into()]);
-    let methods = [Method::Magnitude, Method::Wanda, Method::AwpCpu];
-    let specs = [CompressionSpec::prune(0.5), CompressionSpec::structured24()];
-    sweep_into(ctx, &mut t, model, &methods, &specs)?;
-    ctx.write_report("ablation24", &t)?;
-    Ok(t)
+fn ablation_spec(model: &str) -> TableSpec {
+    TableSpec {
+        name: "ablation24".into(),
+        model: model.into(),
+        col_header: "method".into(),
+        columns: vec!["unstructured 50%".into(), "2:4".into()],
+        methods: vec![Method::Magnitude, Method::Wanda, Method::AwpCpu],
+        specs: vec![CompressionSpec::prune(0.5), CompressionSpec::structured24()],
+        title_prefix: "Ablation: unstructured 50% vs 2:4 on".into(),
+        title_extra: String::new(),
+    }
+}
+
+fn one_table(ctx: &ExperimentCtx, spec: TableSpec) -> Result<Table> {
+    Ok(ctx.run_tables(std::slice::from_ref(&spec))?.remove(0))
+}
+
+pub fn table1(ctx: &ExperimentCtx, awp: Method) -> Result<Table> {
+    one_table(ctx, prune_spec("table1", "Table 1", "small", awp))
+}
+
+pub fn table2(ctx: &ExperimentCtx, awp: Method) -> Result<Table> {
+    one_table(ctx, prune_spec("table2", "Table 2", "medium", awp))
+}
+
+pub fn table3(ctx: &ExperimentCtx, awp: Method) -> Result<Table> {
+    one_table(ctx, quant_spec("small", awp, ctx.manifest.awp_group))
+}
+
+pub fn table4(ctx: &ExperimentCtx, awp: Method) -> Result<Table> {
+    one_table(ctx, joint_spec("table4", "Table 4", "small", awp,
+                              ctx.manifest.awp_group))
+}
+
+pub fn table5(ctx: &ExperimentCtx, awp: Method) -> Result<Table> {
+    one_table(ctx, joint_spec("table5", "Table 5", "tiny", awp,
+                              ctx.manifest.awp_group))
+}
+
+pub fn ablation24(ctx: &ExperimentCtx) -> Result<Table> {
+    one_table(ctx, ablation_spec("small"))
+}
+
+/// The full sweep: every table of the paper as **one** cross-model
+/// schedule on the shared executor (models prepare in parallel, all
+/// tables' cells interleave on the pool), then Figure 1.
+pub fn run_all(ctx: &ExperimentCtx, awp: Method) -> Result<Vec<Table>> {
+    let group = ctx.manifest.awp_group;
+    let tables = vec![
+        prune_spec("table1", "Table 1", "small", awp),
+        prune_spec("table2", "Table 2", "medium", awp),
+        quant_spec("small", awp, group),
+        joint_spec("table4", "Table 4", "small", awp, group),
+        joint_spec("table5", "Table 5", "tiny", awp, group),
+    ];
+    let out = ctx.run_tables(&tables)?;
+    if ctx.synthetic() {
+        eprintln!("[experiment] skipping fig1 in synthetic mode (needs the HLO \
+                   runtime)");
+    } else {
+        fig1(ctx, "blocks.1.wq", 0.5)?;
+    }
+    Ok(out)
 }
 
 /// Figure 1: normalized activation-aware loss vs AWP iteration for one
 /// layer — run on the production HLO backend (chunk-1 program).
-pub fn fig1(ctx: &mut ExperimentCtx, layer_param: &str, ratio: f64)
+pub fn fig1(ctx: &ExperimentCtx, layer_param: &str, ratio: f64)
     -> Result<Vec<(f64, f64)>> {
     let model = "small";
     let ck = ctx.checkpoint(model)?;

@@ -11,29 +11,41 @@
 //!
 //! * `calibrate` — drives the AOT `calib_capture` program over the fixed
 //!   calibration sample and accumulates `C = XXᵀ/n` per site.
+//! * `cache` — the calibration-artifact cache: persists Grams to disk
+//!   keyed by (model, checkpoint fingerprint, calibration config), with an
+//!   `Arc`-shared in-memory layer so concurrent jobs never recompute or
+//!   re-load a Gram twice.
 //! * `jobs` — the site-job scheduler (pure logic, property-tested: every
 //!   site exactly once, Gram routing correct, deterministic order).
 //! * `executor` — the layer-job worker pool the scheduler feeds: dynamic
-//!   (atomic-cursor) dispatch over the LPT order, per-job telemetry,
-//!   fail-fast error attribution, deterministic output order, and the
-//!   outer-workers × inner-GEMM-threads budget split.
+//!   (atomic-cursor) dispatch over the LPT order, per-job telemetry with
+//!   cost weights (progress/ETA), fail-fast error attribution,
+//!   deterministic output order, and the outer-workers ×
+//!   inner-GEMM-threads budget split.
 //! * `methods` — name → compressor registry covering the paper's full
 //!   method matrix.
 //! * `pipeline` — end-to-end orchestration + assembly into a new checkpoint.
+//! * `sweep` — cross-model sweep scheduling: per-model preparation jobs
+//!   plus every table's cells on one executor pool, plan-order
+//!   deterministic assembly.
 //! * `experiments` — regenerates every table/figure of the paper's §4
-//!   (table sweeps submit their cells through the executor).
+//!   (all sweeps schedule through `sweep` on the shared executor).
 
+pub mod cache;
 pub mod calibrate;
 pub mod executor;
 pub mod experiments;
 pub mod jobs;
 pub mod methods;
 pub mod pipeline;
+pub mod sweep;
 
 pub use experiments::ExperimentCtx;
 
-pub use calibrate::{calibrate, Grams};
+pub use cache::{CacheCounts, CalibSpec, GramCache, GramCacheKey, KeyedOnce};
+pub use calibrate::{calibrate, synthetic_grams, Grams};
 pub use executor::{ExecReport, Executor, JobStats};
 pub use jobs::{plan_jobs, Job, JobPlan};
 pub use methods::{make_compressor, Method};
 pub use pipeline::{compress_model, compress_model_with, PipelineResult};
+pub use sweep::{run_tables, sweep_cells, sweep_models, CellRef, TableSpec};

@@ -55,8 +55,9 @@ pub fn compress_model_with(ck: &Checkpoint, grams: &Grams,
     let plan = plan_jobs(&ck.config);
     let jobs = &plan.jobs;
     let check_spec = if verify { verification_spec(compressor, spec) } else { None };
-    let run = exec.run(
+    let run = exec.run_weighted(
         jobs.len(),
+        |i| jobs[i].cost(),
         |i| jobs[i].site.param.clone(),
         |i| {
             let site = &jobs[i].site;
@@ -175,6 +176,7 @@ mod tests {
             for (i, s) in out.job_stats.iter().enumerate() {
                 assert_eq!(s.index, i);
                 assert_eq!(s.label, plan.jobs[i].site.param);
+                assert_eq!(s.cost, plan.jobs[i].cost(), "workers={workers}");
             }
         }
     }

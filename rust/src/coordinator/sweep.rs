@@ -1,0 +1,240 @@
+//! Cross-model sweep scheduling — one level above the per-table cell pool.
+//!
+//! PR 1 parallelised the cells *within* one experiment table; this module
+//! lifts that to the whole sweep: `experiment all` hands every table of
+//! the run to [`run_tables`], which schedules **all models' cells through
+//! one executor**. Two phases, both on the shared pool:
+//!
+//! 1. **prepare** — one job per distinct model (first-appearance order):
+//!    train/load the checkpoint, fetch or compute the calibration Grams
+//!    (through the [`super::cache`] subsystem), measure dense perplexity.
+//!    A failing model aborts with `prepare <model>` attribution, lowest
+//!    index first — the executor's usual fail-fast contract.
+//! 2. **cells** — every `(table, method, spec)` cell of every table as one
+//!    flat row-major job list, cost-weighted by the caller's FLOP model so
+//!    the progress/ETA line tracks real work. Results come back in
+//!    submission order, so the assembled tables are identical to a
+//!    sequential run at any worker count, and a failing cell surfaces the
+//!    lowest-index failure wrapped with its `table[model] method mode`
+//!    label.
+//!
+//! The scheduling core is pure (closures in, `Table`s out) so the
+//! determinism and attribution contracts are testable without the runtime
+//! (`rust/tests/cross_model_sweep.rs`).
+
+use anyhow::Result;
+
+use super::executor::Executor;
+use super::methods::Method;
+use crate::compress::traits::{CompressionMode, CompressionSpec};
+use crate::report::Table;
+
+/// Compact spec tag for job labels: `prune50`, `int4`, `joint50+int4`, `2:4`.
+pub fn spec_tag(spec: &CompressionSpec) -> String {
+    match spec.mode {
+        CompressionMode::Prune { ratio } => format!("prune{:.0}", ratio * 100.0),
+        CompressionMode::Quant { spec } => format!("int{}", spec.bits),
+        CompressionMode::Joint { ratio, spec } => {
+            format!("joint{:.0}+int{}", ratio * 100.0, spec.bits)
+        }
+        CompressionMode::Structured24 => "2:4".into(),
+    }
+}
+
+/// One experiment table: `methods × specs` cells on one model.
+#[derive(Clone, Debug)]
+pub struct TableSpec {
+    /// report key, e.g. `table1` (also the report file stem)
+    pub name: String,
+    pub model: String,
+    pub col_header: String,
+    /// one column label per spec
+    pub columns: Vec<String>,
+    pub methods: Vec<Method>,
+    pub specs: Vec<CompressionSpec>,
+    /// title pieces consumed by the caller's `title` closure (the
+    /// experiment harness renders `"{prefix} '{model}' ({extra}dense = …)"`
+    /// after the preparation phase has measured the dense baseline)
+    pub title_prefix: String,
+    pub title_extra: String,
+}
+
+impl TableSpec {
+    pub fn n_cells(&self) -> usize {
+        self.methods.len() * self.specs.len()
+    }
+}
+
+/// One scheduled cell of a sweep (row-major within its table).
+#[derive(Clone, Debug)]
+pub struct CellRef {
+    /// index into the `tables` slice passed to [`run_tables`]
+    pub table: usize,
+    pub model: String,
+    pub method: Method,
+    pub spec: CompressionSpec,
+}
+
+impl CellRef {
+    /// Executor job label: `table1[small] wanda prune50`.
+    pub fn label(&self, tables: &[TableSpec]) -> String {
+        format!("{}[{}] {} {}", tables[self.table].name, self.model,
+                self.method.label(), spec_tag(&self.spec))
+    }
+}
+
+/// The distinct models of a sweep, in first-appearance (plan) order.
+pub fn sweep_models(tables: &[TableSpec]) -> Vec<String> {
+    let mut models: Vec<String> = Vec::new();
+    for t in tables {
+        if !models.iter().any(|m| *m == t.model) {
+            models.push(t.model.clone());
+        }
+    }
+    models
+}
+
+/// Flatten a sweep into its plan-ordered cell list (tables in order, cells
+/// row-major within each table).
+pub fn sweep_cells(tables: &[TableSpec]) -> Vec<CellRef> {
+    let mut cells = Vec::with_capacity(tables.iter().map(TableSpec::n_cells).sum());
+    for (ti, t) in tables.iter().enumerate() {
+        for &method in &t.methods {
+            for &spec in &t.specs {
+                cells.push(CellRef { table: ti, model: t.model.clone(), method, spec });
+            }
+        }
+    }
+    cells
+}
+
+/// Run a whole multi-table, multi-model sweep on `exec`: prepare each
+/// distinct model once, evaluate every cell, assemble one [`Table`] per
+/// spec in input order. `title(t)` is rendered *after* preparation, so it
+/// may read per-model state (dense perplexity) produced by `prep`.
+///
+/// Failure semantics follow the executor's fail-fast contract: one bad
+/// cell aborts the whole schedule and no tables are assembled (completed
+/// cells are discarded with it). That trade is deliberate — a rerun after
+/// a failure is cheap, because checkpoints come from disk and Grams from
+/// the calibration cache, so only the cells themselves recompute.
+pub fn run_tables<P, E, C, T>(exec: &Executor, tables: &[TableSpec], prep: P,
+                              eval: E, cost: C, title: T) -> Result<Vec<Table>>
+where
+    P: Fn(&str) -> Result<()> + Sync,
+    E: Fn(&CellRef) -> Result<f64> + Sync,
+    C: Fn(&CellRef) -> u64 + Sync,
+    T: Fn(&TableSpec) -> String,
+{
+    // phase 1: per-model preparation jobs (checkpoint, Grams, dense ppl)
+    let models = sweep_models(tables);
+    exec.run(models.len(), |i| format!("prepare {}", models[i]),
+             |i| prep(&models[i]))?;
+
+    // phase 2: every cell of every table through one weighted pool run
+    let cells = sweep_cells(tables);
+    let run = exec.run_weighted(
+        cells.len(),
+        |i| cost(&cells[i]),
+        |i| cells[i].label(tables),
+        |i| eval(&cells[i]),
+    )?;
+
+    // phase 3: deterministic assembly in plan order
+    let mut out = Vec::with_capacity(tables.len());
+    let mut next = 0usize;
+    for t in tables {
+        let mut table = Table::new(title(t), t.col_header.clone(), t.columns.clone());
+        for method in &t.methods {
+            let row = &run.results[next..next + t.specs.len()];
+            table.push_row(method.label().to_uppercase(),
+                           row.iter().map(|&p| Some(p)).collect());
+            next += t.specs.len();
+        }
+        out.push(table);
+    }
+    debug_assert_eq!(next, run.results.len());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    fn spec(name: &str, model: &str, methods: Vec<Method>) -> TableSpec {
+        TableSpec {
+            name: name.into(),
+            model: model.into(),
+            col_header: "method".into(),
+            columns: vec!["50%".into()],
+            methods,
+            specs: vec![CompressionSpec::prune(0.5)],
+            title_prefix: String::new(),
+            title_extra: String::new(),
+        }
+    }
+
+    #[test]
+    fn models_and_cells_are_plan_ordered() {
+        let tables = [
+            spec("t1", "a", vec![Method::Magnitude, Method::Wanda]),
+            spec("t2", "b", vec![Method::Magnitude]),
+            spec("t3", "a", vec![Method::Wanda]),
+        ];
+        assert_eq!(sweep_models(&tables), vec!["a".to_string(), "b".to_string()]);
+        let cells = sweep_cells(&tables);
+        assert_eq!(cells.len(), 4);
+        assert_eq!(cells[0].label(&tables), "t1[a] magnitude prune50");
+        assert_eq!(cells[2].label(&tables), "t2[b] magnitude prune50");
+        assert_eq!(cells[3].table, 2);
+    }
+
+    #[test]
+    fn each_model_is_prepared_exactly_once() {
+        let tables = [
+            spec("t1", "a", vec![Method::Magnitude]),
+            spec("t2", "a", vec![Method::Wanda]),
+            spec("t3", "b", vec![Method::Magnitude]),
+        ];
+        let prepped: Mutex<Vec<String>> = Mutex::new(Vec::new());
+        run_tables(
+            &Executor::with_workers(4),
+            &tables,
+            |m| {
+                prepped.lock().unwrap().push(m.to_string());
+                Ok(())
+            },
+            |_| Ok(1.0),
+            |_| 1,
+            |t| t.name.clone(),
+        )
+        .unwrap();
+        let mut p = prepped.into_inner().unwrap();
+        p.sort();
+        assert_eq!(p, vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn failing_prep_names_the_model() {
+        let tables = [spec("t1", "a", vec![Method::Magnitude]),
+                      spec("t2", "b", vec![Method::Magnitude])];
+        let err = run_tables(
+            &Executor::sequential(),
+            &tables,
+            |m| {
+                if m == "b" {
+                    anyhow::bail!("no checkpoint");
+                }
+                Ok(())
+            },
+            |_| Ok(1.0),
+            |_| 1,
+            |t| t.name.clone(),
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("prepare b"), "{msg}");
+        assert!(msg.contains("no checkpoint"), "{msg}");
+    }
+}

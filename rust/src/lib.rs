@@ -39,6 +39,29 @@
 //! are deterministic at *any* worker count (results are reassembled in
 //! plan order — see `EXECUTOR_DESIGN.md`).
 //!
+//! ## Calibration cache
+//!
+//! The calibration protocol is deterministic, so each model's activation
+//! Grams `C = X Xᵀ / n` are a pure function of `(checkpoint, calibration
+//! config)`. [`coordinator::cache`] exploits that with a two-layer
+//! calibration-artifact cache:
+//!
+//! * an **`Arc`-shared memory layer** (per-key once-cells) — concurrent
+//!   sweep jobs asking for the same model's Grams compute them once and
+//!   share the allocation, without serializing on the PJRT actor;
+//! * a **disk layer** (`--cache-dir`, default `cache/grams`; `--no-cache`
+//!   disables it) — `AWPGRAM1` files keyed by a content hash of (model
+//!   id, checkpoint fingerprint, calibration corpus/seed/batch config).
+//!   A warm run loads Grams without submitting a single `calib_capture`
+//!   execution; corrupt or stale files are discarded and recomputed, and
+//!   compressed output is bit-identical cold vs. warm
+//!   (`rust/tests/gram_cache.rs`).
+//!
+//! `experiment all` schedules **cross-model**: per-model preparation
+//! (train/load, calibrate-or-load, dense baseline) runs as executor jobs,
+//! then every table's cells interleave on the same pool, cost-weighted by
+//! `Job::cost` for the live progress/ETA line ([`coordinator::sweep`]).
+//!
 //! ## Quick tour
 //!
 //! ```no_run
@@ -52,6 +75,23 @@
 //! let out = AwpCpu::default().compress(&w, &c, &spec).unwrap();
 //! println!("activation-aware loss: {}", out.stats.final_loss);
 //! ```
+
+// The CI clippy gate runs `-D warnings`; the seed tree's deliberate styles
+// are allowed explicitly rather than rewritten (hand-aligned numeric
+// kernels index-loop over matrices, the substrate mirrors external APIs
+// with wide argument lists, and `util::json` predates `Display`).
+#![allow(
+    clippy::too_many_arguments,
+    clippy::needless_range_loop,
+    clippy::manual_memcpy,
+    clippy::inherent_to_string,
+    clippy::type_complexity,
+    clippy::ptr_arg,
+    clippy::len_without_is_empty,
+    clippy::should_implement_trait,
+    clippy::new_without_default,
+    clippy::field_reassign_with_default
+)]
 
 pub mod compress;
 pub mod config;

@@ -14,10 +14,15 @@
 //! <dir>`, `--jobs N` (size of the layer-job/table-cell worker pool;
 //! default = thread budget, i.e. `AWP_THREADS` or the machine parallelism —
 //! the executor splits the budget so outer workers × inner GEMM threads
-//! stay ≤ it). `repro compress` also takes `--timings` to print the
-//! per-layer executor telemetry. The CLI is hand-rolled (the image has no
-//! argument-parsing crate); see `Args` below.
+//! stay ≤ it), `--cache-dir <dir>` / `--no-cache` (where the calibration
+//! Grams persist; default `cache/grams`), and `--synthetic` (runtime-free
+//! mode for `compress`: untrained checkpoint + synthetic Grams, CPU
+//! methods only — exercises the cache subsystem on machines without AOT
+//! artifacts). `repro compress` also takes `--timings` to print the
+//! per-layer executor telemetry with time- and cost-shares. The CLI is
+//! hand-rolled (the image has no argument-parsing crate); see `Args` below.
 
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
@@ -26,7 +31,7 @@ use awp::compress::awp::AwpHyper;
 use awp::compress::traits::CompressionSpec;
 use awp::config::RunConfig;
 use awp::coordinator::experiments::{self, ExperimentCtx};
-use awp::coordinator::{compress_model_with, make_compressor, Method};
+use awp::coordinator::{compress_model_with, make_compressor, GramCache, Method};
 use awp::data::Split;
 use awp::eval::{generate, perplexity};
 use awp::model::Checkpoint;
@@ -112,7 +117,12 @@ fn main() -> Result<()> {
         std::process::exit(2);
     };
     let cfg = run_config(&args)?;
-    let manifest = Arc::new(Manifest::load(&cfg.paths.artifacts)?);
+    let synthetic = args.get("synthetic").is_some();
+    let manifest = if synthetic {
+        Arc::new(Manifest::synthetic())
+    } else {
+        Arc::new(Manifest::load(&cfg.paths.artifacts)?)
+    };
     let runtime = Runtime::start()?;
     let mut ctx = ExperimentCtx::new(runtime.handle(), manifest.clone(), cfg.clone());
     let jobs = match args.get("jobs") {
@@ -120,6 +130,17 @@ fn main() -> Result<()> {
         None => None,
     };
     ctx.set_jobs(jobs);
+    ctx.set_progress(true);
+    ctx.set_synthetic(synthetic);
+    // calibration-artifact cache: disk layer on by default (cache/grams),
+    // redirected by --cache-dir, disabled by --no-cache
+    let cache_dir = if args.get("no-cache").is_some() {
+        None
+    } else {
+        Some(args.get("cache-dir").map(PathBuf::from)
+                 .unwrap_or_else(|| cfg.paths.gram_cache.clone()))
+    };
+    ctx.set_cache(Arc::new(GramCache::new(cache_dir)));
 
     match cmd.as_str() {
         "info" => {
@@ -177,20 +198,33 @@ fn main() -> Result<()> {
             let exec = ctx.executor();
             let out = compress_model_with(&ck, &grams, compressor.as_ref(), &spec,
                                           true, &exec)?;
-            let dense = ctx.dense_ppl(&model)?;
-            let ppl = ctx.ppl(&model, &out.checkpoint)?;
-            println!("{} {:?}: ppl {dense:.3} → {ppl:.3}  ({:.1}s, {} layers, \
-                      {} workers × {} threads)",
-                     method.label(), spec.mode, out.seconds, out.reports.len(),
-                     exec.workers(), exec.inner_threads());
+            if ctx.synthetic() {
+                // no runtime ⇒ no perplexity; report reconstruction stats
+                let mean_loss = out.reports.iter().map(|r| r.rel_loss).sum::<f64>()
+                    / out.reports.len().max(1) as f64;
+                println!("{} {:?}: mean rel_loss {mean_loss:.4}  ({:.1}s, \
+                          {} layers, {} workers × {} threads) [synthetic]",
+                         method.label(), spec.mode, out.seconds, out.reports.len(),
+                         exec.workers(), exec.inner_threads());
+            } else {
+                let dense = ctx.dense_ppl(&model)?;
+                let ppl = ctx.ppl(&model, &out.checkpoint)?;
+                println!("{} {:?}: ppl {dense:.3} → {ppl:.3}  ({:.1}s, {} layers, \
+                          {} workers × {} threads)",
+                         method.label(), spec.mode, out.seconds, out.reports.len(),
+                         exec.workers(), exec.inner_threads());
+            }
+            let c = ctx.cache().counts();
+            eprintln!("[cache] session counts: {} memory hits, {} disk hits, \
+                       {} misses", c.mem_hits, c.disk_hits, c.misses);
             if args.get("timings").is_some() {
-                let rows: Vec<(String, f64)> = out
+                let rows: Vec<(String, f64, u64)> = out
                     .job_stats
                     .iter()
-                    .map(|s| (s.label.clone(), s.seconds))
+                    .map(|s| (s.label.clone(), s.seconds, s.cost))
                     .collect();
-                println!("{}", awp::report::timing_table("layer-job timings", &rows)
-                                   .to_console());
+                println!("{}", awp::report::timing_table_weighted(
+                                   "layer-job timings", &rows).to_console());
             }
             if let Some(path) = args.get("save") {
                 out.checkpoint.save(path)?;
@@ -224,27 +258,25 @@ fn main() -> Result<()> {
                 other => bail!("--awp-backend {other}? (cpu|hlo)"),
             };
             match which.as_str() {
-                "table1" => { experiments::table1(&mut ctx, awp)?; }
-                "table2" => { experiments::table2(&mut ctx, awp)?; }
-                "table3" => { experiments::table3(&mut ctx, awp)?; }
-                "table4" => { experiments::table4(&mut ctx, awp)?; }
-                "table5" => { experiments::table5(&mut ctx, awp)?; }
+                "table1" => { experiments::table1(&ctx, awp)?; }
+                "table2" => { experiments::table2(&ctx, awp)?; }
+                "table3" => { experiments::table3(&ctx, awp)?; }
+                "table4" => { experiments::table4(&ctx, awp)?; }
+                "table5" => { experiments::table5(&ctx, awp)?; }
                 "fig1" => {
                     let layer = args.get_or("layer", "blocks.1.wq");
                     let ratio = args.get_f64("ratio", 0.5)?;
-                    experiments::fig1(&mut ctx, &layer, ratio)?;
+                    experiments::fig1(&ctx, &layer, ratio)?;
                 }
-                "ablation24" => { experiments::ablation24(&mut ctx)?; }
-                "all" => {
-                    experiments::table1(&mut ctx, awp)?;
-                    experiments::table2(&mut ctx, awp)?;
-                    experiments::table3(&mut ctx, awp)?;
-                    experiments::table4(&mut ctx, awp)?;
-                    experiments::table5(&mut ctx, awp)?;
-                    experiments::fig1(&mut ctx, "blocks.1.wq", 0.5)?;
-                }
+                "ablation24" => { experiments::ablation24(&ctx)?; }
+                // one cross-model schedule: every table's cells through the
+                // shared executor, per-model prep jobs in parallel
+                "all" => { experiments::run_all(&ctx, awp)?; }
                 other => bail!("unknown experiment '{other}'"),
             }
+            let c = ctx.cache().counts();
+            eprintln!("[cache] session counts: {} memory hits, {} disk hits, \
+                       {} misses", c.mem_hits, c.disk_hits, c.misses);
         }
         "e2e" => {
             // end-to-end driver: train → dense ppl → AWP 50% + INT4 joint →

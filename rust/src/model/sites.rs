@@ -31,6 +31,22 @@ impl GramKey {
             GramKey::MlpDownIn => 3,
         }
     }
+
+    /// Inverse of [`GramKey::index`] — used by the calibration-cache codec
+    /// to rebuild keys from their serialized index.
+    pub fn from_index(i: usize) -> Option<GramKey> {
+        match i {
+            0 => Some(GramKey::AttnIn),
+            1 => Some(GramKey::AttnOutIn),
+            2 => Some(GramKey::MlpIn),
+            3 => Some(GramKey::MlpDownIn),
+            _ => None,
+        }
+    }
+
+    /// All four keys in `calib_capture` output order.
+    pub const ALL: [GramKey; 4] =
+        [GramKey::AttnIn, GramKey::AttnOutIn, GramKey::MlpIn, GramKey::MlpDownIn];
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

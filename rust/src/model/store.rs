@@ -166,6 +166,33 @@ impl Checkpoint {
         Ok(Checkpoint { config, tensors, meta })
     }
 
+    /// Content fingerprint over config, tensor layout, tensor bits and
+    /// meta — the checkpoint component of a calibration-cache key
+    /// (`coordinator::cache`). Any change to a weight, the config or the
+    /// metadata yields a different fingerprint, so cached Grams are never
+    /// served for a retrained or edited checkpoint.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::Fnv64::new();
+        h.write_str(&self.config.to_json().to_string());
+        h.write_usize(self.tensors.len());
+        for (name, shape, data) in &self.tensors {
+            h.write_str(name);
+            h.write_usize(shape.len());
+            for &d in shape {
+                h.write_usize(d);
+            }
+            h.write_f32_slice(data);
+        }
+        let mut meta: Vec<(&String, &String)> = self.meta.iter().collect();
+        meta.sort();
+        h.write_usize(meta.len());
+        for (k, v) in meta {
+            h.write_str(k);
+            h.write_str(v);
+        }
+        h.finish()
+    }
+
     /// Verify tensor order/shapes against the config's spec — checkpoints
     /// must be HLO-argument-ready.
     pub fn validate(&self) -> Result<()> {
@@ -242,6 +269,26 @@ mod tests {
     fn set_checks_size() {
         let mut ck = Checkpoint::zeros_like_spec(&cfg());
         assert!(ck.set("embed", vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_content() {
+        let base = Checkpoint::zeros_like_spec(&cfg());
+        let f0 = base.fingerprint();
+        assert_eq!(f0, Checkpoint::zeros_like_spec(&cfg()).fingerprint());
+        // one weight bit changes the fingerprint
+        let mut ck = Checkpoint::zeros_like_spec(&cfg());
+        let n = ck.tensors[2].2.len();
+        ck.set("blocks.0.wq", vec![1.0; n]).unwrap();
+        assert_ne!(f0, ck.fingerprint());
+        // so does metadata
+        let mut ck = Checkpoint::zeros_like_spec(&cfg());
+        ck.meta.insert("steps".into(), "5".into());
+        assert_ne!(f0, ck.fingerprint());
+        // and the config
+        let mut c2 = cfg();
+        c2.rope_theta = 999.0;
+        assert_ne!(f0, Checkpoint::zeros_like_spec(&c2).fingerprint());
     }
 
     #[test]

@@ -135,6 +135,56 @@ pub fn timing_table(title: impl Into<String>, jobs: &[(String, f64)]) -> Table {
     t
 }
 
+/// [`timing_table`] with the executor's cost weights: one row per job with
+/// its wall-clock share *and* its share of the plan's predicted cost
+/// (`Job::cost`). Comparing the two columns shows how well the FLOP-ish
+/// cost model tracks reality — the same model the live progress/ETA line
+/// ([`progress_line`]) is driven by.
+pub fn timing_table_weighted(title: impl Into<String>,
+                             jobs: &[(String, f64, u64)]) -> Table {
+    let total_s: f64 = jobs.iter().map(|(_, s, _)| *s).sum();
+    let total_c: u64 = jobs.iter().map(|(_, _, c)| *c).sum();
+    let mut t = Table::new(title, "job",
+                           vec!["seconds".into(), "time %".into(), "cost %".into()]);
+    for (label, secs, cost) in jobs {
+        let time_share = if total_s > 0.0 { 100.0 * secs / total_s } else { 0.0 };
+        let cost_share = if total_c > 0 {
+            100.0 * *cost as f64 / total_c as f64
+        } else {
+            0.0
+        };
+        t.push_row(label.clone(),
+                   vec![Some(*secs), Some(time_share), Some(cost_share)]);
+    }
+    t.push_row("TOTAL", vec![Some(total_s), Some(100.0), Some(100.0)]);
+    t
+}
+
+/// One cost-weighted progress/ETA line, emitted by the executor as jobs
+/// complete (`Executor::with_progress`). The completed-cost fraction is
+/// the estimator: with LPT scheduling, "80% of the cost done" predicts
+/// remaining wall-clock far better than "80% of the jobs done".
+pub fn progress_line(done_jobs: usize, total_jobs: usize, done_cost: u64,
+                     total_cost: u64, elapsed_s: f64) -> String {
+    let frac = if total_cost > 0 {
+        done_cost as f64 / total_cost as f64
+    } else if total_jobs > 0 {
+        done_jobs as f64 / total_jobs as f64
+    } else {
+        1.0
+    };
+    let eta = if frac > 0.0 && frac < 1.0 {
+        elapsed_s * (1.0 - frac) / frac
+    } else {
+        0.0
+    };
+    format!(
+        "[progress] {done_jobs}/{total_jobs} jobs · {:.1}% of cost · \
+         {elapsed_s:.1}s elapsed · eta {eta:.1}s",
+        100.0 * frac
+    )
+}
+
 /// A simple (x, y) series (Figure 1).
 pub fn series_csv(header: (&str, &str), points: &[(f64, f64)]) -> String {
     let mut out = format!("{},{}\n", header.0, header.1);
@@ -185,6 +235,32 @@ mod tests {
         let empty = timing_table("E", &[]);
         assert_eq!(empty.rows.len(), 1);
         assert_eq!(empty.rows[0].1[0], Some(0.0));
+    }
+
+    #[test]
+    fn weighted_timing_table_has_both_shares() {
+        let t = timing_table_weighted("T", &[("a".into(), 3.0, 900),
+                                             ("b".into(), 1.0, 100)]);
+        assert_eq!(t.rows.len(), 3);
+        assert_eq!(t.rows[0].1[1], Some(75.0)); // time share
+        assert_eq!(t.rows[0].1[2], Some(90.0)); // cost share
+        assert_eq!(t.rows[2].1[0], Some(4.0));
+        let empty = timing_table_weighted("E", &[]);
+        assert_eq!(empty.rows.len(), 1);
+    }
+
+    #[test]
+    fn progress_line_reports_cost_fraction_and_eta() {
+        let s = progress_line(1, 4, 250, 1000, 10.0);
+        assert!(s.contains("1/4 jobs"), "{s}");
+        assert!(s.contains("25.0% of cost"), "{s}");
+        assert!(s.contains("eta 30.0s"), "{s}");
+        // complete run: eta 0
+        let s = progress_line(4, 4, 1000, 1000, 12.0);
+        assert!(s.contains("eta 0.0s"), "{s}");
+        // degenerate zero-cost plan falls back to job counts
+        let s = progress_line(1, 2, 0, 0, 1.0);
+        assert!(s.contains("50.0% of cost"), "{s}");
     }
 
     #[test]

@@ -13,7 +13,6 @@
 //! pipeline (awp-cpu + every baseline) builds and runs on machines without
 //! the native XLA toolchain.
 
-#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -46,6 +45,18 @@ pub struct RuntimeStats {
     pub compilations: u64,
     pub compile_seconds: f64,
     pub exec_seconds: f64,
+    /// execution *attempts* per program name, counted before the program
+    /// runs (so the stub actor records them too). Lets callers assert
+    /// negative properties — e.g. the calibration cache's "a warm run
+    /// submits zero `calib_capture` executions".
+    pub attempts: HashMap<String, u64>,
+}
+
+impl RuntimeStats {
+    /// How many times program `name` was submitted to the actor.
+    pub fn attempts_of(&self, name: &str) -> u64 {
+        self.attempts.get(name).copied().unwrap_or(0)
+    }
 }
 
 /// Cloneable handle to the PJRT actor thread.
@@ -113,10 +124,11 @@ impl RuntimeHandle {
 /// and all baselines) never submits work here.
 #[cfg(not(feature = "pjrt"))]
 fn actor_main(rx: mpsc::Receiver<Msg>) {
-    let stats = RuntimeStats::default();
+    let mut stats = RuntimeStats::default();
     while let Ok(msg) = rx.recv() {
         match msg {
             Msg::Exec { name, reply, .. } => {
+                *stats.attempts.entry(name.clone()).or_insert(0) += 1;
                 let _ = reply.send(Err(anyhow!(
                     "program '{name}': PJRT runtime unavailable (crate built \
                      without the `pjrt` feature); CPU-backend methods do not \
@@ -138,6 +150,7 @@ fn actor_main(rx: mpsc::Receiver<Msg>) {
     while let Ok(msg) = rx.recv() {
         match msg {
             Msg::Exec { name, path, args, reply } => {
+                *stats.attempts.entry(name.clone()).or_insert(0) += 1;
                 let result = (|| -> Result<Vec<HostTensor>> {
                     if state.is_none() {
                         let client = xla::PjRtClient::cpu()

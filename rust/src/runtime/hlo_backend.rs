@@ -5,7 +5,9 @@
 //! the chunk-`n` program plus single-step calls for the remainder, which
 //! composes exactly (verified against the CPU backend in rust/tests/).
 
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{ensure, Result};
 
@@ -19,11 +21,29 @@ use crate::tensor::Matrix;
 pub struct HloBackend {
     pub handle: RuntimeHandle,
     pub manifest: Arc<Manifest>,
+    /// `(mode, d_out, d_in)` → resolved program name + path. A chunked PGD
+    /// run re-enters [`HloBackend::call`] every `chunk` iterations for
+    /// every site; memoizing the manifest resolution keeps those thousands
+    /// of calls out of the name-formatting/lookup path (the actor already
+    /// caches the compiled executable behind the name).
+    programs: Mutex<HashMap<(String, usize, usize), (String, PathBuf)>>,
 }
 
 impl HloBackend {
     pub fn new(handle: RuntimeHandle, manifest: Arc<Manifest>) -> Self {
-        HloBackend { handle, manifest }
+        HloBackend { handle, manifest, programs: Mutex::new(HashMap::new()) }
+    }
+
+    /// Resolve (and memoize) the chunk program for `(mode_name, shape)`.
+    fn program(&self, mode_name: &str, d_out: usize, d_in: usize)
+        -> Result<(String, PathBuf)> {
+        let key = (mode_name.to_string(), d_out, d_in);
+        if let Some(hit) = self.programs.lock().unwrap().get(&key) {
+            return Ok(hit.clone());
+        }
+        let resolved = self.manifest.awp_program(mode_name, d_out, d_in)?;
+        self.programs.lock().unwrap().insert(key, resolved.clone());
+        Ok(resolved)
     }
 
     /// Run one lowered chunk program. `mode` ∈ {prune, quant, joint};
@@ -31,7 +51,7 @@ impl HloBackend {
     fn call(&self, mode: &str, single: bool, w: &Matrix, theta: &Matrix,
             c: &Matrix, mut args: Vec<HostTensor>) -> Result<(Matrix, f64, f64)> {
         let mode_name = if single { format!("{mode}1") } else { mode.to_string() };
-        let (name, path) = self.manifest.awp_program(&mode_name, w.rows, w.cols)?;
+        let (name, path) = self.program(&mode_name, w.rows, w.cols)?;
         let mut full = vec![
             HostTensor::from_matrix(w),
             HostTensor::from_matrix(theta),

@@ -34,6 +34,47 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// A manifest with no AOT artifacts behind it: small model configs and
+    /// empty program tables. Backs `repro … --synthetic` (CI runners
+    /// without `make artifacts`): checkpoint init, the CPU-backend
+    /// compressors and the calibration cache all work; anything that would
+    /// execute an HLO program fails with the stub actor's clear error.
+    /// Dims are multiples of the quant group (32) so every spec mode
+    /// re-projects cleanly.
+    pub fn synthetic() -> Manifest {
+        let mk = |name: &str, d_model: usize, n_heads: usize, n_layers: usize,
+                  d_ff: usize| {
+            let config = ModelConfig {
+                name: name.to_string(),
+                vocab: 256,
+                d_model,
+                n_heads,
+                n_layers,
+                d_ff,
+                seq_len: 32,
+                batch: 2,
+                decode_len: 16,
+                rope_theta: 1e4,
+            };
+            let params = config.param_spec();
+            (name.to_string(), ModelEntry { config, params,
+                                            programs: HashMap::new() })
+        };
+        let models: HashMap<String, ModelEntry> = [
+            mk("tiny", 64, 2, 2, 128),
+            mk("small", 128, 4, 2, 256),
+            mk("medium", 192, 4, 3, 384),
+        ]
+        .into();
+        Manifest {
+            dir: PathBuf::new(),
+            models,
+            awp_chunk: 8,
+            awp_group: 32,
+            awp_programs: HashMap::new(),
+        }
+    }
+
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
@@ -138,6 +179,20 @@ mod tests {
             assert!(path.exists());
         }
         assert!(m.awp_program("prune", 999, 999).is_err());
+    }
+
+    #[test]
+    fn synthetic_manifest_is_self_consistent() {
+        let m = Manifest::synthetic();
+        for name in ["tiny", "small", "medium"] {
+            let e = m.model(name).unwrap();
+            assert_eq!(e.params, e.config.param_spec());
+            assert_eq!(e.config.d_model % m.awp_group, 0, "{name}");
+            assert_eq!(e.config.d_ff % m.awp_group, 0, "{name}");
+            // no AOT programs: the runtime-facing lookups fail cleanly
+            assert!(m.model_program_path(name, "calib_capture").is_err());
+        }
+        assert_eq!(m.awp_group, 32);
     }
 
     #[test]

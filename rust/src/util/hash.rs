@@ -1,0 +1,111 @@
+//! Content hashing for cache keys: FNV-1a 64-bit.
+//!
+//! The build is fully offline (no hashing crates on the image), so the
+//! calibration-artifact cache carries its own hash. FNV-1a is not
+//! cryptographic — the cache only needs *change detection* (checkpoint
+//! fingerprints, calibration-config fingerprints), and every cache file
+//! re-validates its identity fields on load, so a collision degrades to a
+//! recompute, never to wrong data.
+
+/// Incremental FNV-1a 64-bit hasher.
+#[derive(Clone, Debug)]
+pub struct Fnv64(u64);
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+impl Fnv64 {
+    pub fn new() -> Self {
+        Fnv64(FNV_OFFSET)
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        self.0 = h;
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn write_usize(&mut self, v: usize) {
+        self.write_u64(v as u64);
+    }
+
+    /// Hash the bit pattern (covers NaN/-0.0 distinctions deterministically).
+    pub fn write_f64(&mut self, v: f64) {
+        self.write_u64(v.to_bits());
+    }
+
+    /// Length-prefixed so `("ab","c")` and `("a","bc")` hash differently.
+    pub fn write_str(&mut self, s: &str) {
+        self.write_usize(s.len());
+        self.write(s.as_bytes());
+    }
+
+    /// Hash a whole `f32` buffer (little-endian bit patterns).
+    pub fn write_f32_slice(&mut self, data: &[f32]) {
+        self.write_usize(data.len());
+        for v in data {
+            self.write(&v.to_le_bytes());
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64::new()
+    }
+}
+
+/// One-shot convenience.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.write(bytes);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // standard FNV-1a test vectors
+        assert_eq!(fnv64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn deterministic_and_order_sensitive() {
+        let mut a = Fnv64::new();
+        a.write_str("ab");
+        a.write_str("c");
+        let mut b = Fnv64::new();
+        b.write_str("a");
+        b.write_str("bc");
+        assert_ne!(a.finish(), b.finish());
+        let mut c = Fnv64::new();
+        c.write_str("ab");
+        c.write_str("c");
+        assert_eq!(a.finish(), c.finish());
+    }
+
+    #[test]
+    fn f32_slices_hash_bit_patterns() {
+        let mut a = Fnv64::new();
+        a.write_f32_slice(&[1.0, -0.0]);
+        let mut b = Fnv64::new();
+        b.write_f32_slice(&[1.0, 0.0]);
+        assert_ne!(a.finish(), b.finish(), "-0.0 and 0.0 must differ");
+    }
+}

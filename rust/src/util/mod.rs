@@ -1,12 +1,14 @@
 //! Small shared utilities: deterministic RNG, timing, logging helpers.
 
 pub mod bench;
+pub mod hash;
 pub mod json;
 pub mod parallel;
 pub mod rng;
 pub mod tempdir;
 pub mod timer;
 
+pub use hash::Fnv64;
 pub use json::Json;
 pub use rng::Rng;
 pub use timer::Timer;

@@ -1,0 +1,193 @@
+//! Cross-model sweep scheduling contracts (`coordinator::sweep`): with two
+//! synthetic models × two cells each, the parallel schedule must produce
+//! tables identical to the sequential run in plan order, prepare each
+//! model exactly once, and attribute failures to the lowest-index failing
+//! cell (or the failing model's preparation job).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use awp::compress::traits::CompressionSpec;
+use awp::coordinator::{run_tables, sweep_cells, CellRef, Executor, Method, TableSpec};
+use awp::report::Table;
+
+fn table(name: &str, model: &str) -> TableSpec {
+    TableSpec {
+        name: name.into(),
+        model: model.into(),
+        col_header: "method".into(),
+        columns: vec!["50%".into(), "70%".into()],
+        methods: vec![Method::Magnitude],
+        specs: vec![CompressionSpec::prune(0.5), CompressionSpec::prune(0.7)],
+        title_prefix: format!("{name} title"),
+        title_extra: String::new(),
+    }
+}
+
+/// Deterministic synthetic "perplexity" for a cell.
+fn fake_ppl(c: &CellRef) -> f64 {
+    let model_part = c.model.len() as f64;
+    let ratio = match c.spec.mode {
+        awp::compress::traits::CompressionMode::Prune { ratio } => ratio,
+        _ => 0.0,
+    };
+    10.0 * model_part + ratio + c.table as f64
+}
+
+fn render(tables: &[Table]) -> String {
+    tables.iter().map(|t| t.to_console()).collect::<Vec<_>>().join("\n")
+}
+
+#[test]
+fn two_models_by_two_cells_is_plan_order_deterministic() {
+    let tables = [table("t1", "alpha"), table("t2", "beta")];
+    assert_eq!(sweep_cells(&tables).len(), 4);
+
+    let run = |exec: Executor| {
+        run_tables(
+            &exec,
+            &tables,
+            |_m| Ok(()),
+            |c| {
+                // jitter completion order so parallel ≠ submission order
+                std::thread::sleep(std::time::Duration::from_micros(
+                    ((c.table * 7 + 3) % 5) as u64 * 150,
+                ));
+                Ok(fake_ppl(c))
+            },
+            |c| (c.table as u64 + 1) * 100,
+            |t| t.title_prefix.clone(),
+        )
+        .unwrap()
+    };
+
+    let seq = run(Executor::sequential());
+    for workers in [2usize, 4] {
+        let par = run(Executor::with_workers(workers));
+        assert_eq!(render(&seq), render(&par), "workers={workers}");
+    }
+    // values land in the right cells: row-major methods × specs
+    assert_eq!(seq[0].rows[0].1[0], Some(fake_ppl(&sweep_cells(&tables)[0])));
+    assert_eq!(seq[1].rows[0].1[1], Some(fake_ppl(&sweep_cells(&tables)[3])));
+}
+
+#[test]
+fn each_model_prepares_once_even_when_shared_by_tables() {
+    let tables = [table("t1", "alpha"), table("t2", "beta"), table("t3", "alpha")];
+    let preps: Mutex<HashMap<String, usize>> = Mutex::new(HashMap::new());
+    run_tables(
+        &Executor::with_workers(4),
+        &tables,
+        |m| {
+            *preps.lock().unwrap().entry(m.to_string()).or_insert(0) += 1;
+            Ok(())
+        },
+        |c| Ok(fake_ppl(c)),
+        |_c| 1,
+        |t| t.title_prefix.clone(),
+    )
+    .unwrap();
+    let preps = preps.into_inner().unwrap();
+    assert_eq!(preps.len(), 2);
+    assert_eq!(preps["alpha"], 1);
+    assert_eq!(preps["beta"], 1);
+}
+
+#[test]
+fn failing_model_attributes_the_lowest_index_failing_cell() {
+    let tables = [table("t1", "alpha"), table("t2", "beta")];
+    // exactly one cell fails (the second model's first cell, flat index 2):
+    // with a single failure the attribution is deterministic at any worker
+    // count — the error must name that cell's index and label
+    let ratio_of = |c: &CellRef| match c.spec.mode {
+        awp::compress::traits::CompressionMode::Prune { ratio } => ratio,
+        _ => 0.0,
+    };
+    for workers in [1usize, 4] {
+        let err = run_tables(
+            &Executor::with_workers(workers),
+            &tables,
+            |_m| Ok(()),
+            |c| {
+                if c.model == "beta" && ratio_of(c) == 0.5 {
+                    anyhow::bail!("model beta exploded");
+                }
+                Ok(fake_ppl(c))
+            },
+            |_c| 1,
+            |t| t.title_prefix.clone(),
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        // cells are [t1 cell0, t1 cell1, t2 cell0, t2 cell1]
+        assert!(msg.contains("job 2"), "workers={workers}: {msg}");
+        assert!(msg.contains("t2[beta] magnitude prune50"),
+                "workers={workers}: {msg}");
+        assert!(msg.contains("model beta exploded"), "workers={workers}: {msg}");
+    }
+    // with *several* failing cells, the sequential schedule (the reference
+    // the parallel one must match when unraced) still surfaces the lowest
+    let err = run_tables(
+        &Executor::sequential(),
+        &tables,
+        |_m| Ok(()),
+        |c| {
+            if c.model == "beta" {
+                anyhow::bail!("model beta exploded");
+            }
+            Ok(fake_ppl(c))
+        },
+        |_c| 1,
+        |t| t.title_prefix.clone(),
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("job 2"), "{msg}");
+}
+
+#[test]
+fn failing_preparation_names_the_model_before_any_cell_runs() {
+    let tables = [table("t1", "alpha"), table("t2", "beta")];
+    let cells_run = Mutex::new(0usize);
+    let err = run_tables(
+        &Executor::sequential(),
+        &tables,
+        |m| {
+            if m == "beta" {
+                anyhow::bail!("training diverged");
+            }
+            Ok(())
+        },
+        |_c| {
+            *cells_run.lock().unwrap() += 1;
+            Ok(0.0)
+        },
+        |_c| 1,
+        |t| t.title_prefix.clone(),
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("prepare beta"), "{msg}");
+    assert!(msg.contains("training diverged"), "{msg}");
+    assert_eq!(*cells_run.lock().unwrap(), 0, "cells must not start");
+}
+
+#[test]
+fn cost_weights_reach_the_executor_stats() {
+    // run the cell phase directly through the weighted executor to pin
+    // that sweep costs land in JobStats (the ETA line's input)
+    let tables = [table("t1", "alpha")];
+    let cells = sweep_cells(&tables);
+    let rep = Executor::with_workers(2)
+        .run_weighted(
+            cells.len(),
+            |i| (i as u64 + 1) * 10,
+            |i| cells[i].label(&tables),
+            |i| Ok(fake_ppl(&cells[i])),
+        )
+        .unwrap();
+    for (i, s) in rep.stats.iter().enumerate() {
+        assert_eq!(s.cost, (i as u64 + 1) * 10);
+        assert_eq!(s.label, cells[i].label(&tables));
+    }
+}

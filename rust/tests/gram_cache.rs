@@ -1,0 +1,266 @@
+//! The calibration-artifact cache's external contract: bit-exact disk
+//! round-trips, key invalidation on checkpoint/config change, corrupt-file
+//! degradation, and — the property the whole subsystem exists for —
+//! `compress_model` output is bit-identical with a cold cache (Grams
+//! computed) and a warm cache (Grams loaded from disk), while a warm run
+//! never invokes the calibration provider at all.
+
+#![allow(clippy::field_reassign_with_default)]
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use awp::compress::magnitude::MagnitudePrune;
+use awp::compress::traits::CompressionSpec;
+use awp::coordinator::calibrate::{synthetic_grams, Grams};
+use awp::coordinator::{
+    cache, compress_model, CalibSpec, Executor, GramCache, GramCacheKey,
+};
+use awp::config::RunConfig;
+use awp::model::{Checkpoint, ModelConfig};
+use awp::util::tempdir::TempDir;
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "t".into(), vocab: 64, d_model: 32, n_heads: 2, n_layers: 2,
+        d_ff: 64, seq_len: 16, batch: 1, decode_len: 8, rope_theta: 1e4,
+    }
+}
+
+fn key_for(ck: &Checkpoint, provider: &str) -> GramCacheKey {
+    let rc = RunConfig::default();
+    GramCacheKey {
+        model: ck.config.name.clone(),
+        checkpoint: ck.fingerprint(),
+        calib: CalibSpec::from_run(&rc, &ck.config, provider).fingerprint(),
+    }
+}
+
+fn assert_grams_bit_equal(a: &Grams, b: &Grams) {
+    assert_eq!(a.tokens, b.tokens);
+    assert_eq!(a.map.len(), b.map.len());
+    for (k, m) in &a.map {
+        let n = b.map.get(k).unwrap_or_else(|| panic!("missing {k:?}"));
+        assert_eq!(m.shape(), n.shape(), "{k:?}");
+        for (i, (x, y)) in m.data.iter().zip(&n.data).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{k:?}[{i}]");
+        }
+    }
+}
+
+#[test]
+fn disk_round_trip_is_bit_exact() {
+    let dir = TempDir::new("gc").unwrap();
+    let ck = awp::trainer::init_checkpoint(&cfg(), 1);
+    let grams = synthetic_grams(&cfg(), 5);
+    let key = key_for(&ck, "synthetic");
+    cache::store_grams(dir.path(), &key, &grams).unwrap();
+    let back = cache::load_grams(dir.path(), &key).unwrap().unwrap();
+    assert_grams_bit_equal(&grams, &back);
+}
+
+#[test]
+fn key_invalidates_on_checkpoint_and_calib_changes() {
+    let dir = TempDir::new("gc").unwrap();
+    let ck = awp::trainer::init_checkpoint(&cfg(), 1);
+    let grams = synthetic_grams(&cfg(), 5);
+    let key = key_for(&ck, "synthetic");
+    cache::store_grams(dir.path(), &key, &grams).unwrap();
+
+    // a retrained checkpoint (different weights) misses
+    let ck2 = awp::trainer::init_checkpoint(&cfg(), 2);
+    assert_ne!(ck.fingerprint(), ck2.fingerprint());
+    let key2 = key_for(&ck2, "synthetic");
+    assert_ne!(key.hash(), key2.hash());
+    assert!(cache::load_grams(dir.path(), &key2).unwrap().is_none());
+
+    // a changed calibration config misses
+    let mut rc = RunConfig::default();
+    rc.calib_batches += 1;
+    let key3 = GramCacheKey {
+        model: ck.config.name.clone(),
+        checkpoint: ck.fingerprint(),
+        calib: CalibSpec::from_run(&rc, &ck.config, "synthetic").fingerprint(),
+    };
+    assert_ne!(key.hash(), key3.hash());
+    assert!(cache::load_grams(dir.path(), &key3).unwrap().is_none());
+
+    // the original key still hits
+    assert!(cache::load_grams(dir.path(), &key).unwrap().is_some());
+}
+
+#[test]
+fn corrupt_files_degrade_to_recompute() {
+    let dir = TempDir::new("gc").unwrap();
+    let ck = awp::trainer::init_checkpoint(&cfg(), 1);
+    let key = key_for(&ck, "synthetic");
+    std::fs::create_dir_all(dir.path()).unwrap();
+    std::fs::write(dir.path().join(key.file_name()), b"not a cache file").unwrap();
+    let gc = GramCache::new(Some(dir.path().to_path_buf()));
+    let computed = Arc::new(AtomicUsize::new(0));
+    let c2 = computed.clone();
+    let g = gc
+        .get_or_compute(&key, move || {
+            c2.fetch_add(1, Ordering::SeqCst);
+            Ok(synthetic_grams(&cfg(), 5))
+        })
+        .unwrap();
+    assert_eq!(computed.load(Ordering::SeqCst), 1);
+    assert_eq!(g.map.len(), 8);
+    // recompute healed the file: a fresh cache disk-hits without a provider
+    let gc2 = GramCache::new(Some(dir.path().to_path_buf()));
+    let g2 = gc2
+        .get_or_compute(&key, || panic!("provider must not run on a warm cache"))
+        .unwrap();
+    assert_grams_bit_equal(&g, &g2);
+}
+
+#[test]
+fn warm_cache_skips_the_calibration_provider_entirely() {
+    // stands in for "a warm-cache run submits zero calib_capture
+    // executions": the provider closure IS the calibration path, and on a
+    // warm cache it must never run.
+    let dir = TempDir::new("gc").unwrap();
+    let ck = awp::trainer::init_checkpoint(&cfg(), 1);
+    let key = key_for(&ck, "synthetic");
+    let cold = GramCache::new(Some(dir.path().to_path_buf()));
+    cold.get_or_compute(&key, || Ok(synthetic_grams(&cfg(), 5))).unwrap();
+    assert_eq!(cold.counts().misses, 1);
+
+    let warm = GramCache::new(Some(dir.path().to_path_buf()));
+    let g = warm
+        .get_or_compute(&key, || anyhow::bail!("calib_capture executed"))
+        .unwrap();
+    assert!(!g.map.is_empty());
+    let counts = warm.counts();
+    assert_eq!((counts.disk_hits, counts.misses), (1, 0));
+}
+
+#[test]
+fn compress_is_bit_identical_cold_vs_warm() {
+    let dir = TempDir::new("gc").unwrap();
+    let ck = awp::trainer::init_checkpoint(&cfg(), 1);
+    let key = key_for(&ck, "synthetic");
+    let spec = CompressionSpec::prune(0.5);
+
+    // cold: compute + persist
+    let cold_cache = GramCache::new(Some(dir.path().to_path_buf()));
+    let cold_grams = cold_cache
+        .get_or_compute(&key, || Ok(synthetic_grams(&cfg(), 5)))
+        .unwrap();
+    let cold = compress_model(&ck, &cold_grams, &MagnitudePrune, &spec, true).unwrap();
+
+    // warm: a fresh cache loads from disk; provider must not run
+    let warm_cache = GramCache::new(Some(dir.path().to_path_buf()));
+    let warm_grams = warm_cache
+        .get_or_compute(&key, || anyhow::bail!("must not recompute"))
+        .unwrap();
+    assert_grams_bit_equal(&cold_grams, &warm_grams);
+    let warm = compress_model(&ck, &warm_grams, &MagnitudePrune, &spec, true).unwrap();
+
+    assert_eq!(cold.checkpoint.tensors.len(), warm.checkpoint.tensors.len());
+    for ((n1, s1, d1), (n2, s2, d2)) in
+        cold.checkpoint.tensors.iter().zip(&warm.checkpoint.tensors)
+    {
+        assert_eq!((n1, s1), (n2, s2));
+        for (x, y) in d1.iter().zip(d2) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{n1}");
+        }
+    }
+    // and the same holds on a multi-worker executor
+    let warm_par = awp::coordinator::compress_model_with(
+        &ck, &warm_grams, &MagnitudePrune, &spec, true, &Executor::with_workers(4))
+        .unwrap();
+    for ((_, _, d1), (_, _, d2)) in
+        cold.checkpoint.tensors.iter().zip(&warm_par.checkpoint.tensors)
+    {
+        assert_eq!(d1, d2);
+    }
+}
+
+#[test]
+fn concurrent_callers_share_one_computation() {
+    let gc = Arc::new(GramCache::memory_only());
+    let ck = awp::trainer::init_checkpoint(&cfg(), 1);
+    let key = key_for(&ck, "synthetic");
+    let calls = Arc::new(AtomicUsize::new(0));
+    let mut grams: Vec<Arc<Grams>> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for _ in 0..6 {
+            let (gc, key, calls) = (gc.clone(), key.clone(), calls.clone());
+            handles.push(s.spawn(move || {
+                gc.get_or_compute(&key, || {
+                    calls.fetch_add(1, Ordering::SeqCst);
+                    Ok(synthetic_grams(&cfg(), 5))
+                })
+                .unwrap()
+            }));
+        }
+        for h in handles {
+            grams.push(h.join().unwrap());
+        }
+    });
+    assert_eq!(calls.load(Ordering::SeqCst), 1);
+    // all callers share the same Arc allocation
+    for g in &grams {
+        assert!(Arc::ptr_eq(g, &grams[0]));
+    }
+}
+
+#[test]
+fn warm_cache_submits_zero_calib_capture_executions_to_the_runtime() {
+    use awp::coordinator::calibrate;
+    use awp::data::Batch;
+    use awp::runtime::{Manifest, Runtime};
+
+    // a manifest whose 'tiny' model *has* a calib_capture entry, so a real
+    // calibration attempt reaches the PJRT actor (the stub actor counts
+    // the attempt, then fails — there is no XLA toolchain in tests)
+    let mut manifest = Manifest::synthetic();
+    manifest
+        .models
+        .get_mut("tiny")
+        .unwrap()
+        .programs
+        .insert("calib_capture".into(), "missing.hlo.txt".into());
+    let mc = manifest.model("tiny").unwrap().config.clone();
+    let ck = awp::trainer::init_checkpoint(&mc, 3);
+    let batches = vec![Batch { batch: 1, seq: 4, tokens: vec![0; 4] }];
+
+    let runtime = Runtime::start().unwrap();
+    let handle = runtime.handle();
+
+    // control: a cold calibration does submit calib_capture to the actor
+    assert!(calibrate(&handle, &manifest, "tiny", &ck, &batches).is_err());
+    assert_eq!(handle.stats().unwrap().attempts_of("calib_capture"), 1);
+
+    // warm cache: the same calibration request is served from disk and the
+    // actor sees no new calib_capture submission
+    let dir = TempDir::new("gc").unwrap();
+    let key = GramCacheKey {
+        model: "tiny".into(),
+        checkpoint: ck.fingerprint(),
+        calib: CalibSpec::from_run(&RunConfig::default(), &mc, "calib_capture")
+            .fingerprint(),
+    };
+    cache::store_grams(dir.path(), &key, &synthetic_grams(&mc, 9)).unwrap();
+    let gc = GramCache::new(Some(dir.path().to_path_buf()));
+    let g = gc
+        .get_or_compute(&key, || calibrate(&handle, &manifest, "tiny", &ck, &batches))
+        .unwrap();
+    assert!(!g.map.is_empty());
+    assert_eq!(handle.stats().unwrap().attempts_of("calib_capture"), 1,
+               "warm run must not submit calib_capture");
+    assert_eq!(gc.counts().disk_hits, 1);
+}
+
+#[test]
+fn cache_file_names_are_filesystem_safe() {
+    let key = GramCacheKey { model: "we/ird mo:del".into(), checkpoint: 1, calib: 2 };
+    let name = key.file_name();
+    assert!(!name.contains('/') && !name.contains(':'), "{name}");
+    assert!(name.ends_with(".grams"));
+    assert!(PathBuf::from(&name).components().count() == 1, "{name}");
+}
