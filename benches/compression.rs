@@ -119,6 +119,61 @@ fn main() {
         }
     }
 
+    println!("\n== PGD inner loop: preallocated workspace vs per-iteration alloc ==");
+    {
+        // the projection-subsystem tentpole: the workspace ping-pongs two
+        // preallocated buffers (zero Matrix allocations per iteration),
+        // where the historical path allocated a gradient matrix, a top-k
+        // mask and a projected copy every iteration. Same arithmetic —
+        // the delta is pure allocator/memory traffic.
+        use awp::proj::{GroupedIntGrid, Intersect, PgdWorkspace, RowTopK};
+        use awp::tensor::{ops, topk};
+
+        let (m, k) = (256usize, 256usize);
+        let w = Matrix::randn(m, k, 11);
+        let c = Matrix::randn_gram(k, 12);
+        let th0 = topk::hard_threshold_rows(&w, k / 2);
+        let eta = (2.0 / c.frob_norm()) as f32;
+        let iters = 50;
+
+        let prune = RowTopK::new(k / 2);
+        bench(&format!("pgd-loop workspace prune {m}x{k} x{iters}"), 1.0, || {
+            let mut ws = PgdWorkspace::new(th0.clone());
+            for _ in 0..iters {
+                ws.step(&w, &c, eta, &prune);
+            }
+        });
+        bench(&format!("pgd-loop alloc-baseline prune {m}x{k} x{iters}"), 1.0, || {
+            let mut th = th0.clone();
+            for _ in 0..iters {
+                let z = ops::pgd_step(&w, &th, &c, eta);
+                th = topk::hard_threshold_rows(&z, k / 2);
+            }
+        });
+
+        let joint = Intersect::new(RowTopK::new(k / 2), GroupedIntGrid::new(15.0, 32));
+        bench(&format!("pgd-loop workspace joint {m}x{k} x{iters}"), 1.0, || {
+            let mut ws = PgdWorkspace::new(th0.clone());
+            for _ in 0..iters {
+                ws.step(&w, &c, eta, &joint);
+            }
+        });
+        bench(&format!("pgd-loop alloc-baseline joint {m}x{k} x{iters}"), 1.0, || {
+            let mut th = th0.clone();
+            for _ in 0..iters {
+                let z = ops::pgd_step(&w, &th, &c, eta);
+                let zp = topk::hard_threshold_rows(&z, k / 2);
+                let mut zq = awp::quant::project_qmax(&zp, 15.0, 32);
+                for (q, p) in zq.data.iter_mut().zip(&zp.data) {
+                    if *p == 0.0 {
+                        *q = 0.0;
+                    }
+                }
+                th = zq;
+            }
+        });
+    }
+
     println!("\n== §3 cost scaling: AWP per-iteration GEMM vs Hessian inverse ==");
     for &d in &[128usize, 256, 512, 1024] {
         let w = Matrix::randn(128, d, 7);

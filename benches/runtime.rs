@@ -10,6 +10,7 @@ use std::sync::Arc;
 
 use awp::compress::awp::AwpBackend;
 use awp::compress::CpuBackend;
+use awp::proj::RowTopK;
 use awp::runtime::{HloBackend, HostTensor, Manifest, Runtime};
 use awp::tensor::Matrix;
 use awp::trainer::init_checkpoint;
@@ -33,11 +34,12 @@ fn main() -> anyhow::Result<()> {
         let th = Matrix::zeros(m, k);
         let c = Matrix::randn_gram(k, 1);
         let eta = (2.0 / c.frob_norm()) as f32;
+        let proj = RowTopK::new(k / 2);
         bench(&format!("hlo awp_prune chunk8 {m}x{k}"), 1.5, || {
-            hlo.prune_chunk(&w, &th, &c, eta, k / 2, 8).unwrap();
+            hlo.step_chunk_from(&w, &th, &c, eta, &proj, 8).unwrap();
         });
         bench(&format!("cpu awp_prune chunk8 {m}x{k}"), 1.5, || {
-            cpu.prune_chunk(&w, &th, &c, eta, k / 2, 8).unwrap();
+            cpu.step_chunk_from(&w, &th, &c, eta, &proj, 8).unwrap();
         });
     }
 

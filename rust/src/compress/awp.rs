@@ -8,51 +8,50 @@
 //! * `runtime::HloBackend` — the production path: the chunked PGD programs
 //!   AOT-compiled from the L2/L1 JAX+Pallas stack, executed via PJRT.
 //!
-//! Both expose *chunked* iteration (n PGD steps per call returning the
-//! iterate plus `‖(W−Θ)C‖_F/‖W‖_F` and the Figure-1 rel-loss), so the
-//! driver logic — init, step size, stopping rule, §4.3 ramp schedule, best-
-//! iterate tracking — is written once and tested once.
+//! Both expose one *chunked* primitive, [`AwpBackend::step_chunk`]: `iters`
+//! iterations of `Θ ← Proj(Θ + η(W−Θ)C)` for an arbitrary
+//! [`Projection`], operating on a [`PgdWorkspace`] (two preallocated
+//! ping-pong buffers — the inner loop allocates nothing after warm-up) and
+//! returning `‖(W−Θ)C‖_F/‖W‖_F` plus the Figure-1 rel-loss. The driver
+//! logic — init, step size, stopping rule, §4.3 ramp schedule, best-
+//! iterate tracking — is written once and parameterised by the projection,
+//! so pruning (row-k or N:M), quantization and every intersection share
+//! one code path.
 
 use anyhow::Result;
 
-use super::schedule::{JointPhase, JointSchedule};
+use super::schedule::JointSchedule;
 use super::traits::{
     CompressStats, CompressedLayer, CompressionMode, CompressionSpec, LayerCompressor,
 };
 use super::wanda;
-use crate::quant;
+use crate::proj::{GroupedIntGrid, Intersect, NmStructured, PgdWorkspace, Projection, RowTopK};
+use crate::quant::{self, QuantSpec};
 use crate::tensor::{ops, Matrix};
 use crate::util::Timer;
 
 /// Chunked-PGD compute backend (CPU mirror or AOT/PJRT).
 pub trait AwpBackend: Send + Sync {
-    /// `iters` iterations of `Θ ← H_k(Θ + η(W−Θ)C)`.
-    /// Returns `(Θ', rel_grad, rel_loss)`.
-    fn prune_chunk(&self, w: &Matrix, theta: &Matrix, c: &Matrix, eta: f32,
-                   k: usize, iters: usize) -> Result<(Matrix, f64, f64)>;
-
-    /// `iters` iterations of `Θ ← Proj_INT(Θ + η(W−Θ)C)`.
-    fn quant_chunk(&self, w: &Matrix, theta: &Matrix, c: &Matrix, eta: f32,
-                   qmax: f32, group: usize, iters: usize)
-        -> Result<(Matrix, f64, f64)>;
-
-    /// `iters` iterations of `Θ ← Proj_INT(Proj_row(Θ + η(W−Θ)C))` with the
-    /// pruning mask re-applied after quantization. `qmax <= 0` disables the
-    /// quantization projection (pure pruning — used by the ramp phase).
-    fn joint_chunk(&self, w: &Matrix, theta: &Matrix, c: &Matrix, eta: f32,
-                   k: usize, qmax: f32, group: usize, iters: usize)
-        -> Result<(Matrix, f64, f64)>;
-
-    /// `iters` iterations with the 2:4 structured projection (paper §5
-    /// future work). Optional: only the CPU backend implements it (the AOT
-    /// artifact set covers the paper's evaluated constraint sets).
-    fn prune24_chunk(&self, _w: &Matrix, _theta: &Matrix, _c: &Matrix,
-                     _eta: f32, _iters: usize) -> Result<(Matrix, f64, f64)> {
-        anyhow::bail!("2:4 structured pruning is not supported by this backend \
-                       (use awp-cpu)")
-    }
+    /// `iters` iterations of `Θ ← Proj(Θ + η(W−Θ)C)` on the workspace's
+    /// current iterate, in place. Returns `(rel_grad, rel_loss)` =
+    /// `(‖(W−Θ)C‖_F/‖W‖_F, ‖(W−Θ)C½‖_F/‖W‖_F)` at the final iterate.
+    ///
+    /// Backends without a lowering for `proj` (see [`Projection::kind`])
+    /// fail with a clear error pointing at the CPU backend.
+    fn step_chunk(&self, w: &Matrix, c: &Matrix, eta: f32, proj: &dyn Projection,
+                  iters: usize, ws: &mut PgdWorkspace) -> Result<(f64, f64)>;
 
     fn backend_name(&self) -> &'static str;
+
+    /// Convenience for tests and one-off callers: one chunk from an
+    /// explicit iterate, allocating a fresh workspace.
+    fn step_chunk_from(&self, w: &Matrix, theta: &Matrix, c: &Matrix, eta: f32,
+                       proj: &dyn Projection, iters: usize)
+        -> Result<(Matrix, f64, f64)> {
+        let mut ws = PgdWorkspace::new(theta.clone());
+        let (g, l) = self.step_chunk(w, c, eta, proj, iters, &mut ws)?;
+        Ok((ws.into_theta(), g, l))
+    }
 }
 
 /// Hyper-parameters, defaults straight from the paper's §4.
@@ -113,30 +112,40 @@ impl<B: AwpBackend> AwpDriver<B> {
         ops::activation_loss(w, theta, c).sqrt() / w.frob_norm().max(1e-30)
     }
 
+    /// Best-iterate tracking shared by the joint drivers: keep the lowest
+    /// rel-loss iterate seen, reusing the kept buffer's allocation on
+    /// updates (`clone_from`).
+    fn track_best(best: &mut Option<(f64, Matrix)>, rel_loss: f64, theta: &Matrix) {
+        if best.as_ref().map_or(true, |(b, _)| rel_loss < *b) {
+            match best {
+                Some((bl, bm)) => {
+                    *bl = rel_loss;
+                    bm.clone_from(theta);
+                }
+                None => *best = Some((rel_loss, theta.clone())),
+            }
+        }
+    }
+
     /// The shared §4.1 IHT driver loop: chunked backend steps from `init`
-    /// with the paper's step size and stopping rule (rel-grad < tol or 200
-    /// iters), optional per-iteration series tracking. `step(θ, iters)`
-    /// performs `iters` backend iterations and returns
-    /// `(Θ', rel_grad, rel_loss)` — the only thing that differs between
-    /// the row-k and 2:4 constraint sets.
-    fn run_iht<S>(&self, w: &Matrix, c: &Matrix, init: Matrix, step: S)
-        -> Result<(Matrix, CompressStats)>
-    where
-        S: Fn(&Matrix, usize) -> Result<(Matrix, f64, f64)>,
-    {
+    /// under `proj`, with the paper's stopping rule (rel-grad < tol or 200
+    /// iters) and optional per-iteration series tracking. The constraint
+    /// set (row-k vs N:M) is entirely the projection's business.
+    fn run_iht(&self, w: &Matrix, c: &Matrix, init: Matrix, eta: f32,
+               proj: &dyn Projection) -> Result<(Matrix, CompressStats)> {
         let h = &self.hyper;
-        let mut theta = init;
+        let mut ws = PgdWorkspace::new(init);
         let mut series = Vec::new();
         if h.track_series {
-            series.push(Self::rel_loss(w, &theta, c));
+            series.push(Self::rel_loss(w, ws.theta(), c));
         }
         let chunk = if h.track_series { 1 } else { h.chunk.max(1) };
         let mut iters = 0usize;
         let mut rel = f64::MAX;
         while iters < h.prune_max_iters {
             let n = chunk.min(h.prune_max_iters - iters);
-            let (t2, rel_grad, rel_loss) = step(&theta, n)?;
-            theta = t2;
+            let (rel_grad, rel_loss) =
+                self.backend.step_chunk(w, c, eta, proj, n, &mut ws)?;
             iters += n;
             rel = rel_grad;
             if h.track_series {
@@ -146,54 +155,106 @@ impl<B: AwpBackend> AwpDriver<B> {
                 break;
             }
         }
-        Ok((theta, CompressStats { iterations: iters, loss_series: series,
-                                   rel_loss: rel, ..Default::default() }))
+        Ok((ws.into_theta(),
+            CompressStats { iterations: iters, loss_series: series,
+                            rel_loss: rel, ..Default::default() }))
     }
 
     /// §4.1 pruning: Wanda init, η = 2/‖C‖_F, stop at tol or 200 iters.
     fn run_prune(&self, w: &Matrix, c: &Matrix, k: usize)
         -> Result<(Matrix, CompressStats)> {
         let eta = (self.hyper.prune_eta_scale / c.frob_norm().max(1e-30)) as f32;
-        self.run_iht(w, c, wanda::wanda_prune(w, c, k), |theta, iters| {
-            self.backend.prune_chunk(w, theta, c, eta, k, iters)
-        })
+        self.run_iht(w, c, wanda::wanda_prune(w, c, k), eta, &RowTopK::new(k))
     }
 
-    /// §5 future-work extension: IHT with the 2:4 structured projection,
-    /// initialised from the Wanda-2:4 mask; same step size / stopping rule
-    /// as §4.1 pruning.
-    fn run_prune24(&self, w: &Matrix, c: &Matrix) -> Result<(Matrix, CompressStats)> {
+    /// §5 future-work extension generalised: IHT with an N:M structured
+    /// projection, initialised from the Wanda-N:M mask; same step size /
+    /// stopping rule as §4.1 pruning. `(2, 4)` is the NVIDIA pattern.
+    fn run_prune_nm(&self, w: &Matrix, c: &Matrix, n: usize, m: usize)
+        -> Result<(Matrix, CompressStats)> {
         let eta = (self.hyper.prune_eta_scale / c.frob_norm().max(1e-30)) as f32;
-        self.run_iht(w, c, wanda::wanda_prune_2_4(w, c), |theta, iters| {
-            self.backend.prune24_chunk(w, theta, c, eta, iters)
-        })
+        self.run_iht(w, c, wanda::wanda_prune_nm(w, c, n, m), eta,
+                     &NmStructured::new(n, m))
     }
 
     /// §4.2 quantization: RTN init, η = 1.5/‖C‖_F, 10 iterations, keeping
     /// the best iterate by rel-loss (the raw sequence can drift once the
-    /// re-fitted grid stops improving; see python/tests/test_awp.py).
-    fn run_quant(&self, w: &Matrix, c: &Matrix, qmax: f32)
+    /// re-fitted grid stops improving; see python/tests/test_awp.py). The
+    /// series is collected only under `track_series`, and the best iterate
+    /// is kept via `clone_from` into one reused buffer — the loop performs
+    /// no per-iteration allocations beyond that buffer's warm-up.
+    fn run_quant(&self, w: &Matrix, c: &Matrix, qs: QuantSpec)
         -> Result<(Matrix, CompressStats)> {
         let h = &self.hyper;
         let eta = (h.quant_eta_scale / c.frob_norm().max(1e-30)) as f32;
-        let spec = quant::QuantSpec::new(qmax_bits(qmax), h.group);
-        let mut theta = quant::quantize_dequantize(w, spec);
-        let mut best = theta.clone();
-        let mut best_loss = Self::rel_loss(w, &theta, c);
-        let mut series = vec![best_loss];
+        let proj = GroupedIntGrid::new(qs.qmax(), h.group);
+        let init = quant::quantize_dequantize(w, QuantSpec::new(qs.bits, h.group));
+        let mut ws = PgdWorkspace::new(init);
+        let mut best_loss = Self::rel_loss(w, ws.theta(), c);
+        let mut best = ws.theta().clone();
+        let mut series = if h.track_series { vec![best_loss] } else { Vec::new() };
         for _ in 0..h.quant_iters {
-            let (t2, _g, rel_loss) =
-                self.backend.quant_chunk(w, &theta, c, eta, qmax, h.group, 1)?;
-            theta = t2;
-            series.push(rel_loss);
+            let (_g, rel_loss) = self.backend.step_chunk(w, c, eta, &proj, 1, &mut ws)?;
+            if h.track_series {
+                series.push(rel_loss);
+            }
             if rel_loss < best_loss {
                 best_loss = rel_loss;
-                best = theta.clone();
+                best.clone_from(ws.theta());
             }
         }
         Ok((best, CompressStats {
             iterations: h.quant_iters,
-            loss_series: if h.track_series { series } else { Vec::new() },
+            loss_series: series,
+            ..Default::default()
+        }))
+    }
+
+    /// The §4.3 hold → joint tail shared by both joint drivers: sparse-only
+    /// PGD from iteration `start` up to `prune_only_iters`, then
+    /// sparse ∩ grid to `total_iters`, tracking the best joint-phase
+    /// iterate. `sparse` is the constraint's sparsity half (row-top-k at
+    /// the target ratio, or N:M); chunks never straddle the phase change.
+    fn run_joint_phases<S: Projection + Copy>(
+        &self, w: &Matrix, c: &Matrix, eta: f32, qmax: f32, sparse: S,
+        mut ws: PgdWorkspace, start: usize, mut series: Vec<f64>,
+    ) -> Result<(Matrix, CompressStats)> {
+        let h = &self.hyper;
+        let hold_end = h.joint.prune_only_iters.clamp(start, h.joint.total_iters);
+        let mut best: Option<(f64, Matrix)> = None;
+        let mut it = start;
+        while it < h.joint.total_iters {
+            let joint_phase = it >= hold_end;
+            let mut step = if joint_phase {
+                h.chunk.max(1).min(h.joint.total_iters - it)
+            } else {
+                h.chunk.max(1).min(hold_end - it)
+            };
+            if h.track_series {
+                step = 1;
+            }
+            let rel_loss = if joint_phase {
+                let proj = Intersect::new(sparse,
+                                          GroupedIntGrid::new(qmax.max(1.0), h.group));
+                self.backend.step_chunk(w, c, eta, &proj, step, &mut ws)?.1
+            } else {
+                self.backend.step_chunk(w, c, eta, &sparse, step, &mut ws)?.1
+            };
+            it += step;
+            if h.track_series {
+                series.push(rel_loss);
+            }
+            if joint_phase {
+                Self::track_best(&mut best, rel_loss, ws.theta());
+            }
+        }
+        let theta = match best {
+            Some((_, t)) => t,
+            None => ws.into_theta(),
+        };
+        Ok((theta, CompressStats {
+            iterations: h.joint.total_iters,
+            loss_series: series,
             ..Default::default()
         }))
     }
@@ -208,65 +269,57 @@ impl<B: AwpBackend> AwpDriver<B> {
     /// Consistent with the paper's own §4.1 convention ("initialize Θ(0) as
     /// the solution of Wanda"), the ramp anneals through Wanda solutions at
     /// the scheduled ratio; PGD takes over from iteration 25 exactly as
-    /// written.
-    fn run_joint(&self, w: &Matrix, c: &Matrix, k: usize, qmax: f32)
+    /// written. The prune-hold phase routes through the plain row-top-k
+    /// projection and the joint phase through the intersection operator —
+    /// identical arithmetic to the historical `qmax = 0` switch.
+    fn run_joint(&self, w: &Matrix, c: &Matrix, k: usize, qs: QuantSpec)
         -> Result<(Matrix, CompressStats)> {
         let h = &self.hyper;
         let eta = (h.quant_eta_scale / c.frob_norm().max(1e-30)) as f32;
-        let mut theta = w.clone();
-        let mut best: Option<(f64, Matrix)> = None;
+        let mut ws = PgdWorkspace::new(w.clone());
         let mut series = Vec::new();
-        let mut it = 0usize;
-        while it < h.joint.total_iters {
-            let phase = h.joint.phase(it);
-            let k_now = h.joint.k_at(it, w.cols, k);
-            if phase == JointPhase::Ramp {
-                // annealed Wanda schedule (activation-aware mask at k_now)
-                theta = wanda::wanda_prune(w, c, k_now);
-                if h.track_series {
-                    series.push(Self::rel_loss(w, &theta, c));
-                }
-                it += 1;
-                continue;
-            }
-            // chunk must not straddle a phase change
-            let mut step = match phase {
-                JointPhase::Ramp => unreachable!(),
-                JointPhase::PruneHold => {
-                    h.chunk.min(h.joint.prune_only_iters - it)
-                }
-                JointPhase::Joint => h.chunk.min(h.joint.total_iters - it),
-            };
+        // annealed Wanda schedule (activation-aware mask at the ramped k);
+        // after the ramp k_at is pinned to the target k
+        let ramp = h.joint.ramp_iters.min(h.joint.total_iters);
+        for it in 0..ramp {
+            ws.install(wanda::wanda_prune(w, c, h.joint.k_at(it, w.cols, k)));
             if h.track_series {
-                step = 1;
-            }
-            let q_now = if phase == JointPhase::Joint { qmax } else { 0.0 };
-            let (t2, _g, rel_loss) =
-                self.backend.joint_chunk(w, &theta, c, eta, k_now, q_now, h.group, step)?;
-            theta = t2;
-            it += step;
-            if h.track_series {
-                series.push(rel_loss);
-            }
-            if phase == JointPhase::Joint
-                && best.as_ref().map_or(true, |(b, _)| rel_loss < *b)
-            {
-                best = Some((rel_loss, theta.clone()));
+                series.push(Self::rel_loss(w, ws.theta(), c));
             }
         }
-        let theta = best.map(|(_, t)| t).unwrap_or(theta);
-        Ok((theta, CompressStats {
-            iterations: h.joint.total_iters,
-            loss_series: series,
-            ..Default::default()
-        }))
+        self.run_joint_phases(w, c, eta, qs.qmax(), RowTopK::new(k), ws, ramp, series)
+    }
+
+    /// Joint N:M + INT grid (§5 extension of §4.3): the N:M pattern fixes
+    /// sparsity at `1 − n/m`, so there is no ratio ramp — the schedule
+    /// collapses to the Wanda-N:M init, then the shared hold → joint tail.
+    fn run_joint_nm(&self, w: &Matrix, c: &Matrix, n: usize, m: usize,
+                    qs: QuantSpec) -> Result<(Matrix, CompressStats)> {
+        let h = &self.hyper;
+        let eta = (h.quant_eta_scale / c.frob_norm().max(1e-30)) as f32;
+        let ws = PgdWorkspace::new(wanda::wanda_prune_nm(w, c, n, m));
+        let mut series = Vec::new();
+        if h.track_series {
+            series.push(Self::rel_loss(w, ws.theta(), c));
+        }
+        self.run_joint_phases(w, c, eta, qs.qmax(), NmStructured::new(n, m), ws, 0,
+                              series)
     }
 }
 
-/// bits for a `2^b − 1` qmax (inverse of `QuantSpec::qmax`)
-pub fn qmax_bits(qmax: f32) -> u8 {
-    let b = ((qmax + 1.0).log2()).round() as i32;
-    b.clamp(1, 8) as u8
+/// bits for a `2^b − 1` qmax (inverse of `QuantSpec::qmax`). Fails loudly
+/// on a qmax that is not exactly `2^b − 1` for some `b ∈ 1..=8` — a
+/// mismatched `QuantSpec` must error, not silently compress at the nearest
+/// in-range bit-width. The HLO backend runs this before handing a qmax
+/// scalar to the AOT quant/joint programs (`runtime::hlo_backend`).
+pub fn qmax_bits(qmax: f32) -> Result<u8> {
+    for b in 1..=8u8 {
+        if qmax == ((1u32 << b) - 1) as f32 {
+            return Ok(b);
+        }
+    }
+    anyhow::bail!("qmax {qmax} is not 2^b - 1 for any b in 1..=8 — \
+                   mismatched QuantSpec?")
 }
 
 impl<B: AwpBackend> LayerCompressor for AwpDriver<B> {
@@ -284,13 +337,17 @@ impl<B: AwpBackend> LayerCompressor for AwpDriver<B> {
             CompressionMode::Quant { spec: qs } => {
                 assert_eq!(qs.group, self.hyper.group,
                            "quant group must match AOT artifacts");
-                self.run_quant(w, c, qs.qmax())?
+                self.run_quant(w, c, qs)?
             }
             CompressionMode::Joint { spec: qs, .. } => {
                 assert_eq!(qs.group, self.hyper.group);
-                self.run_joint(w, c, spec.keep_k(w.cols).unwrap(), qs.qmax())?
+                self.run_joint(w, c, spec.keep_k(w.cols).unwrap(), qs)?
             }
-            CompressionMode::Structured24 => self.run_prune24(w, c)?,
+            CompressionMode::StructuredNm { n, m } => self.run_prune_nm(w, c, n, m)?,
+            CompressionMode::JointNm { n, m, spec: qs } => {
+                assert_eq!(qs.group, self.hyper.group);
+                self.run_joint_nm(w, c, n, m, qs)?
+            }
         };
         let mut out = CompressedLayer::from_theta(w, c, theta, partial.iterations,
                                                   t.elapsed_s());
@@ -307,7 +364,14 @@ mod tests {
     fn qmax_bits_roundtrip() {
         for bits in 1..=8u8 {
             let qmax = ((1u32 << bits) - 1) as f32;
-            assert_eq!(qmax_bits(qmax), bits);
+            assert_eq!(qmax_bits(qmax).unwrap(), bits);
+        }
+    }
+
+    #[test]
+    fn qmax_bits_rejects_off_grid_values() {
+        for bad in [0.0f32, 2.0, 14.0, 16.0, 254.99, 1000.0] {
+            assert!(qmax_bits(bad).is_err(), "qmax {bad} must be rejected");
         }
     }
 }

@@ -6,6 +6,7 @@
 use anyhow::{bail, Result};
 
 use super::traits::{CompressedLayer, CompressionMode, CompressionSpec, LayerCompressor};
+use crate::proj::{NmStructured, ProjScratch, Projection};
 use crate::tensor::{topk, Matrix};
 use crate::util::Timer;
 
@@ -24,8 +25,13 @@ impl LayerCompressor for MagnitudePrune {
             CompressionMode::Prune { .. } => {
                 topk::hard_threshold_rows(w, spec.keep_k(w.cols).unwrap())
             }
-            CompressionMode::Structured24 => crate::sparse::project_2_4(w),
-            _ => bail!("magnitude pruning supports Prune/Structured24 only"),
+            CompressionMode::StructuredNm { n, m } => {
+                let mut theta = w.clone();
+                NmStructured::new(n, m)
+                    .project_rows(&mut theta, &mut ProjScratch::new());
+                theta
+            }
+            _ => bail!("magnitude pruning supports Prune/StructuredNm only"),
         };
         Ok(CompressedLayer::from_theta(w, c, theta, 0, t.elapsed_s()))
     }

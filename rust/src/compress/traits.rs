@@ -2,11 +2,16 @@
 
 use anyhow::Result;
 
+use crate::proj::{GroupedIntGrid, Intersect, NmStructured, Projection, RowTopK};
 use crate::quant::QuantSpec;
 use crate::tensor::{ops, Matrix};
 
 /// What to do to a layer. Ratios are *pruning ratios* `p` (fraction of zeros
 /// per row), matching the paper's tables; `k = (1-p)·d_in` per eq. (6).
+///
+/// Each mode names a constraint set; [`CompressionSpec::projection`]
+/// resolves it to the [`Projection`] operator the PGD core and the
+/// verifier share.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum CompressionMode {
     /// row-k-sparse (`C_row`, eq. 5)
@@ -15,9 +20,13 @@ pub enum CompressionMode {
     Quant { spec: QuantSpec },
     /// intersection (§4.3)
     Joint { ratio: f64, spec: QuantSpec },
-    /// NVIDIA 2:4 semi-structured sparsity (paper §5 future work): at most
-    /// 2 non-zeros in every aligned group of 4 along `d_in` (fixed 50%)
-    Structured24,
+    /// N:M semi-structured sparsity (paper §5 future work, generalised from
+    /// NVIDIA's 2:4): at most `n` non-zeros in every aligned group of `m`
+    /// along `d_in` (fixed sparsity `1 − n/m`)
+    StructuredNm { n: usize, m: usize },
+    /// N:M sparsity ∩ INT grid (the §4.3 intersection with a structured
+    /// sparsity half)
+    JointNm { n: usize, m: usize, spec: QuantSpec },
 }
 
 /// A compression request for one layer.
@@ -54,19 +63,62 @@ impl CompressionSpec {
             CompressionMode::Prune { ratio } | CompressionMode::Joint { ratio, .. } => {
                 Some((((1.0 - ratio) * d_in as f64).round() as usize).clamp(1, d_in))
             }
-            CompressionMode::Quant { .. } | CompressionMode::Structured24 => None,
+            CompressionMode::Quant { .. }
+            | CompressionMode::StructuredNm { .. }
+            | CompressionMode::JointNm { .. } => None,
         }
     }
 
     pub fn quant_spec(&self) -> Option<QuantSpec> {
         match self.mode {
-            CompressionMode::Quant { spec } | CompressionMode::Joint { spec, .. } => Some(spec),
-            CompressionMode::Prune { .. } | CompressionMode::Structured24 => None,
+            CompressionMode::Quant { spec }
+            | CompressionMode::Joint { spec, .. }
+            | CompressionMode::JointNm { spec, .. } => Some(spec),
+            CompressionMode::Prune { .. } | CompressionMode::StructuredNm { .. } => None,
         }
     }
 
+    /// N:M at the NVIDIA 2:4 pattern (kept for the §5 ablations).
     pub fn structured24() -> Self {
-        CompressionSpec { mode: CompressionMode::Structured24, seed: 0 }
+        CompressionSpec::structured_nm(2, 4)
+    }
+
+    pub fn structured_nm(n: usize, m: usize) -> Self {
+        assert!(NmStructured::valid(n, m), "N:M needs 1 <= N <= M, got {n}:{m}");
+        CompressionSpec { mode: CompressionMode::StructuredNm { n, m }, seed: 0 }
+    }
+
+    pub fn joint_nm(n: usize, m: usize, bits: u8, group: usize) -> Self {
+        assert!(NmStructured::valid(n, m), "N:M needs 1 <= N <= M, got {n}:{m}");
+        CompressionSpec {
+            mode: CompressionMode::JointNm { n, m, spec: QuantSpec::new(bits, group) },
+            seed: 0,
+        }
+    }
+
+    /// Resolve this spec's constraint set to its projection operator
+    /// (`d_in` fixes the per-row keep count). The single resolution the
+    /// driver, the verifier ([`check_constraints`]) and the tests share.
+    pub fn projection(&self, d_in: usize) -> Box<dyn Projection> {
+        match self.mode {
+            CompressionMode::Prune { .. } => {
+                Box::new(RowTopK::new(self.keep_k(d_in).unwrap()))
+            }
+            CompressionMode::Quant { spec } => {
+                Box::new(GroupedIntGrid::new(spec.qmax(), spec.group))
+            }
+            CompressionMode::Joint { spec, .. } => Box::new(Intersect::new(
+                RowTopK::new(self.keep_k(d_in).unwrap()),
+                GroupedIntGrid::new(spec.qmax(), spec.group),
+            )),
+            CompressionMode::StructuredNm { n, m } => {
+                Box::new(NmStructured::new(n, m))
+            }
+            CompressionMode::JointNm { n, m, spec } => Box::new(Intersect::new(
+                NmStructured::new(n, m),
+                GroupedIntGrid::new(spec.qmax(), spec.group),
+            )),
+        }
     }
 }
 
@@ -138,41 +190,23 @@ pub fn verification_spec(compressor: &dyn LayerCompressor, spec: &CompressionSpe
         return Some(*spec);
     }
     match spec.mode {
-        CompressionMode::Prune { .. } | CompressionMode::Structured24 => Some(*spec),
+        CompressionMode::Prune { .. } | CompressionMode::StructuredNm { .. } => {
+            Some(*spec)
+        }
         CompressionMode::Joint { ratio, .. } => Some(CompressionSpec::prune(ratio)),
+        CompressionMode::JointNm { n, m, .. } => {
+            Some(CompressionSpec::structured_nm(n, m))
+        }
         CompressionMode::Quant { .. } => None,
     }
 }
 
 /// Verify that `theta` satisfies `spec`'s constraint set (used by tests and
-/// the coordinator's assembly-time assertions).
+/// the coordinator's assembly-time assertions). Routes through
+/// [`CompressionSpec::projection`] → [`Projection::check`], so every mode —
+/// including new operators — is checked by the same code that projects.
 pub fn check_constraints(theta: &Matrix, spec: &CompressionSpec) -> Result<()> {
-    use anyhow::bail;
-    if let Some(k) = spec.keep_k(theta.cols) {
-        for i in 0..theta.rows {
-            let nnz = theta.row(i).iter().filter(|&&v| v != 0.0).count();
-            if nnz > k {
-                bail!("row {i} has {nnz} > k={k} nonzeros");
-            }
-        }
-    }
-    if matches!(spec.mode, CompressionMode::Structured24)
-        && !crate::sparse::check_2_4(theta)
-    {
-        bail!("2:4 pattern violated");
-    }
-    if let Some(qs) = spec.quant_spec() {
-        // Re-projection must be (nearly) a no-op. For Joint, zeros from the
-        // sparsity mask are off-grid but exact-zero is always representable
-        // (integer zero-point), so check only non-zero entries.
-        let reproj = crate::quant::quantize_dequantize(theta, qs);
-        for (i, (a, b)) in theta.data.iter().zip(&reproj.data).enumerate() {
-            if *a != 0.0 && (a - b).abs() > 1e-4 * a.abs().max(1e-3) {
-                bail!("entry {i} off-grid: {a} vs reprojected {b}");
-            }
-        }
-    }
-    Ok(())
+    spec.projection(theta.cols).check(theta)
 }
 
 #[cfg(test)]
@@ -196,6 +230,45 @@ mod tests {
         let s = CompressionSpec::joint(0.75, 4, 32);
         assert_eq!(s.keep_k(128), Some(32));
         assert_eq!(s.quant_spec().unwrap().bits, 4);
+    }
+
+    #[test]
+    fn nm_modes_resolve() {
+        let s = CompressionSpec::structured24();
+        assert_eq!(s.mode, CompressionMode::StructuredNm { n: 2, m: 4 });
+        assert_eq!(s.keep_k(64), None);
+        assert!(s.quant_spec().is_none());
+        let j = CompressionSpec::joint_nm(4, 8, 4, 32);
+        assert_eq!(j.quant_spec().unwrap().bits, 4);
+        assert_eq!(j.projection(64).describe(),
+                   "nm(4:8) ∩ int-grid(qmax=15, group=32)");
+    }
+
+    #[test]
+    fn projection_resolution_matches_modes() {
+        assert_eq!(CompressionSpec::prune(0.5).projection(64).describe(),
+                   "row-topk(k=32)");
+        assert_eq!(CompressionSpec::quant(3, 32).projection(64).describe(),
+                   "int-grid(qmax=7, group=32)");
+        assert_eq!(CompressionSpec::joint(0.75, 2, 16).projection(64).describe(),
+                   "row-topk(k=16) ∩ int-grid(qmax=3, group=16)");
+        assert_eq!(CompressionSpec::structured_nm(1, 4).projection(64).describe(),
+                   "nm(1:4)");
+    }
+
+    #[test]
+    fn check_constraints_covers_nm_modes() {
+        let theta = Matrix::randn(4, 16, 3);
+        assert!(check_constraints(&theta, &CompressionSpec::structured24()).is_err());
+        let s24 = crate::sparse::project_2_4(&theta);
+        check_constraints(&s24, &CompressionSpec::structured24()).unwrap();
+        // joint N:M: pattern + grid on the non-zeros
+        let spec = CompressionSpec::joint_nm(2, 4, 4, 16);
+        assert!(check_constraints(&s24, &spec).is_err());
+        let mut both = s24.clone();
+        spec.projection(both.cols)
+            .project_rows(&mut both, &mut crate::proj::ProjScratch::new());
+        check_constraints(&both, &spec).unwrap();
     }
 
     #[test]

@@ -36,25 +36,32 @@ pub fn wanda_prune(w: &Matrix, c: &Matrix, k: usize) -> Matrix {
     theta
 }
 
-/// Wanda with the 2:4 pattern (paper §5 / Wanda's own semi-structured
-/// variant): per aligned quad, keep the 2 entries with the largest
-/// activation-scaled scores.
-pub fn wanda_prune_2_4(w: &Matrix, c: &Matrix) -> Matrix {
+/// Wanda with an N:M pattern (paper §5 / Wanda's own semi-structured
+/// variant, generalised): per aligned group of `m`, keep the `n` entries
+/// with the largest activation-scaled scores. The AWP driver uses this as
+/// the initialiser for N:M-constrained PGD.
+pub fn wanda_prune_nm(w: &Matrix, c: &Matrix, n: usize, m: usize) -> Matrix {
+    assert!(n >= 1 && m >= 2 && n <= m, "N:M needs 1 <= N <= M, got {n}:{m}");
     let scores = wanda_scores(w, c);
     let mut theta = w.clone();
     for i in 0..w.rows {
         let srow = scores.row(i);
         let trow = theta.row_mut(i);
-        for g in (0..srow.len()).step_by(4) {
-            let end = (g + 4).min(srow.len());
+        for g in (0..srow.len()).step_by(m) {
+            let end = (g + m).min(srow.len());
             let mut idx: Vec<usize> = (g..end).collect();
             idx.sort_by(|&a, &b| srow[b].partial_cmp(&srow[a]).unwrap());
-            for &j in idx.iter().skip(2) {
+            for &j in idx.iter().skip(n) {
                 trow[j] = 0.0;
             }
         }
     }
     theta
+}
+
+/// [`wanda_prune_nm`] at the NVIDIA 2:4 pattern.
+pub fn wanda_prune_2_4(w: &Matrix, c: &Matrix) -> Matrix {
+    wanda_prune_nm(w, c, 2, 4)
 }
 
 impl LayerCompressor for WandaPrune {
@@ -69,8 +76,8 @@ impl LayerCompressor for WandaPrune {
             CompressionMode::Prune { .. } => {
                 wanda_prune(w, c, spec.keep_k(w.cols).unwrap())
             }
-            CompressionMode::Structured24 => wanda_prune_2_4(w, c),
-            _ => bail!("wanda supports Prune/Structured24 (use sequential for combos)"),
+            CompressionMode::StructuredNm { n, m } => wanda_prune_nm(w, c, n, m),
+            _ => bail!("wanda supports Prune/StructuredNm (use sequential for combos)"),
         };
         Ok(CompressedLayer::from_theta(w, c, theta, 0, t.elapsed_s()))
     }

@@ -37,7 +37,10 @@ pub fn spec_tag(spec: &CompressionSpec) -> String {
         CompressionMode::Joint { ratio, spec } => {
             format!("joint{:.0}+int{}", ratio * 100.0, spec.bits)
         }
-        CompressionMode::Structured24 => "2:4".into(),
+        CompressionMode::StructuredNm { n, m } => format!("{n}:{m}"),
+        CompressionMode::JointNm { n, m, spec } => {
+            format!("{n}:{m}+int{}", spec.bits)
+        }
     }
 }
 

@@ -62,6 +62,22 @@
 //! then every table's cells interleave on the same pool, cost-weighted by
 //! `Job::cost` for the live progress/ETA line ([`coordinator::sweep`]).
 //!
+//! ## Projection operators
+//!
+//! Pruning and quantization are one algorithm — PGD — differing only in
+//! the projection applied after each gradient step. [`proj`] makes that
+//! literal: every constraint set ([`proj::RowTopK`], [`proj::NmStructured`]
+//! for arbitrary N:M incl. 2:4, [`proj::GroupedIntGrid`], and their
+//! [`proj::Intersect`]) implements the [`proj::Projection`] trait, and the
+//! AWP backends expose a single `step_chunk` driven through a
+//! [`proj::PgdWorkspace`] — two preallocated ping-pong buffers, so the PGD
+//! inner loop performs **zero `Matrix` allocations** after warm-up.
+//! `CompressionSpec::projection` resolves a spec to its operator; the
+//! pipeline verifier (`compress::traits::check_constraints`) and the HLO
+//! backend's AOT-program lowering consume the same resolution. See
+//! `PROJECTIONS.md` for the catalog, the projection laws the tests sweep,
+//! and how to add an operator.
+//!
 //! ## Quick tour
 //!
 //! ```no_run
@@ -100,6 +116,7 @@ pub mod data;
 pub mod eval;
 pub mod linalg;
 pub mod model;
+pub mod proj;
 pub mod quant;
 pub mod report;
 pub mod runtime;

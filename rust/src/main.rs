@@ -4,6 +4,9 @@
 //! repro train   --model small [--steps N]
 //! repro eval    --model small [--checkpoint path]
 //! repro compress --model small --method awp --mode prune --ratio 0.5 [--bits 4]
+//!               # --mode also takes nm:N:M (semi-structured sparsity, e.g.
+//!               # nm:2:4, nm:4:8) and jointnm:N:M (N:M ∩ INT grid from
+//!               # --bits/--group); N:M runs on the CPU backend (awp-cpu)
 //! repro generate --model small --prompt "..." [--tokens N]
 //! repro experiment table1|table2|table3|table4|table5|fig1|all [--awp-backend cpu|hlo]
 //! repro e2e     # end-to-end driver: train → eval → compress → eval
@@ -97,6 +100,19 @@ fn run_config(args: &Args) -> Result<RunConfig> {
     Ok(cfg)
 }
 
+/// `"N:M"` → `(n, m)` with the projection subsystem's validity rule.
+fn parse_nm(s: &str) -> Result<(usize, usize)> {
+    let (n, m) = s
+        .split_once(':')
+        .with_context(|| format!("'{s}' is not of the form N:M"))?;
+    let n: usize = n.parse().with_context(|| format!("N in '{s}'"))?;
+    let m: usize = m.parse().with_context(|| format!("M in '{s}'"))?;
+    if !awp::proj::NmStructured::valid(n, m) {
+        bail!("N:M needs 1 <= N <= M and M >= 2, got {n}:{m}");
+    }
+    Ok((n, m))
+}
+
 fn spec_from_args(args: &Args) -> Result<CompressionSpec> {
     let mode = args.get_or("mode", "prune");
     let ratio = args.get_f64("ratio", 0.5)?;
@@ -106,7 +122,18 @@ fn spec_from_args(args: &Args) -> Result<CompressionSpec> {
         "prune" => CompressionSpec::prune(ratio),
         "quant" => CompressionSpec::quant(bits, group),
         "joint" => CompressionSpec::joint(ratio, bits, group),
-        other => bail!("unknown --mode '{other}' (prune|quant|joint)"),
+        // N:M semi-structured sparsity, e.g. nm:2:4, nm:4:8; jointnm:N:M
+        // intersects the pattern with the INT grid from --bits/--group
+        s if s.starts_with("nm:") => {
+            let (n, m) = parse_nm(&s["nm:".len()..])?;
+            CompressionSpec::structured_nm(n, m)
+        }
+        s if s.starts_with("jointnm:") => {
+            let (n, m) = parse_nm(&s["jointnm:".len()..])?;
+            CompressionSpec::joint_nm(n, m, bits, group)
+        }
+        other => bail!("unknown --mode '{other}' \
+                        (prune|quant|joint|nm:N:M|jointnm:N:M)"),
     })
 }
 

@@ -1,0 +1,147 @@
+//! `Proj_INT` — the grouped affine INT grid (`C_INTb`), in place and
+//! bit-identical to [`crate::quant::project_qmax`] (the CPU mirror of the
+//! L1 Pallas kernel `python/compile/kernels/quant_project.py`).
+
+use anyhow::{bail, Result};
+
+use super::{ProjKind, ProjScratch, Projection};
+use crate::tensor::Matrix;
+
+/// Per-group min/max-fitted affine grid with `qmax + 1` levels and an
+/// integer zero-point (zero is exactly representable whenever a group
+/// straddles 0 — what lets pruned weights survive the grid in §4.3).
+///
+/// `group` is clamped to the matrix width at application time (matching
+/// the historical `group.min(d_in)` of the CPU backend), so micro-shapes
+/// narrower than the configured group still project; the configured value
+/// is what backend lowering validates against the AOT artifacts.
+#[derive(Clone, Copy, Debug)]
+pub struct GroupedIntGrid {
+    qmax: f32,
+    group: usize,
+}
+
+impl GroupedIntGrid {
+    pub fn new(qmax: f32, group: usize) -> Self {
+        assert!(qmax >= 1.0, "qmax must be >= 1, got {qmax}");
+        assert!(group >= 1, "group must be >= 1");
+        GroupedIntGrid { qmax, group }
+    }
+
+    pub fn qmax(&self) -> f32 {
+        self.qmax
+    }
+
+    pub fn group(&self) -> usize {
+        self.group
+    }
+}
+
+impl Projection for GroupedIntGrid {
+    fn name(&self) -> &'static str {
+        "int-grid"
+    }
+
+    fn describe(&self) -> String {
+        format!("int-grid(qmax={}, group={})", self.qmax, self.group)
+    }
+
+    fn project_rows(&self, z: &mut Matrix, _scratch: &mut ProjScratch) {
+        let group = self.group.min(z.cols);
+        assert_eq!(z.cols % group, 0,
+                   "d_in={} not a multiple of group={group}", z.cols);
+        let qmax = self.qmax;
+        for i in 0..z.rows {
+            let row = z.row_mut(i);
+            for g in (0..row.len()).step_by(group) {
+                let s = &mut row[g..g + group];
+                let lo = s.iter().cloned().fold(f32::MAX, f32::min);
+                let hi = s.iter().cloned().fold(f32::MIN, f32::max);
+                let scale = (hi - lo) / qmax;
+                if scale > 0.0 {
+                    let zp = (-lo / scale).round_ties_even();
+                    for v in s.iter_mut() {
+                        let q = ((*v / scale).round_ties_even() + zp)
+                            .clamp(0.0, qmax);
+                        *v = (q - zp) * scale;
+                    }
+                } else {
+                    // flat group: single grid point
+                    for v in s.iter_mut() {
+                        *v = lo;
+                    }
+                }
+            }
+        }
+    }
+
+    fn check(&self, theta: &Matrix) -> Result<()> {
+        // Re-projection must be (nearly) a no-op. Zeros are skipped: under
+        // an intersection with a sparsity set they are off the min/max-
+        // refitted grid, but exact zero is always representable (integer
+        // zero-point), so only non-zero entries are meaningful here.
+        let mut re = theta.clone();
+        self.project_rows(&mut re, &mut ProjScratch::new());
+        for (i, (a, b)) in theta.data.iter().zip(&re.data).enumerate() {
+            if *a != 0.0 && (a - b).abs() > 1e-4 * a.abs().max(1e-3) {
+                bail!("entry {i} off-grid: {a} vs reprojected {b}");
+            }
+        }
+        Ok(())
+    }
+
+    fn kind(&self) -> ProjKind<'_> {
+        ProjKind::IntGrid { qmax: self.qmax, group: self.group }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant;
+
+    #[test]
+    fn matches_project_qmax() {
+        for seed in 0..6u64 {
+            let z = Matrix::randn(7, 64, seed);
+            for bits in [2u32, 3, 4] {
+                let qmax = (1u32 << bits) as f32 - 1.0;
+                let want = quant::project_qmax(&z, qmax, 32);
+                let mut got = z.clone();
+                GroupedIntGrid::new(qmax, 32)
+                    .project_rows(&mut got, &mut ProjScratch::new());
+                assert_eq!(got.data, want.data, "seed={seed} bits={bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn group_clamps_to_width() {
+        // 16-wide matrix with group 32: one group per row (historical
+        // group.min(d_in) behaviour)
+        let z = Matrix::randn(3, 16, 1);
+        let want = quant::project_qmax(&z, 15.0, 16);
+        let mut got = z.clone();
+        GroupedIntGrid::new(15.0, 32).project_rows(&mut got, &mut ProjScratch::new());
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn check_accepts_own_output_rejects_raw() {
+        let z = Matrix::randn(4, 32, 2);
+        let grid = GroupedIntGrid::new(7.0, 16);
+        assert!(grid.check(&z).is_err());
+        let mut q = z.clone();
+        grid.project_rows(&mut q, &mut ProjScratch::new());
+        grid.check(&q).unwrap();
+    }
+
+    #[test]
+    fn flat_group_survives() {
+        let mut z = Matrix::from_fn(2, 16, |_, _| 0.7);
+        GroupedIntGrid::new(15.0, 16).project_rows(&mut z, &mut ProjScratch::new());
+        for v in &z.data {
+            assert_eq!(*v, 0.7);
+        }
+    }
+}

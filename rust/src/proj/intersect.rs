@@ -1,0 +1,119 @@
+//! The §4.3 intersection — a sparsity set ∩ the INT grid, with the
+//! sparsity mask re-applied after the grid projection so zeros survive
+//! (exact zero is always representable; grid values near zero are not
+//! necessarily *at* zero, hence the explicit re-mask).
+//!
+//! Replaces the inline zip loop that used to live in
+//! `compress::awp_cpu::joint_chunk`; bit-identity with that composition is
+//! pinned in `rust/tests/proj_laws.rs`.
+
+use anyhow::Result;
+
+use super::{GroupedIntGrid, ProjKind, ProjScratch, Projection};
+use crate::tensor::Matrix;
+
+/// `Proj_INT ∘ Proj_sparse` with mask survival: project onto the sparsity
+/// set, snapshot the zero pattern, project onto the grid, then re-zero the
+/// masked entries. Generic over the sparsity half so both `C_row` (joint
+/// unstructured) and N:M (joint semi-structured) compose with the grid.
+pub struct Intersect<S: Projection> {
+    sparse: S,
+    grid: GroupedIntGrid,
+}
+
+impl<S: Projection> Intersect<S> {
+    pub fn new(sparse: S, grid: GroupedIntGrid) -> Self {
+        Intersect { sparse, grid }
+    }
+
+    pub fn sparse(&self) -> &S {
+        &self.sparse
+    }
+
+    pub fn grid(&self) -> &GroupedIntGrid {
+        &self.grid
+    }
+}
+
+impl<S: Projection> Projection for Intersect<S> {
+    fn name(&self) -> &'static str {
+        "intersect"
+    }
+
+    fn describe(&self) -> String {
+        format!("{} ∩ {}", self.sparse.describe(), self.grid.describe())
+    }
+
+    fn project_rows(&self, z: &mut Matrix, scratch: &mut ProjScratch) {
+        self.sparse.project_rows(z, scratch);
+        // snapshot the zero pattern: these entries must survive the grid
+        let len = z.data.len();
+        scratch.ensure_mask(len);
+        for (m, v) in scratch.mask[..len].iter_mut().zip(&z.data) {
+            *m = *v == 0.0;
+        }
+        self.grid.project_rows(z, scratch);
+        for (v, m) in z.data.iter_mut().zip(&scratch.mask[..len]) {
+            if *m {
+                *v = 0.0;
+            }
+        }
+    }
+
+    fn check(&self, theta: &Matrix) -> Result<()> {
+        self.sparse.check(theta)?;
+        self.grid.check(theta)
+    }
+
+    fn kind(&self) -> ProjKind<'_> {
+        ProjKind::Intersect { sparse: &self.sparse, grid: &self.grid }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proj::{NmStructured, RowTopK};
+    use crate::quant;
+    use crate::tensor::topk;
+
+    #[test]
+    fn matches_inline_joint_composition() {
+        // the exact composition joint_chunk used to inline
+        for seed in 0..6u64 {
+            let z = Matrix::randn(8, 64, seed);
+            let zp = topk::hard_threshold_rows(&z, 16);
+            let mut want = quant::project_qmax(&zp, 15.0, 32);
+            for (q, p) in want.data.iter_mut().zip(&zp.data) {
+                if *p == 0.0 {
+                    *q = 0.0;
+                }
+            }
+            let mut got = z.clone();
+            Intersect::new(RowTopK::new(16), GroupedIntGrid::new(15.0, 32))
+                .project_rows(&mut got, &mut ProjScratch::new());
+            assert_eq!(got.data, want.data, "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn zeros_survive_the_grid() {
+        let z = Matrix::randn(6, 32, 9);
+        let mut p = z.clone();
+        let proj = Intersect::new(NmStructured::new(2, 4),
+                                  GroupedIntGrid::new(3.0, 16));
+        proj.project_rows(&mut p, &mut ProjScratch::new());
+        proj.check(&p).unwrap();
+        // at least the N:M sparsity (the coarse INT2 grid may round small
+        // survivors to its zero level, never the other way)
+        assert!(p.sparsity() >= 0.5 - 1e-9, "sparsity {}", p.sparsity());
+        // every entry the N:M half zeroed is still exactly zero
+        let mut nm_only = z.clone();
+        NmStructured::new(2, 4).project_rows(&mut nm_only, &mut ProjScratch::new());
+        for (s, j) in nm_only.data.iter().zip(&p.data) {
+            if *s == 0.0 {
+                assert_eq!(*j, 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! Projection operators — the first-class constraint-set subsystem.
+//!
+//! The paper's central insight is that activation-aware pruning and
+//! quantization are *one* algorithm, projected gradient descent, differing
+//! only in the projection operator applied after each gradient step:
+//!
+//! ```text
+//! Θ ← Proj_C(Θ + η(W−Θ)C)
+//! ```
+//!
+//! This module makes `Proj_C` a value. Every constraint set the crate knows
+//! implements [`Projection`]; the AWP driver, the backends and the pipeline
+//! verifier all route through it, so adding a constraint set means adding
+//! one type here instead of touching driver/backend/verifier/CLI:
+//!
+//! | operator            | constraint set                    | paper     |
+//! |---------------------|-----------------------------------|-----------|
+//! | [`RowTopK`]         | `C_row`: ≤ k nonzeros per row     | eq. (5)   |
+//! | [`NmStructured`]    | ≤ n nonzeros per aligned m-group  | §5 (2:4)  |
+//! | [`GroupedIntGrid`]  | `C_INTb`: grouped affine INT grid | §4.2      |
+//! | [`Intersect`]       | sparsity ∩ grid (mask survives)   | §4.3      |
+//!
+//! Projections mutate their input **in place** and take a [`ProjScratch`]
+//! for any per-row working memory, so the PGD inner loop — driven through
+//! [`PgdWorkspace`] — performs zero `Matrix` allocations after warm-up
+//! (see `PROJECTIONS.md` for the catalog, laws and extension guide).
+//!
+//! Semantics are pinned: [`RowTopK`] is bit-identical to
+//! [`crate::tensor::topk::hard_threshold_rows`], [`NmStructured::new`]`(2,4)`
+//! to [`crate::sparse::project_2_4`], [`GroupedIntGrid`] to
+//! [`crate::quant::project_qmax`], and [`Intersect`] to the §4.3 joint
+//! composition (`rust/tests/proj_laws.rs` enforces all four).
+
+pub mod grid;
+pub mod intersect;
+pub mod nm;
+pub mod row_topk;
+pub mod workspace;
+
+pub use grid::GroupedIntGrid;
+pub use intersect::Intersect;
+pub use nm::NmStructured;
+pub use row_topk::RowTopK;
+pub use workspace::PgdWorkspace;
+
+use anyhow::Result;
+
+use crate::tensor::Matrix;
+
+/// A projection onto a constraint set `C`: `z ← argmin_{θ ∈ C} ‖θ − z‖_F`,
+/// applied row-wise and in place.
+///
+/// Implementations must be:
+/// * **idempotent** — `proj(proj(z)) == proj(z)`;
+/// * **allocation-free** after scratch warm-up — per-row working memory
+///   comes from the caller's [`ProjScratch`], never from fresh `Vec`s;
+/// * **deterministic** — ties broken by column order, so outputs are
+///   reproducible across runs and worker counts.
+///
+/// `rust/tests/proj_laws.rs` sweeps these laws for every operator.
+pub trait Projection: Send + Sync {
+    /// Short stable identifier (e.g. `"row-topk"`).
+    fn name(&self) -> &'static str;
+
+    /// Human-readable parameterisation (e.g. `"nm(2:4)"`), used in error
+    /// messages and backend-lowering diagnostics.
+    fn describe(&self) -> String;
+
+    /// Project `z` onto the constraint set, in place.
+    fn project_rows(&self, z: &mut Matrix, scratch: &mut ProjScratch);
+
+    /// Verify that `theta` lies in the constraint set (the pipeline's
+    /// `verify` pass and the tests' oracle).
+    fn check(&self, theta: &Matrix) -> Result<()>;
+
+    /// Structured view for backends that lower projections to AOT programs
+    /// (`runtime::HloBackend`). The default is [`ProjKind::Opaque`]: the
+    /// operator runs on the CPU backend only.
+    fn kind(&self) -> ProjKind<'_> {
+        ProjKind::Opaque
+    }
+}
+
+/// Structured description of a projection, consumed by the HLO backend to
+/// pick the matching AOT chunk program (`prune`/`quant`/`joint`). New
+/// operators without an AOT artifact stay [`ProjKind::Opaque`] and are
+/// CPU-only until lowered.
+#[derive(Clone, Copy)]
+pub enum ProjKind<'a> {
+    /// per-row top-k hard thresholding (`H_k`)
+    RowTopK { k: usize },
+    /// N:M semi-structured sparsity
+    Nm { n: usize, m: usize },
+    /// grouped affine INT grid (`Proj_INT`)
+    IntGrid { qmax: f32, group: usize },
+    /// sparsity ∩ grid with mask re-application
+    Intersect {
+        sparse: &'a dyn Projection,
+        grid: &'a dyn Projection,
+    },
+    /// no structured lowering — CPU backend only
+    Opaque,
+}
+
+/// Reusable per-call working memory for projections. Buffers grow on first
+/// use and are reused afterwards, so a warmed-up scratch makes every
+/// projection allocation-free; [`ProjScratch::grow_events`] counts the
+/// warm-up growths (the workspace's allocation audit reads it).
+#[derive(Default)]
+pub struct ProjScratch {
+    /// row-length f32 buffer (RowTopK's |.| quickselect)
+    pub(crate) vals: Vec<f32>,
+    /// group-length index buffer (NmStructured's per-group argsort)
+    pub(crate) idx: Vec<usize>,
+    /// matrix-sized zero-pattern snapshot (Intersect's mask re-application)
+    pub(crate) mask: Vec<bool>,
+    grows: usize,
+}
+
+impl ProjScratch {
+    pub fn new() -> Self {
+        ProjScratch::default()
+    }
+
+    /// f32 buffer of length `n` (grown once, reused afterwards).
+    pub(crate) fn vals(&mut self, n: usize) -> &mut [f32] {
+        if self.vals.len() < n {
+            self.vals.resize(n, 0.0);
+            self.grows += 1;
+        }
+        &mut self.vals[..n]
+    }
+
+    /// index buffer of length `n`.
+    pub(crate) fn idx(&mut self, n: usize) -> &mut [usize] {
+        if self.idx.len() < n {
+            self.idx.resize(n, 0);
+            self.grows += 1;
+        }
+        &mut self.idx[..n]
+    }
+
+    /// Ensure the zero-pattern mask holds `n` entries; callers index
+    /// `self.mask[..n]` directly afterwards.
+    pub(crate) fn ensure_mask(&mut self, n: usize) {
+        if self.mask.len() < n {
+            self.mask.resize(n, false);
+            self.grows += 1;
+        }
+    }
+
+    /// How many times any buffer grew — stable after warm-up.
+    pub fn grow_events(&self) -> usize {
+        self.grows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scratch_grows_once_per_buffer() {
+        let mut s = ProjScratch::new();
+        assert_eq!(s.grow_events(), 0);
+        s.vals(16);
+        s.vals(16);
+        s.vals(8); // smaller: no growth
+        assert_eq!(s.grow_events(), 1);
+        s.idx(4);
+        s.ensure_mask(64);
+        let g = s.grow_events();
+        s.idx(4);
+        s.ensure_mask(64);
+        assert_eq!(s.grow_events(), g);
+        s.vals(32); // larger: grows again
+        assert_eq!(s.grow_events(), g + 1);
+    }
+
+    #[test]
+    fn describe_strings_are_informative() {
+        assert_eq!(RowTopK::new(8).describe(), "row-topk(k=8)");
+        assert_eq!(NmStructured::new(2, 4).describe(), "nm(2:4)");
+        assert_eq!(GroupedIntGrid::new(15.0, 32).describe(),
+                   "int-grid(qmax=15, group=32)");
+        let i = Intersect::new(NmStructured::new(4, 8),
+                               GroupedIntGrid::new(15.0, 32));
+        assert_eq!(i.describe(), "nm(4:8) ∩ int-grid(qmax=15, group=32)");
+    }
+}

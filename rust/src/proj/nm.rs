@@ -1,0 +1,145 @@
+//! N:M semi-structured sparsity — the generalisation of the paper's §5
+//! future-work 2:4 pattern: in every aligned group of `m` consecutive
+//! weights along `d_in`, at most `n` are non-zero.
+//!
+//! `NmStructured::new(2, 4)` is bit-identical to
+//! [`crate::sparse::project_2_4`] on `d_in % 4 == 0` inputs (pinned in
+//! `rust/tests/proj_laws.rs`); unlike that reference it also handles tail
+//! groups (`d_in % m != 0`), keeping `min(n, tail)` entries there.
+
+use anyhow::{bail, Result};
+
+use super::{ProjKind, ProjScratch, Projection};
+use crate::tensor::Matrix;
+
+/// Keep the `n` largest-|.| entries of every aligned `m`-group per row.
+/// Ties are broken by column order (stable sort), matching `project_2_4`.
+#[derive(Clone, Copy, Debug)]
+pub struct NmStructured {
+    n: usize,
+    m: usize,
+}
+
+impl NmStructured {
+    /// The one N:M validity rule every construction path shares
+    /// (spec constructors, CLI parsing, this type's own `new`).
+    pub fn valid(n: usize, m: usize) -> bool {
+        n >= 1 && m >= 2 && n <= m
+    }
+
+    pub fn new(n: usize, m: usize) -> Self {
+        assert!(Self::valid(n, m), "N:M needs 1 <= N <= M, M >= 2; got {n}:{m}");
+        NmStructured { n, m }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+}
+
+impl Projection for NmStructured {
+    fn name(&self) -> &'static str {
+        "nm"
+    }
+
+    fn describe(&self) -> String {
+        format!("nm({}:{})", self.n, self.m)
+    }
+
+    fn project_rows(&self, z: &mut Matrix, scratch: &mut ProjScratch) {
+        let (rows, cols) = z.shape();
+        for i in 0..rows {
+            let row = &mut z.data[i * cols..(i + 1) * cols];
+            for g in (0..cols).step_by(self.m) {
+                let end = (g + self.m).min(cols);
+                let quad = &mut row[g..end];
+                if quad.len() <= self.n {
+                    continue; // tail shorter than n: nothing to drop
+                }
+                let idx = scratch.idx(quad.len());
+                for (t, s) in idx.iter_mut().enumerate() {
+                    *s = t;
+                }
+                // stable descending-|.| sort: ties keep column order,
+                // exactly like project_2_4's index sort
+                idx.sort_by(|&a, &b| {
+                    quad[b].abs().partial_cmp(&quad[a].abs()).unwrap()
+                });
+                for &j in &idx[self.n..] {
+                    quad[j] = 0.0;
+                }
+            }
+        }
+    }
+
+    fn check(&self, theta: &Matrix) -> Result<()> {
+        for i in 0..theta.rows {
+            let row = theta.row(i);
+            for g in (0..theta.cols).step_by(self.m) {
+                let end = (g + self.m).min(theta.cols);
+                let nnz = row[g..end].iter().filter(|&&v| v != 0.0).count();
+                if nnz > self.n {
+                    bail!("row {i} group at col {g}: {nnz} nonzeros violate \
+                           the {}:{} pattern", self.n, self.m);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn kind(&self) -> ProjKind<'_> {
+        ProjKind::Nm { n: self.n, m: self.m }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse;
+
+    #[test]
+    fn two_four_matches_reference() {
+        for seed in 0..6u64 {
+            let z = Matrix::randn(5, 32, seed);
+            let want = sparse::project_2_4(&z);
+            let mut got = z.clone();
+            NmStructured::new(2, 4).project_rows(&mut got, &mut ProjScratch::new());
+            assert_eq!(got.data, want.data, "seed={seed}");
+            assert!(sparse::check_2_4(&got));
+        }
+    }
+
+    #[test]
+    fn four_eight_halves_density() {
+        let z = Matrix::randn(6, 64, 3);
+        let mut p = z.clone();
+        let nm = NmStructured::new(4, 8);
+        nm.project_rows(&mut p, &mut ProjScratch::new());
+        nm.check(&p).unwrap();
+        assert!((p.sparsity() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tail_group_keeps_at_most_n() {
+        // cols = 10 with m = 4: groups [0..4), [4..8), tail [8..10)
+        let z = Matrix::randn(3, 10, 7);
+        let mut p = z.clone();
+        let nm = NmStructured::new(1, 4);
+        nm.project_rows(&mut p, &mut ProjScratch::new());
+        nm.check(&p).unwrap();
+        for i in 0..3 {
+            let tail_nnz = p.row(i)[8..10].iter().filter(|&&v| v != 0.0).count();
+            assert!(tail_nnz <= 1);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_n_above_m() {
+        NmStructured::new(5, 4);
+    }
+}

@@ -1,0 +1,125 @@
+//! `H_k` — per-row top-k hard thresholding (the `C_row` constraint set of
+//! eq. 5), in place and bit-identical to
+//! [`crate::tensor::topk::hard_threshold_rows`].
+
+use anyhow::{bail, Result};
+
+use super::{ProjKind, ProjScratch, Projection};
+use crate::tensor::Matrix;
+
+/// Keep the `k` largest-|.| entries of every row, zero the rest. Ties at
+/// the threshold are broken by column order (exact-k on every row with
+/// `k ≤ cols` nonzero candidates), matching `topk::row_topk_mask`.
+#[derive(Clone, Copy, Debug)]
+pub struct RowTopK {
+    k: usize,
+}
+
+impl RowTopK {
+    pub fn new(k: usize) -> Self {
+        RowTopK { k }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+}
+
+impl Projection for RowTopK {
+    fn name(&self) -> &'static str {
+        "row-topk"
+    }
+
+    fn describe(&self) -> String {
+        format!("row-topk(k={})", self.k)
+    }
+
+    fn project_rows(&self, z: &mut Matrix, scratch: &mut ProjScratch) {
+        let (m, n) = z.shape();
+        let k = self.k.min(n);
+        if k == 0 {
+            z.data.fill(0.0);
+            return;
+        }
+        if k == n {
+            return;
+        }
+        for i in 0..m {
+            let row = &mut z.data[i * n..(i + 1) * n];
+            // threshold = k-th largest |entry| (quickselect on scratch)
+            let mags = scratch.vals(n);
+            for (s, v) in mags.iter_mut().zip(row.iter()) {
+                *s = v.abs();
+            }
+            mags.select_nth_unstable_by(k - 1, |a, b| b.partial_cmp(a).unwrap());
+            let thr = mags[k - 1];
+            // mirror topk::row_topk_mask exactly: keep everything strictly
+            // above, then fill the remaining slots with at-threshold
+            // entries in column order
+            let above = row.iter().filter(|v| v.abs() > thr).count();
+            let mut fill = k - above;
+            for v in row.iter_mut() {
+                let a = v.abs();
+                if a > thr {
+                    continue;
+                }
+                if a == thr && fill > 0 {
+                    fill -= 1;
+                    continue;
+                }
+                *v = 0.0;
+            }
+        }
+    }
+
+    fn check(&self, theta: &Matrix) -> Result<()> {
+        let k = self.k.min(theta.cols);
+        for i in 0..theta.rows {
+            let nnz = theta.row(i).iter().filter(|&&v| v != 0.0).count();
+            if nnz > k {
+                bail!("row {i} has {nnz} > k={k} nonzeros");
+            }
+        }
+        Ok(())
+    }
+
+    fn kind(&self) -> ProjKind<'_> {
+        ProjKind::RowTopK { k: self.k }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::topk;
+
+    #[test]
+    fn matches_hard_threshold_rows() {
+        for seed in 0..8u64 {
+            let z = Matrix::randn(9, 33, seed);
+            for k in [0usize, 1, 7, 32, 33, 40] {
+                let want = topk::hard_threshold_rows(&z, k);
+                let mut got = z.clone();
+                RowTopK::new(k).project_rows(&mut got, &mut ProjScratch::new());
+                assert_eq!(got.data, want.data, "seed={seed} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_k_under_ties() {
+        let mut z = Matrix::from_vec(1, 5, vec![1.0, -1.0, 1.0, 0.5, 1.0]);
+        RowTopK::new(2).project_rows(&mut z, &mut ProjScratch::new());
+        // ties broken by column order: first two 1.0s survive
+        assert_eq!(z.data, vec![1.0, -1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn check_flags_violations() {
+        let dense = Matrix::randn(4, 16, 0);
+        assert!(RowTopK::new(8).check(&dense).is_err());
+        let mut ok = dense.clone();
+        RowTopK::new(8).project_rows(&mut ok, &mut ProjScratch::new());
+        RowTopK::new(8).check(&ok).unwrap();
+    }
+}

@@ -1,0 +1,118 @@
+//! The allocation-free PGD core: two preallocated ping-pong buffers plus
+//! projection scratch, so a 200-iteration prune performs zero `Matrix`
+//! allocations after warm-up (the old path allocated a fresh gradient
+//! matrix, a top-k mask and a projected copy *per iteration* — ~600 large
+//! allocations per layer).
+
+use crate::tensor::{ops, Matrix};
+
+use super::{ProjScratch, Projection};
+
+/// Preallocated state for a PGD run on one layer: the current iterate, a
+/// same-shaped step buffer they ping-pong through, and the projections'
+/// scratch. Create once per `(W, C)` site, then [`PgdWorkspace::step`] is
+/// allocation-free ([`PgdWorkspace::alloc_events`] audits this).
+pub struct PgdWorkspace {
+    cur: Matrix,
+    next: Matrix,
+    scratch: ProjScratch,
+    matrix_allocs: usize,
+}
+
+impl PgdWorkspace {
+    /// Start a workspace from `init` (moved in). The spare step buffer is
+    /// allocated lazily on the first [`PgdWorkspace::step`] — backends
+    /// that never step locally (the HLO path only reads the iterate and
+    /// installs program outputs) pay nothing for it.
+    pub fn new(init: Matrix) -> Self {
+        let next = Matrix::zeros(0, 0);
+        PgdWorkspace { cur: init, next, scratch: ProjScratch::new(), matrix_allocs: 0 }
+    }
+
+    /// The current iterate.
+    pub fn theta(&self) -> &Matrix {
+        &self.cur
+    }
+
+    /// Replace the current iterate with an externally produced one (the
+    /// HLO backend's program output, the joint schedule's annealed Wanda
+    /// solutions). Shape must match.
+    pub fn install(&mut self, theta: Matrix) {
+        assert_eq!(theta.shape(), self.cur.shape(), "workspace shape mismatch");
+        self.cur = theta;
+    }
+
+    /// One `Θ ← Proj(Θ + η(W−Θ)C)` iteration, in place: the fused gradient
+    /// step writes into the spare buffer, the projection mutates it there,
+    /// and the buffers swap. No allocations after warm-up.
+    pub fn step(&mut self, w: &Matrix, c: &Matrix, eta: f32, proj: &dyn Projection) {
+        if self.next.shape() != self.cur.shape() {
+            self.next = Matrix::zeros(self.cur.rows, self.cur.cols);
+            self.matrix_allocs += 1;
+        }
+        ops::pgd_step_into(w, &self.cur, c, eta, &mut self.next);
+        proj.project_rows(&mut self.next, &mut self.scratch);
+        std::mem::swap(&mut self.cur, &mut self.next);
+    }
+
+    /// Finish the run, handing the final iterate back without a copy.
+    pub fn into_theta(self) -> Matrix {
+        self.cur
+    }
+
+    /// Allocation audit: buffer allocations performed by the workspace
+    /// (its own warm-up plus projection-scratch growth). Stable across
+    /// further [`PgdWorkspace::step`] calls once warmed up — the tier-1
+    /// tests assert exactly that.
+    pub fn alloc_events(&self) -> usize {
+        self.matrix_allocs + self.scratch.grow_events()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proj::{GroupedIntGrid, Intersect, RowTopK};
+    use crate::tensor::topk;
+
+    #[test]
+    fn step_matches_compose_of_free_functions() {
+        let w = Matrix::randn(12, 32, 0);
+        let c = Matrix::randn_gram(32, 1);
+        let th0 = topk::hard_threshold_rows(&w, 8);
+        let mut ws = PgdWorkspace::new(th0.clone());
+        let proj = RowTopK::new(8);
+        let mut reference = th0;
+        for _ in 0..5 {
+            ws.step(&w, &c, 0.05, &proj);
+            let z = crate::tensor::ops::pgd_step(&w, &reference, &c, 0.05);
+            reference = topk::hard_threshold_rows(&z, 8);
+            assert_eq!(ws.theta().data, reference.data);
+        }
+    }
+
+    #[test]
+    fn steps_are_allocation_free_after_warmup() {
+        let w = Matrix::randn(16, 64, 2);
+        let c = Matrix::randn_gram(64, 3);
+        let mut ws = PgdWorkspace::new(w.clone());
+        let joint = Intersect::new(RowTopK::new(16), GroupedIntGrid::new(15.0, 32));
+        ws.step(&w, &c, 0.01, &joint); // warm-up: scratch buffers grow here
+        let warmed = ws.alloc_events();
+        for _ in 0..50 {
+            ws.step(&w, &c, 0.01, &joint);
+            ws.step(&w, &c, 0.01, &RowTopK::new(16));
+        }
+        assert_eq!(ws.alloc_events(), warmed,
+                   "PGD inner loop allocated after warm-up");
+    }
+
+    #[test]
+    fn install_swaps_the_iterate() {
+        let a = Matrix::randn(4, 8, 4);
+        let b = Matrix::randn(4, 8, 5);
+        let mut ws = PgdWorkspace::new(a);
+        ws.install(b.clone());
+        assert_eq!(ws.into_theta().data, b.data);
+    }
+}

@@ -15,6 +15,7 @@ use super::manifest::Manifest;
 use super::tensor_host::HostTensor;
 use super::RuntimeHandle;
 use crate::compress::awp::AwpBackend;
+use crate::proj::{PgdWorkspace, ProjKind, Projection};
 use crate::tensor::Matrix;
 
 /// AWP chunk programs executed via PJRT.
@@ -89,35 +90,60 @@ impl HloBackend {
         }
         Ok((th, g, l))
     }
+
+    /// Lower a projection to its AOT program class + scalar argument list.
+    /// The artifact set covers the paper's evaluated constraint sets
+    /// (row-top-k → `prune`, INT grid → `quant`, their intersection →
+    /// `joint`); anything else — N:M, custom operators — has no lowered
+    /// program and must run on the CPU backend.
+    fn lower(&self, eta: f32, proj: &dyn Projection)
+        -> Result<(&'static str, Vec<HostTensor>)> {
+        let unsupported = || {
+            anyhow::anyhow!("projection '{}' has no AOT chunk program \
+                             (use awp-cpu)", proj.describe())
+        };
+        Ok(match proj.kind() {
+            ProjKind::RowTopK { k } => {
+                ("prune",
+                 vec![HostTensor::scalar_f32(eta), HostTensor::scalar_i32(k as i32)])
+            }
+            ProjKind::IntGrid { qmax, group } => {
+                ensure!(group == self.manifest.awp_group,
+                        "group {group} != AOT group {}", self.manifest.awp_group);
+                // fail loudly before an off-grid qmax reaches the AOT
+                // program and silently quantizes at the wrong bit-width
+                crate::compress::awp::qmax_bits(qmax)?;
+                ("quant", vec![HostTensor::scalar_f32(eta),
+                               HostTensor::scalar_f32(qmax)])
+            }
+            ProjKind::Intersect { sparse, grid } => {
+                match (sparse.kind(), grid.kind()) {
+                    (ProjKind::RowTopK { k }, ProjKind::IntGrid { qmax, group }) => {
+                        ensure!(group == self.manifest.awp_group,
+                                "group {group} != AOT group {}",
+                                self.manifest.awp_group);
+                        crate::compress::awp::qmax_bits(qmax)?;
+                        ("joint", vec![
+                            HostTensor::scalar_f32(eta),
+                            HostTensor::scalar_i32(k as i32),
+                            HostTensor::scalar_f32(qmax),
+                        ])
+                    }
+                    _ => return Err(unsupported()),
+                }
+            }
+            ProjKind::Nm { .. } | ProjKind::Opaque => return Err(unsupported()),
+        })
+    }
 }
 
 impl AwpBackend for HloBackend {
-    fn prune_chunk(&self, w: &Matrix, theta: &Matrix, c: &Matrix, eta: f32,
-                   k: usize, iters: usize) -> Result<(Matrix, f64, f64)> {
-        let args = vec![HostTensor::scalar_f32(eta), HostTensor::scalar_i32(k as i32)];
-        self.run("prune", w, theta, c, iters, &args)
-    }
-
-    fn quant_chunk(&self, w: &Matrix, theta: &Matrix, c: &Matrix, eta: f32,
-                   qmax: f32, group: usize, iters: usize)
-        -> Result<(Matrix, f64, f64)> {
-        ensure!(group == self.manifest.awp_group,
-                "group {group} != AOT group {}", self.manifest.awp_group);
-        let args = vec![HostTensor::scalar_f32(eta), HostTensor::scalar_f32(qmax)];
-        self.run("quant", w, theta, c, iters, &args)
-    }
-
-    fn joint_chunk(&self, w: &Matrix, theta: &Matrix, c: &Matrix, eta: f32,
-                   k: usize, qmax: f32, group: usize, iters: usize)
-        -> Result<(Matrix, f64, f64)> {
-        ensure!(group == self.manifest.awp_group,
-                "group {group} != AOT group {}", self.manifest.awp_group);
-        let args = vec![
-            HostTensor::scalar_f32(eta),
-            HostTensor::scalar_i32(k as i32),
-            HostTensor::scalar_f32(qmax),
-        ];
-        self.run("joint", w, theta, c, iters, &args)
+    fn step_chunk(&self, w: &Matrix, c: &Matrix, eta: f32, proj: &dyn Projection,
+                  iters: usize, ws: &mut PgdWorkspace) -> Result<(f64, f64)> {
+        let (mode, args) = self.lower(eta, proj)?;
+        let (th, g, l) = self.run(mode, w, ws.theta(), c, iters, &args)?;
+        ws.install(th);
+        Ok((g, l))
     }
 
     fn backend_name(&self) -> &'static str {

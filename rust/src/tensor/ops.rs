@@ -56,14 +56,26 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
 
 /// `out = theta + eta * (w - theta) * c` — the CPU mirror of the L1 Pallas
 /// kernel (`python/compile/kernels/pgd_step.py`), fused the same way: the
-/// residual is formed per row panel and never materialised.
+/// residual is formed per row panel and never materialised. Allocates the
+/// output; the PGD hot loop uses [`pgd_step_into`] with a preallocated
+/// buffer instead (`proj::PgdWorkspace`).
 pub fn pgd_step(w: &Matrix, theta: &Matrix, c: &Matrix, eta: f32) -> Matrix {
+    let mut out = Matrix::zeros(w.rows, w.cols);
+    pgd_step_into(w, theta, c, eta, &mut out);
+    out
+}
+
+/// [`pgd_step`] writing into a caller-owned buffer (every output entry is
+/// overwritten, so `out` need not be zeroed) — the allocation-free form the
+/// workspace-driven PGD inner loop runs on.
+pub fn pgd_step_into(w: &Matrix, theta: &Matrix, c: &Matrix, eta: f32,
+                     out: &mut Matrix) {
     assert_eq!(w.shape(), theta.shape());
     assert_eq!(c.rows, c.cols);
     assert_eq!(w.cols, c.rows);
-    let (m, k) = w.shape();
+    assert_eq!(out.shape(), w.shape());
+    let (_m, k) = w.shape();
     let n = k;
-    let mut out = Matrix::zeros(m, n);
     par_chunks_mut(&mut out.data, n, |i, orow| {
         let wrow = &w.data[i * k..(i + 1) * k];
         let trow = &theta.data[i * k..(i + 1) * k];
@@ -97,7 +109,6 @@ pub fn pgd_step(w: &Matrix, theta: &Matrix, c: &Matrix, eta: f32) -> Matrix {
             kk += 1;
         }
     });
-    out
 }
 
 /// Activation-aware loss `‖(W−Θ)C½‖_F² = Σ R∘(R·C)` (paper Appendix B) —
@@ -239,6 +250,17 @@ mod tests {
         let got = pgd_step(&w, &t, &c, eta);
         let want = add(&t, &scale(&matmul(&sub(&w, &t), &c), eta));
         assert_close(&got, &want, 1e-4);
+    }
+
+    #[test]
+    fn pgd_step_into_overwrites_dirty_buffer() {
+        let w = Matrix::randn(9, 12, 20);
+        let t = Matrix::randn(9, 12, 21);
+        let c = Matrix::randn_gram(12, 22);
+        let want = pgd_step(&w, &t, &c, 0.3);
+        let mut out = Matrix::from_fn(9, 12, |_, _| f32::NAN);
+        pgd_step_into(&w, &t, &c, 0.3, &mut out);
+        assert_eq!(out.data, want.data);
     }
 
     #[test]

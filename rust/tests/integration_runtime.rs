@@ -8,6 +8,7 @@ use std::sync::Arc;
 use awp::compress::awp::AwpBackend;
 use awp::compress::CpuBackend;
 use awp::coordinator::calibrate;
+use awp::proj::{GroupedIntGrid, Intersect, RowTopK};
 use awp::data::{Batcher, CorpusConfig, Split, SyntheticCorpus};
 use awp::eval::{generate, perplexity};
 use awp::model::GramKey;
@@ -40,23 +41,26 @@ fn hlo_and_cpu_awp_backends_agree() {
     let eta = (2.0 / c.frob_norm()) as f32;
 
     // prune: 8 iterations (one chunk program call)
-    let (ta, ga, la) = hlo.prune_chunk(&w, &th, &c, eta, 128, 8).unwrap();
-    let (tb, gb, lb) = cpu.prune_chunk(&w, &th, &c, eta, 128, 8).unwrap();
+    let prune = RowTopK::new(128);
+    let (ta, ga, la) = hlo.step_chunk_from(&w, &th, &c, eta, &prune, 8).unwrap();
+    let (tb, gb, lb) = cpu.step_chunk_from(&w, &th, &c, eta, &prune, 8).unwrap();
     assert!((ga - gb).abs() < 1e-4 && (la - lb).abs() < 1e-4);
     let max = ta.data.iter().zip(&tb.data).map(|(a, b)| (a - b).abs())
         .fold(0.0f32, f32::max);
     assert!(max < 1e-3, "prune theta diverged: {max}");
 
     // quant single step
-    let (qa, _, _) = hlo.quant_chunk(&w, &w, &c, eta, 15.0, 32, 1).unwrap();
-    let (qb, _, _) = cpu.quant_chunk(&w, &w, &c, eta, 15.0, 32, 1).unwrap();
+    let grid = GroupedIntGrid::new(15.0, 32);
+    let (qa, _, _) = hlo.step_chunk_from(&w, &w, &c, eta, &grid, 1).unwrap();
+    let (qb, _, _) = cpu.step_chunk_from(&w, &w, &c, eta, &grid, 1).unwrap();
     let max = qa.data.iter().zip(&qb.data).map(|(a, b)| (a - b).abs())
         .fold(0.0f32, f32::max);
     assert!(max < 1e-4, "quant theta diverged: {max}");
 
-    // joint with ramp-style varying k: 3 iterations via 1-step programs
-    let (ja, _, _) = hlo.joint_chunk(&w, &th, &c, eta, 64, 15.0, 32, 3).unwrap();
-    let (jb, _, _) = cpu.joint_chunk(&w, &th, &c, eta, 64, 15.0, 32, 3).unwrap();
+    // joint: 3 iterations via 1-step programs
+    let joint = Intersect::new(RowTopK::new(64), GroupedIntGrid::new(15.0, 32));
+    let (ja, _, _) = hlo.step_chunk_from(&w, &th, &c, eta, &joint, 3).unwrap();
+    let (jb, _, _) = cpu.step_chunk_from(&w, &th, &c, eta, &joint, 3).unwrap();
     let max = ja.data.iter().zip(&jb.data).map(|(a, b)| (a - b).abs())
         .fold(0.0f32, f32::max);
     assert!(max < 2e-3, "joint theta diverged: {max}");
@@ -72,8 +76,9 @@ fn hlo_iteration_decomposition_composes() {
     let th = Matrix::zeros(128, 128);
     let c = Matrix::randn_gram(128, 6);
     let eta = (2.0 / c.frob_norm()) as f32;
-    let (ta, _, _) = hlo.prune_chunk(&w, &th, &c, eta, 64, 11).unwrap();
-    let (tb, _, _) = cpu.prune_chunk(&w, &th, &c, eta, 64, 11).unwrap();
+    let proj = RowTopK::new(64);
+    let (ta, _, _) = hlo.step_chunk_from(&w, &th, &c, eta, &proj, 11).unwrap();
+    let (tb, _, _) = cpu.step_chunk_from(&w, &th, &c, eta, &proj, 11).unwrap();
     let max = ta.data.iter().zip(&tb.data).map(|(a, b)| (a - b).abs())
         .fold(0.0f32, f32::max);
     assert!(max < 1e-3, "{max}");
@@ -165,7 +170,8 @@ fn runtime_stats_track_executions() {
     let hlo = HloBackend::new(handle.clone(), manifest);
     let w = Matrix::randn(128, 128, 9);
     let c = Matrix::randn_gram(128, 10);
-    hlo.prune_chunk(&w, &Matrix::zeros(128, 128), &c, 0.01, 64, 8).unwrap();
+    hlo.step_chunk_from(&w, &Matrix::zeros(128, 128), &c, 0.01, &RowTopK::new(64), 8)
+        .unwrap();
     let after = handle.stats().unwrap();
     assert_eq!(after.executions, before + 1);
     assert!(after.exec_seconds > 0.0);
@@ -178,7 +184,8 @@ fn missing_program_is_a_clean_error() {
     // shape class that was never lowered
     let w = Matrix::randn(96, 96, 11);
     let c = Matrix::randn_gram(96, 12);
-    let err = hlo.prune_chunk(&w, &Matrix::zeros(96, 96), &c, 0.01, 48, 8);
+    let err = hlo.step_chunk_from(&w, &Matrix::zeros(96, 96), &c, 0.01,
+                                  &RowTopK::new(48), 8);
     assert!(err.is_err());
     let msg = format!("{:#}", err.unwrap_err());
     assert!(msg.contains("make artifacts"), "{msg}");

@@ -1,0 +1,504 @@
+//! Projection-operator laws and refactor bit-identity pins.
+//!
+//! Two layers of guarantees for the `proj` subsystem:
+//!
+//! 1. **Laws** every operator must satisfy (seeded sweeps, no proptest
+//!    crate on the image): idempotence, per-group cardinality bounds for
+//!    N:M across odd shapes/tail groups, zero-survival through the
+//!    intersection, determinism of tie-breaking.
+//! 2. **Bit-identity pins**: the projection-routed pipeline must produce
+//!    outputs *identical* to the pre-refactor code — both at the operator
+//!    level (vs `topk::hard_threshold_rows`, `sparse::project_2_4`,
+//!    `quant::project_qmax`, the inline joint composition) and at the
+//!    driver level, vs a reference reimplementation of the old
+//!    four-chunk-method `AwpBackend` semantics for every historical
+//!    `CompressionMode` on fixed seeds.
+
+use awp::compress::awp::AwpHyper;
+use awp::compress::traits::{check_constraints, CompressionSpec, LayerCompressor};
+use awp::compress::{wanda, AwpCpu, AwpDriver, CpuBackend};
+use awp::proj::{
+    GroupedIntGrid, Intersect, NmStructured, PgdWorkspace, ProjScratch, Projection,
+    RowTopK,
+};
+use awp::quant;
+use awp::sparse;
+use awp::tensor::{ops, topk, Matrix};
+use awp::util::Rng;
+
+const SWEEPS: u64 = 16;
+
+fn apply(p: &dyn Projection, z: &Matrix) -> Matrix {
+    let mut out = z.clone();
+    p.project_rows(&mut out, &mut ProjScratch::new());
+    out
+}
+
+// ---------------------------------------------------------------- laws --
+
+#[test]
+fn law_idempotence_all_operators() {
+    for seed in 0..SWEEPS {
+        let mut rng = Rng::new(seed);
+        let m = 4 + rng.below(20);
+        let n = 16 * (1 + rng.below(4));
+        let z = Matrix::randn(m, n, seed + 10);
+        let k = 1 + rng.below(n);
+        let ops_list: Vec<Box<dyn Projection>> = vec![
+            Box::new(RowTopK::new(k)),
+            Box::new(NmStructured::new(2, 4)),
+            Box::new(NmStructured::new(4, 8)),
+            Box::new(NmStructured::new(1, 4)),
+        ];
+        for p in &ops_list {
+            let once = apply(p.as_ref(), &z);
+            let twice = apply(p.as_ref(), &once);
+            assert_eq!(once.data, twice.data, "seed={seed} {}", p.describe());
+            p.check(&once).unwrap_or_else(|e| {
+                panic!("seed={seed} {}: own output fails check: {e}", p.describe())
+            });
+        }
+        // grid + intersect are idempotent up to refit rounding (same
+        // tolerance the historical quantize_dequantize idempotence used)
+        let grid = GroupedIntGrid::new(15.0, 16);
+        let once = apply(&grid, &z);
+        let twice = apply(&grid, &once);
+        for (a, b) in once.data.iter().zip(&twice.data) {
+            assert!((a - b).abs() < 1e-5, "seed={seed} grid: {a} vs {b}");
+        }
+        let ix = Intersect::new(RowTopK::new(k), GroupedIntGrid::new(7.0, 16));
+        let once = apply(&ix, &z);
+        let twice = apply(&ix, &once);
+        for (a, b) in once.data.iter().zip(&twice.data) {
+            assert!((a - b).abs() < 1e-5, "seed={seed} intersect: {a} vs {b}");
+        }
+        ix.check(&once).unwrap();
+    }
+}
+
+#[test]
+fn law_nm_group_cardinality_odd_shapes_and_tails() {
+    // per-group nnz ≤ n across ragged widths, including tail groups
+    for seed in 0..SWEEPS {
+        let mut rng = Rng::new(seed);
+        let rows = 1 + rng.below(12);
+        let cols = 3 + rng.below(61); // deliberately not aligned to m
+        let m = 2 + rng.below(7);
+        let n = 1 + rng.below(m);
+        let nm = NmStructured::new(n, m);
+        let z = Matrix::randn(rows, cols, seed + 100);
+        let p = apply(&nm, &z);
+        nm.check(&p).unwrap_or_else(|e| {
+            panic!("seed={seed} {rows}x{cols} {}: {e}", nm.describe())
+        });
+        for i in 0..rows {
+            for g in (0..cols).step_by(m) {
+                let end = (g + m).min(cols);
+                let nnz = p.row(i)[g..end].iter().filter(|&&v| v != 0.0).count();
+                assert!(nnz <= n, "seed={seed} row {i} group {g}: {nnz} > {n}");
+                // full groups keep exactly min(n, group) on dense input
+                if end - g == m {
+                    assert_eq!(nnz, n.min(end - g), "seed={seed} row {i} group {g}");
+                }
+            }
+        }
+        // kept entries are unchanged
+        for (a, b) in z.data.iter().zip(&p.data) {
+            assert!(*b == 0.0 || a == b, "seed={seed}");
+        }
+    }
+}
+
+#[test]
+fn law_intersect_zero_survival_on_grid() {
+    // entries zeroed by the sparsity half must come out of the grid as
+    // exact zeros — for both row-top-k and N:M sparsity halves
+    for seed in 0..SWEEPS {
+        let mut rng = Rng::new(seed);
+        let rows = 2 + rng.below(10);
+        let cols = 32 * (1 + rng.below(3));
+        let k = 1 + rng.below(cols / 2);
+        let z = Matrix::randn(rows, cols, seed + 200);
+        let qmax = [1.0f32, 3.0, 15.0][rng.below(3)];
+
+        let row_half = RowTopK::new(k);
+        let sparse_only = apply(&row_half, &z);
+        let joint = apply(&Intersect::new(row_half, GroupedIntGrid::new(qmax, 32)), &z);
+        for (i, (s, j)) in sparse_only.data.iter().zip(&joint.data).enumerate() {
+            if *s == 0.0 {
+                assert_eq!(*j, 0.0, "seed={seed} entry {i} resurrected by the grid");
+            }
+        }
+
+        let nm_half = NmStructured::new(2, 4);
+        let sparse_only = apply(&nm_half, &z);
+        let joint = apply(&Intersect::new(nm_half, GroupedIntGrid::new(qmax, 32)), &z);
+        for (i, (s, j)) in sparse_only.data.iter().zip(&joint.data).enumerate() {
+            if *s == 0.0 {
+                assert_eq!(*j, 0.0, "seed={seed} entry {i} resurrected by the grid");
+            }
+        }
+        assert!(sparse::check_2_4(&joint), "seed={seed}");
+    }
+}
+
+// -------------------------------------------- operator bit-identity pins --
+
+#[test]
+fn pin_row_topk_equals_hard_threshold_rows() {
+    for seed in 0..SWEEPS {
+        let mut rng = Rng::new(seed);
+        let m = 1 + rng.below(24);
+        let n = 8 + rng.below(72);
+        let z = Matrix::randn(m, n, seed + 300);
+        for k in [0, 1, n / 2, n - 1, n, n + 3] {
+            let want = topk::hard_threshold_rows(&z, k);
+            let got = apply(&RowTopK::new(k), &z);
+            assert_eq!(got.data, want.data, "seed={seed} k={k}");
+        }
+    }
+}
+
+#[test]
+fn pin_nm_24_equals_project_2_4() {
+    for seed in 0..SWEEPS {
+        let mut rng = Rng::new(seed);
+        let m = 1 + rng.below(24);
+        let n = 4 * (1 + rng.below(24));
+        let z = Matrix::randn(m, n, seed + 400);
+        let want = sparse::project_2_4(&z);
+        let got = apply(&NmStructured::new(2, 4), &z);
+        assert_eq!(got.data, want.data, "seed={seed}");
+    }
+}
+
+#[test]
+fn pin_grid_equals_project_qmax() {
+    for seed in 0..SWEEPS {
+        let mut rng = Rng::new(seed);
+        let m = 1 + rng.below(16);
+        let group = [8usize, 16, 32][rng.below(3)];
+        let n = group * (1 + rng.below(4));
+        let z = Matrix::randn(m, n, seed + 500);
+        for bits in [1u32, 2, 3, 4, 8] {
+            let qmax = (1u32 << bits) as f32 - 1.0;
+            let want = quant::project_qmax(&z, qmax, group);
+            let got = apply(&GroupedIntGrid::new(qmax, group), &z);
+            assert_eq!(got.data, want.data, "seed={seed} bits={bits} group={group}");
+        }
+    }
+}
+
+#[test]
+fn pin_intersect_equals_inline_joint_composition() {
+    for seed in 0..SWEEPS {
+        let mut rng = Rng::new(seed);
+        let m = 1 + rng.below(16);
+        let n = 32 * (1 + rng.below(3));
+        let k = 1 + rng.below(n);
+        let z = Matrix::randn(m, n, seed + 600);
+        // the exact composition awp_cpu::joint_chunk used to inline
+        let zp = topk::hard_threshold_rows(&z, k);
+        let mut want = quant::project_qmax(&zp, 15.0, 32.min(zp.cols));
+        for (q, p) in want.data.iter_mut().zip(&zp.data) {
+            if *p == 0.0 {
+                *q = 0.0;
+            }
+        }
+        let got = apply(&Intersect::new(RowTopK::new(k), GroupedIntGrid::new(15.0, 32)),
+                        &z);
+        assert_eq!(got.data, want.data, "seed={seed} k={k}");
+    }
+}
+
+// ------------------------------------- driver-level bit-identity pins --
+//
+// Reference reimplementation of the pre-refactor driver: the old
+// `AwpBackend` four chunk methods (fresh allocations per iteration) plus
+// the old `run_prune`/`run_quant`/`run_joint`/`run_prune24` loops, kept
+// verbatim so the workspace-routed driver can be diffed against it.
+
+fn ref_stats(w: &Matrix, th: &Matrix, c: &Matrix) -> (f64, f64) {
+    let wn = w.frob_norm().max(1e-30);
+    (ops::grad_frob_norm(w, th, c) / wn,
+     ops::activation_loss(w, th, c).sqrt() / wn)
+}
+
+fn ref_prune_chunk(w: &Matrix, theta: &Matrix, c: &Matrix, eta: f32, k: usize,
+                   iters: usize) -> (Matrix, f64, f64) {
+    let mut th = theta.clone();
+    for _ in 0..iters {
+        let z = ops::pgd_step(w, &th, c, eta);
+        th = topk::hard_threshold_rows(&z, k);
+    }
+    let (g, l) = ref_stats(w, &th, c);
+    (th, g, l)
+}
+
+fn ref_quant_chunk(w: &Matrix, theta: &Matrix, c: &Matrix, eta: f32, qmax: f32,
+                   group: usize, iters: usize) -> (Matrix, f64, f64) {
+    let mut th = theta.clone();
+    for _ in 0..iters {
+        let z = ops::pgd_step(w, &th, c, eta);
+        th = quant::project_qmax(&z, qmax, group.min(z.cols));
+    }
+    let (g, l) = ref_stats(w, &th, c);
+    (th, g, l)
+}
+
+fn ref_joint_chunk(w: &Matrix, theta: &Matrix, c: &Matrix, eta: f32, k: usize,
+                   qmax: f32, group: usize, iters: usize) -> (Matrix, f64, f64) {
+    let mut th = theta.clone();
+    for _ in 0..iters {
+        let z = ops::pgd_step(w, &th, c, eta);
+        let zp = topk::hard_threshold_rows(&z, k);
+        th = if qmax > 0.0 {
+            let mut zq = quant::project_qmax(&zp, qmax.max(1.0), group.min(zp.cols));
+            for (q, p) in zq.data.iter_mut().zip(&zp.data) {
+                if *p == 0.0 {
+                    *q = 0.0;
+                }
+            }
+            zq
+        } else {
+            zp
+        };
+    }
+    let (g, l) = ref_stats(w, &th, c);
+    (th, g, l)
+}
+
+fn ref_prune24_chunk(w: &Matrix, theta: &Matrix, c: &Matrix, eta: f32,
+                     iters: usize) -> (Matrix, f64, f64) {
+    let mut th = theta.clone();
+    for _ in 0..iters {
+        let z = ops::pgd_step(w, &th, c, eta);
+        th = sparse::project_2_4(&z);
+    }
+    let (g, l) = ref_stats(w, &th, c);
+    (th, g, l)
+}
+
+/// old `run_iht`: chunked steps, stop at rel-grad < tol or the cap.
+fn ref_iht<S>(w: &Matrix, h: &AwpHyper, init: Matrix, step: S) -> (Matrix, usize)
+where
+    S: Fn(&Matrix, usize) -> (Matrix, f64, f64),
+{
+    let mut theta = init;
+    let chunk = h.chunk.max(1);
+    let mut iters = 0usize;
+    while iters < h.prune_max_iters {
+        let n = chunk.min(h.prune_max_iters - iters);
+        let (t2, rel_grad, _rel_loss) = step(&theta, n);
+        theta = t2;
+        iters += n;
+        if rel_grad < h.prune_tol {
+            break;
+        }
+    }
+    (theta, iters)
+}
+
+fn ref_driver_prune(w: &Matrix, c: &Matrix, k: usize, h: &AwpHyper)
+    -> (Matrix, usize) {
+    let eta = (h.prune_eta_scale / c.frob_norm().max(1e-30)) as f32;
+    ref_iht(w, h, wanda::wanda_prune(w, c, k),
+            |th, n| ref_prune_chunk(w, th, c, eta, k, n))
+}
+
+fn ref_driver_prune24(w: &Matrix, c: &Matrix, h: &AwpHyper) -> (Matrix, usize) {
+    let eta = (h.prune_eta_scale / c.frob_norm().max(1e-30)) as f32;
+    ref_iht(w, h, wanda::wanda_prune_2_4(w, c),
+            |th, n| ref_prune24_chunk(w, th, c, eta, n))
+}
+
+fn ref_driver_quant(w: &Matrix, c: &Matrix, qmax: f32, h: &AwpHyper) -> Matrix {
+    let eta = (h.quant_eta_scale / c.frob_norm().max(1e-30)) as f32;
+    let bits = (qmax + 1.0).log2().round() as u8;
+    let spec = quant::QuantSpec::new(bits, h.group);
+    let rel = |th: &Matrix| {
+        ops::activation_loss(w, th, c).sqrt() / w.frob_norm().max(1e-30)
+    };
+    let mut theta = quant::quantize_dequantize(w, spec);
+    let mut best = theta.clone();
+    let mut best_loss = rel(&theta);
+    for _ in 0..h.quant_iters {
+        let (t2, _g, rel_loss) = ref_quant_chunk(w, &theta, c, eta, qmax, h.group, 1);
+        theta = t2;
+        if rel_loss < best_loss {
+            best_loss = rel_loss;
+            best = theta.clone();
+        }
+    }
+    best
+}
+
+fn ref_driver_joint(w: &Matrix, c: &Matrix, k: usize, qmax: f32, h: &AwpHyper)
+    -> Matrix {
+    use awp::compress::schedule::JointPhase;
+    let eta = (h.quant_eta_scale / c.frob_norm().max(1e-30)) as f32;
+    let mut theta = w.clone();
+    let mut best: Option<(f64, Matrix)> = None;
+    let mut it = 0usize;
+    while it < h.joint.total_iters {
+        let phase = h.joint.phase(it);
+        let k_now = h.joint.k_at(it, w.cols, k);
+        if phase == JointPhase::Ramp {
+            theta = wanda::wanda_prune(w, c, k_now);
+            it += 1;
+            continue;
+        }
+        let step = match phase {
+            JointPhase::Ramp => unreachable!(),
+            JointPhase::PruneHold => h.chunk.min(h.joint.prune_only_iters - it),
+            JointPhase::Joint => h.chunk.min(h.joint.total_iters - it),
+        };
+        let q_now = if phase == JointPhase::Joint { qmax } else { 0.0 };
+        let (t2, _g, rel_loss) =
+            ref_joint_chunk(w, &theta, c, eta, k_now, q_now, h.group, step);
+        theta = t2;
+        it += step;
+        if phase == JointPhase::Joint
+            && best.as_ref().map_or(true, |(b, _)| rel_loss < *b)
+        {
+            best = Some((rel_loss, theta.clone()));
+        }
+    }
+    best.map(|(_, t)| t).unwrap_or(theta)
+}
+
+fn problem(seed: u64, rows: usize, cols: usize) -> (Matrix, Matrix) {
+    (Matrix::randn(rows, cols, seed), Matrix::randn_gram(cols, seed + 5000))
+}
+
+#[test]
+fn pin_driver_prune_identical_to_pre_refactor() {
+    let h = AwpHyper::default();
+    for seed in 0..4u64 {
+        let (w, c) = problem(seed + 700, 16, 64);
+        let spec = CompressionSpec::prune(0.5);
+        let out = AwpCpu::default().compress(&w, &c, &spec).unwrap();
+        let (want, want_iters) =
+            ref_driver_prune(&w, &c, spec.keep_k(w.cols).unwrap(), &h);
+        assert_eq!(out.theta.data, want.data, "seed={seed}");
+        assert_eq!(out.stats.iterations, want_iters, "seed={seed}");
+    }
+}
+
+#[test]
+fn pin_driver_structured24_identical_to_pre_refactor() {
+    let h = AwpHyper::default();
+    for seed in 0..4u64 {
+        let (w, c) = problem(seed + 800, 12, 32);
+        let out = AwpCpu::default()
+            .compress(&w, &c, &CompressionSpec::structured24())
+            .unwrap();
+        let (want, want_iters) = ref_driver_prune24(&w, &c, &h);
+        assert_eq!(out.theta.data, want.data, "seed={seed}");
+        assert_eq!(out.stats.iterations, want_iters, "seed={seed}");
+    }
+}
+
+#[test]
+fn pin_driver_quant_identical_to_pre_refactor() {
+    let h = AwpHyper::default();
+    for seed in 0..4u64 {
+        let (w, c) = problem(seed + 900, 12, 64);
+        for bits in [2u8, 4] {
+            let spec = CompressionSpec::quant(bits, 32);
+            let out = AwpCpu::default().compress(&w, &c, &spec).unwrap();
+            let want = ref_driver_quant(&w, &c, (1u32 << bits) as f32 - 1.0, &h);
+            assert_eq!(out.theta.data, want.data, "seed={seed} bits={bits}");
+        }
+    }
+}
+
+#[test]
+fn pin_driver_joint_identical_to_pre_refactor() {
+    let h = AwpHyper::default();
+    for seed in 0..3u64 {
+        let (w, c) = problem(seed + 1000, 12, 64);
+        let spec = CompressionSpec::joint(0.5, 4, 32);
+        let out = AwpCpu::default().compress(&w, &c, &spec).unwrap();
+        let want = ref_driver_joint(&w, &c, spec.keep_k(w.cols).unwrap(), 15.0, &h);
+        assert_eq!(out.theta.data, want.data, "seed={seed}");
+    }
+}
+
+// ------------------------------------------------- allocation behaviour --
+
+#[test]
+fn pgd_inner_loop_is_allocation_free_after_warmup() {
+    // the tentpole's perf contract: once the workspace and projection
+    // scratch are warm, stepping allocates nothing — across every operator
+    let w = Matrix::randn(24, 64, 42);
+    let c = Matrix::randn_gram(64, 43);
+    let projections: Vec<Box<dyn Projection>> = vec![
+        Box::new(RowTopK::new(16)),
+        Box::new(NmStructured::new(2, 4)),
+        Box::new(GroupedIntGrid::new(15.0, 32)),
+        Box::new(Intersect::new(RowTopK::new(16), GroupedIntGrid::new(15.0, 32))),
+        Box::new(Intersect::new(NmStructured::new(4, 8),
+                                GroupedIntGrid::new(15.0, 32))),
+    ];
+    for p in &projections {
+        let mut ws = PgdWorkspace::new(w.clone());
+        ws.step(&w, &c, 0.01, p.as_ref()); // warm-up
+        let warmed = ws.alloc_events();
+        for _ in 0..100 {
+            ws.step(&w, &c, 0.01, p.as_ref());
+        }
+        assert_eq!(ws.alloc_events(), warmed,
+                   "{} allocated after warm-up", p.describe());
+    }
+}
+
+// -------------------------------------------------- N:M end-to-end runs --
+
+#[test]
+fn nm_48_end_to_end_through_driver_and_verifier() {
+    let (w, c) = problem(1100, 16, 64);
+    for spec in [CompressionSpec::structured_nm(4, 8),
+                 CompressionSpec::joint_nm(4, 8, 4, 32)] {
+        let out = AwpCpu::default().compress(&w, &c, &spec).unwrap();
+        check_constraints(&out.theta, &spec)
+            .unwrap_or_else(|e| panic!("{spec:?}: {e}"));
+        // the projection the spec resolves to accepts its own pipeline output
+        spec.projection(w.cols).check(&out.theta).unwrap();
+        let stats = sparse::SparsityStats::of(&out.theta);
+        assert!(stats.ratio() >= 0.45, "{spec:?}: {}", stats.ratio());
+    }
+}
+
+#[test]
+fn nm_48_not_worse_than_wanda_nm_init() {
+    let mut ok = 0;
+    for seed in 0..5u64 {
+        let (w, c) = problem(seed + 1200, 16, 64);
+        let out = AwpCpu::default()
+            .compress(&w, &c, &CompressionSpec::structured_nm(4, 8))
+            .unwrap();
+        let init = wanda::wanda_prune_nm(&w, &c, 4, 8);
+        if out.stats.final_loss <= ops::activation_loss(&w, &init, &c) * 1.0001 {
+            ok += 1;
+        }
+    }
+    assert!(ok >= 4, "improved on wanda-4:8 only {ok}/5");
+}
+
+#[test]
+fn fig1_series_still_tracks_under_projection_routing() {
+    // series collection is opt-in (run_quant no longer builds it
+    // unconditionally) but must still work when requested
+    let (w, c) = problem(1300, 12, 64);
+    let hyper = AwpHyper { track_series: true, ..AwpHyper::default() };
+    let drv = AwpDriver::with_hyper(CpuBackend, hyper);
+    let quant = drv.compress(&w, &c, &CompressionSpec::quant(4, 32)).unwrap();
+    assert_eq!(quant.stats.loss_series.len(), hyper.quant_iters + 1);
+    let hyper2 = AwpHyper { track_series: false, ..AwpHyper::default() };
+    let drv2 = AwpDriver::with_hyper(CpuBackend, hyper2);
+    let quiet = drv2.compress(&w, &c, &CompressionSpec::quant(4, 32)).unwrap();
+    assert!(quiet.stats.loss_series.is_empty());
+    // identical outputs with and without tracking
+    assert_eq!(quant.theta.data, quiet.theta.data);
+}

@@ -16,6 +16,7 @@ use awp::compress::awp::AwpBackend;
 use awp::compress::traits::{check_constraints, CompressionSpec, LayerCompressor};
 use awp::compress::{AwpCpu, CpuBackend};
 use awp::coordinator::plan_jobs;
+use awp::proj::{GroupedIntGrid, Intersect, RowTopK};
 use awp::linalg;
 use awp::model::ModelConfig;
 use awp::quant::{self, QuantSpec};
@@ -89,6 +90,8 @@ fn prop_awp_constraints_all_modes() {
             CompressionSpec::prune(ratio),
             CompressionSpec::quant(bits, 32),
             CompressionSpec::joint(ratio, bits, 32),
+            CompressionSpec::structured_nm(2, 4),
+            CompressionSpec::joint_nm(4, 8, bits, 32),
         ] {
             let out = awp.compress(&w, &c, &spec).unwrap();
             check_constraints(&out.theta, &spec)
@@ -125,10 +128,11 @@ fn prop_chunk_composition() {
         let c = Matrix::randn_gram(32, seed + 800);
         let th0 = topk::hard_threshold_rows(&w, 16);
         let eta = (2.0 / c.frob_norm()) as f32;
-        let (a, _, _) = b.prune_chunk(&w, &th0, &c, eta, 16, 13).unwrap();
-        let (mut t, _, _) = b.prune_chunk(&w, &th0, &c, eta, 16, 8).unwrap();
+        let proj = RowTopK::new(16);
+        let (a, _, _) = b.step_chunk_from(&w, &th0, &c, eta, &proj, 13).unwrap();
+        let (mut t, _, _) = b.step_chunk_from(&w, &th0, &c, eta, &proj, 8).unwrap();
         for _ in 0..5 {
-            t = b.prune_chunk(&w, &t, &c, eta, 16, 1).unwrap().0;
+            t = b.step_chunk_from(&w, &t, &c, eta, &proj, 1).unwrap().0;
         }
         for (x, y) in a.data.iter().zip(&t.data) {
             assert!((x - y).abs() < 1e-4, "seed={seed}");
@@ -248,8 +252,9 @@ fn prop_joint_zeros_survive_quantization() {
         let w = Matrix::randn(12, 64, seed + 1100);
         let c = Matrix::randn_gram(64, seed + 1200);
         let th0 = topk::hard_threshold_rows(&w, 16);
+        let proj = Intersect::new(RowTopK::new(16), GroupedIntGrid::new(15.0, 32));
         let (th, _, _) = b
-            .joint_chunk(&w, &th0, &c, 0.01, 16, 15.0, 32, 4)
+            .step_chunk_from(&w, &th0, &c, 0.01, &proj, 4)
             .unwrap();
         let stats = sparse::SparsityStats::of(&th);
         assert!(stats.row_max_nnz <= 16, "seed={seed}: {}", stats.row_max_nnz);
