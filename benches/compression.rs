@@ -174,6 +174,65 @@ fn main() {
         });
     }
 
+    println!("\n== compressed artifacts: pack/unpack throughput + packed GEMM ==");
+    {
+        // the artifact subsystem's two costs: the one-time encode (scale
+        // recovery + bit-packing) and the steady-state packed consumers
+        // (decode, streaming dequant GEMM, survivor-only N:M GEMM) — each
+        // against the dense baseline it replaces
+        use awp::artifact::PackedLinear;
+        use awp::proj::{NmStructured, ProjScratch, Projection};
+        use awp::quant::project_qmax;
+
+        let (m, k, n) = (256usize, 256usize, 256usize);
+        let bytes = (m * k * 4) as f64;
+        let b = Matrix::randn(k, n, 41);
+
+        let qtheta = project_qmax(&Matrix::randn(m, k, 40), 15.0, 32);
+        let qspec = CompressionSpec::quant(4, 32);
+        let r = bench(&format!("pack int4/g32 {m}x{k}"), 1.0, || {
+            PackedLinear::encode(&qtheta, &qspec);
+        });
+        println!("    ↳ {:.1} MB/s dense-in", bytes / r.median_s / 1e6);
+        let qpacked = PackedLinear::encode(&qtheta, &qspec);
+        let r = bench(&format!("unpack int4/g32 {m}x{k}"), 1.0, || {
+            qpacked.decode();
+        });
+        println!("    ↳ {:.1} MB/s dense-out ({} -> {} bytes on disk)",
+                 bytes / r.median_s / 1e6, qpacked.dense_bytes(),
+                 qpacked.packed_bytes());
+
+        let mut stheta = Matrix::randn(m, k, 42);
+        NmStructured::new(2, 4).project_rows(&mut stheta, &mut ProjScratch::new());
+        let sspec = CompressionSpec::structured_nm(2, 4);
+        bench(&format!("pack 2:4 mask {m}x{k}"), 1.0, || {
+            PackedLinear::encode(&stheta, &sspec);
+        });
+        let spacked = PackedLinear::encode(&stheta, &sspec);
+        bench(&format!("unpack 2:4 mask {m}x{k}"), 1.0, || {
+            spacked.decode();
+        });
+
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let r = bench(&format!("dense matmul {m}x{k}x{n}"), 1.0, || {
+            awp::tensor::ops::matmul(&qtheta, &b);
+        });
+        println!("    ↳ {:.1} GFLOP/s", r.gflops(flops));
+        let r = bench(&format!("packed int4 GEMM {m}x{k}x{n}"), 1.0, || {
+            qpacked.matmul(&b);
+        });
+        println!("    ↳ {:.1} GFLOP/s (dequant-on-the-fly)", r.gflops(flops));
+        let r = bench(&format!("dense matmul 2:4 {m}x{k}x{n}"), 1.0, || {
+            awp::tensor::ops::matmul(&stheta, &b);
+        });
+        println!("    ↳ {:.1} GFLOP/s", r.gflops(flops));
+        let r = bench(&format!("packed 2:4 sparse GEMM {m}x{k}x{n}"), 1.0, || {
+            spacked.matmul_sparse(&b);
+        });
+        println!("    ↳ {:.1} GFLOP/s dense-equivalent (survivors only)",
+                 r.gflops(flops));
+    }
+
     println!("\n== §3 cost scaling: AWP per-iteration GEMM vs Hessian inverse ==");
     for &d in &[128usize, 256, 512, 1024] {
         let w = Matrix::randn(128, d, 7);

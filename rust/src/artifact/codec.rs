@@ -1,0 +1,663 @@
+//! Bit-packed site representations and the lossless encoder behind them.
+//!
+//! A compressed site leaves the pipeline as a dense f32 `Matrix` whose
+//! entries happen to live in a tiny set: b-bit grid points for quantized
+//! sites, mostly zeros for pruned ones. [`PackedLinear`] stores each site
+//! in that natural representation:
+//!
+//! | variant        | constraint family          | layout                        |
+//! |----------------|----------------------------|-------------------------------|
+//! | `GroupedInt`   | `C_INTb` (quant, joint)    | b-bit codes + per-group (scale, zp) |
+//! | `Palette`      | `C_INTb` fallback          | b-bit codes + per-group value LUT   |
+//! | `SparseMask`   | `C_row`, N:M               | packed survivor mask + nonzero f32s |
+//! | `Dense`        | anything (fallback)        | raw f32                        |
+//!
+//! ### The bit-identity contract
+//!
+//! `decode(encode(Θ)) == Θ` **bit-for-bit**, always. The encoder earns
+//! that structurally rather than by hope: every candidate representation
+//! is *verified* by decoding and comparing bit patterns before it is
+//! accepted, and a candidate that fails (or fails to shrink the site)
+//! falls through the lattice `GroupedInt → Palette → SparseMask → Dense`.
+//! `Dense` is trivially exact, so the contract holds for arbitrary input —
+//! the lattice only decides how small the exact representation gets.
+//!
+//! ### Recovering the grid from Θ alone
+//!
+//! `GroupedInt` mirrors [`crate::proj::GroupedIntGrid`]: within each
+//! aligned group the values are `(q − zp)·s` for integer codes
+//! `q ∈ [0, qmax]`. The projection's `(s, zp)` are not persisted by the
+//! pipeline, so the encoder re-derives them from the group's values: the
+//! group min/max span divided by each candidate code span `m ∈ [r−1, qmax]`
+//! proposes a scale, a few ulp-neighbours of each proposal absorb the
+//! float rounding of the original fit, and a proposal is accepted only if
+//! **every** distinct value reproduces exactly as `fl(c·s)` with integer
+//! codes spanning ≤ qmax. Decode computes `(q − zp)·s` where `q − zp` is
+//! an exact small-integer subtraction, i.e. the identical product the
+//! verifier checked — which is what makes the verification sound.
+
+use crate::compress::traits::{CompressionMode, CompressionSpec};
+use crate::quant::pack::{pack_bits, packed_size_bytes, unpack_bits};
+use crate::tensor::Matrix;
+
+/// Largest |integer code| the scale/zp recovery will accept: keeps
+/// `q − zp` exact in f32 (integers below 2²⁴) with headroom.
+const MAX_CODE_MAG: i64 = 1 << 23;
+
+/// One site's weights in packed form. Construct with
+/// [`PackedLinear::encode`]; reconstruct with [`PackedLinear::decode`]
+/// (bit-identical) or run the packed kernels in [`super::packed`] directly.
+#[derive(Clone, Debug)]
+pub enum PackedLinear {
+    /// Raw f32 fallback — exact for anything, compresses nothing.
+    Dense { rows: usize, cols: usize, data: Vec<f32> },
+    /// Grouped b-bit integer codes with per-(row, group) scale and
+    /// zero-point; `group` is the *effective* group (already clamped to
+    /// the width, so `cols % group == 0` holds).
+    GroupedInt {
+        rows: usize,
+        cols: usize,
+        bits: u8,
+        group: usize,
+        /// per (row, group): scale
+        scales: Vec<f32>,
+        /// per (row, group): zero-point (integer stored as f32)
+        zps: Vec<f32>,
+        /// bit-packed row-major codes ([`pack_bits`])
+        codes: Vec<u8>,
+    },
+    /// Grouped b-bit codes indexing a per-group table of distinct values —
+    /// the exact fallback when no (scale, zp) reproduces the group.
+    Palette {
+        rows: usize,
+        cols: usize,
+        bits: u8,
+        group: usize,
+        /// per (row, group): number of table entries **minus one** (so a
+        /// full 256-entry INT8 table still fits a byte)
+        counts: Vec<u8>,
+        /// concatenated per-group tables, group-major
+        values: Vec<f32>,
+        /// bit-packed row-major codes into the group's table
+        codes: Vec<u8>,
+    },
+    /// Packed survivor mask (one bit per weight, row-major) plus the
+    /// surviving values in row-major order — `C_row` and N:M sites.
+    SparseMask {
+        rows: usize,
+        cols: usize,
+        /// bit `i` set ⇔ element `i` is a survivor (bit pattern ≠ +0.0)
+        mask: Vec<u8>,
+        values: Vec<f32>,
+    },
+}
+
+impl PackedLinear {
+    pub fn rows(&self) -> usize {
+        match self {
+            PackedLinear::Dense { rows, .. }
+            | PackedLinear::GroupedInt { rows, .. }
+            | PackedLinear::Palette { rows, .. }
+            | PackedLinear::SparseMask { rows, .. } => *rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            PackedLinear::Dense { cols, .. }
+            | PackedLinear::GroupedInt { cols, .. }
+            | PackedLinear::Palette { cols, .. }
+            | PackedLinear::SparseMask { cols, .. } => *cols,
+        }
+    }
+
+    /// Stable variant tag (also the on-disk `mode` field).
+    pub fn mode_name(&self) -> &'static str {
+        match self {
+            PackedLinear::Dense { .. } => "dense",
+            PackedLinear::GroupedInt { .. } => "int",
+            PackedLinear::Palette { .. } => "palette",
+            PackedLinear::SparseMask { .. } => "mask",
+        }
+    }
+
+    /// Human-readable parameterisation for `repro inspect`.
+    pub fn describe(&self) -> String {
+        match self {
+            PackedLinear::Dense { .. } => "dense f32".to_string(),
+            PackedLinear::GroupedInt { bits, group, .. } => {
+                format!("int{bits} g{group}")
+            }
+            PackedLinear::Palette { bits, group, .. } => {
+                format!("palette{bits} g{group}")
+            }
+            PackedLinear::SparseMask { rows, cols, values, .. } => {
+                let density = values.len() as f64 / (rows * cols).max(1) as f64;
+                format!("mask {:.1}% dense", 100.0 * density)
+            }
+        }
+    }
+
+    /// Serialized payload size in bytes (what the artifact file stores for
+    /// this site, excluding its header entry).
+    pub fn packed_bytes(&self) -> usize {
+        match self {
+            PackedLinear::Dense { data, .. } => data.len() * 4,
+            PackedLinear::GroupedInt { scales, zps, codes, .. } => {
+                scales.len() * 4 + zps.len() * 4 + codes.len()
+            }
+            PackedLinear::Palette { counts, values, codes, .. } => {
+                counts.len() + values.len() * 4 + codes.len()
+            }
+            PackedLinear::SparseMask { mask, values, .. } => {
+                mask.len() + values.len() * 4
+            }
+        }
+    }
+
+    /// Size of the same site stored dense (f32 per weight).
+    pub fn dense_bytes(&self) -> usize {
+        self.rows() * self.cols() * 4
+    }
+
+    // -------------------------------------------------------------- encode
+
+    /// Pack `theta` under `spec`'s constraint family, guaranteeing
+    /// `decode()` reproduces `theta` bit-for-bit. Candidates are tried in
+    /// shrink order and each is decode-verified; `Dense` is the universal
+    /// fallback, so this never fails.
+    pub fn encode(theta: &Matrix, spec: &CompressionSpec) -> PackedLinear {
+        let dense_bytes = theta.rows * theta.cols * 4;
+        let mut candidates: Vec<PackedLinear> = Vec::new();
+        if let Some(qs) = spec.quant_spec() {
+            match encode_grouped_int(theta, qs.bits, qs.group) {
+                Some(p) => candidates.push(p),
+                None => {
+                    if let Some(p) = encode_palette(theta, qs.bits, qs.group) {
+                        candidates.push(p);
+                    }
+                }
+            }
+        }
+        if matches!(
+            spec.mode,
+            CompressionMode::Prune { .. }
+                | CompressionMode::StructuredNm { .. }
+                | CompressionMode::Joint { .. }
+                | CompressionMode::JointNm { .. }
+        ) {
+            candidates.push(encode_sparse_mask(theta));
+        }
+        candidates.sort_by_key(PackedLinear::packed_bytes);
+        for cand in candidates {
+            if cand.packed_bytes() < dense_bytes && cand.reconstructs(theta) {
+                return cand;
+            }
+        }
+        PackedLinear::Dense {
+            rows: theta.rows,
+            cols: theta.cols,
+            data: theta.data.clone(),
+        }
+    }
+
+    /// `decode() == theta`, bit-for-bit — the encoder's acceptance gate
+    /// and the tests' oracle.
+    pub fn reconstructs(&self, theta: &Matrix) -> bool {
+        if (self.rows(), self.cols()) != theta.shape() {
+            return false;
+        }
+        let back = self.decode();
+        back.data
+            .iter()
+            .zip(&theta.data)
+            .all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+
+    // -------------------------------------------------------------- decode
+
+    /// Reconstruct the dense matrix, bit-identical to the encoder's input.
+    pub fn decode(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows(), self.cols());
+        match self {
+            PackedLinear::Dense { data, .. } => out.data.copy_from_slice(data),
+            PackedLinear::GroupedInt {
+                rows, cols, bits, group, scales, zps, codes,
+            } => {
+                let ng = cols / group;
+                let q = unpack_bits(codes, *bits, rows * cols);
+                for i in 0..*rows {
+                    for g in 0..ng {
+                        let scale = scales[i * ng + g];
+                        let zp = zps[i * ng + g];
+                        for t in 0..*group {
+                            let idx = i * cols + g * group + t;
+                            out.data[idx] = (q[idx] as f32 - zp) * scale;
+                        }
+                    }
+                }
+            }
+            PackedLinear::Palette {
+                rows, cols, bits, group, counts, values, codes,
+            } => {
+                let ng = cols / group;
+                let q = unpack_bits(codes, *bits, rows * cols);
+                let mut start = 0usize;
+                for i in 0..*rows {
+                    for g in 0..ng {
+                        let len = counts[i * ng + g] as usize + 1;
+                        let table = &values[start..start + len];
+                        for t in 0..*group {
+                            let idx = i * cols + g * group + t;
+                            out.data[idx] = table[q[idx] as usize];
+                        }
+                        start += len;
+                    }
+                }
+            }
+            PackedLinear::SparseMask { rows, cols, mask, values } => {
+                let mut v = 0usize;
+                for idx in 0..rows * cols {
+                    if mask[idx / 8] >> (idx % 8) & 1 == 1 {
+                        out.data[idx] = values[v];
+                        v += 1;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-variant encoders
+
+/// Effective group width: the projection clamps its configured group to
+/// the site width (`GroupedIntGrid` semantics), so the codec does too.
+fn effective_group(cols: usize, group: usize) -> usize {
+    group.min(cols).max(1)
+}
+
+/// Neighbouring f32 toward −∞ / +∞ (one representable step; callers only
+/// pass nonzero finite values whose neighbours don't cross zero).
+fn f32_pred(x: f32) -> f32 {
+    if x > 0.0 {
+        f32::from_bits(x.to_bits() - 1)
+    } else {
+        f32::from_bits(x.to_bits() + 1)
+    }
+}
+
+fn f32_succ(x: f32) -> f32 {
+    if x > 0.0 {
+        f32::from_bits(x.to_bits() + 1)
+    } else {
+        f32::from_bits(x.to_bits() - 1)
+    }
+}
+
+/// Try to represent one group as `(q − zp)·s`: returns `(scale, zp,
+/// codes)` such that the decode expression reproduces every element
+/// bit-for-bit, or `None` if no candidate grid does.
+///
+/// For each candidate code span `m`, the approximate scale `span/m` fixes
+/// the integer code of every distinct value; the set of scales that
+/// reproduce a value `v` exactly as `fl(c·s)` is then `v`'s f32-rounding
+/// interval divided by `c`, and intersecting those intervals over the
+/// group either yields a working scale or proves the span wrong. The
+/// final word is always [`verify_grid`] — a candidate is accepted only if
+/// every distinct value decodes bit-exact.
+fn try_scale_zp(s: &[f32], qmax: u32) -> Option<(f32, f32, Vec<u8>)> {
+    if s.iter().any(|v| !v.is_finite()) {
+        return None;
+    }
+    // distinct bit patterns, value-ordered
+    let mut distinct: Vec<f32> = s.to_vec();
+    distinct.sort_by(f32::total_cmp);
+    distinct.dedup_by(|a, b| a.to_bits() == b.to_bits());
+    let r = distinct.len();
+    if r == 1 {
+        // flat group: scale slot carries the constant, code 0, zp −1 ⇒
+        // decode (0 − (−1))·v = 1·v = v exactly
+        let v = distinct[0];
+        return Some((v, -1.0, vec![0u8; s.len()]));
+    }
+    if r > qmax as usize + 1 {
+        return None;
+    }
+    let span = distinct[r - 1] as f64 - distinct[0] as f64;
+    if !(span > 0.0) || !span.is_finite() {
+        return None;
+    }
+    for m in (r as u32 - 1).max(1)..=qmax {
+        let s0 = span / m as f64;
+        let Some(codes) = integer_codes(&distinct, s0, qmax) else { continue };
+        let Some(cand) = scale_interval_mid(&distinct, &codes) else { continue };
+        for scale in [cand, f32_pred(cand), f32_succ(cand)] {
+            if !(scale > 0.0) || !scale.is_finite() {
+                continue;
+            }
+            if verify_grid(&distinct, &codes, scale) {
+                return Some(assign_codes(s, &distinct, &codes, scale));
+            }
+        }
+    }
+    None
+}
+
+/// Integer code of every distinct value under the approximate scale `s0`,
+/// if they are plausible (bounded, span ≤ qmax, zeros only at code 0).
+fn integer_codes(distinct: &[f32], s0: f64, qmax: u32) -> Option<Vec<i64>> {
+    let mut cs = Vec::with_capacity(distinct.len());
+    for &v in distinct {
+        let c = (v as f64 / s0).round() as i64;
+        if c.abs() > MAX_CODE_MAG {
+            return None;
+        }
+        // code 0 decodes to exactly +0.0 and nothing else, so value and
+        // code must agree on zeroness (a kept −0.0 has no code at all and
+        // sends the group to the palette encoding)
+        if (v.to_bits() == 0) != (c == 0) {
+            return None;
+        }
+        cs.push(c);
+    }
+    let c_min = *cs.iter().min().unwrap();
+    let c_max = *cs.iter().max().unwrap();
+    if c_max - c_min > qmax as i64 {
+        return None;
+    }
+    Some(cs)
+}
+
+/// Midpoint of the intersection of every value's scale interval: the real
+/// scales `s` with `round_f32(c·s) == v` form `v`'s rounding interval
+/// divided by `c`; a nonempty intersection over the group yields the
+/// candidate.
+fn scale_interval_mid(distinct: &[f32], codes: &[i64]) -> Option<f32> {
+    let mut s_lo = f64::NEG_INFINITY;
+    let mut s_hi = f64::INFINITY;
+    for (&v, &c) in distinct.iter().zip(codes) {
+        if c == 0 {
+            continue; // v is +0.0: satisfied by any scale
+        }
+        let v64 = v as f64;
+        let lo = (v64 + f32_pred(v) as f64) / 2.0;
+        let hi = (v64 + f32_succ(v) as f64) / 2.0;
+        let (a, b) = if c > 0 {
+            (lo / c as f64, hi / c as f64)
+        } else {
+            (hi / c as f64, lo / c as f64)
+        };
+        s_lo = s_lo.max(a);
+        s_hi = s_hi.min(b);
+        if s_lo > s_hi {
+            return None;
+        }
+    }
+    let mid = (s_lo + s_hi) / 2.0;
+    mid.is_finite().then_some(mid as f32)
+}
+
+/// The acceptance gate: every distinct value must be exactly `fl(c·scale)`
+/// — the same product the decoder computes.
+fn verify_grid(distinct: &[f32], codes: &[i64], scale: f32) -> bool {
+    distinct
+        .iter()
+        .zip(codes)
+        .all(|(&v, &c)| (c as f32 * scale).to_bits() == v.to_bits())
+}
+
+/// Map each element of `s` to its code `q = c − c_min`; `zp = −c_min`.
+fn assign_codes(s: &[f32], distinct: &[f32], grid: &[i64], scale: f32)
+    -> (f32, f32, Vec<u8>) {
+    let c_min = *grid.iter().min().unwrap();
+    let lut: Vec<(u32, u8)> = distinct
+        .iter()
+        .zip(grid)
+        .map(|(v, c)| (v.to_bits(), (c - c_min) as u8))
+        .collect();
+    let codes = s
+        .iter()
+        .map(|v| {
+            lut.iter()
+                .find(|(bits, _)| *bits == v.to_bits())
+                .expect("element missing from its own distinct set")
+                .1
+        })
+        .collect();
+    (scale, -(c_min as f32), codes)
+}
+
+fn encode_grouped_int(theta: &Matrix, bits: u8, group: usize) -> Option<PackedLinear> {
+    let geff = effective_group(theta.cols, group);
+    if theta.cols % geff != 0 {
+        return None;
+    }
+    let qmax = (1u32 << bits) - 1;
+    let ng = theta.cols / geff;
+    let mut scales = Vec::with_capacity(theta.rows * ng);
+    let mut zps = Vec::with_capacity(theta.rows * ng);
+    let mut codes = Vec::with_capacity(theta.rows * theta.cols);
+    for i in 0..theta.rows {
+        let row = theta.row(i);
+        for g in 0..ng {
+            let (scale, zp, q) = try_scale_zp(&row[g * geff..(g + 1) * geff], qmax)?;
+            scales.push(scale);
+            zps.push(zp);
+            codes.extend_from_slice(&q);
+        }
+    }
+    Some(PackedLinear::GroupedInt {
+        rows: theta.rows,
+        cols: theta.cols,
+        bits,
+        group: geff,
+        scales,
+        zps,
+        codes: pack_bits(&codes, bits),
+    })
+}
+
+fn encode_palette(theta: &Matrix, bits: u8, group: usize) -> Option<PackedLinear> {
+    let geff = effective_group(theta.cols, group);
+    if theta.cols % geff != 0 {
+        return None;
+    }
+    let levels = 1usize << bits;
+    let ng = theta.cols / geff;
+    let mut counts = Vec::with_capacity(theta.rows * ng);
+    let mut values = Vec::new();
+    let mut codes = Vec::with_capacity(theta.rows * theta.cols);
+    for i in 0..theta.rows {
+        let row = theta.row(i);
+        for g in 0..ng {
+            let s = &row[g * geff..(g + 1) * geff];
+            let mut distinct: Vec<f32> = s.to_vec();
+            distinct.sort_by(f32::total_cmp);
+            distinct.dedup_by(|a, b| a.to_bits() == b.to_bits());
+            if distinct.len() > levels {
+                return None;
+            }
+            counts.push((distinct.len() - 1) as u8);
+            for &v in s {
+                let q = distinct
+                    .iter()
+                    .position(|d| d.to_bits() == v.to_bits())
+                    .expect("element missing from its own distinct set");
+                codes.push(q as u8);
+            }
+            values.extend_from_slice(&distinct);
+        }
+    }
+    Some(PackedLinear::Palette {
+        rows: theta.rows,
+        cols: theta.cols,
+        bits,
+        group: geff,
+        counts,
+        values,
+        codes: pack_bits(&codes, bits),
+    })
+}
+
+fn encode_sparse_mask(theta: &Matrix) -> PackedLinear {
+    let n = theta.rows * theta.cols;
+    let mut mask = vec![0u8; n.div_ceil(8)];
+    let mut values = Vec::new();
+    for (idx, &v) in theta.data.iter().enumerate() {
+        // bit-pattern test, not `v != 0.0`: a kept −0.0 must survive the
+        // round-trip exactly, so it counts as a survivor
+        if v.to_bits() != 0 {
+            mask[idx / 8] |= 1 << (idx % 8);
+            values.push(v);
+        }
+    }
+    PackedLinear::SparseMask { rows: theta.rows, cols: theta.cols, mask, values }
+}
+
+/// Expected packed-codes byte length for a codes section (shared by the
+/// disk reader's bounds checks).
+pub fn codes_len(rows: usize, cols: usize, bits: u8) -> usize {
+    packed_size_bytes(rows * cols, bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proj::{GroupedIntGrid, NmStructured, ProjScratch, Projection};
+    use crate::quant::project_qmax;
+    use crate::tensor::topk::hard_threshold_rows;
+
+    fn assert_bit_exact(p: &PackedLinear, theta: &Matrix) {
+        assert!(p.reconstructs(theta), "{} does not round-trip", p.describe());
+    }
+
+    #[test]
+    fn quantized_sites_pack_as_grouped_int() {
+        for seed in 0..8u64 {
+            for bits in [2u8, 3, 4] {
+                let z = Matrix::randn(6, 64, seed);
+                let theta = project_qmax(&z, (1u32 << bits) as f32 - 1.0, 32);
+                let spec = CompressionSpec::quant(bits, 32);
+                let p = PackedLinear::encode(&theta, &spec);
+                assert_eq!(p.mode_name(), "int", "seed={seed} bits={bits}");
+                assert_bit_exact(&p, &theta);
+                assert!(p.packed_bytes() < p.dense_bytes());
+            }
+        }
+    }
+
+    #[test]
+    fn joint_sites_pack_with_exact_zeros() {
+        for seed in 0..6u64 {
+            let z = Matrix::randn(4, 64, seed);
+            let spec = CompressionSpec::joint(0.5, 4, 32);
+            let mut theta = z.clone();
+            spec.projection(theta.cols)
+                .project_rows(&mut theta, &mut ProjScratch::new());
+            let p = PackedLinear::encode(&theta, &spec);
+            assert_bit_exact(&p, &theta);
+            assert!(p.packed_bytes() < p.dense_bytes(), "{}", p.describe());
+        }
+    }
+
+    #[test]
+    fn nm_sites_pack_as_mask() {
+        for seed in 0..6u64 {
+            let mut theta = Matrix::randn(5, 64, seed);
+            NmStructured::new(2, 4).project_rows(&mut theta, &mut ProjScratch::new());
+            let spec = CompressionSpec::structured_nm(2, 4);
+            let p = PackedLinear::encode(&theta, &spec);
+            assert_eq!(p.mode_name(), "mask");
+            assert_bit_exact(&p, &theta);
+            // 2:4 at f32: 1 bit of mask + ~2 bytes of values per weight < 4
+            assert!(p.packed_bytes() < p.dense_bytes());
+        }
+    }
+
+    #[test]
+    fn pruned_sites_pack_as_mask() {
+        let theta = hard_threshold_rows(&Matrix::randn(8, 32, 3), 16);
+        let p = PackedLinear::encode(&theta, &CompressionSpec::prune(0.5));
+        assert_eq!(p.mode_name(), "mask");
+        assert_bit_exact(&p, &theta);
+        assert!(p.packed_bytes() < p.dense_bytes());
+    }
+
+    #[test]
+    fn off_grid_input_falls_back_to_dense() {
+        // raw gaussian under a quant spec: 32 distinct values per group
+        // defeat both the 4-bit grid and the 16-entry palette
+        let theta = Matrix::randn(4, 64, 9);
+        let p = PackedLinear::encode(&theta, &CompressionSpec::quant(4, 32));
+        assert_eq!(p.mode_name(), "dense");
+        assert_bit_exact(&p, &theta);
+    }
+
+    #[test]
+    fn negative_zero_survives_the_mask() {
+        let mut theta = hard_threshold_rows(&Matrix::randn(2, 16, 1), 8);
+        theta.data[3] = -0.0;
+        let p = encode_sparse_mask(&theta);
+        assert_bit_exact(&p, &theta);
+        let back = p.decode();
+        assert_eq!(back.data[3].to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn flat_groups_encode_exactly() {
+        let theta = Matrix::from_fn(3, 32, |i, _| 0.7 + i as f32);
+        let p = encode_grouped_int(&theta, 4, 32).unwrap();
+        assert_bit_exact(&p, &theta);
+    }
+
+    #[test]
+    fn grid_projection_operator_output_packs() {
+        // the proj:: operator (not just quant::project_qmax) round-trips
+        for seed in 0..4u64 {
+            let mut theta = Matrix::randn(4, 64, seed);
+            GroupedIntGrid::new(7.0, 32)
+                .project_rows(&mut theta, &mut ProjScratch::new());
+            let p = encode_grouped_int(&theta, 3, 32);
+            assert!(p.is_some(), "seed={seed}");
+            assert_bit_exact(&p.unwrap(), &theta);
+        }
+    }
+
+    #[test]
+    fn narrow_sites_clamp_the_group() {
+        // 16-wide site with group 32 (GroupedIntGrid clamps; so do we)
+        let z = Matrix::randn(3, 16, 2);
+        let theta = project_qmax(&z, 15.0, 16);
+        let p = PackedLinear::encode(&theta, &CompressionSpec::quant(4, 32));
+        assert_bit_exact(&p, &theta);
+        if let PackedLinear::GroupedInt { group, .. } = &p {
+            assert_eq!(*group, 16);
+        }
+    }
+
+    #[test]
+    fn palette_round_trips_hand_built_groups() {
+        // 4 distinct values per 16-group, deliberately not an affine grid
+        let theta = Matrix::from_fn(2, 32, |_, j| match j % 4 {
+            0 => 0.1,
+            1 => 0.3,
+            2 => 0.7,
+            _ => -5.0,
+        });
+        let p = encode_palette(&theta, 2, 16).unwrap();
+        assert_bit_exact(&p, &theta);
+        assert!(p.packed_bytes() < p.dense_bytes());
+    }
+
+    #[test]
+    fn sizes_are_accounted() {
+        let z = Matrix::randn(4, 64, 5);
+        let theta = project_qmax(&z, 15.0, 32);
+        let p = encode_grouped_int(&theta, 4, 32).unwrap();
+        // 4 rows × 2 groups × (scale + zp) = 64 bytes, codes 4·64·4 bits
+        assert_eq!(p.packed_bytes(), 64 + 128);
+        assert_eq!(p.dense_bytes(), 4 * 64 * 4);
+    }
+}

@@ -1,0 +1,157 @@
+//! Compressed-artifact identity — `(Gram cache key, spec, method)`.
+//!
+//! A compressed site is a pure function of the checkpoint, the calibration
+//! Grams, the compression spec, the method and its hyperparameters, so an
+//! artifact's key is the Gram cache key ([`GramCacheKey`]: model,
+//! checkpoint fingerprint, calibration-config fingerprint) extended with
+//! [`CompressionSpec::fingerprint`], the method label and a
+//! method-parameter fingerprint
+//! ([`crate::compress::AwpHyper::fingerprint`]). Same discipline as the
+//! Gram cache: the 64-bit hash only names the file; the identity fields
+//! are stored inside the artifact and re-validated on load, so a hash
+//! collision (or a renamed file) degrades to a recompute, never to
+//! serving the wrong weights.
+
+use crate::compress::traits::CompressionSpec;
+use crate::coordinator::cache::GramCacheKey;
+use crate::util::Fnv64;
+
+/// Full identity of one model's compressed artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactKey {
+    /// identity of the calibration inputs (model, checkpoint, calib config)
+    pub gram: GramCacheKey,
+    /// [`crate::coordinator::Method::label`]
+    pub method: String,
+    /// [`CompressionSpec::fingerprint`]
+    pub spec: u64,
+    /// [`CompressionSpec::describe`] — stored in the artifact and compared
+    /// on load (human-readable identity, collision backstop)
+    pub spec_desc: String,
+    /// method-parameter fingerprint (e.g.
+    /// [`crate::compress::AwpHyper::fingerprint`]): everything beyond the
+    /// spec that changes the produced Θ — step sizes, iteration budgets,
+    /// the AOT chunk/group. Defaults to 0 for parameter-free callers.
+    pub params: u64,
+}
+
+impl ArtifactKey {
+    pub fn new(gram: GramCacheKey, method: &str, spec: &CompressionSpec) -> Self {
+        ArtifactKey {
+            gram,
+            method: method.to_string(),
+            spec: spec.fingerprint(),
+            spec_desc: spec.describe(),
+            params: 0,
+        }
+    }
+
+    /// Attach the method-parameter fingerprint (hyperparameters).
+    pub fn with_params(mut self, params: u64) -> Self {
+        self.params = params;
+        self
+    }
+
+    pub fn hash(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_u64(self.gram.hash());
+        h.write_str(&self.method);
+        h.write_u64(self.spec);
+        h.write_u64(self.params);
+        h.finish()
+    }
+
+    /// Artifact file name: `<model>-<hash:016x>.apack`.
+    pub fn file_name(&self) -> String {
+        let safe: String = self
+            .gram
+            .model
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+            .collect();
+        format!("{safe}-{:016x}.apack", self.hash())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gram(model: &str, ck: u64) -> GramCacheKey {
+        GramCacheKey { model: model.into(), checkpoint: ck, calib: 7 }
+    }
+
+    #[test]
+    fn hash_tracks_every_component() {
+        let base = ArtifactKey::new(gram("t", 1), "awp", &CompressionSpec::prune(0.5));
+        assert_eq!(base.hash(),
+                   ArtifactKey::new(gram("t", 1), "awp",
+                                    &CompressionSpec::prune(0.5)).hash());
+        // checkpoint, method, spec, spec params each move the hash
+        assert_ne!(base.hash(),
+                   ArtifactKey::new(gram("t", 2), "awp",
+                                    &CompressionSpec::prune(0.5)).hash());
+        assert_ne!(base.hash(),
+                   ArtifactKey::new(gram("t", 1), "wanda",
+                                    &CompressionSpec::prune(0.5)).hash());
+        assert_ne!(base.hash(),
+                   ArtifactKey::new(gram("t", 1), "awp",
+                                    &CompressionSpec::prune(0.6)).hash());
+        assert_ne!(base.hash(),
+                   ArtifactKey::new(gram("t", 1), "awp",
+                                    &CompressionSpec::quant(4, 32)).hash());
+        let mut seeded = CompressionSpec::prune(0.5);
+        seeded.seed = 9;
+        assert_ne!(base.hash(),
+                   ArtifactKey::new(gram("t", 1), "awp", &seeded).hash());
+        // hyperparameters move the hash too (the AwpHyper fingerprint)
+        assert_ne!(base.hash(), base.clone().with_params(1).hash());
+    }
+
+    #[test]
+    fn hyper_fingerprint_tracks_theta_affecting_knobs() {
+        use crate::compress::AwpHyper;
+        let base = AwpHyper::default().fingerprint();
+        assert_eq!(base, AwpHyper::default().fingerprint());
+        let mut h = AwpHyper::default();
+        h.chunk = 1;
+        assert_ne!(base, h.fingerprint());
+        let mut h = AwpHyper::default();
+        h.group = 64;
+        assert_ne!(base, h.fingerprint());
+        let mut h = AwpHyper::default();
+        h.prune_max_iters = 50;
+        assert_ne!(base, h.fingerprint());
+        // series tracking is bookkeeping only — same Θ, same key
+        let mut h = AwpHyper::default();
+        h.track_series = true;
+        assert_eq!(base, h.fingerprint());
+    }
+
+    #[test]
+    fn spec_fingerprint_separates_modes_with_equal_params() {
+        // nm(2:4) vs jointnm(2:4, int4): the mode tag must disambiguate
+        let a = CompressionSpec::structured_nm(2, 4).fingerprint();
+        let b = CompressionSpec::joint_nm(2, 4, 4, 32).fingerprint();
+        assert_ne!(a, b);
+        assert_ne!(CompressionSpec::quant(4, 32).fingerprint(),
+                   CompressionSpec::joint(0.5, 4, 32).fingerprint());
+    }
+
+    #[test]
+    fn file_names_are_filesystem_safe() {
+        let key = ArtifactKey::new(gram("we/ird mo:del", 1), "awp",
+                                   &CompressionSpec::prune(0.5));
+        let name = key.file_name();
+        assert!(!name.contains('/') && !name.contains(':'), "{name}");
+        assert!(name.ends_with(".apack"));
+    }
+
+    #[test]
+    fn describe_is_stored_for_revalidation() {
+        let key = ArtifactKey::new(gram("t", 1), "awp",
+                                   &CompressionSpec::joint(0.5, 4, 32));
+        assert!(key.spec_desc.contains("Joint"), "{}", key.spec_desc);
+        assert!(key.spec_desc.contains("seed=0"), "{}", key.spec_desc);
+    }
+}

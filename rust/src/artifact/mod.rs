@@ -1,0 +1,41 @@
+//! Compressed-artifact subsystem: bit-packed weight storage, the
+//! `(Gram cache key, spec, method)`-keyed artifact store, and the packed
+//! execution path.
+//!
+//! The compression pipeline produces dense f32 `Matrix` values whose
+//! entries live in tiny sets (b-bit grid points, sparse survivors). This
+//! module is where that structure becomes *real* savings and *real*
+//! incrementality:
+//!
+//! * [`codec`] — [`PackedLinear`]: each site stored in its natural
+//!   representation (grouped b-bit codes + per-group scale/zero-point,
+//!   per-group value palettes, packed survivor masks, dense fallback),
+//!   with a decode that is **bit-identical** to the encoder's input —
+//!   enforced by decode-verification at encode time, not by tolerance.
+//! * [`keys`] — [`ArtifactKey`]: artifact identity = Gram cache key ×
+//!   [`crate::compress::traits::CompressionSpec::fingerprint`] × method,
+//!   re-validated on every load.
+//! * [`store`] — the `AWPPACK1` container and [`ArtifactStore`]:
+//!   rename-atomic writes, corrupt-file → logged recompute, per-site
+//!   layer reports persisted alongside the weights so warm reruns submit
+//!   **zero** compression jobs (`coordinator::pipeline::compress_model_cached`).
+//! * [`packed`] — the packed execution path: streaming dequant GEMM and
+//!   survivor-only N:M sparse GEMM over [`PackedLinear`], bit-identical
+//!   to the dense kernels on the decoded weights.
+//!
+//! CLI surface: `repro compress --pack-out <file>`, `repro inspect
+//! <file>`, `repro eval --from-artifact <file>`; sweeps consult the store
+//! through `--artifact-dir` (default `cache/artifacts`). See ARTIFACTS.md
+//! for the container layout and the bit-packing spec.
+
+pub mod codec;
+pub mod keys;
+pub mod packed;
+pub mod store;
+
+pub use codec::PackedLinear;
+pub use keys::ArtifactKey;
+pub use store::{
+    load_artifact, read_artifact, store_artifact, write_artifact, ArtifactCounts,
+    ArtifactSite, ArtifactStore, ModelArtifact,
+};

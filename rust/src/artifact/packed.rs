@@ -1,0 +1,297 @@
+//! Packed execution — GEMM kernels that consume [`PackedLinear`] weights
+//! without ever materialising the dense Θ.
+//!
+//! Two kernel families:
+//!
+//! * [`PackedLinear::matmul`] — **streaming dequant GEMM**. Decodes one
+//!   coefficient row at a time (O(d_in) scratch, never O(d_out·d_in)) and
+//!   feeds it through [`ops::matmul_row_panel`] — the *same* inner kernel
+//!   the dense [`ops::matmul`] runs — so the result is bit-identical to
+//!   `ops::matmul(&packed.decode(), b)` by code sharing, not by tolerance.
+//! * [`PackedLinear::matmul_sparse`] — **survivor-only sparse GEMM** for
+//!   `SparseMask` sites: iterates the packed mask and accumulates only
+//!   surviving weights, skipping pruned groups entirely (the N:M payoff).
+//!   Accumulation visits survivors in ascending column order — the same
+//!   order the dense kernel adds their products — so it agrees bit-for-bit
+//!   with the dense result whenever no accumulator passes through ±0.0
+//!   mid-chain (with nonzero survivors that requires exact cancellation;
+//!   the packed-exec tests pin equality on random inputs).
+
+use crate::quant::pack::unpack_bits_into;
+use crate::tensor::{ops, Matrix};
+use crate::util::parallel::par_chunks_mut;
+
+use super::codec::PackedLinear;
+
+/// Per-matrix decode offsets computed once per kernel launch (palette
+/// tables and sparse values are variable-length, so row starts need a
+/// prefix pass).
+enum DecodeAux {
+    None,
+    /// `Palette`: start offset into `values` for each (row, group)
+    TableStarts(Vec<usize>),
+    /// `SparseMask`: start offset into `values` for each row
+    RowStarts(Vec<usize>),
+}
+
+impl PackedLinear {
+    fn aux(&self) -> DecodeAux {
+        match self {
+            PackedLinear::Dense { .. } | PackedLinear::GroupedInt { .. } => {
+                DecodeAux::None
+            }
+            PackedLinear::Palette { counts, .. } => {
+                let mut starts = Vec::with_capacity(counts.len());
+                let mut acc = 0usize;
+                for &c in counts {
+                    starts.push(acc);
+                    acc += c as usize + 1;
+                }
+                DecodeAux::TableStarts(starts)
+            }
+            PackedLinear::SparseMask { rows, cols, mask, .. } => {
+                let mut starts = Vec::with_capacity(*rows);
+                let mut acc = 0usize;
+                for i in 0..*rows {
+                    starts.push(acc);
+                    for idx in i * cols..(i + 1) * cols {
+                        acc += (mask[idx / 8] >> (idx % 8) & 1) as usize;
+                    }
+                }
+                DecodeAux::RowStarts(starts)
+            }
+        }
+    }
+
+    /// Decode row `i` into `out` (length `cols`), bit-identical to the
+    /// corresponding row of [`PackedLinear::decode`]. `qbuf` is the code
+    /// scratch (grown once per thread, reused across rows).
+    fn decode_row_into(&self, i: usize, aux: &DecodeAux, qbuf: &mut Vec<u8>,
+                       out: &mut [f32]) {
+        match (self, aux) {
+            (PackedLinear::Dense { cols, data, .. }, _) => {
+                out.copy_from_slice(&data[i * cols..(i + 1) * cols]);
+            }
+            (
+                PackedLinear::GroupedInt {
+                    cols, bits, group, scales, zps, codes, ..
+                },
+                _,
+            ) => {
+                let ng = cols / group;
+                qbuf.resize(*cols, 0);
+                let q = &mut qbuf[..*cols];
+                unpack_bits_into(codes, *bits, i * cols, q);
+                for g in 0..ng {
+                    let scale = scales[i * ng + g];
+                    let zp = zps[i * ng + g];
+                    for t in 0..*group {
+                        out[g * group + t] = (q[g * group + t] as f32 - zp) * scale;
+                    }
+                }
+            }
+            (
+                PackedLinear::Palette { cols, bits, group, counts, values, codes, .. },
+                DecodeAux::TableStarts(starts),
+            ) => {
+                let ng = cols / group;
+                qbuf.resize(*cols, 0);
+                let q = &mut qbuf[..*cols];
+                unpack_bits_into(codes, *bits, i * cols, q);
+                for g in 0..ng {
+                    let start = starts[i * ng + g];
+                    let len = counts[i * ng + g] as usize + 1;
+                    let table = &values[start..start + len];
+                    for t in 0..*group {
+                        out[g * group + t] = table[q[g * group + t] as usize];
+                    }
+                }
+            }
+            (
+                PackedLinear::SparseMask { cols, mask, values, .. },
+                DecodeAux::RowStarts(starts),
+            ) => {
+                out.fill(0.0);
+                let mut v = starts[i];
+                for t in 0..*cols {
+                    let idx = i * cols + t;
+                    if mask[idx / 8] >> (idx % 8) & 1 == 1 {
+                        out[t] = values[v];
+                        v += 1;
+                    }
+                }
+            }
+            _ => unreachable!("decode aux does not match the packed variant"),
+        }
+    }
+
+    /// Streaming dequant GEMM `Θ·B`: bit-identical to
+    /// `ops::matmul(&self.decode(), b)` (shared row-panel kernel) with
+    /// O(d_in) decode scratch per worker thread instead of a dense Θ —
+    /// the scratch lives in a thread-local and grows once, so the row
+    /// loop is allocation-free after warm-up (the repo's usual inner-loop
+    /// discipline, cf. `proj::PgdWorkspace`).
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        use std::cell::RefCell;
+        thread_local! {
+            static SCRATCH: RefCell<(Vec<f32>, Vec<u8>)> =
+                RefCell::new((Vec::new(), Vec::new()));
+        }
+        assert_eq!(
+            self.cols(),
+            b.rows,
+            "packed matmul {}x{} · {}x{}",
+            self.rows(),
+            self.cols(),
+            b.rows,
+            b.cols
+        );
+        let (k, n) = (self.cols(), b.cols);
+        let aux = self.aux();
+        let mut out = Matrix::zeros(self.rows(), n);
+        par_chunks_mut(&mut out.data, n, |i, orow| {
+            SCRATCH.with(|cell| {
+                let mut scratch = cell.borrow_mut();
+                let (arow, qbuf) = &mut *scratch;
+                arow.resize(k, 0.0);
+                self.decode_row_into(i, &aux, qbuf, &mut arow[..k]);
+                ops::matmul_row_panel(&arow[..k], b, orow);
+            });
+        });
+        out
+    }
+
+    /// Survivor-only sparse GEMM for `SparseMask` sites: walks the packed
+    /// mask and accumulates surviving weights only — a fully pruned 4-quad
+    /// (every aligned group under 2:4) costs nothing, and mixed quads cost
+    /// one multiply per survivor instead of four. The quad sums mirror the
+    /// dense kernel's `a0·b0 + a1·b1 + a2·b2 + a3·b3` expression with its
+    /// zero terms dropped (left-associated in the same column order), which
+    /// is what keeps the result bit-identical to the dense GEMM. Panics on
+    /// non-mask variants (callers dispatch on [`PackedLinear::mode_name`]).
+    pub fn matmul_sparse(&self, b: &Matrix) -> Matrix {
+        let PackedLinear::SparseMask { rows, cols, mask, values } = self else {
+            panic!("matmul_sparse needs a SparseMask site, got {}", self.mode_name());
+        };
+        assert_eq!(*cols, b.rows, "packed sparse matmul dimension mismatch");
+        let n = b.cols;
+        let DecodeAux::RowStarts(starts) = self.aux() else { unreachable!() };
+        let mut out = Matrix::zeros(*rows, n);
+        par_chunks_mut(&mut out.data, n, |i, orow| {
+            let mut v = starts[i];
+            let row_base = i * cols;
+            let mut kk = 0usize;
+            // 4-quads aligned exactly like the dense kernel's k-unroll
+            // (KB = 64 is a multiple of 4, so dense quad boundaries are
+            // global multiples of 4 too)
+            while kk + 4 <= *cols {
+                let mut avs = [0.0f32; 4];
+                let mut bcol = [0usize; 4];
+                let mut cnt = 0usize;
+                for t in 0..4 {
+                    let idx = row_base + kk + t;
+                    if mask[idx / 8] >> (idx % 8) & 1 == 1 {
+                        avs[cnt] = values[v];
+                        bcol[cnt] = kk + t;
+                        v += 1;
+                        cnt += 1;
+                    }
+                }
+                if cnt > 0 {
+                    for j in 0..n {
+                        let mut acc = avs[0] * b.data[bcol[0] * n + j];
+                        for s in 1..cnt {
+                            acc += avs[s] * b.data[bcol[s] * n + j];
+                        }
+                        orow[j] += acc;
+                    }
+                }
+                kk += 4;
+            }
+            // tail columns: single adds, like the dense remainder loop
+            while kk < *cols {
+                let idx = row_base + kk;
+                if mask[idx / 8] >> (idx % 8) & 1 == 1 {
+                    let av = values[v];
+                    v += 1;
+                    let brow = &b.data[kk * n..kk * n + n];
+                    for j in 0..n {
+                        orow[j] += av * brow[j];
+                    }
+                }
+                kk += 1;
+            }
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::traits::CompressionSpec;
+    use crate::proj::{NmStructured, ProjScratch, Projection};
+    use crate::quant::project_qmax;
+
+    fn assert_bits_eq(a: &Matrix, b: &Matrix) {
+        assert_eq!(a.shape(), b.shape());
+        for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "entry {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn streaming_matmul_is_bit_identical_for_every_mode() {
+        let b = Matrix::randn(64, 24, 100);
+        // grouped-int site
+        let q = project_qmax(&Matrix::randn(8, 64, 0), 15.0, 32);
+        let p = PackedLinear::encode(&q, &CompressionSpec::quant(4, 32));
+        assert_eq!(p.mode_name(), "int");
+        assert_bits_eq(&p.matmul(&b), &ops::matmul(&p.decode(), &b));
+        // mask site
+        let mut nm = Matrix::randn(8, 64, 1);
+        NmStructured::new(2, 4).project_rows(&mut nm, &mut ProjScratch::new());
+        let p = PackedLinear::encode(&nm, &CompressionSpec::structured_nm(2, 4));
+        assert_eq!(p.mode_name(), "mask");
+        assert_bits_eq(&p.matmul(&b), &ops::matmul(&p.decode(), &b));
+        // dense fallback site
+        let d = Matrix::randn(8, 64, 2);
+        let p = PackedLinear::encode(&d, &CompressionSpec::quant(4, 32));
+        assert_eq!(p.mode_name(), "dense");
+        assert_bits_eq(&p.matmul(&b), &ops::matmul(&d, &b));
+    }
+
+    #[test]
+    fn sparse_kernel_matches_dense_matmul() {
+        let b = Matrix::randn(64, 16, 200);
+        for seed in 0..4u64 {
+            let mut nm = Matrix::randn(6, 64, seed);
+            NmStructured::new(2, 4).project_rows(&mut nm, &mut ProjScratch::new());
+            let p = PackedLinear::encode(&nm, &CompressionSpec::structured_nm(2, 4));
+            assert_bits_eq(&p.matmul_sparse(&b), &ops::matmul(&nm, &b));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "needs a SparseMask")]
+    fn sparse_kernel_rejects_other_modes() {
+        let q = project_qmax(&Matrix::randn(2, 32, 0), 15.0, 32);
+        let p = PackedLinear::encode(&q, &CompressionSpec::quant(4, 32));
+        p.matmul_sparse(&Matrix::randn(32, 4, 1));
+    }
+
+    #[test]
+    fn palette_rows_decode_identically() {
+        let theta = Matrix::from_fn(3, 32, |i, j| match (i + j) % 3 {
+            0 => 0.25,
+            1 => -1.5,
+            _ => 3.0,
+        });
+        let p = PackedLinear::encode(&theta, &CompressionSpec::quant(2, 16));
+        assert_eq!(p.mode_name(), "palette");
+        let full = p.decode();
+        assert_bits_eq(&full, &theta);
+        let b = Matrix::randn(32, 8, 5);
+        assert_bits_eq(&p.matmul(&b), &ops::matmul(&theta, &b));
+    }
+}

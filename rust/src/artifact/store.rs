@@ -1,0 +1,660 @@
+//! The `AWPPACK1` compressed-artifact container and its on-disk store.
+//!
+//! One file per `(Gram cache key, spec, method)` — a whole model's
+//! compressed sites in their packed representations plus their layer
+//! reports, so a warm rerun can reproduce both the compressed checkpoint
+//! and its per-layer audit trail without submitting a single compression
+//! job. Same disk discipline as the Gram cache (`coordinator::cache`):
+//!
+//! * **rename-atomic writes** — serialise to a unique temp file, then
+//!   `rename`, so concurrent sweeps sharing a store never observe a
+//!   half-written artifact;
+//! * **identity re-validation** — the header stores every identity field
+//!   (model, checkpoint/calib fingerprints, method, spec fingerprint and
+//!   description); loads compare them against the requested key, so an
+//!   FNV collision or a hand-copied file degrades to a recompute;
+//! * **corrupt-file recovery** — truncated or inconsistent files produce
+//!   a clean `Err`, which [`ArtifactStore::load`] logs and treats as a
+//!   miss; the subsequent cold run rewrites (heals) the file.
+//!
+//! ```text
+//! file  = <model>-<key hash:016x>.apack
+//!   magic "AWPPACK1" | u64 header_len | header JSON | payload bytes
+//!   header: {version, model, checkpoint, calib, method, spec, spec_desc,
+//!            compressed_with, sites: [{param, rows, cols, mode, bits,
+//!            group, nvalues, offset, report: {...}}, ...]}
+//!   payload per site (offset-addressed, layout fixed by its mode):
+//!     dense:   rows·cols f32 LE
+//!     int:     scales f32 LE | zps f32 LE | bit-packed codes
+//!     palette: counts u8     | values f32 LE | bit-packed codes
+//!     mask:    mask bytes    | survivor values f32 LE
+//! ```
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::eval::reconstruction::LayerReport;
+use crate::util::Json;
+
+use super::codec::{codes_len, PackedLinear};
+use super::keys::ArtifactKey;
+
+const MAGIC: &[u8; 8] = b"AWPPACK1";
+const VERSION: usize = 1;
+/// Implausibility bound for header-declared dimensions (mirrors the Gram
+/// cache's untrusted-header discipline).
+const MAX_DIM: usize = 1 << 20;
+
+/// One compressed site: its packed weights plus the layer report the
+/// pipeline produced when it was compressed.
+#[derive(Clone, Debug)]
+pub struct ArtifactSite {
+    pub param: String,
+    pub packed: PackedLinear,
+    pub report: LayerReport,
+}
+
+/// A whole model's compressed artifact (the unit the store keys).
+#[derive(Clone, Debug)]
+pub struct ModelArtifact {
+    pub model: String,
+    /// [`crate::model::Checkpoint::fingerprint`]
+    pub checkpoint: u64,
+    /// [`crate::coordinator::CalibSpec::fingerprint`]
+    pub calib: u64,
+    /// [`crate::coordinator::Method::label`]
+    pub method: String,
+    /// [`crate::compress::traits::CompressionSpec::fingerprint`]
+    pub spec: u64,
+    pub spec_desc: String,
+    /// method-parameter fingerprint ([`ArtifactKey::params`])
+    pub params: u64,
+    /// compressor name, restored into checkpoint meta (`compressed_with`)
+    pub compressed_with: String,
+    pub sites: Vec<ArtifactSite>,
+}
+
+impl ModelArtifact {
+    /// Total serialized payload bytes across sites.
+    pub fn packed_bytes(&self) -> usize {
+        self.sites.iter().map(|s| s.packed.packed_bytes()).sum()
+    }
+
+    /// Total dense f32 bytes for the same sites.
+    pub fn dense_bytes(&self) -> usize {
+        self.sites.iter().map(|s| s.packed.dense_bytes()).sum()
+    }
+
+    /// Identity check against a requested key (the load-time gate).
+    pub fn matches_key(&self, key: &ArtifactKey) -> bool {
+        self.model == key.gram.model
+            && self.checkpoint == key.gram.checkpoint
+            && self.calib == key.gram.calib
+            && self.method == key.method
+            && self.spec == key.spec
+            && self.spec_desc == key.spec_desc
+            && self.params == key.params
+    }
+
+    /// Per-site footprint table: shape, mode, on-disk vs dense bytes and
+    /// the compression ratio (`repro inspect`, `--pack-out` summary).
+    pub fn footprint_table(&self) -> crate::report::TextTable {
+        let mut t = crate::report::TextTable::new(
+            format!("Artifact footprint: {} · {} · {}", self.model, self.method,
+                    self.spec_desc),
+            vec!["site".into(), "shape".into(), "mode".into(), "packed".into(),
+                 "dense".into(), "ratio".into()],
+        );
+        for s in &self.sites {
+            let (pb, db) = (s.packed.packed_bytes(), s.packed.dense_bytes());
+            t.push_row(vec![
+                s.param.clone(),
+                format!("{}x{}", s.packed.rows(), s.packed.cols()),
+                s.packed.describe(),
+                format!("{pb}"),
+                format!("{db}"),
+                format!("{:.2}x", db as f64 / pb.max(1) as f64),
+            ]);
+        }
+        let (pb, db) = (self.packed_bytes(), self.dense_bytes());
+        t.push_row(vec![
+            "TOTAL".into(),
+            "-".into(),
+            format!("packed {pb} bytes"),
+            format!("{pb}"),
+            format!("{db}"),
+            format!("{:.2}x", db as f64 / pb.max(1) as f64),
+        ]);
+        t
+    }
+}
+
+// ---------------------------------------------------------------------------
+// serialisation
+
+fn f32s_le(data: &[f32]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    buf
+}
+
+fn site_payload(p: &PackedLinear) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(p.packed_bytes());
+    match p {
+        PackedLinear::Dense { data, .. } => buf.extend_from_slice(&f32s_le(data)),
+        PackedLinear::GroupedInt { scales, zps, codes, .. } => {
+            buf.extend_from_slice(&f32s_le(scales));
+            buf.extend_from_slice(&f32s_le(zps));
+            buf.extend_from_slice(codes);
+        }
+        PackedLinear::Palette { counts, values, codes, .. } => {
+            buf.extend_from_slice(counts);
+            buf.extend_from_slice(&f32s_le(values));
+            buf.extend_from_slice(codes);
+        }
+        PackedLinear::SparseMask { mask, values, .. } => {
+            buf.extend_from_slice(mask);
+            buf.extend_from_slice(&f32s_le(values));
+        }
+    }
+    buf
+}
+
+fn site_header(s: &ArtifactSite, offset: usize) -> Json {
+    let (bits, group, nvalues) = match &s.packed {
+        PackedLinear::Dense { .. } => (0usize, 0usize, 0usize),
+        PackedLinear::GroupedInt { bits, group, .. } => (*bits as usize, *group, 0),
+        PackedLinear::Palette { bits, group, values, .. } => {
+            (*bits as usize, *group, values.len())
+        }
+        PackedLinear::SparseMask { values, .. } => (0, 0, values.len()),
+    };
+    Json::obj(vec![
+        ("param", Json::Str(s.param.clone())),
+        ("rows", Json::Num(s.packed.rows() as f64)),
+        ("cols", Json::Num(s.packed.cols() as f64)),
+        ("mode", Json::Str(s.packed.mode_name().to_string())),
+        ("bits", Json::Num(bits as f64)),
+        ("group", Json::Num(group as f64)),
+        ("nvalues", Json::Num(nvalues as f64)),
+        ("offset", Json::Num(offset as f64)),
+        ("report", Json::obj(vec![
+            ("rel_loss", Json::Num(s.report.rel_loss)),
+            ("sparsity", Json::Num(s.report.sparsity)),
+            ("row_uniform", Json::Bool(s.report.row_uniform)),
+            ("iterations", Json::Num(s.report.iterations as f64)),
+            ("seconds", Json::Num(s.report.seconds)),
+        ])),
+    ])
+}
+
+/// Serialise `art` to `path` via a unique temp file + rename (atomic
+/// install; concurrent writers of the same artifact are benign because
+/// their contents are bit-identical).
+pub fn write_artifact(path: &Path, art: &ModelArtifact) -> Result<()> {
+    let mut entries = Vec::with_capacity(art.sites.len());
+    let mut offset = 0usize;
+    for s in &art.sites {
+        entries.push(site_header(s, offset));
+        offset += s.packed.packed_bytes();
+    }
+    let header = Json::obj(vec![
+        ("version", Json::Num(VERSION as f64)),
+        ("model", Json::Str(art.model.clone())),
+        ("checkpoint", Json::Str(format!("{:016x}", art.checkpoint))),
+        ("calib", Json::Str(format!("{:016x}", art.calib))),
+        ("method", Json::Str(art.method.clone())),
+        ("spec", Json::Str(format!("{:016x}", art.spec))),
+        ("spec_desc", Json::Str(art.spec_desc.clone())),
+        ("params", Json::Str(format!("{:016x}", art.params))),
+        ("compressed_with", Json::Str(art.compressed_with.clone())),
+        ("sites", Json::Arr(entries)),
+    ]);
+    let hjson = header.to_string().into_bytes();
+
+    // unique per process AND per call: concurrent same-key saves from two
+    // executor workers must not interleave writes into one temp file (the
+    // gram cache's KeyedOnce dedups same-key computes in-process; the
+    // artifact store has no memory layer, so the temp name carries a
+    // sequence number too)
+    static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+    let dir = path.parent().unwrap_or_else(|| Path::new("."));
+    let stem = path.file_name().and_then(|n| n.to_str()).unwrap_or("artifact");
+    let tmp = dir.join(format!("{stem}.tmp.{}.{}", std::process::id(),
+                               TMP_SEQ.fetch_add(1, Ordering::Relaxed)));
+    {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&(hjson.len() as u64).to_le_bytes())?;
+        f.write_all(&hjson)?;
+        for s in &art.sites {
+            f.write_all(&site_payload(&s.packed))?;
+        }
+        // explicit flush: a drop-time flush error would be swallowed and a
+        // truncated file installed as if the write succeeded
+        f.flush().with_context(|| format!("flushing {tmp:?}"))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("installing artifact {path:?}"))?;
+    Ok(())
+}
+
+fn read_f32s(buf: &[u8]) -> Vec<f32> {
+    buf.chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect()
+}
+
+/// Take `len` bytes at `*pos` of `payload` with checked arithmetic, so a
+/// corrupt header degrades to `Err`, never a panic or a wrapped index.
+fn take<'a>(payload: &'a [u8], pos: &mut usize, len: usize, what: &str)
+    -> Result<&'a [u8]> {
+    let end = pos.checked_add(len).with_context(|| format!("{what}: overflow"))?;
+    ensure!(end <= payload.len(),
+            "truncated artifact: {what} needs bytes {pos}..{end} of {}",
+            payload.len());
+    let out = &payload[*pos..end];
+    *pos = end;
+    Ok(out)
+}
+
+fn parse_hex64(s: &str) -> Result<u64> {
+    u64::from_str_radix(s, 16).with_context(|| format!("bad hex field '{s}'"))
+}
+
+fn read_site(e: &Json, payload: &[u8]) -> Result<ArtifactSite> {
+    let param = e.expect("param")?.as_str()?.to_string();
+    let rows = e.expect("rows")?.as_usize()?;
+    let cols = e.expect("cols")?.as_usize()?;
+    ensure!(rows >= 1 && rows <= MAX_DIM && cols >= 1 && cols <= MAX_DIM,
+            "{param}: implausible shape {rows}x{cols}");
+    let n = rows.checked_mul(cols).with_context(|| format!("{param}: size overflow"))?;
+    let mode = e.expect("mode")?.as_str()?.to_string();
+    let bits = e.expect("bits")?.as_usize()?;
+    let group = e.expect("group")?.as_usize()?;
+    let nvalues = e.expect("nvalues")?.as_usize()?;
+    let mut pos = e.expect("offset")?.as_usize()?;
+
+    let packed = match mode.as_str() {
+        "dense" => {
+            let data = read_f32s(take(payload, &mut pos, n * 4, &param)?);
+            PackedLinear::Dense { rows, cols, data }
+        }
+        "int" | "palette" => {
+            ensure!((1..=8).contains(&bits), "{param}: bad bits {bits}");
+            ensure!(group >= 1 && group <= cols && cols % group == 0,
+                    "{param}: bad group {group} for width {cols}");
+            let ng = rows * (cols / group);
+            let clen = codes_len(rows, cols, bits as u8);
+            if mode == "int" {
+                let scales = read_f32s(take(payload, &mut pos, ng * 4, &param)?);
+                let zps = read_f32s(take(payload, &mut pos, ng * 4, &param)?);
+                let codes = take(payload, &mut pos, clen, &param)?.to_vec();
+                PackedLinear::GroupedInt {
+                    rows, cols, bits: bits as u8, group, scales, zps, codes,
+                }
+            } else {
+                let counts = take(payload, &mut pos, ng, &param)?.to_vec();
+                let total: usize = counts.iter().map(|&c| c as usize + 1).sum();
+                ensure!(total == nvalues,
+                        "{param}: palette counts sum {total} != nvalues {nvalues}");
+                let values =
+                    read_f32s(take(payload, &mut pos, nvalues * 4, &param)?);
+                let codes = take(payload, &mut pos, clen, &param)?.to_vec();
+                // every code must index inside its group's table, or a
+                // later decode would panic on a corrupt file
+                let unpacked = crate::quant::pack::unpack_bits(&codes, bits as u8, n);
+                for (idx, &q) in unpacked.iter().enumerate() {
+                    let gidx = (idx / cols) * (cols / group) + (idx % cols) / group;
+                    ensure!((q as usize) <= counts[gidx] as usize,
+                            "{param}: code {q} out of table at {idx}");
+                }
+                PackedLinear::Palette {
+                    rows, cols, bits: bits as u8, group, counts, values, codes,
+                }
+            }
+        }
+        "mask" => {
+            let mask = take(payload, &mut pos, n.div_ceil(8), &param)?.to_vec();
+            let set: usize = (0..n)
+                .filter(|idx| mask[idx / 8] >> (idx % 8) & 1 == 1)
+                .count();
+            ensure!(set == nvalues,
+                    "{param}: mask popcount {set} != nvalues {nvalues}");
+            let values = read_f32s(take(payload, &mut pos, nvalues * 4, &param)?);
+            PackedLinear::SparseMask { rows, cols, mask, values }
+        }
+        other => bail!("{param}: unknown packed mode '{other}'"),
+    };
+
+    let r = e.expect("report")?;
+    let report = LayerReport {
+        param: param.clone(),
+        d_out: rows,
+        d_in: cols,
+        rel_loss: r.expect("rel_loss")?.as_f64()?,
+        sparsity: r.expect("sparsity")?.as_f64()?,
+        row_uniform: r.expect("row_uniform")?.as_bool()?,
+        iterations: r.expect("iterations")?.as_usize()?,
+        seconds: r.expect("seconds")?.as_f64()?,
+    };
+    Ok(ArtifactSite { param, packed, report })
+}
+
+/// Parse an artifact file. `Err` on anything inconsistent — callers going
+/// through [`ArtifactStore::load`] treat that as a miss; direct consumers
+/// (`repro inspect`, `repro eval --from-artifact`) surface it.
+pub fn read_artifact(path: &Path) -> Result<ModelArtifact> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic).context("reading magic")?;
+    if &magic != MAGIC {
+        bail!("{path:?}: not an AWP artifact (bad magic)");
+    }
+    let mut lenb = [0u8; 8];
+    f.read_exact(&mut lenb).context("reading header length")?;
+    let hlen = u64::from_le_bytes(lenb) as usize;
+    if hlen > 64 << 20 {
+        bail!("{path:?}: implausible header length {hlen}");
+    }
+    let mut hjson = vec![0u8; hlen];
+    f.read_exact(&mut hjson).context("reading header")?;
+    let header = Json::parse(std::str::from_utf8(&hjson)?)?;
+    if header.expect("version")?.as_usize()? != VERSION {
+        bail!("{path:?}: unsupported artifact version");
+    }
+    let mut payload = Vec::new();
+    f.read_to_end(&mut payload)?;
+
+    let mut sites = Vec::new();
+    for e in header.expect("sites")?.as_arr()? {
+        sites.push(read_site(e, &payload).with_context(|| format!("{path:?}"))?);
+    }
+    Ok(ModelArtifact {
+        model: header.expect("model")?.as_str()?.to_string(),
+        checkpoint: parse_hex64(header.expect("checkpoint")?.as_str()?)?,
+        calib: parse_hex64(header.expect("calib")?.as_str()?)?,
+        method: header.expect("method")?.as_str()?.to_string(),
+        spec: parse_hex64(header.expect("spec")?.as_str()?)?,
+        spec_desc: header.expect("spec_desc")?.as_str()?.to_string(),
+        params: parse_hex64(header.expect("params")?.as_str()?)?,
+        compressed_with: header.expect("compressed_with")?.as_str()?.to_string(),
+        sites,
+    })
+}
+
+/// Write `art` into `dir` under `key`'s file name (dir created if absent).
+pub fn store_artifact(dir: &Path, key: &ArtifactKey, art: &ModelArtifact)
+    -> Result<PathBuf> {
+    ensure!(art.matches_key(key), "artifact identity does not match its key");
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating artifact dir {dir:?}"))?;
+    let path = dir.join(key.file_name());
+    write_artifact(&path, art)?;
+    Ok(path)
+}
+
+/// Load the artifact for `key` from `dir`. `Ok(None)` when absent; `Err`
+/// when present but corrupt or belonging to a different identity.
+pub fn load_artifact(dir: &Path, key: &ArtifactKey) -> Result<Option<ModelArtifact>> {
+    let path = dir.join(key.file_name());
+    if !path.exists() {
+        return Ok(None);
+    }
+    let art = read_artifact(&path)?;
+    if !art.matches_key(key) {
+        bail!("{path:?}: artifact identity mismatch (stale file or hash collision)");
+    }
+    Ok(Some(art))
+}
+
+// ---------------------------------------------------------------------------
+// the store
+
+/// Hit/miss counters (snapshot of [`ArtifactStore::counts`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ArtifactCounts {
+    pub hits: u64,
+    pub misses: u64,
+    pub stores: u64,
+}
+
+/// The on-disk compressed-artifact store: `--artifact-dir` names the
+/// directory, `None` disables persistence (every run is cold). Shared
+/// across the sweep executor's workers behind an `Arc`; all writes are
+/// rename-atomic so the directory can be shared across processes/hosts.
+pub struct ArtifactStore {
+    dir: Option<PathBuf>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    stores: AtomicU64,
+}
+
+impl ArtifactStore {
+    pub fn new(dir: Option<PathBuf>) -> ArtifactStore {
+        ArtifactStore {
+            dir,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            stores: AtomicU64::new(0),
+        }
+    }
+
+    /// A store with no disk layer (`--no-artifacts`): loads always miss,
+    /// saves are no-ops.
+    pub fn disabled() -> ArtifactStore {
+        ArtifactStore::new(None)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.dir.is_some()
+    }
+
+    pub fn dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    pub fn counts(&self) -> ArtifactCounts {
+        ArtifactCounts {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            stores: self.stores.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Fetch the artifact for `key`, if stored. Corrupt or mismatched
+    /// files are logged and treated as a miss (the cold path heals them).
+    pub fn load(&self, key: &ArtifactKey) -> Option<ModelArtifact> {
+        let dir = self.dir.as_deref()?;
+        match load_artifact(dir, key) {
+            Ok(Some(art)) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                eprintln!("[artifact] hit for '{}' {} {} [{:016x}] — {} sites, \
+                           0 compression jobs needed",
+                          key.gram.model, key.method, key.spec_desc, key.hash(),
+                          art.sites.len());
+                Some(art)
+            }
+            Ok(None) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            Err(e) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                eprintln!("[artifact] discarding unreadable artifact for '{}' \
+                           [{:016x}]: {e:#}", key.gram.model, key.hash());
+                None
+            }
+        }
+    }
+
+    /// Persist `art` under `key` (best-effort: failures are logged, the
+    /// in-memory result is unaffected).
+    pub fn save(&self, key: &ArtifactKey, art: &ModelArtifact) {
+        let Some(dir) = self.dir.as_deref() else { return };
+        match store_artifact(dir, key, art) {
+            Ok(path) => {
+                self.stores.fetch_add(1, Ordering::Relaxed);
+                eprintln!("[artifact] stored '{}' {} at {path:?} ({} → {} bytes, \
+                           {:.2}x)",
+                          key.gram.model, key.spec_desc, art.dense_bytes(),
+                          art.packed_bytes(),
+                          art.dense_bytes() as f64 / art.packed_bytes().max(1) as f64);
+            }
+            Err(e) => eprintln!("[artifact] failed to persist '{}': {e:#}",
+                                key.gram.model),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::traits::CompressionSpec;
+    use crate::coordinator::cache::GramCacheKey;
+    use crate::quant::project_qmax;
+    use crate::tensor::Matrix;
+    use crate::util::tempdir::TempDir;
+
+    fn key() -> ArtifactKey {
+        ArtifactKey::new(
+            GramCacheKey { model: "t".into(), checkpoint: 1, calib: 2 },
+            "rtn",
+            &CompressionSpec::quant(4, 32),
+        )
+    }
+
+    fn report(param: &str, rows: usize, cols: usize) -> LayerReport {
+        LayerReport {
+            param: param.into(), d_out: rows, d_in: cols, rel_loss: 0.125,
+            sparsity: 0.5, row_uniform: true, iterations: 7, seconds: 0.25,
+        }
+    }
+
+    fn artifact() -> ModelArtifact {
+        let spec = CompressionSpec::quant(4, 32);
+        let theta = project_qmax(&Matrix::randn(4, 64, 3), 15.0, 32);
+        let packed = PackedLinear::encode(&theta, &spec);
+        let k = key();
+        ModelArtifact {
+            model: "t".into(),
+            checkpoint: 1,
+            calib: 2,
+            method: "rtn".into(),
+            spec: k.spec,
+            spec_desc: k.spec_desc,
+            params: k.params,
+            compressed_with: "rtn".into(),
+            sites: vec![ArtifactSite {
+                param: "blocks.0.wq".into(),
+                packed,
+                report: report("blocks.0.wq", 4, 64),
+            }],
+        }
+    }
+
+    #[test]
+    fn file_round_trip_is_bit_exact() {
+        let dir = TempDir::new("apack").unwrap();
+        let art = artifact();
+        let path = store_artifact(dir.path(), &key(), &art).unwrap();
+        let back = read_artifact(&path).unwrap();
+        assert_eq!(back.model, "t");
+        assert_eq!(back.compressed_with, "rtn");
+        assert_eq!(back.sites.len(), 1);
+        let (a, b) = (&art.sites[0], &back.sites[0]);
+        assert_eq!(a.param, b.param);
+        assert_eq!(a.report.rel_loss, b.report.rel_loss);
+        assert_eq!(a.report.iterations, b.report.iterations);
+        let (da, db) = (a.packed.decode(), b.packed.decode());
+        for (x, y) in da.data.iter().zip(&db.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn absent_is_a_clean_miss() {
+        let dir = TempDir::new("apack").unwrap();
+        assert!(load_artifact(dir.path(), &key()).unwrap().is_none());
+    }
+
+    #[test]
+    fn corrupt_truncated_and_mismatched_files_error() {
+        let dir = TempDir::new("apack").unwrap();
+        let k = key();
+        // garbage
+        std::fs::create_dir_all(dir.path()).unwrap();
+        std::fs::write(dir.path().join(k.file_name()), b"garbage").unwrap();
+        assert!(load_artifact(dir.path(), &k).is_err());
+        // truncated payload
+        let art = artifact();
+        let path = store_artifact(dir.path(), &k, &art).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 32]).unwrap();
+        assert!(load_artifact(dir.path(), &k).is_err());
+        // identity mismatch: valid file under another key's name
+        store_artifact(dir.path(), &k, &art).unwrap();
+        let other = ArtifactKey::new(
+            GramCacheKey { model: "t".into(), checkpoint: 9, calib: 2 },
+            "rtn",
+            &CompressionSpec::quant(4, 32),
+        );
+        std::fs::rename(dir.path().join(k.file_name()),
+                        dir.path().join(other.file_name()))
+            .unwrap();
+        assert!(load_artifact(dir.path(), &other).is_err());
+    }
+
+    #[test]
+    fn store_counts_hits_and_heals_corruption() {
+        let dir = TempDir::new("apack").unwrap();
+        let k = key();
+        let store = ArtifactStore::new(Some(dir.path().to_path_buf()));
+        assert!(store.load(&k).is_none());
+        store.save(&k, &artifact());
+        assert!(store.load(&k).is_some());
+        let c = store.counts();
+        assert_eq!((c.hits, c.misses, c.stores), (1, 1, 1));
+        // corrupt the file: next load logs + misses, save heals
+        std::fs::write(dir.path().join(k.file_name()), b"AWPPACK1junk").unwrap();
+        assert!(store.load(&k).is_none());
+        store.save(&k, &artifact());
+        assert!(store.load(&k).is_some());
+    }
+
+    #[test]
+    fn disabled_store_is_inert() {
+        let store = ArtifactStore::disabled();
+        assert!(!store.enabled());
+        assert!(store.load(&key()).is_none());
+        store.save(&key(), &artifact());
+        assert_eq!(store.counts().stores, 0);
+    }
+
+    #[test]
+    fn footprint_table_totals() {
+        let art = artifact();
+        let t = art.footprint_table();
+        let con = t.to_console();
+        assert!(con.contains("blocks.0.wq"), "{con}");
+        assert!(con.contains("TOTAL"), "{con}");
+        assert!(art.packed_bytes() < art.dense_bytes());
+    }
+
+    #[test]
+    fn key_mismatch_rejected_at_store_time() {
+        let dir = TempDir::new("apack").unwrap();
+        let mut art = artifact();
+        art.method = "wanda".into();
+        assert!(store_artifact(dir.path(), &key(), &art).is_err());
+    }
+}

@@ -93,6 +93,30 @@ impl Default for AwpHyper {
     }
 }
 
+impl AwpHyper {
+    /// Content fingerprint over every Θ-affecting knob — the method-
+    /// parameter component of a compressed-artifact key
+    /// (`crate::artifact::ArtifactKey::params`). Step sizes, iteration
+    /// budgets, the joint schedule and the AOT chunk/group all change the
+    /// produced weights, so artifacts computed under different
+    /// hyperparameters must never collide. (`track_series` is excluded:
+    /// it only adds bookkeeping, not a different Θ.)
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::Fnv64::new();
+        h.write_f64(self.prune_eta_scale);
+        h.write_f64(self.quant_eta_scale);
+        h.write_f64(self.prune_tol);
+        h.write_usize(self.prune_max_iters);
+        h.write_usize(self.quant_iters);
+        h.write_usize(self.joint.total_iters);
+        h.write_usize(self.joint.ramp_iters);
+        h.write_usize(self.joint.prune_only_iters);
+        h.write_usize(self.chunk);
+        h.write_usize(self.group);
+        h.finish()
+    }
+}
+
 /// The AWP compressor: driver + backend.
 pub struct AwpDriver<B: AwpBackend> {
     pub backend: B,
@@ -109,7 +133,7 @@ impl<B: AwpBackend> AwpDriver<B> {
     }
 
     fn rel_loss(w: &Matrix, theta: &Matrix, c: &Matrix) -> f64 {
-        ops::activation_loss(w, theta, c).sqrt() / w.frob_norm().max(1e-30)
+        ops::rel_activation_loss(w, theta, c)
     }
 
     /// Best-iterate tracking shared by the joint drivers: keep the lowest

@@ -96,6 +96,53 @@ impl CompressionSpec {
         }
     }
 
+    /// Content fingerprint of the full spec (mode tag, every mode
+    /// parameter, seed) — the spec component of a compressed-artifact key
+    /// (`crate::artifact::ArtifactKey`). Artifacts additionally store and
+    /// re-validate [`CompressionSpec::describe`], so an FNV collision
+    /// degrades to a recompute, never to serving the wrong spec's weights.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::Fnv64::new();
+        match self.mode {
+            CompressionMode::Prune { ratio } => {
+                h.write_usize(0);
+                h.write_f64(ratio);
+            }
+            CompressionMode::Quant { spec } => {
+                h.write_usize(1);
+                h.write_usize(spec.bits as usize);
+                h.write_usize(spec.group);
+            }
+            CompressionMode::Joint { ratio, spec } => {
+                h.write_usize(2);
+                h.write_f64(ratio);
+                h.write_usize(spec.bits as usize);
+                h.write_usize(spec.group);
+            }
+            CompressionMode::StructuredNm { n, m } => {
+                h.write_usize(3);
+                h.write_usize(n);
+                h.write_usize(m);
+            }
+            CompressionMode::JointNm { n, m, spec } => {
+                h.write_usize(4);
+                h.write_usize(n);
+                h.write_usize(m);
+                h.write_usize(spec.bits as usize);
+                h.write_usize(spec.group);
+            }
+        }
+        h.write_u64(self.seed);
+        h.finish()
+    }
+
+    /// Canonical human-readable form of the spec, stored inside artifacts
+    /// for identity re-validation (`Debug` of the mode is stable and
+    /// carries every parameter).
+    pub fn describe(&self) -> String {
+        format!("{:?} seed={}", self.mode, self.seed)
+    }
+
     /// Resolve this spec's constraint set to its projection operator
     /// (`d_in` fixes the per-row keep count). The single resolution the
     /// driver, the verifier ([`check_constraints`]) and the tests share.
@@ -148,12 +195,13 @@ impl CompressedLayer {
     pub fn from_theta(w: &Matrix, c: &Matrix, theta: Matrix, iterations: usize,
                       seconds: f64) -> Self {
         let final_loss = ops::activation_loss(w, &theta, c);
-        let wn = w.frob_norm().max(1e-30);
         CompressedLayer {
             theta,
             stats: CompressStats {
                 final_loss,
-                rel_loss: final_loss.sqrt() / wn,
+                // shared with ops::rel_activation_loss so the artifact
+                // eval path recomputes this number bit-for-bit
+                rel_loss: ops::rel_loss_from(final_loss, w),
                 iterations,
                 seconds,
                 loss_series: Vec::new(),

@@ -22,6 +22,9 @@ pub struct Paths {
     /// calibration-artifact cache (`coordinator::cache`); `--cache-dir`
     /// overrides, `--no-cache` disables persistence
     pub gram_cache: PathBuf,
+    /// compressed-artifact store (`crate::artifact`); `--artifact-dir`
+    /// overrides, `--no-artifacts` disables persistence
+    pub artifact_cache: PathBuf,
 }
 
 impl Default for Paths {
@@ -31,6 +34,7 @@ impl Default for Paths {
             checkpoints: "checkpoints".into(),
             reports: "reports".into(),
             gram_cache: "cache/grams".into(),
+            artifact_cache: "cache/artifacts".into(),
         }
     }
 }
@@ -117,6 +121,7 @@ impl RunConfig {
                 "checkpoints" => self.paths.checkpoints = val.as_str()?.into(),
                 "reports" => self.paths.reports = val.as_str()?.into(),
                 "gram_cache" => self.paths.gram_cache = val.as_str()?.into(),
+                "artifact_cache" => self.paths.artifact_cache = val.as_str()?.into(),
                 "corpus_bytes" => self.corpus.total_bytes = val.as_usize()?,
                 "corpus_seed" => self.corpus.seed = val.as_usize()? as u64,
                 "vocab_words" => self.corpus.vocab_words = val.as_usize()?,
@@ -153,12 +158,14 @@ mod tests {
         let dir = crate::util::tempdir::TempDir::new("cfg").unwrap();
         let p = dir.path().join("c.json");
         std::fs::write(&p, r#"{"train_steps_small": 42, "lr_max": 0.001,
-                               "gram_cache": "elsewhere/grams"}"#).unwrap();
+                               "gram_cache": "elsewhere/grams",
+                               "artifact_cache": "elsewhere/apacks"}"#).unwrap();
         let mut c = RunConfig::default();
         c.load_overrides(&p).unwrap();
         assert_eq!(c.train_steps_small, 42);
         assert_eq!(c.lr_max, 0.001);
         assert_eq!(c.paths.gram_cache, PathBuf::from("elsewhere/grams"));
+        assert_eq!(c.paths.artifact_cache, PathBuf::from("elsewhere/apacks"));
         std::fs::write(&p, r#"{"nope": 1}"#).unwrap();
         assert!(c.load_overrides(&p).is_err());
     }

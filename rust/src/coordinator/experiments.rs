@@ -28,8 +28,9 @@ use super::calibrate::{calibrate, synthetic_grams, Grams};
 use super::executor::Executor;
 use super::jobs::plan_jobs;
 use super::methods::{make_compressor, Method};
-use super::pipeline::compress_model_with;
+use super::pipeline::{compress_model_cached, compress_model_with};
 use super::sweep::{self, TableSpec};
+use crate::artifact::{ArtifactKey, ArtifactStore};
 use crate::compress::awp::AwpHyper;
 use crate::compress::traits::CompressionSpec;
 use crate::config::RunConfig;
@@ -55,6 +56,9 @@ pub struct ExperimentCtx {
     /// perplexity eval (CI runners without AOT artifacts)
     synthetic: bool,
     cache: Arc<GramCache>,
+    /// compressed-artifact store (`--artifact-dir`); disabled by default
+    /// for library/test use, enabled by the CLI
+    artifacts: Arc<ArtifactStore>,
     corpus: OnceLock<Arc<SyntheticCorpus>>,
     batchers: KeyedOnce<(usize, usize), Arc<Batcher>>,
     checkpoints: KeyedOnce<String, Arc<Checkpoint>>,
@@ -71,6 +75,7 @@ impl ExperimentCtx {
             executor: Executor::new(None),
             synthetic: false,
             cache: Arc::new(GramCache::memory_only()),
+            artifacts: Arc::new(ArtifactStore::disabled()),
             corpus: OnceLock::new(),
             batchers: KeyedOnce::new(),
             checkpoints: KeyedOnce::new(),
@@ -96,6 +101,30 @@ impl ExperimentCtx {
 
     pub fn cache(&self) -> &GramCache {
         &self.cache
+    }
+
+    /// Install the compressed-artifact store (`--artifact-dir` /
+    /// `--no-artifacts`). With a store installed, every cell and CLI
+    /// compression goes through
+    /// [`compress_model_cached`](super::pipeline::compress_model_cached):
+    /// warm reruns assemble from packed sites and submit zero compression
+    /// jobs.
+    pub fn set_artifact_store(&mut self, store: Arc<ArtifactStore>) {
+        self.artifacts = store;
+    }
+
+    pub fn artifact_store(&self) -> &ArtifactStore {
+        &self.artifacts
+    }
+
+    /// The artifact identity of `(model, method, spec)` under the current
+    /// run configuration — Gram cache key × spec fingerprint × method ×
+    /// hyperparameter fingerprint (step sizes, iteration budgets, AOT
+    /// chunk/group all change Θ, so they are part of the identity).
+    pub fn artifact_key(&self, model: &str, method: Method,
+                        spec: &CompressionSpec) -> Result<ArtifactKey> {
+        Ok(ArtifactKey::new(self.gram_key(model)?, method.label(), spec)
+            .with_params(self.hyper().fingerprint()))
     }
 
     /// Runtime-free synthetic mode: untrained checkpoints and synthetic
@@ -251,8 +280,18 @@ impl ExperimentCtx {
         let compressor = make_compressor(method, self.hyper(),
                                          Some((&self.handle, &self.manifest)))?;
         let t = Timer::start("cell");
-        let out = compress_model_with(&ck, &grams, compressor.as_ref(), spec,
-                                      false, &Executor::sequential())?;
+        // with an artifact store installed, the cell is incremental: a
+        // warm rerun assembles this (model, method, spec)'s sites from the
+        // packed artifact and submits zero compression jobs
+        let out = if self.artifacts.enabled() {
+            let key = self.artifact_key(model, method, spec)?;
+            compress_model_cached(&ck, &grams, compressor.as_ref(), spec, false,
+                                  &Executor::sequential(), &self.artifacts, &key)?
+                .result
+        } else {
+            compress_model_with(&ck, &grams, compressor.as_ref(), spec, false,
+                                &Executor::sequential())?
+        };
         if self.synthetic {
             let mean_loss = out.reports.iter().map(|r| r.rel_loss).sum::<f64>()
                 / out.reports.len().max(1) as f64;

@@ -24,7 +24,10 @@
 //!   inner-GEMM-threads budget split.
 //! * `methods` — name → compressor registry covering the paper's full
 //!   method matrix.
-//! * `pipeline` — end-to-end orchestration + assembly into a new checkpoint.
+//! * `pipeline` — end-to-end orchestration + assembly into a new
+//!   checkpoint; `compress_model_cached` consults the compressed-artifact
+//!   store (`crate::artifact`) first, so warm reruns assemble from packed
+//!   sites and submit zero compression jobs.
 //! * `sweep` — cross-model sweep scheduling: per-model preparation jobs
 //!   plus every table's cells on one executor pool, plan-order
 //!   deterministic assembly.
@@ -47,5 +50,8 @@ pub use calibrate::{calibrate, synthetic_grams, Grams};
 pub use executor::{ExecReport, Executor, JobStats};
 pub use jobs::{plan_jobs, Job, JobPlan};
 pub use methods::{make_compressor, Method};
-pub use pipeline::{compress_model, compress_model_with, PipelineResult};
+pub use pipeline::{
+    compress_model, compress_model_cached, compress_model_with,
+    CachedPipelineResult, PipelineResult,
+};
 pub use sweep::{run_tables, sweep_cells, sweep_models, CellRef, TableSpec};

@@ -11,6 +11,9 @@ use anyhow::{Context, Result};
 use super::calibrate::Grams;
 use super::executor::{Executor, JobStats};
 use super::jobs::plan_jobs;
+use crate::artifact::{
+    ArtifactKey, ArtifactSite, ArtifactStore, ModelArtifact, PackedLinear,
+};
 use crate::compress::traits::{
     check_constraints, verification_spec, CompressionSpec, LayerCompressor,
 };
@@ -101,6 +104,116 @@ pub fn compress_model_with(ck: &Checkpoint, grams: &Grams,
     })
 }
 
+/// [`compress_model_with`] plus its compressed artifact and provenance.
+pub struct CachedPipelineResult {
+    pub result: PipelineResult,
+    /// the stored (warm) or freshly built (cold) artifact — the
+    /// `--pack-out` payload and the footprint table's source
+    pub artifact: ModelArtifact,
+    /// `true` when served from the store: zero compression jobs were
+    /// submitted (`result.job_stats` is empty)
+    pub warm: bool,
+}
+
+/// Artifact-aware compression: consult `store` for `key` first; on a hit,
+/// decode the stored sites (bit-identical to the pipeline's output by the
+/// codec contract) and assemble the checkpoint with **zero** compression
+/// jobs; on a miss, run [`compress_model_with`], pack every site, and
+/// persist the artifact for the next run. This is the ROADMAP
+/// "incremental sweeps" item: repeated `experiment`/sweep runs over a
+/// populated store recompress nothing.
+///
+/// A stale hit — an artifact whose site list no longer matches the model's
+/// job plan — is logged and degraded to a cold run (same corrupt-file
+/// discipline as the Gram cache).
+pub fn compress_model_cached(ck: &Checkpoint, grams: &Grams,
+                             compressor: &dyn LayerCompressor,
+                             spec: &CompressionSpec, verify: bool,
+                             exec: &Executor, store: &ArtifactStore,
+                             key: &ArtifactKey) -> Result<CachedPipelineResult> {
+    if let Some(art) = store.load(key) {
+        match assemble_from_artifact(ck, &art, compressor, spec, verify) {
+            Ok(result) => {
+                return Ok(CachedPipelineResult { result, artifact: art, warm: true })
+            }
+            Err(e) => {
+                eprintln!("[artifact] stored artifact for '{}' unusable \
+                           ({e:#}) — recompressing", key.gram.model);
+            }
+        }
+    }
+    let result = compress_model_with(ck, grams, compressor, spec, verify, exec)?;
+    let plan = plan_jobs(&ck.config);
+    let mut sites = Vec::with_capacity(plan.jobs.len());
+    for (job, report) in plan.jobs.iter().zip(&result.reports) {
+        let theta = result.checkpoint.matrix(&job.site.param)?;
+        sites.push(ArtifactSite {
+            param: job.site.param.clone(),
+            packed: PackedLinear::encode(&theta, spec),
+            report: report.clone(),
+        });
+    }
+    let artifact = ModelArtifact {
+        model: key.gram.model.clone(),
+        checkpoint: key.gram.checkpoint,
+        calib: key.gram.calib,
+        method: key.method.clone(),
+        spec: key.spec,
+        spec_desc: key.spec_desc.clone(),
+        params: key.params,
+        compressed_with: compressor.name().to_string(),
+        sites,
+    };
+    store.save(key, &artifact);
+    Ok(CachedPipelineResult { result, artifact, warm: false })
+}
+
+/// Warm-path assembly: decode every stored site into a copy of `ck`.
+/// Site coverage and shapes are checked against the current job plan, and
+/// `verify` re-runs the constraint check on the decoded Θ — the same gate
+/// the cold path applies.
+fn assemble_from_artifact(ck: &Checkpoint, art: &ModelArtifact,
+                          compressor: &dyn LayerCompressor,
+                          spec: &CompressionSpec, verify: bool)
+    -> Result<PipelineResult> {
+    let timer = Timer::start("artifact-assembly");
+    let plan = plan_jobs(&ck.config);
+    if art.sites.len() != plan.jobs.len() {
+        anyhow::bail!("artifact has {} sites, plan expects {}", art.sites.len(),
+                      plan.jobs.len());
+    }
+    let check_spec = if verify { verification_spec(compressor, spec) } else { None };
+    let mut reports = Vec::with_capacity(art.sites.len());
+    let mut tensors = Vec::with_capacity(art.sites.len());
+    for (job, site) in plan.jobs.iter().zip(&art.sites) {
+        if site.param != job.site.param
+            || site.packed.rows() != job.site.d_out
+            || site.packed.cols() != job.site.d_in
+        {
+            anyhow::bail!("artifact site {} ({}x{}) does not match plan site \
+                           {} ({}x{})", site.param, site.packed.rows(),
+                          site.packed.cols(), job.site.param, job.site.d_out,
+                          job.site.d_in);
+        }
+        let theta = site.packed.decode();
+        if let Some(cs) = check_spec {
+            check_constraints(&theta, &cs)
+                .with_context(|| format!("constraint violation decoding {}",
+                                         site.param))?;
+        }
+        reports.push(site.report.clone());
+        tensors.push((site.param.clone(), theta.data));
+    }
+    let mut out = ck.with_tensors(tensors)?;
+    out.meta.insert("compressed_with".into(), art.compressed_with.clone());
+    Ok(PipelineResult {
+        checkpoint: out,
+        reports,
+        job_stats: Vec::new(),
+        seconds: timer.elapsed_s(),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,6 +270,63 @@ mod tests {
         // the failing site's name survives executor aggregation
         let msg = format!("{:#}", err.unwrap_err());
         assert!(msg.contains("w_down"), "{msg}");
+    }
+
+    #[test]
+    fn cached_pipeline_is_incremental() {
+        use crate::util::tempdir::TempDir;
+
+        /// Stands in for "the expensive compression must not run warm".
+        struct MustNotRun;
+        impl LayerCompressor for MustNotRun {
+            fn name(&self) -> &'static str {
+                "must-not-run"
+            }
+            fn compress(&self, _w: &Matrix, _c: &Matrix, _s: &CompressionSpec)
+                -> Result<crate::compress::traits::CompressedLayer> {
+                anyhow::bail!("compression job submitted on a warm artifact store")
+            }
+        }
+
+        let cfg = tiny_cfg();
+        let ck = crate::trainer::init_checkpoint(&cfg, 0);
+        let grams = synthetic_grams(&cfg);
+        let spec = CompressionSpec::prune(0.5);
+        let dir = TempDir::new("apack").unwrap();
+        let store = ArtifactStore::new(Some(dir.path().to_path_buf()));
+        let key = ArtifactKey::new(
+            crate::coordinator::cache::GramCacheKey {
+                model: "t".into(), checkpoint: ck.fingerprint(), calib: 9,
+            },
+            "magnitude",
+            &spec,
+        );
+        let cold = compress_model_cached(&ck, &grams, &MagnitudePrune, &spec, true,
+                                         &Executor::sequential(), &store, &key)
+            .unwrap();
+        assert!(!cold.warm);
+        assert_eq!(cold.result.job_stats.len(),
+                   sites::enumerate_sites(&cfg).len());
+
+        let warm = compress_model_cached(&ck, &grams, &MustNotRun, &spec, true,
+                                         &Executor::sequential(), &store, &key)
+            .unwrap();
+        assert!(warm.warm);
+        assert!(warm.result.job_stats.is_empty(), "warm rerun submitted jobs");
+        // bit-identical assembly cold vs warm
+        for ((n1, _, d1), (_, _, d2)) in cold
+            .result
+            .checkpoint
+            .tensors
+            .iter()
+            .zip(&warm.result.checkpoint.tensors)
+        {
+            for (x, y) in d1.iter().zip(d2) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{n1}");
+            }
+        }
+        assert_eq!(warm.result.checkpoint.meta["compressed_with"], "magnitude");
+        assert_eq!(store.counts().hits, 1);
     }
 
     #[test]

@@ -21,6 +21,13 @@
 //! The scheduling core is pure (closures in, `Table`s out) so the
 //! determinism and attribution contracts are testable without the runtime
 //! (`rust/tests/cross_model_sweep.rs`).
+//!
+//! With a compressed-artifact store installed (`--artifact-dir`,
+//! `crate::artifact`), the cell phase is **incremental**: each cell's
+//! `eval_cell` consults the store under its (Gram key, spec, method)
+//! identity, so a warm rerun of a populated sweep assembles every cell
+//! from packed sites and submits zero compression jobs — only the
+//! evaluation (perplexity / reconstruction) reruns.
 
 use anyhow::Result;
 

@@ -7,4 +7,4 @@ pub mod reconstruction;
 
 pub use generate::generate;
 pub use perplexity::{perplexity, PerplexityReport};
-pub use reconstruction::{layer_report, LayerReport};
+pub use reconstruction::{layer_report, recompute_report, LayerReport};

@@ -35,6 +35,29 @@ pub fn layer_report(site: &LayerSite, theta: &Matrix, stats: &CompressStats)
     }
 }
 
+/// Recompute a site's quality report from a reconstructed Θ — the
+/// `repro eval --from-artifact` path. Uses the same
+/// [`ops::rel_activation_loss`](crate::tensor::ops::rel_activation_loss)
+/// expression every compressor records via `CompressedLayer::from_theta`,
+/// so a decoded Θ that is bit-identical to the in-memory compressed Θ
+/// reproduces the compressor's rel-loss bit-for-bit. `iterations` and
+/// `seconds` come from the artifact (they are historical facts of the
+/// compression run, not recomputable from Θ).
+pub fn recompute_report(param: &str, w: &Matrix, theta: &Matrix, c: &Matrix,
+                        iterations: usize, seconds: f64) -> LayerReport {
+    let sp = SparsityStats::of(theta);
+    LayerReport {
+        param: param.to_string(),
+        d_out: theta.rows,
+        d_in: theta.cols,
+        rel_loss: crate::tensor::ops::rel_activation_loss(w, theta, c),
+        sparsity: sp.ratio(),
+        row_uniform: sp.is_row_uniform(),
+        iterations,
+        seconds,
+    }
+}
+
 /// Aggregate a set of layer reports into (mean rel-loss, total seconds).
 pub fn summarize(reports: &[LayerReport]) -> (f64, f64) {
     if reports.is_empty() {
@@ -70,5 +93,20 @@ mod tests {
     #[test]
     fn empty_summary() {
         assert_eq!(summarize(&[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn recomputed_report_matches_compressor_stats_bitwise() {
+        // the eval --from-artifact invariant: recomputing quality from a
+        // bit-identical Θ reproduces the pipeline's recorded rel_loss
+        use crate::compress::traits::CompressedLayer;
+        let w = Matrix::randn(8, 16, 4);
+        let c = Matrix::randn_gram(16, 5);
+        let theta = crate::tensor::topk::hard_threshold_rows(&w, 8);
+        let out = CompressedLayer::from_theta(&w, &c, theta.clone(), 3, 0.1);
+        let rep = recompute_report("p", &w, &theta, &c, 3, 0.1);
+        assert_eq!(rep.rel_loss.to_bits(), out.stats.rel_loss.to_bits());
+        assert_eq!(rep.iterations, 3);
+        assert!((rep.sparsity - 0.5).abs() < 1e-9);
     }
 }

@@ -78,6 +78,29 @@
 //! `PROJECTIONS.md` for the catalog, the projection laws the tests sweep,
 //! and how to add an operator.
 //!
+//! ## Compressed artifacts
+//!
+//! Compressing a site yields a dense f32 Θ whose entries live in a tiny
+//! set — b-bit grid points for quantized sites, sparse survivors for
+//! pruned ones. [`artifact`] stores each site in that natural
+//! representation: an `AWPPACK1` container ([`artifact::ModelArtifact`])
+//! holding grouped b-bit codes + per-group scale/zero-point
+//! (mirroring [`proj::GroupedIntGrid`]), per-group value palettes, packed
+//! N:M/row-sparse survivor masks, or dense f32 fallback — every variant
+//! decode-verified **bit-identical** to the in-memory Θ at encode time.
+//! Artifacts are keyed by (Gram cache key, compression spec, method)
+//! ([`artifact::ArtifactKey`]) with the same rename-atomic write /
+//! identity-revalidation / corrupt-file-recompute discipline as the Gram
+//! cache, and they persist each site's layer report too — so a **warm
+//! sweep rerun submits zero compression jobs**
+//! ([`coordinator::pipeline::compress_model_cached`], `--artifact-dir`,
+//! default `cache/artifacts`). A packed execution path
+//! ([`artifact::PackedLinear::matmul`] streaming dequant GEMM,
+//! [`artifact::PackedLinear::matmul_sparse`] survivor-only N:M GEMM)
+//! consumes the packed weights directly, and `repro eval --from-artifact`
+//! reproduces the dense path's quality numbers from the packed file alone
+//! (`repro inspect` prints the per-site footprint). See ARTIFACTS.md.
+//!
 //! ## Quick tour
 //!
 //! ```no_run
@@ -109,6 +132,7 @@
     clippy::field_reassign_with_default
 )]
 
+pub mod artifact;
 pub mod compress;
 pub mod config;
 pub mod coordinator;

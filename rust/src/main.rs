@@ -11,6 +11,7 @@
 //! repro experiment table1|table2|table3|table4|table5|fig1|all [--awp-backend cpu|hlo]
 //! repro e2e     # end-to-end driver: train → eval → compress → eval
 //! repro info    # artifacts / manifest summary
+//! repro inspect <file.apack>   # per-site footprint of a packed artifact
 //! ```
 //!
 //! Global flags: `--config <file.json>` (see rust/src/config), `--artifacts
@@ -18,25 +19,36 @@
 //! default = thread budget, i.e. `AWP_THREADS` or the machine parallelism —
 //! the executor splits the budget so outer workers × inner GEMM threads
 //! stay ≤ it), `--cache-dir <dir>` / `--no-cache` (where the calibration
-//! Grams persist; default `cache/grams`), and `--synthetic` (runtime-free
-//! mode for `compress`: untrained checkpoint + synthetic Grams, CPU
-//! methods only — exercises the cache subsystem on machines without AOT
-//! artifacts). `repro compress` also takes `--timings` to print the
-//! per-layer executor telemetry with time- and cost-shares. The CLI is
-//! hand-rolled (the image has no argument-parsing crate); see `Args` below.
+//! Grams persist; default `cache/grams`), `--artifact-dir <dir>` /
+//! `--no-artifacts` (the compressed-artifact store, default
+//! `cache/artifacts`: compressed sites persist bit-packed, keyed by (Gram
+//! key, spec, method), so warm `compress`/`experiment` reruns submit zero
+//! compression jobs), and `--synthetic` (runtime-free mode for
+//! `compress`/`eval --from-artifact`: untrained checkpoint + synthetic
+//! Grams, CPU methods only — exercises the cache subsystems on machines
+//! without AOT artifacts). `repro compress` also takes `--timings` (per-
+//! layer executor telemetry) and `--pack-out <file>` (emit the bit-packed
+//! `AWPPACK1` artifact and print its footprint table); `repro eval
+//! --from-artifact <file>` reproduces quality numbers from the packed file
+//! alone. The CLI is hand-rolled (the image has no argument-parsing
+//! crate); see `Args` below.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use awp::artifact::{read_artifact, write_artifact, ArtifactStore};
 use awp::compress::awp::AwpHyper;
 use awp::compress::traits::CompressionSpec;
 use awp::config::RunConfig;
 use awp::coordinator::experiments::{self, ExperimentCtx};
-use awp::coordinator::{compress_model_with, make_compressor, GramCache, Method};
+use awp::coordinator::{
+    compress_model_cached, compress_model_with, make_compressor, plan_jobs,
+    GramCache, Method,
+};
 use awp::data::Split;
-use awp::eval::{generate, perplexity};
+use awp::eval::{generate, perplexity, recompute_report};
 use awp::model::Checkpoint;
 use awp::runtime::{Manifest, Runtime};
 use awp::trainer;
@@ -144,6 +156,23 @@ fn main() -> Result<()> {
         std::process::exit(2);
     };
     let cfg = run_config(&args)?;
+    // `inspect` reads a packed artifact alone — no manifest or runtime
+    if cmd == "inspect" {
+        let path = args
+            .positional
+            .get(1)
+            .context("usage: repro inspect <file.apack>")?;
+        let art = read_artifact(Path::new(path))?;
+        println!("artifact {path}: model '{}' · method {} · spec {}",
+                 art.model, art.method, art.spec_desc);
+        println!("identity: checkpoint {:016x} · calib {:016x} · packed with \
+                  '{}'", art.checkpoint, art.calib, art.compressed_with);
+        print!("{}", art.footprint_table().to_console());
+        println!("total: packed {} bytes, dense {} bytes, ratio {:.2}x",
+                 art.packed_bytes(), art.dense_bytes(),
+                 art.dense_bytes() as f64 / art.packed_bytes().max(1) as f64);
+        return Ok(());
+    }
     let synthetic = args.get("synthetic").is_some();
     let manifest = if synthetic {
         Arc::new(Manifest::synthetic())
@@ -168,6 +197,15 @@ fn main() -> Result<()> {
                  .unwrap_or_else(|| cfg.paths.gram_cache.clone()))
     };
     ctx.set_cache(Arc::new(GramCache::new(cache_dir)));
+    // compressed-artifact store: disk layer on by default (cache/artifacts),
+    // redirected by --artifact-dir, disabled by --no-artifacts
+    let artifact_dir = if args.get("no-artifacts").is_some() {
+        None
+    } else {
+        Some(args.get("artifact-dir").map(PathBuf::from)
+                 .unwrap_or_else(|| cfg.paths.artifact_cache.clone()))
+    };
+    ctx.set_artifact_store(Arc::new(ArtifactStore::new(artifact_dir)));
 
     match cmd.as_str() {
         "info" => {
@@ -200,6 +238,75 @@ fn main() -> Result<()> {
                      curve.last().map(|(_, l)| *l).unwrap_or(f64::NAN));
         }
         "eval" => {
+            if let Some(apath) = args.get("from-artifact") {
+                // quality numbers from the packed file alone: decode the
+                // artifact's sites (bit-identical to the pipeline output)
+                // over the base checkpoint and evaluate that assembly
+                let art = read_artifact(Path::new(apath))?;
+                let model = art.model.clone();
+                let ck = ctx.checkpoint(&model)?;
+                let gk = ctx.gram_key(&model)?;
+                if art.checkpoint != gk.checkpoint || art.calib != gk.calib {
+                    bail!("artifact {apath} identity mismatch: packed against \
+                           checkpoint {:016x}/calib {:016x}, current run is \
+                           {:016x}/{:016x}", art.checkpoint, art.calib,
+                          gk.checkpoint, gk.calib);
+                }
+                if ctx.synthetic() {
+                    // no runtime ⇒ no perplexity; recompute the per-site
+                    // reconstruction quality from the decoded weights —
+                    // bit-identical to the dense compress run's numbers
+                    let grams = ctx.grams(&model)?;
+                    let plan = plan_jobs(&ck.config);
+                    let mut sum = 0.0f64;
+                    for job in &plan.jobs {
+                        let s = art
+                            .sites
+                            .iter()
+                            .find(|s| s.param == job.site.param)
+                            .with_context(|| format!("artifact misses site {}",
+                                                     job.site.param))?;
+                        let w = ck.matrix(&job.site.param)?;
+                        let c = grams
+                            .get(job.site.gram, job.site.layer)
+                            .context("missing Gram")?;
+                        let rep = recompute_report(&s.param, &w,
+                                                   &s.packed.decode(), c,
+                                                   s.report.iterations,
+                                                   s.report.seconds);
+                        sum += rep.rel_loss;
+                    }
+                    let mean = sum / plan.jobs.len().max(1) as f64;
+                    println!("{} {}: mean rel_loss {mean:.4}  ({} sites) \
+                              [synthetic, from artifact]",
+                             art.method, art.spec_desc, art.sites.len());
+                } else {
+                    // plan-coverage gate (mirrors the synthetic branch and
+                    // the warm-pipeline assembly): every compressible site
+                    // must come from the artifact, or the "ppl [from
+                    // artifact]" number would silently mix dense weights in
+                    let plan = plan_jobs(&ck.config);
+                    let mut tensors = Vec::with_capacity(plan.jobs.len());
+                    for job in &plan.jobs {
+                        let s = art
+                            .sites
+                            .iter()
+                            .find(|s| s.param == job.site.param)
+                            .with_context(|| format!("artifact misses site {}",
+                                                     job.site.param))?;
+                        tensors.push((s.param.clone(), s.packed.decode().data));
+                    }
+                    let compressed = ck.with_tensors(tensors)?;
+                    let batcher = ctx.batcher(&model)?;
+                    let rep = perplexity(&runtime.handle(), &manifest, &model,
+                                         &compressed, &batcher, Split::Val,
+                                         cfg.eval_batches)?;
+                    println!("ppl = {:.4}  (nll/token {:.4}, {} tokens, \
+                              {} windows) [from artifact]",
+                             rep.ppl, rep.nll_per_token, rep.tokens, rep.batches);
+                }
+                return Ok(());
+            }
             let model = args.get_or("model", "small");
             let ck = match args.get("checkpoint") {
                 Some(p) => Arc::new(Checkpoint::load(p)?),
@@ -223,8 +330,29 @@ fn main() -> Result<()> {
             let compressor = make_compressor(method, hyper,
                                              Some((&runtime.handle(), &manifest)))?;
             let exec = ctx.executor();
-            let out = compress_model_with(&ck, &grams, compressor.as_ref(), &spec,
-                                          true, &exec)?;
+            // pack an artifact only when a consumer exists — the store (on
+            // by default) or an explicit --pack-out; with both disabled,
+            // skip the per-site encode work entirely
+            let pack_out = args.get("pack-out").map(str::to_string);
+            let (out, artifact) = if ctx.artifact_store().enabled()
+                || pack_out.is_some()
+            {
+                let akey = ctx.artifact_key(&model, method, &spec)?;
+                let cached = compress_model_cached(&ck, &grams,
+                                                   compressor.as_ref(), &spec,
+                                                   true, &exec,
+                                                   ctx.artifact_store(), &akey)?;
+                if cached.warm {
+                    eprintln!("[artifact] warm run: {} sites assembled from \
+                               the artifact store, 0 compression jobs \
+                               submitted", cached.artifact.sites.len());
+                }
+                (cached.result, Some(cached.artifact))
+            } else {
+                (compress_model_with(&ck, &grams, compressor.as_ref(), &spec,
+                                     true, &exec)?,
+                 None)
+            };
             if ctx.synthetic() {
                 // no runtime ⇒ no perplexity; report reconstruction stats
                 let mean_loss = out.reports.iter().map(|r| r.rel_loss).sum::<f64>()
@@ -244,6 +372,19 @@ fn main() -> Result<()> {
             let c = ctx.cache().counts();
             eprintln!("[cache] session counts: {} memory hits, {} disk hits, \
                        {} misses", c.mem_hits, c.disk_hits, c.misses);
+            let ac = ctx.artifact_store().counts();
+            eprintln!("[artifact] session counts: {} hits, {} misses, \
+                       {} stores", ac.hits, ac.misses, ac.stores);
+            if let Some(path) = &pack_out {
+                let art = artifact.as_ref().expect("--pack-out implies packing");
+                write_artifact(Path::new(path), art)?;
+                print!("{}", art.footprint_table().to_console());
+                println!("packed artifact written to {path}: {} dense bytes → \
+                          {} on disk ({:.2}x)",
+                         art.dense_bytes(), art.packed_bytes(),
+                         art.dense_bytes() as f64
+                             / art.packed_bytes().max(1) as f64);
+            }
             if args.get("timings").is_some() {
                 let rows: Vec<(String, f64, u64)> = out
                     .job_stats
@@ -304,6 +445,9 @@ fn main() -> Result<()> {
             let c = ctx.cache().counts();
             eprintln!("[cache] session counts: {} memory hits, {} disk hits, \
                        {} misses", c.mem_hits, c.disk_hits, c.misses);
+            let ac = ctx.artifact_store().counts();
+            eprintln!("[artifact] session counts: {} hits, {} misses, \
+                       {} stores", ac.hits, ac.misses, ac.stores);
         }
         "e2e" => {
             // end-to-end driver: train → dense ppl → AWP 50% + INT4 joint →
@@ -319,8 +463,16 @@ fn main() -> Result<()> {
             let spec = CompressionSpec::joint(0.5, 4, manifest.awp_group);
             let compressor = make_compressor(Method::AwpHlo, hyper,
                                              Some((&runtime.handle(), &manifest)))?;
-            let out = compress_model_with(&ck, &grams, compressor.as_ref(), &spec,
-                                          true, &ctx.executor())?;
+            let out = if ctx.artifact_store().enabled() {
+                let akey = ctx.artifact_key(&model, Method::AwpHlo, &spec)?;
+                compress_model_cached(&ck, &grams, compressor.as_ref(), &spec,
+                                      true, &ctx.executor(),
+                                      ctx.artifact_store(), &akey)?
+                    .result
+            } else {
+                compress_model_with(&ck, &grams, compressor.as_ref(), &spec,
+                                    true, &ctx.executor())?
+            };
             let ppl = ctx.ppl(&model, &out.checkpoint)?;
             println!("[e2e] AWP joint 50% + INT4 (HLO backend): ppl = {ppl:.3} \
                       ({:.1}s over {} layers)", out.seconds, out.reports.len());

@@ -166,6 +166,25 @@ impl Checkpoint {
         Ok(Checkpoint { config, tensors, meta })
     }
 
+    /// Clone this checkpoint with the named tensors replaced — the
+    /// assembly step shared by the artifact warm path and `repro eval
+    /// --from-artifact` (base checkpoint + decoded packed sites). Shapes
+    /// are checked by [`Checkpoint::set`]; an unknown name is an error.
+    pub fn with_tensors(
+        &self,
+        replacements: impl IntoIterator<Item = (String, Vec<f32>)>,
+    ) -> Result<Checkpoint> {
+        let mut out = Checkpoint {
+            config: self.config.clone(),
+            tensors: self.tensors.clone(),
+            meta: self.meta.clone(),
+        };
+        for (name, data) in replacements {
+            out.set(&name, data)?;
+        }
+        Ok(out)
+    }
+
     /// Content fingerprint over config, tensor layout, tensor bits and
     /// meta — the checkpoint component of a calibration-cache key
     /// (`coordinator::cache`). Any change to a weight, the config or the
@@ -289,6 +308,22 @@ mod tests {
         let mut c2 = cfg();
         c2.rope_theta = 999.0;
         assert_ne!(f0, Checkpoint::zeros_like_spec(&c2).fingerprint());
+    }
+
+    #[test]
+    fn with_tensors_replaces_and_checks() {
+        let ck = Checkpoint::zeros_like_spec(&cfg());
+        let n = ck.get("blocks.0.wq").unwrap().1.len();
+        let out = ck
+            .with_tensors([("blocks.0.wq".to_string(), vec![2.0; n])])
+            .unwrap();
+        assert_eq!(out.get("blocks.0.wq").unwrap().1[0], 2.0);
+        // original untouched
+        assert_eq!(ck.get("blocks.0.wq").unwrap().1[0], 0.0);
+        assert!(ck.with_tensors([("nope".to_string(), vec![0.0])]).is_err());
+        assert!(ck
+            .with_tensors([("blocks.0.wq".to_string(), vec![0.0; 3])])
+            .is_err());
     }
 
     #[test]

@@ -14,4 +14,4 @@ pub mod pack;
 pub use grouped::{
     dequantize, project_qmax, quantize, quantize_dequantize, GroupedQuant, QuantSpec,
 };
-pub use pack::{pack_bits, unpack_bits, packed_size_bytes};
+pub use pack::{pack_bits, packed_size_bytes, unpack_bits, unpack_bits_into};

@@ -22,27 +22,38 @@ pub fn pack_bits(codes: &[u8], bits: u8) -> Vec<u8> {
 }
 
 /// Inverse of [`pack_bits`]; `n` is the number of codes to recover.
+/// Delegates to [`unpack_bits_into`] so the full-array and streaming
+/// (random-access) decodes are one implementation — the packed GEMM's
+/// bit-identity contract depends on them agreeing.
 pub fn unpack_bits(packed: &[u8], bits: u8, n: usize) -> Vec<u8> {
-    assert!((1..=8).contains(&bits));
-    let mask = if bits == 8 { 0xFFu16 } else { (1u16 << bits) - 1 };
-    let mut out = Vec::with_capacity(n);
-    let mut bitpos = 0usize;
-    for _ in 0..n {
-        let byte = bitpos / 8;
-        let off = bitpos % 8;
-        let mut v = (packed[byte] as u16) >> off;
-        if off + bits as usize > 8 && byte + 1 < packed.len() {
-            v |= (packed[byte + 1] as u16) << (8 - off);
-        }
-        out.push((v & mask) as u8);
-        bitpos += bits as usize;
-    }
+    let mut out = vec![0u8; n];
+    unpack_bits_into(packed, bits, 0, &mut out);
     out
 }
 
 /// Bytes needed for `n` codes at `bits` each.
 pub fn packed_size_bytes(n: usize, bits: u8) -> usize {
     (n * bits as usize).div_ceil(8)
+}
+
+/// Unpack the `out.len()` codes starting at code index `start` into `out`
+/// — the random-access form of [`unpack_bits`] the streaming packed-GEMM
+/// path uses to decode one coefficient row at a time without materialising
+/// the full code array.
+pub fn unpack_bits_into(packed: &[u8], bits: u8, start: usize, out: &mut [u8]) {
+    assert!((1..=8).contains(&bits));
+    let mask = if bits == 8 { 0xFFu16 } else { (1u16 << bits) - 1 };
+    let mut bitpos = start * bits as usize;
+    for slot in out.iter_mut() {
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let mut v = (packed[byte] as u16) >> off;
+        if off + bits as usize > 8 && byte + 1 < packed.len() {
+            v |= (packed[byte + 1] as u16) << (8 - off);
+        }
+        *slot = (v & mask) as u8;
+        bitpos += bits as usize;
+    }
 }
 
 #[cfg(test)]
@@ -82,5 +93,21 @@ mod tests {
         let codes = vec![0x1u8, 0x2, 0x3, 0x4];
         let packed = pack_bits(&codes, 4);
         assert_eq!(packed, vec![0x21, 0x43]);
+    }
+
+    #[test]
+    fn ranged_unpack_matches_full_unpack() {
+        let mut rng = Rng::new(7);
+        for bits in 1..=8u8 {
+            let maxc = if bits == 8 { 256 } else { 1usize << bits };
+            let codes: Vec<u8> = (0..301).map(|_| rng.below(maxc) as u8).collect();
+            let packed = pack_bits(&codes, bits);
+            let full = unpack_bits(&packed, bits, codes.len());
+            for (start, len) in [(0usize, 301usize), (7, 64), (300, 1), (13, 0)] {
+                let mut out = vec![0u8; len];
+                unpack_bits_into(&packed, bits, start, &mut out);
+                assert_eq!(out, full[start..start + len], "bits={bits} @{start}");
+            }
+        }
     }
 }

@@ -120,6 +120,89 @@ impl Table {
     }
 }
 
+/// A text-celled sibling of [`Table`] for reports whose cells are not
+/// paper-style numbers (byte counts, mode tags, ratios): same aligned
+/// console / markdown / CSV renderings, string cells. Used by the
+/// compressed-artifact footprint table (`repro inspect`,
+/// `repro compress --pack-out`).
+#[derive(Clone, Debug)]
+pub struct TextTable {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl TextTable {
+    pub fn new(title: impl Into<String>, headers: Vec<String>) -> Self {
+        TextTable { title: title.into(), headers, rows: Vec::new() }
+    }
+
+    pub fn push_row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    /// Aligned console rendering (first column left-aligned, rest right).
+    pub fn to_console(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = format!("# {}\n", self.title);
+        for (i, (h, w)) in self.headers.iter().zip(&widths).enumerate() {
+            if i == 0 {
+                out += &format!("{h:w$}");
+            } else {
+                out += &format!("  {h:>w$}");
+            }
+        }
+        out.push('\n');
+        for row in &self.rows {
+            for (i, (c, w)) in row.iter().zip(&widths).enumerate() {
+                if i == 0 {
+                    out += &format!("{c:w$}");
+                } else {
+                    out += &format!("  {c:>w$}");
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("**{}**\n\n|", self.title);
+        for h in &self.headers {
+            out += &format!(" {h} |");
+        }
+        out += "\n|";
+        for _ in &self.headers {
+            out += "---|";
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push('|');
+            for c in row {
+                out += &format!(" {c} |");
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out += &row.join(",");
+            out.push('\n');
+        }
+        out
+    }
+}
+
 /// Per-job wall-clock telemetry from an executor run (`repro compress
 /// --timings`): one row per layer job with its seconds and share of the
 /// summed job time (> 100%·wall-clock total means the pool overlapped work).
@@ -268,5 +351,26 @@ mod tests {
     fn row_width_checked() {
         let mut t = Table::new("T", "m", vec!["a".into()]);
         t.push_row("x", vec![Some(1.0), Some(2.0)]);
+    }
+
+    #[test]
+    fn text_table_renders_all_formats() {
+        let mut t = TextTable::new("Footprint",
+                                   vec!["site".into(), "bytes".into()]);
+        t.push_row(vec!["blocks.0.wq".into(), "1024".into()]);
+        t.push_row(vec!["TOTAL".into(), "2048".into()]);
+        let con = t.to_console();
+        assert!(con.starts_with("# Footprint"));
+        assert!(con.contains("blocks.0.wq") && con.contains("2048"));
+        let md = t.to_markdown();
+        assert!(md.contains("| blocks.0.wq | 1024 |"));
+        assert!(t.to_csv().contains("blocks.0.wq,1024"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn text_table_row_width_checked() {
+        let mut t = TextTable::new("T", vec!["a".into()]);
+        t.push_row(vec!["x".into(), "y".into()]);
     }
 }

@@ -14,44 +14,61 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols, b.rows, "matmul {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let mut out = Matrix::zeros(m, n);
-    const KB: usize = 64; // k-panel: keeps a B panel hot in L1/L2
     par_chunks_mut(&mut out.data, n, |i, orow| {
         let arow = &a.data[i * k..(i + 1) * k];
-        for k0 in (0..k).step_by(KB) {
-            let k1 = (k0 + KB).min(k);
-            let mut kk = k0;
-            // 4-way k-unroll: one pass over the output row consumes four B
-            // rows, quartering the orow read/write traffic (perf pass §L3;
-            // see EXPERIMENTS.md §Perf for before/after).
-            while kk + 4 <= k1 {
-                let a0 = arow[kk];
-                let a1 = arow[kk + 1];
-                let a2 = arow[kk + 2];
-                let a3 = arow[kk + 3];
-                if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
-                    let b0 = &b.data[kk * n..kk * n + n];
-                    let b1 = &b.data[(kk + 1) * n..(kk + 1) * n + n];
-                    let b2 = &b.data[(kk + 2) * n..(kk + 2) * n + n];
-                    let b3 = &b.data[(kk + 3) * n..(kk + 3) * n + n];
-                    for j in 0..n {
-                        orow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
-                    }
-                }
-                kk += 4;
-            }
-            while kk < k1 {
-                let av = arow[kk];
-                if av != 0.0 {
-                    let brow = &b.data[kk * n..kk * n + n];
-                    for j in 0..n {
-                        orow[j] += av * brow[j];
-                    }
-                }
-                kk += 1;
-            }
-        }
+        matmul_row_panel(arow, b, orow);
     });
     out
+}
+
+/// One output-row panel of [`matmul`]: `orow += arow · B`, with the KB
+/// blocking, 4-way k-unroll and zero-quad skip of the dense kernel.
+/// `orow` must arrive zeroed (or holding a partial accumulation).
+///
+/// This is the single shared inner kernel: the packed execution path
+/// (`crate::artifact::PackedLinear`) streams decoded coefficient rows
+/// through the same function, which is what makes the packed GEMM
+/// bit-identical to `matmul` on the decoded matrix — same blocking, same
+/// unroll, same accumulation order.
+pub fn matmul_row_panel(arow: &[f32], b: &Matrix, orow: &mut [f32]) {
+    let k = arow.len();
+    let n = b.cols;
+    debug_assert_eq!(k, b.rows);
+    debug_assert_eq!(n, orow.len());
+    const KB: usize = 64; // k-panel: keeps a B panel hot in L1/L2
+    for k0 in (0..k).step_by(KB) {
+        let k1 = (k0 + KB).min(k);
+        let mut kk = k0;
+        // 4-way k-unroll: one pass over the output row consumes four B
+        // rows, quartering the orow read/write traffic (perf pass §L3;
+        // see EXPERIMENTS.md §Perf for before/after).
+        while kk + 4 <= k1 {
+            let a0 = arow[kk];
+            let a1 = arow[kk + 1];
+            let a2 = arow[kk + 2];
+            let a3 = arow[kk + 3];
+            if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+                let b0 = &b.data[kk * n..kk * n + n];
+                let b1 = &b.data[(kk + 1) * n..(kk + 1) * n + n];
+                let b2 = &b.data[(kk + 2) * n..(kk + 2) * n + n];
+                let b3 = &b.data[(kk + 3) * n..(kk + 3) * n + n];
+                for j in 0..n {
+                    orow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                }
+            }
+            kk += 4;
+        }
+        while kk < k1 {
+            let av = arow[kk];
+            if av != 0.0 {
+                let brow = &b.data[kk * n..kk * n + n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+            kk += 1;
+        }
+    }
 }
 
 /// `out = theta + eta * (w - theta) * c` — the CPU mirror of the L1 Pallas
@@ -140,6 +157,23 @@ pub fn activation_loss(w: &Matrix, theta: &Matrix, c: &Matrix) -> f64 {
     .into_iter()
     .sum::<f64>()
     .max(0.0)
+}
+
+/// `‖(W−Θ)C½‖_F / ‖W‖_F` from an already-computed `activation_loss` —
+/// the single normalisation [`crate::compress::CompressedLayer::from_theta`]
+/// and [`rel_activation_loss`] share, so the recorded and the recomputed
+/// rel-loss can never drift apart.
+pub fn rel_loss_from(final_loss: f64, w: &Matrix) -> f64 {
+    final_loss.sqrt() / w.frob_norm().max(1e-30)
+}
+
+/// The Figure-1 metric `‖(W−Θ)C½‖_F / ‖W‖_F` — the exact expression
+/// [`crate::compress::CompressedLayer::from_theta`] records as `rel_loss`.
+/// The artifact eval path (`repro eval --from-artifact`) recomputes layer
+/// quality through this same function, so a decoded Θ that is bit-identical
+/// to the in-memory compressed Θ yields a bit-identical rel-loss.
+pub fn rel_activation_loss(w: &Matrix, theta: &Matrix, c: &Matrix) -> f64 {
+    rel_loss_from(activation_loss(w, theta, c), w)
 }
 
 /// Frobenius norm of the gradient `(W−Θ)C` (the paper's stopping criterion

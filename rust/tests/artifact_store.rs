@@ -1,0 +1,300 @@
+//! The compressed-artifact store's external contract: bit-exact pack/
+//! unpack round-trips for every representation the codec emits, clean
+//! errors on truncated/corrupt/mismatched files, key invalidation across
+//! (checkpoint, spec, method), and — the property the subsystem exists
+//! for — a warm rerun over a populated store submits **zero** compression
+//! jobs while assembling a bit-identical checkpoint (modeled on the Gram
+//! cache's warm-skip tests).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use awp::artifact::{
+    read_artifact, store_artifact, ArtifactKey, ArtifactStore, PackedLinear,
+};
+use awp::compress::magnitude::MagnitudePrune;
+use awp::compress::traits::{CompressedLayer, CompressionSpec, LayerCompressor};
+use awp::coordinator::cache::GramCacheKey;
+use awp::coordinator::calibrate::synthetic_grams;
+use awp::coordinator::{compress_model_cached, compress_model_with, Executor};
+use awp::model::{Checkpoint, ModelConfig};
+use awp::proj::ProjScratch;
+use awp::tensor::Matrix;
+use awp::util::tempdir::TempDir;
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "t".into(), vocab: 64, d_model: 32, n_heads: 2, n_layers: 2,
+        d_ff: 64, seq_len: 16, batch: 1, decode_len: 8, rope_theta: 1e4,
+    }
+}
+
+fn key_for(ck: &Checkpoint, method: &str, spec: &CompressionSpec) -> ArtifactKey {
+    ArtifactKey::new(
+        GramCacheKey {
+            model: ck.config.name.clone(),
+            checkpoint: ck.fingerprint(),
+            calib: 42,
+        },
+        method,
+        spec,
+    )
+}
+
+fn assert_ck_bits_equal(a: &Checkpoint, b: &Checkpoint) {
+    assert_eq!(a.tensors.len(), b.tensors.len());
+    for ((n1, s1, d1), (n2, s2, d2)) in a.tensors.iter().zip(&b.tensors) {
+        assert_eq!((n1, s1), (n2, s2));
+        for (x, y) in d1.iter().zip(d2) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{n1}");
+        }
+    }
+}
+
+/// Every spec family round-trips bit-exactly through encode/decode when
+/// applied to its own projection's output — the codec's core law, swept
+/// over seeds proptest-style.
+#[test]
+fn pack_unpack_round_trips_bit_exact_across_spec_families() {
+    let specs = [
+        CompressionSpec::prune(0.5),
+        CompressionSpec::prune(0.9),
+        CompressionSpec::quant(2, 16),
+        CompressionSpec::quant(4, 32),
+        CompressionSpec::joint(0.5, 4, 32),
+        CompressionSpec::structured_nm(2, 4),
+        CompressionSpec::structured_nm(4, 8),
+        CompressionSpec::joint_nm(2, 4, 4, 32),
+    ];
+    for seed in 0..10u64 {
+        for spec in &specs {
+            let mut theta = Matrix::randn(6, 64, seed);
+            spec.projection(theta.cols)
+                .project_rows(&mut theta, &mut ProjScratch::new());
+            let p = PackedLinear::encode(&theta, spec);
+            assert!(p.reconstructs(&theta),
+                    "seed={seed} spec={spec:?} mode={}", p.mode_name());
+            assert!(p.packed_bytes() < p.dense_bytes(),
+                    "seed={seed} spec={spec:?}: {} !< {}",
+                    p.packed_bytes(), p.dense_bytes());
+        }
+    }
+}
+
+/// Arbitrary (unprojected) matrices still round-trip — the encoder falls
+/// back to an exact representation rather than failing or approximating.
+#[test]
+fn pack_is_lossless_even_off_constraint() {
+    for seed in 0..6u64 {
+        let theta = Matrix::randn(5, 48, seed);
+        for spec in [CompressionSpec::quant(4, 16), CompressionSpec::prune(0.5)] {
+            let p = PackedLinear::encode(&theta, &spec);
+            assert!(p.reconstructs(&theta), "seed={seed} mode={}", p.mode_name());
+        }
+    }
+}
+
+#[test]
+fn artifact_file_round_trip_preserves_sites_and_reports() {
+    let tiny = cfg();
+    let ck = awp::trainer::init_checkpoint(&tiny, 1);
+    let grams = synthetic_grams(&tiny, 5);
+    let spec = CompressionSpec::prune(0.5);
+    let out = compress_model_with(&ck, &grams, &MagnitudePrune, &spec, true,
+                                  &Executor::sequential())
+        .unwrap();
+    let dir = TempDir::new("apack").unwrap();
+    let store = ArtifactStore::new(Some(dir.path().to_path_buf()));
+    let key = key_for(&ck, "magnitude", &spec);
+    // build + persist through the cached pipeline, then read the file raw
+    let cached = compress_model_cached(&ck, &grams, &MagnitudePrune, &spec, true,
+                                       &Executor::sequential(), &store, &key)
+        .unwrap();
+    let path = dir.path().join(key.file_name());
+    let art = read_artifact(&path).unwrap();
+    assert_eq!(art.sites.len(), out.reports.len());
+    for (site, rep) in art.sites.iter().zip(&out.reports) {
+        assert_eq!(site.param, rep.param);
+        assert_eq!(site.report.rel_loss.to_bits(), rep.rel_loss.to_bits());
+        assert_eq!(site.report.iterations, rep.iterations);
+        let dec = site.packed.decode();
+        let orig = out.checkpoint.matrix(&site.param).unwrap();
+        for (x, y) in dec.data.iter().zip(&orig.data) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{}", site.param);
+        }
+    }
+    assert!(art.packed_bytes() < art.dense_bytes());
+    assert_eq!(cached.artifact.packed_bytes(), art.packed_bytes());
+}
+
+#[test]
+fn warm_rerun_submits_zero_compression_jobs() {
+    struct MustNotRun;
+    impl LayerCompressor for MustNotRun {
+        fn name(&self) -> &'static str {
+            "must-not-run"
+        }
+        fn compress(&self, _w: &Matrix, _c: &Matrix, _s: &CompressionSpec)
+            -> Result<CompressedLayer> {
+            anyhow::bail!("compression job submitted on a warm artifact store")
+        }
+    }
+
+    let tiny = cfg();
+    let ck = awp::trainer::init_checkpoint(&tiny, 1);
+    let grams = synthetic_grams(&tiny, 5);
+    let dir = TempDir::new("apack").unwrap();
+
+    for spec in [
+        CompressionSpec::prune(0.5),
+        CompressionSpec::structured_nm(2, 4),
+    ] {
+        let store = ArtifactStore::new(Some(dir.path().to_path_buf()));
+        let key = key_for(&ck, "magnitude", &spec);
+        let cold = compress_model_cached(&ck, &grams, &MagnitudePrune, &spec,
+                                         true, &Executor::with_workers(4),
+                                         &store, &key)
+            .unwrap();
+        assert!(!cold.warm);
+        assert!(!cold.result.job_stats.is_empty());
+
+        // fresh store handle over the same dir — a separate process rerun
+        let warm_store = ArtifactStore::new(Some(dir.path().to_path_buf()));
+        let warm = compress_model_cached(&ck, &grams, &MustNotRun, &spec, true,
+                                         &Executor::with_workers(4),
+                                         &warm_store, &key)
+            .unwrap();
+        assert!(warm.warm, "{spec:?}");
+        assert!(warm.result.job_stats.is_empty(),
+                "{spec:?}: warm rerun submitted compression jobs");
+        assert_eq!(warm_store.counts().hits, 1);
+        assert_ck_bits_equal(&cold.result.checkpoint, &warm.result.checkpoint);
+        // reports survive the round-trip bit-for-bit too
+        for (a, b) in cold.result.reports.iter().zip(&warm.result.reports) {
+            assert_eq!(a.param, b.param);
+            assert_eq!(a.rel_loss.to_bits(), b.rel_loss.to_bits());
+        }
+    }
+}
+
+#[test]
+fn key_changes_invalidate_the_artifact() {
+    let tiny = cfg();
+    let ck = awp::trainer::init_checkpoint(&tiny, 1);
+    let grams = synthetic_grams(&tiny, 5);
+    let spec = CompressionSpec::prune(0.5);
+    let dir = TempDir::new("apack").unwrap();
+    let store = ArtifactStore::new(Some(dir.path().to_path_buf()));
+    let key = key_for(&ck, "magnitude", &spec);
+    compress_model_cached(&ck, &grams, &MagnitudePrune, &spec, true,
+                          &Executor::sequential(), &store, &key)
+        .unwrap();
+
+    // different ratio, different method, different checkpoint: all miss
+    let k2 = key_for(&ck, "magnitude", &CompressionSpec::prune(0.6));
+    assert_ne!(key.hash(), k2.hash());
+    assert!(store.load(&k2).is_none());
+    let k3 = key_for(&ck, "wanda", &spec);
+    assert!(store.load(&k3).is_none());
+    let ck2 = awp::trainer::init_checkpoint(&tiny, 2);
+    let k4 = key_for(&ck2, "magnitude", &spec);
+    assert!(store.load(&k4).is_none());
+    // the original still hits
+    assert!(store.load(&key).is_some());
+}
+
+#[test]
+fn corrupt_artifact_degrades_to_recompute_and_heals() {
+    let tiny = cfg();
+    let ck = awp::trainer::init_checkpoint(&tiny, 1);
+    let grams = synthetic_grams(&tiny, 5);
+    let spec = CompressionSpec::prune(0.5);
+    let dir = TempDir::new("apack").unwrap();
+    let store = ArtifactStore::new(Some(dir.path().to_path_buf()));
+    let key = key_for(&ck, "magnitude", &spec);
+    let cold = compress_model_cached(&ck, &grams, &MagnitudePrune, &spec, true,
+                                     &Executor::sequential(), &store, &key)
+        .unwrap();
+    // truncate the stored file: the next run logs, recompresses, heals
+    let path = dir.path().join(key.file_name());
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    let healed_store = ArtifactStore::new(Some(dir.path().to_path_buf()));
+    let again = compress_model_cached(&ck, &grams, &MagnitudePrune, &spec, true,
+                                      &Executor::sequential(), &healed_store, &key)
+        .unwrap();
+    assert!(!again.warm);
+    assert_ck_bits_equal(&cold.result.checkpoint, &again.result.checkpoint);
+    // healed: a third run is warm
+    let warm_store = ArtifactStore::new(Some(dir.path().to_path_buf()));
+    let warm = compress_model_cached(&ck, &grams, &MagnitudePrune, &spec, true,
+                                     &Executor::sequential(), &warm_store, &key)
+        .unwrap();
+    assert!(warm.warm);
+}
+
+#[test]
+fn truncated_and_garbage_files_error_cleanly() {
+    let dir = TempDir::new("apack").unwrap();
+    let path = dir.path().join("x.apack");
+    std::fs::write(&path, b"not an artifact").unwrap();
+    assert!(read_artifact(&path).is_err());
+    std::fs::write(&path, b"AWPPACK1").unwrap();
+    assert!(read_artifact(&path).is_err());
+}
+
+/// A sweep rerun through the experiment harness is incremental: the
+/// second `eval_cell` for the same (model, method, spec) hits the store,
+/// recompresses nothing, and reproduces the same quality number.
+#[test]
+fn experiment_cells_are_incremental_over_the_store() {
+    use awp::config::RunConfig;
+    use awp::coordinator::{ExperimentCtx, Method};
+    use awp::runtime::{Manifest, Runtime};
+
+    let runtime = Runtime::start().unwrap();
+    let manifest = Arc::new(Manifest::synthetic());
+    let mut ctx = ExperimentCtx::new(runtime.handle(), manifest, RunConfig::default());
+    ctx.set_synthetic(true);
+    let dir = TempDir::new("apack").unwrap();
+    ctx.set_artifact_store(Arc::new(ArtifactStore::new(
+        Some(dir.path().to_path_buf()),
+    )));
+
+    let spec = CompressionSpec::prune(0.5);
+    let a = ctx.eval_cell("tiny", Method::Magnitude, &spec).unwrap();
+    let c = ctx.artifact_store().counts();
+    assert_eq!((c.hits, c.misses, c.stores), (0, 1, 1));
+
+    let b = ctx.eval_cell("tiny", Method::Magnitude, &spec).unwrap();
+    let c = ctx.artifact_store().counts();
+    assert_eq!((c.hits, c.misses), (1, 1), "second cell must warm-hit");
+    assert_eq!(a.to_bits(), b.to_bits(), "warm cell changed the quality number");
+
+    // a different spec is a different identity: computes, not hits
+    ctx.eval_cell("tiny", Method::Magnitude, &CompressionSpec::prune(0.6))
+        .unwrap();
+    assert_eq!(ctx.artifact_store().counts().misses, 2);
+}
+
+#[test]
+fn store_and_load_validate_identity() {
+    let tiny = cfg();
+    let ck = awp::trainer::init_checkpoint(&tiny, 1);
+    let grams = synthetic_grams(&tiny, 5);
+    let spec = CompressionSpec::prune(0.5);
+    let dir = TempDir::new("apack").unwrap();
+    let store = ArtifactStore::new(Some(dir.path().to_path_buf()));
+    let key = key_for(&ck, "magnitude", &spec);
+    let cached = compress_model_cached(&ck, &grams, &MagnitudePrune, &spec, true,
+                                       &Executor::sequential(), &store, &key)
+        .unwrap();
+    // renaming the file under a different key's name must be rejected
+    let other = key_for(&ck, "wanda", &spec);
+    std::fs::rename(dir.path().join(key.file_name()),
+                    dir.path().join(other.file_name()))
+        .unwrap();
+    assert!(awp::artifact::load_artifact(dir.path(), &other).is_err());
+    // and store_artifact refuses a key/artifact mismatch outright
+    assert!(store_artifact(dir.path(), &other, &cached.artifact).is_err());
+}

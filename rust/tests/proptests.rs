@@ -181,6 +181,36 @@ fn prop_pack_roundtrip_random() {
 }
 
 #[test]
+fn prop_packed_linear_roundtrip_random_sites() {
+    // the artifact codec's lossless law, swept over random dims × spec
+    // families: whatever the projection produced, decode(encode(Θ)) must
+    // reproduce Θ bit-for-bit (the representation chosen may vary)
+    use awp::artifact::PackedLinear;
+    use awp::proj::ProjScratch;
+    for seed in 0..SWEEPS as u64 {
+        let mut rng = Rng::new(seed);
+        let (m, n) = rand_dims(&mut rng);
+        let bits = [2u8, 3, 4][rng.below(3)];
+        let group = [16usize, 32][rng.below(2)];
+        let spec = match rng.below(5) {
+            0 => CompressionSpec::prune(0.25 + 0.5 * (rng.below(3) as f64) / 3.0),
+            1 => CompressionSpec::quant(bits, group),
+            2 => CompressionSpec::joint(0.5, bits, group),
+            3 => CompressionSpec::structured_nm(2, 4),
+            _ => CompressionSpec::joint_nm(4, 8, bits, group),
+        };
+        let mut theta = Matrix::randn(m, n, seed + 900);
+        spec.projection(n).project_rows(&mut theta, &mut ProjScratch::new());
+        let packed = PackedLinear::encode(&theta, &spec);
+        assert!(packed.reconstructs(&theta),
+                "seed={seed} spec={spec:?} mode={}", packed.mode_name());
+        assert!(packed.packed_bytes() < packed.dense_bytes(),
+                "seed={seed} spec={spec:?} mode={} ({} !< {})",
+                packed.mode_name(), packed.packed_bytes(), packed.dense_bytes());
+    }
+}
+
+#[test]
 fn prop_json_fuzz_roundtrip() {
     fn random_json(rng: &mut Rng, depth: usize) -> Json {
         match if depth == 0 { rng.below(4) } else { rng.below(6) } {
