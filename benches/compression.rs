@@ -233,6 +233,50 @@ fn main() {
                  r.gflops(flops));
     }
 
+    println!("\n== native inference: dense vs packed forward pass ==");
+    {
+        // the serving path: one eval window through the native transformer
+        // with dense f32 sites vs the same weights executed straight off
+        // their packed representations (streaming dequant / survivor-only
+        // GEMMs) — the outputs are bit-identical, so this measures the
+        // pure cost of on-the-fly decode
+        use awp::artifact::PackedLinear;
+        use awp::infer::{NativeModel, SiteWeights};
+        use awp::model::{sites, ModelConfig};
+        use awp::proj::ProjScratch;
+
+        let cfg = ModelConfig {
+            name: "bench".into(), vocab: 256, d_model: 128, n_heads: 4,
+            n_layers: 2, d_ff: 256, seq_len: 32, batch: 2, decode_len: 16,
+            rope_theta: 1e4,
+        };
+        let ck = awp::trainer::init_checkpoint(&cfg, 50);
+        let tokens: Vec<i32> = (0..cfg.batch * cfg.seq_len)
+            .map(|i| (i * 31 % cfg.vocab) as i32)
+            .collect();
+        for (label, spec) in [("int4/g32", CompressionSpec::quant(4, 32)),
+                              ("2:4", CompressionSpec::structured24())] {
+            let mut dense_sites = Vec::new();
+            let mut packed_sites = Vec::new();
+            for s in sites::enumerate_sites(&cfg) {
+                let mut theta = ck.matrix(&s.param).unwrap();
+                spec.projection(theta.cols)
+                    .project_rows(&mut theta, &mut ProjScratch::new());
+                let packed = PackedLinear::encode(&theta, &spec);
+                packed_sites.push((s.param.clone(), SiteWeights::Packed(packed)));
+                dense_sites.push((s.param, SiteWeights::Dense(theta)));
+            }
+            let dense = NativeModel::with_site_weights(&ck, dense_sites).unwrap();
+            let packed = NativeModel::with_site_weights(&ck, packed_sites).unwrap();
+            bench(&format!("native fwd dense {label} 2x32"), 1.0, || {
+                dense.forward(&tokens, cfg.batch, cfg.seq_len).unwrap();
+            });
+            bench(&format!("native fwd packed {label} 2x32"), 1.0, || {
+                packed.forward(&tokens, cfg.batch, cfg.seq_len).unwrap();
+            });
+        }
+    }
+
     println!("\n== §3 cost scaling: AWP per-iteration GEMM vs Hessian inverse ==");
     for &d in &[128usize, 256, 512, 1024] {
         let w = Matrix::randn(128, d, 7);

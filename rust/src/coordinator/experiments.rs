@@ -35,7 +35,8 @@ use crate::compress::awp::AwpHyper;
 use crate::compress::traits::CompressionSpec;
 use crate::config::RunConfig;
 use crate::data::{Batcher, Split, SyntheticCorpus};
-use crate::eval::perplexity::perplexity;
+use crate::eval::perplexity::{native_perplexity, perplexity, PerplexityReport};
+use crate::infer::NativeModel;
 use crate::model::Checkpoint;
 use crate::report::{series_csv, Table};
 use crate::runtime::{Manifest, RuntimeHandle};
@@ -241,6 +242,17 @@ impl ExperimentCtx {
         let rep = perplexity(&self.handle, &self.manifest, model, ck, &batcher,
                              Split::Val, self.cfg.eval_batches)?;
         Ok(rep.ppl)
+    }
+
+    /// Held-out perplexity through the native CPU forward pass — the
+    /// runtime-free eval backend (`repro eval --native`). Works in
+    /// synthetic mode, where the AOT `eval_loss` program is unavailable,
+    /// and on packed models ([`NativeModel::from_artifact`]), where it is
+    /// the first eval path that never assembles a dense f32 checkpoint.
+    pub fn native_ppl(&self, model: &str, nm: &NativeModel)
+        -> Result<PerplexityReport> {
+        let batcher = self.batcher(model)?;
+        native_perplexity(nm, &batcher, Split::Val, self.cfg.eval_batches)
     }
 
     pub fn dense_ppl(&self, model: &str) -> Result<f64> {

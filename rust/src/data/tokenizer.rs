@@ -26,6 +26,14 @@ impl ByteTokenizer {
     pub fn decode_lossy_string(&self, tokens: &[i32]) -> String {
         String::from_utf8_lossy(&self.decode(tokens)).into_owned()
     }
+
+    /// The id decode windows are left-padded with. A byte-level vocabulary
+    /// has no reserved pad token, so the tokenizer nominates the corpus'
+    /// neutral filler byte (space); consumers must take it from here
+    /// rather than hard-coding a byte (`eval::generate::decode_window`).
+    pub fn pad_id(&self) -> i32 {
+        b' ' as i32
+    }
 }
 
 #[cfg(test)]
@@ -51,5 +59,13 @@ mod tests {
     fn clamps_out_of_range() {
         let t = ByteTokenizer;
         assert_eq!(t.decode(&[-5, 300]), vec![0u8, 255]);
+    }
+
+    #[test]
+    fn pad_id_is_a_real_vocab_token() {
+        let t = ByteTokenizer;
+        assert!((0..ByteTokenizer::VOCAB as i32).contains(&t.pad_id()));
+        // padding round-trips through decode like any other token
+        assert_eq!(t.decode(&[t.pad_id()]), vec![b' ']);
     }
 }

@@ -1,10 +1,13 @@
 //! Evaluation harness: held-out perplexity (the paper's metric), per-layer
-//! reconstruction reporting, and greedy generation.
+//! reconstruction reporting, and greedy generation — each over two
+//! backends: the AOT runtime programs, or the native CPU forward pass
+//! (`crate::infer`, `--native`), which also executes packed artifacts
+//! directly.
 
 pub mod generate;
 pub mod perplexity;
 pub mod reconstruction;
 
-pub use generate::generate;
-pub use perplexity::{perplexity, PerplexityReport};
+pub use generate::{decode_window, generate, native_generate};
+pub use perplexity::{native_perplexity, perplexity, PerplexityReport};
 pub use reconstruction::{layer_report, recompute_report, LayerReport};

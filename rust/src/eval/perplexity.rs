@@ -8,6 +8,7 @@
 use anyhow::{ensure, Result};
 
 use crate::data::{Batcher, Split};
+use crate::infer::NativeModel;
 use crate::model::Checkpoint;
 use crate::runtime::{HostTensor, Manifest, RuntimeHandle};
 
@@ -59,10 +60,41 @@ pub fn perplexity(handle: &RuntimeHandle, manifest: &Manifest, model: &str,
     })
 }
 
+/// Perplexity of `model` on `split` through the native CPU forward pass —
+/// the runtime-free eval backend (`repro eval --native`). Same protocol as
+/// [`perplexity`]: sequential non-overlapping windows, summed NLL over at
+/// most `max_batches` of them. Works on dense and packed
+/// [`NativeModel`]s alike, and the two produce bit-identical reports
+/// (`rust/tests/native_forward.rs`).
+pub fn native_perplexity(model: &NativeModel, batcher: &Batcher, split: Split,
+                         max_batches: usize) -> Result<PerplexityReport> {
+    let cfg = model.config();
+    ensure!(batcher.batch == cfg.batch && batcher.seq == cfg.seq_len,
+            "batcher geometry mismatch");
+    let n_batches = batcher.eval_batches(split).min(max_batches).max(1);
+    let mut total_nll = 0.0f64;
+    let mut total_tokens = 0usize;
+    for i in 0..n_batches {
+        let batch = batcher.eval_batch(split, i);
+        let (nll, count) = model.nll(&batch.tokens, batch.batch, batch.seq)?;
+        total_nll += nll;
+        total_tokens += count;
+    }
+    let nll = total_nll / (total_tokens.max(1)) as f64;
+    Ok(PerplexityReport {
+        ppl: nll.exp(),
+        nll_per_token: nll,
+        tokens: total_tokens,
+        batches: n_batches,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     // exercised end-to-end in rust/tests/integration_runtime.rs (needs
-    // artifacts); unit coverage here is limited to argument assembly.
+    // artifacts); the native backend's differential coverage lives in
+    // rust/tests/native_forward.rs. Unit coverage here: argument assembly
+    // and the native window protocol.
     use super::*;
     use crate::model::ModelConfig;
 
@@ -76,5 +108,31 @@ mod tests {
         let args = checkpoint_args(&ck).unwrap();
         assert_eq!(args.len(), ck.tensors.len());
         assert_eq!(args[0].shape(), &[16, 8]); // embed first
+    }
+
+    #[test]
+    fn native_perplexity_walks_sequential_windows() {
+        use crate::data::{CorpusConfig, SyntheticCorpus};
+        let cfg = ModelConfig {
+            name: "t".into(), vocab: 256, d_model: 8, n_heads: 2, n_layers: 1,
+            d_ff: 16, seq_len: 16, batch: 2, decode_len: 8, rope_theta: 1e4,
+        };
+        let ck = crate::trainer::init_checkpoint(&cfg, 1);
+        let model = NativeModel::from_checkpoint(&ck).unwrap();
+        let corpus = SyntheticCorpus::generate(CorpusConfig {
+            total_bytes: 32 << 10,
+            ..Default::default()
+        });
+        let batcher = Batcher::new(&corpus, 2, 16);
+        let rep = native_perplexity(&model, &batcher, Split::Val, 3).unwrap();
+        assert_eq!(rep.batches, 3);
+        assert_eq!(rep.tokens, 3 * 2 * 15); // batch × (seq − 1) per window
+        assert!(rep.ppl.is_finite() && rep.ppl > 1.0);
+        // deterministic: a rerun reproduces the same bits
+        let again = native_perplexity(&model, &batcher, Split::Val, 3).unwrap();
+        assert_eq!(rep.ppl.to_bits(), again.ppl.to_bits());
+        // geometry mismatch is an error
+        let bad = Batcher::new(&corpus, 1, 16);
+        assert!(native_perplexity(&model, &bad, Split::Val, 1).is_err());
     }
 }

@@ -1,0 +1,135 @@
+//! Linear-site dispatch — every matmul in the native forward pass routes
+//! through [`LinearOp`], which either runs the dense row-panel GEMM over an
+//! f32 matrix or the packed kernels straight off a [`PackedLinear`]
+//! (streaming dequant for int/palette/dense payloads, survivor-only sparse
+//! GEMM for masks). The packed variants never materialise a dense Θ.
+
+use crate::artifact::PackedLinear;
+use crate::tensor::{ops, Matrix};
+
+/// One linear site's weights, as the forward pass sees them: a borrowed
+/// view that the model's math dispatches on per call.
+#[derive(Debug)]
+pub enum LinearOp<'a> {
+    /// Dense f32 `(d_out, d_in)` — the assembled-checkpoint path.
+    Dense(&'a Matrix),
+    /// Bit-packed site straight from a compressed artifact — executed by
+    /// the packed GEMMs, never decoded to a dense matrix.
+    Packed(&'a PackedLinear),
+}
+
+impl LinearOp<'_> {
+    pub fn d_out(&self) -> usize {
+        match self {
+            LinearOp::Dense(w) => w.rows,
+            LinearOp::Packed(p) => p.rows(),
+        }
+    }
+
+    pub fn d_in(&self) -> usize {
+        match self {
+            LinearOp::Dense(w) => w.cols,
+            LinearOp::Packed(p) => p.cols(),
+        }
+    }
+
+    /// `W · B`, dispatched to the dense row-panel GEMM
+    /// ([`ops::matmul`]), the streaming dequant GEMM
+    /// ([`PackedLinear::matmul`]) or the survivor-only sparse GEMM
+    /// ([`PackedLinear::matmul_sparse`]). All three share the dense
+    /// kernel's blocking and accumulation order, so on bit-identical
+    /// weights every variant produces bit-identical output — the invariant
+    /// `rust/tests/native_forward.rs` pins end-to-end.
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        match self {
+            LinearOp::Dense(w) => ops::matmul(w, b),
+            LinearOp::Packed(p) => match p {
+                // mask sites take the survivor-only kernel: fully pruned
+                // quads cost nothing — the N:M payoff, inside the model
+                PackedLinear::SparseMask { .. } => p.matmul_sparse(b),
+                _ => p.matmul(b),
+            },
+        }
+    }
+
+    /// Activation-side application `X · Wᵀ` for row-major activations
+    /// `x: (tokens, d_in)` → `(tokens, d_out)`, computed as `(W · Xᵀ)ᵀ` so
+    /// both representations run the same `W · B` kernels (and therefore
+    /// stay bit-identical to each other).
+    pub fn apply(&self, x: &Matrix) -> Matrix {
+        let xt = x.transpose();
+        self.matmul(&xt).transpose()
+    }
+}
+
+/// Owned storage behind a [`LinearOp`] — the
+/// [`NativeModel`](super::NativeModel) site table.
+#[derive(Debug)]
+pub enum SiteWeights {
+    Dense(Matrix),
+    Packed(PackedLinear),
+}
+
+impl SiteWeights {
+    pub fn op(&self) -> LinearOp<'_> {
+        match self {
+            SiteWeights::Dense(m) => LinearOp::Dense(m),
+            SiteWeights::Packed(p) => LinearOp::Packed(p),
+        }
+    }
+
+    /// `true` when the site executes through the packed kernels.
+    pub fn is_packed(&self) -> bool {
+        matches!(self, SiteWeights::Packed(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::traits::CompressionSpec;
+    use crate::proj::{NmStructured, ProjScratch, Projection};
+    use crate::quant::project_qmax;
+
+    fn assert_bits_eq(a: &Matrix, b: &Matrix) {
+        assert_eq!(a.shape(), b.shape());
+        for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "entry {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn dense_and_packed_apply_agree_bitwise() {
+        let x = Matrix::randn(9, 64, 7);
+        // quantized site → streaming dequant path
+        let theta = project_qmax(&Matrix::randn(16, 64, 0), 15.0, 32);
+        let packed = PackedLinear::encode(&theta, &CompressionSpec::quant(4, 32));
+        assert_eq!(packed.mode_name(), "int");
+        assert_bits_eq(&LinearOp::Dense(&theta).apply(&x),
+                       &LinearOp::Packed(&packed).apply(&x));
+        // N:M site → survivor-only sparse path
+        let mut nm = Matrix::randn(16, 64, 1);
+        NmStructured::new(2, 4).project_rows(&mut nm, &mut ProjScratch::new());
+        let packed = PackedLinear::encode(&nm, &CompressionSpec::structured_nm(2, 4));
+        assert_eq!(packed.mode_name(), "mask");
+        assert_bits_eq(&LinearOp::Dense(&nm).apply(&x),
+                       &LinearOp::Packed(&packed).apply(&x));
+    }
+
+    #[test]
+    fn apply_shapes_and_dims() {
+        let w = Matrix::randn(5, 12, 2);
+        let op = LinearOp::Dense(&w);
+        assert_eq!((op.d_out(), op.d_in()), (5, 12));
+        let x = Matrix::randn(3, 12, 3);
+        assert_eq!(op.apply(&x).shape(), (3, 5));
+    }
+
+    #[test]
+    fn site_weights_report_packing() {
+        let w = Matrix::randn(4, 32, 5);
+        assert!(!SiteWeights::Dense(w.clone()).is_packed());
+        let p = PackedLinear::encode(&w, &CompressionSpec::prune(0.5));
+        assert!(SiteWeights::Packed(p).is_packed());
+    }
+}

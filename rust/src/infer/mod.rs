@@ -1,0 +1,29 @@
+//! Native packed-inference engine — a pure-CPU transformer forward pass in
+//! which every linear site dispatches through [`LinearOp`]: either a dense
+//! f32 matrix or a bit-packed [`crate::artifact::PackedLinear`] executed by
+//! the streaming-dequant / survivor-only GEMMs of
+//! [`crate::artifact::packed`]. A compressed artifact *serves* here without
+//! ever being assembled back into a dense f32 checkpoint — the packed
+//! representation is the execution format, not just the storage format.
+//!
+//! Two entry points build the same [`NativeModel`]:
+//!
+//! * [`NativeModel::from_checkpoint`] — all sites dense (the reference
+//!   path, `repro eval --native`);
+//! * [`NativeModel::from_artifact`] — all sites packed, zero
+//!   decode-to-dense assemblies (`repro eval --native --from-artifact`).
+//!
+//! Because the two paths differ only in which GEMM variant each site
+//! matmul dispatches to, and those variants share the dense kernel's
+//! accumulation order (`tensor::ops::matmul_row_panel`), packed and dense
+//! logits/perplexity are **bit-identical** — the contract
+//! `rust/tests/native_forward.rs` and the CI native-eval smoke pin.
+//! Parallelism (GEMM row panels, attention `(batch, head)` blocks,
+//! per-position NLL) runs under the `AWP_THREADS` budget via
+//! [`crate::util::parallel`] and is thread-count invariant.
+
+pub mod linear;
+pub mod model;
+
+pub use linear::{LinearOp, SiteWeights};
+pub use model::NativeModel;

@@ -1,0 +1,491 @@
+//! The native CPU transformer forward pass — the Rust mirror of
+//! `python/compile/model.py::forward` (pre-norm blocks, RoPE causal
+//! attention, SiLU MLP, tied embedding head), with every block-linear site
+//! dispatched through [`LinearOp`].
+//!
+//! ### The packed ≡ dense contract
+//!
+//! [`NativeModel::from_checkpoint`] (all sites dense f32) and
+//! [`NativeModel::from_artifact`] (all sites packed) run the *same* code:
+//! the only difference is which [`LinearOp`] variant each site matmul
+//! dispatches to, and those variants are bit-identical to each other on
+//! bit-identical weights (shared row-panel kernel — see
+//! `artifact::packed`). Everything around the site matmuls (norms, RoPE,
+//! attention, softmax, NLL) is computed once per output element in a fixed
+//! sequential order, and the parallel primitives only split *independent*
+//! units (rows, `(batch, head)` blocks), so logits are also deterministic
+//! across thread budgets. Together: packed logits ≡ dense logits ≡ the
+//! same bits at any `AWP_THREADS` (`rust/tests/native_forward.rs`).
+
+use std::collections::HashMap;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::artifact::ModelArtifact;
+use crate::model::{sites, Checkpoint, ModelConfig};
+use crate::tensor::{ops, Matrix};
+use crate::util::parallel::{par_chunks_mut, par_map};
+
+use super::linear::{LinearOp, SiteWeights};
+
+/// Sites per transformer block, in [`sites::enumerate_sites`] order
+/// (wq, wk, wv, wo, w_up, w_down).
+const SITES_PER_BLOCK: usize = 6;
+
+/// A transformer LM ready to run on the CPU: embeddings and norms held
+/// dense (they are never compressed), block-linear sites held as
+/// [`SiteWeights`] — dense f32 or bit-packed.
+#[derive(Debug)]
+pub struct NativeModel {
+    cfg: ModelConfig,
+    embed: Matrix,
+    ln1: Vec<Vec<f32>>,
+    ln2: Vec<Vec<f32>>,
+    ln_f: Vec<f32>,
+    /// `n_layers × 6` sites in [`sites::enumerate_sites`] order
+    site_weights: Vec<SiteWeights>,
+}
+
+impl NativeModel {
+    /// Build a model from non-site tensors of `ck` plus explicit per-site
+    /// weights (`(param name, weights)`, any order). Every compressible
+    /// site of `ck.config` must appear exactly once with matching shape —
+    /// the constructor the dense/packed entry points and the differential
+    /// tests share.
+    pub fn with_site_weights(ck: &Checkpoint,
+                             site_weights: Vec<(String, SiteWeights)>)
+        -> Result<NativeModel> {
+        let cfg = ck.config.clone();
+        ensure!(cfg.n_heads >= 1 && cfg.d_model % cfg.n_heads == 0,
+                "d_model {} not divisible by n_heads {}", cfg.d_model, cfg.n_heads);
+        ensure!((cfg.d_model / cfg.n_heads) % 2 == 0,
+                "RoPE needs an even head_dim, got {}", cfg.d_model / cfg.n_heads);
+        let embed = ck.matrix("embed")?;
+        ensure!(embed.shape() == (cfg.vocab, cfg.d_model),
+                "embed shape {:?} != ({}, {})", embed.shape(), cfg.vocab,
+                cfg.d_model);
+        let mut by_name: HashMap<String, SiteWeights> = HashMap::new();
+        for (name, w) in site_weights {
+            ensure!(by_name.insert(name.clone(), w).is_none(),
+                    "duplicate site weights for {name}");
+        }
+        let mut ordered = Vec::new();
+        for s in sites::enumerate_sites(&cfg) {
+            let w = by_name
+                .remove(&s.param)
+                .with_context(|| format!("native model missing site {}", s.param))?;
+            let (rows, cols) = (w.op().d_out(), w.op().d_in());
+            ensure!((rows, cols) == (s.d_out, s.d_in),
+                    "site {}: weights are {}x{}, expected {}x{}", s.param, rows,
+                    cols, s.d_out, s.d_in);
+            ordered.push(w);
+        }
+        if let Some(extra) = by_name.keys().next() {
+            anyhow::bail!("unexpected site weights for {extra}");
+        }
+        let norm = |name: &str| -> Result<Vec<f32>> {
+            let (shape, data) = ck
+                .get(name)
+                .with_context(|| format!("tensor {name} not in checkpoint"))?;
+            ensure!(shape == [cfg.d_model].as_slice(), "{name} shape {shape:?}");
+            Ok(data.to_vec())
+        };
+        let mut ln1 = Vec::with_capacity(cfg.n_layers);
+        let mut ln2 = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            ln1.push(norm(&format!("blocks.{l}.ln1"))?);
+            ln2.push(norm(&format!("blocks.{l}.ln2"))?);
+        }
+        let ln_f = norm("ln_f")?;
+        Ok(NativeModel { cfg, embed, ln1, ln2, ln_f, site_weights: ordered })
+    }
+
+    /// All-dense native model over an assembled checkpoint — the reference
+    /// side of the differential harness and the `repro eval --native`
+    /// checkpoint path.
+    pub fn from_checkpoint(ck: &Checkpoint) -> Result<NativeModel> {
+        let mut sw = Vec::new();
+        for s in sites::enumerate_sites(&ck.config) {
+            sw.push((s.param.clone(), SiteWeights::Dense(ck.matrix(&s.param)?)));
+        }
+        Self::with_site_weights(ck, sw)
+    }
+
+    /// Packed native model: every block-linear site comes straight from
+    /// the artifact **in packed form** (the `PackedLinear` payload is
+    /// cloned, never decoded — zero f32 weight assembly on this route);
+    /// embeddings and norms come from the base checkpoint, which the
+    /// compression pipeline leaves untouched. Identity (checkpoint/calib
+    /// fingerprints) is the caller's concern, as in the assembled
+    /// `eval --from-artifact` path.
+    pub fn from_artifact(ck: &Checkpoint, art: &ModelArtifact) -> Result<NativeModel> {
+        let mut sw = Vec::new();
+        for s in sites::enumerate_sites(&ck.config) {
+            let site = art
+                .sites
+                .iter()
+                .find(|a| a.param == s.param)
+                .with_context(|| format!("artifact misses site {}", s.param))?;
+            sw.push((s.param.clone(), SiteWeights::Packed(site.packed.clone())));
+        }
+        Self::with_site_weights(ck, sw)
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// Sites executing through the packed kernels.
+    pub fn packed_site_count(&self) -> usize {
+        self.site_weights.iter().filter(|w| w.is_packed()).count()
+    }
+
+    /// Sites materialised as dense f32 matrices. Zero on the
+    /// [`NativeModel::from_artifact`] route — the number the CLI logs as
+    /// "decode-to-dense assemblies" and the CI smoke pins at 0.
+    pub fn dense_site_count(&self) -> usize {
+        self.site_weights.len() - self.packed_site_count()
+    }
+
+    fn site(&self, layer: usize, slot: usize) -> LinearOp<'_> {
+        self.site_weights[layer * SITES_PER_BLOCK + slot].op()
+    }
+
+    /// Full forward pass over a row-major `(batch, seq)` token block;
+    /// returns logits `(batch·seq, vocab)`.
+    pub fn forward(&self, tokens: &[i32], batch: usize, seq: usize)
+        -> Result<Matrix> {
+        let d = self.cfg.d_model;
+        let nh = self.cfg.n_heads;
+        let dh = d / nh;
+        ensure!(batch >= 1 && seq >= 1, "empty forward geometry");
+        ensure!(tokens.len() == batch * seq,
+                "token block {} != {batch}x{seq}", tokens.len());
+        let t = batch * seq;
+        let mut x = Matrix::zeros(t, d);
+        for (i, &tok) in tokens.iter().enumerate() {
+            ensure!(tok >= 0 && (tok as usize) < self.cfg.vocab,
+                    "token {tok} outside vocab {}", self.cfg.vocab);
+            x.row_mut(i).copy_from_slice(self.embed.row(tok as usize));
+        }
+        let (cos, sin) = rope_tables(seq, dh, self.cfg.rope_theta);
+        for l in 0..self.cfg.n_layers {
+            // attention half: pre-norm, q/k/v, RoPE, causal softmax, out
+            let h = rmsnorm(&x, &self.ln1[l]);
+            let mut q = self.site(l, 0).apply(&h);
+            let mut k = self.site(l, 1).apply(&h);
+            let v = self.site(l, 2).apply(&h);
+            rope_rows(&mut q, seq, nh, dh, &cos, &sin);
+            rope_rows(&mut k, seq, nh, dh, &cos, &sin);
+            let o = causal_attention(&q, &k, &v, batch, seq, nh, dh);
+            let o = self.site(l, 3).apply(&o);
+            add_inplace(&mut x, &o);
+            // MLP half: pre-norm, up, SiLU, down
+            let h = rmsnorm(&x, &self.ln2[l]);
+            let mut u = self.site(l, 4).apply(&h);
+            silu_inplace(&mut u);
+            let down = self.site(l, 5).apply(&u);
+            add_inplace(&mut x, &down);
+        }
+        let xf = rmsnorm(&x, &self.ln_f);
+        // tied head: logits = Xf · Eᵀ, as (E · Xfᵀ)ᵀ on the shared kernel
+        Ok(ops::matmul(&self.embed, &xf.transpose()).transpose())
+    }
+
+    /// Summed next-token NLL plus predicted-token count over a `(batch,
+    /// seq)` block — the `eval_loss` program's contract (targets are
+    /// `tokens[:, 1:]`).
+    pub fn nll(&self, tokens: &[i32], batch: usize, seq: usize)
+        -> Result<(f64, usize)> {
+        ensure!(seq >= 2, "nll needs seq >= 2");
+        let logits = self.forward(tokens, batch, seq)?;
+        // one independent unit per predicted position; par_map returns in
+        // index order and each unit is sequential, so the reduction is
+        // deterministic at any thread budget
+        let nlls = par_map(batch * (seq - 1), |p| {
+            let (bi, si) = (p / (seq - 1), p % (seq - 1));
+            let row = logits.row(bi * seq + si);
+            let tgt = tokens[bi * seq + si + 1] as usize;
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0.0f64;
+            for &l in row {
+                denom += ((l - m) as f64).exp();
+            }
+            (m as f64 + denom.ln()) - row[tgt] as f64
+        });
+        Ok((nlls.into_iter().sum(), batch * (seq - 1)))
+    }
+
+    /// Last-position logits of a `(1, len)` context — the decode step
+    /// behind [`crate::eval::native_generate`].
+    pub fn logits_last(&self, ctx: &[i32]) -> Result<Vec<f32>> {
+        ensure!(!ctx.is_empty(), "decode context must be non-empty");
+        let logits = self.forward(ctx, 1, ctx.len())?;
+        Ok(logits.row(ctx.len() - 1).to_vec())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// forward-pass math (free functions so the pieces unit-test in isolation)
+
+/// Row-wise RMSNorm `x · g · rsqrt(mean(x²) + 1e-6)` (the jax `_rmsnorm`).
+fn rmsnorm(x: &Matrix, g: &[f32]) -> Matrix {
+    let d = x.cols;
+    debug_assert_eq!(g.len(), d);
+    let mut out = Matrix::zeros(x.rows, d);
+    let src = &x.data;
+    par_chunks_mut(&mut out.data, d, |i, orow| {
+        let row = &src[i * d..(i + 1) * d];
+        let ms = row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+            / d as f64;
+        let r = (1.0 / (ms + 1e-6).sqrt()) as f32;
+        for j in 0..d {
+            orow[j] = row[j] * g[j] * r;
+        }
+    });
+    out
+}
+
+fn add_inplace(x: &mut Matrix, y: &Matrix) {
+    debug_assert_eq!(x.shape(), y.shape());
+    for (a, b) in x.data.iter_mut().zip(&y.data) {
+        *a += b;
+    }
+}
+
+/// `v ← v · sigmoid(v)` (the jax `jax.nn.silu`).
+fn silu_inplace(u: &mut Matrix) {
+    for v in u.data.iter_mut() {
+        *v /= 1.0 + (-*v).exp();
+    }
+}
+
+/// Per-(position, frequency) rotation tables, `(seq × dh/2)` each.
+fn rope_tables(seq: usize, dh: usize, theta: f64) -> (Vec<f32>, Vec<f32>) {
+    let half = dh / 2;
+    let mut cos = Vec::with_capacity(seq * half);
+    let mut sin = Vec::with_capacity(seq * half);
+    for s in 0..seq {
+        for c in 0..half {
+            let freq = theta.powf(-(c as f64) / half as f64);
+            let ang = (s as f64 * freq) as f32;
+            cos.push(ang.cos());
+            sin.push(ang.sin());
+        }
+    }
+    (cos, sin)
+}
+
+/// Apply RoPE in place over `(batch·seq, nh·dh)` rows (split-half rotation,
+/// matching the jax `_rope`). Row `i`'s position is `i % seq`.
+fn rope_rows(x: &mut Matrix, seq: usize, nh: usize, dh: usize, cos: &[f32],
+             sin: &[f32]) {
+    let half = dh / 2;
+    let d = x.cols;
+    debug_assert_eq!(d, nh * dh);
+    par_chunks_mut(&mut x.data, d, |i, row| {
+        let si = i % seq;
+        let (ct, st) = (&cos[si * half..(si + 1) * half],
+                        &sin[si * half..(si + 1) * half]);
+        for h in 0..nh {
+            let base = h * dh;
+            for c in 0..half {
+                let x1 = row[base + c];
+                let x2 = row[base + half + c];
+                row[base + c] = x1 * ct[c] - x2 * st[c];
+                row[base + half + c] = x1 * st[c] + x2 * ct[c];
+            }
+        }
+    });
+}
+
+/// Causal softmax attention over `(batch·seq, nh·dh)` q/k/v blocks. One
+/// independent unit per `(batch, head)`; within a unit every position is
+/// processed sequentially, so the output is thread-count invariant.
+fn causal_attention(q: &Matrix, k: &Matrix, v: &Matrix, batch: usize,
+                    seq: usize, nh: usize, dh: usize) -> Matrix {
+    let d = nh * dh;
+    let inv = 1.0 / (dh as f32).sqrt();
+    let blocks = par_map(batch * nh, |bh| {
+        let (bi, h) = (bh / nh, bh % nh);
+        let col = h * dh;
+        let mut out = vec![0.0f32; seq * dh];
+        let mut scores = vec![0.0f32; seq];
+        for si in 0..seq {
+            let qrow = &q.row(bi * seq + si)[col..col + dh];
+            for sj in 0..=si {
+                let krow = &k.row(bi * seq + sj)[col..col + dh];
+                let mut dot = 0.0f32;
+                for c in 0..dh {
+                    dot += qrow[c] * krow[c];
+                }
+                scores[sj] = dot * inv;
+            }
+            let m = scores[..=si]
+                .iter()
+                .cloned()
+                .fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0.0f32;
+            for s in scores[..=si].iter_mut() {
+                *s = (*s - m).exp();
+                denom += *s;
+            }
+            let o = &mut out[si * dh..(si + 1) * dh];
+            for sj in 0..=si {
+                let p = scores[sj] / denom;
+                let vrow = &v.row(bi * seq + sj)[col..col + dh];
+                for c in 0..dh {
+                    o[c] += p * vrow[c];
+                }
+            }
+        }
+        out
+    });
+    let mut o = Matrix::zeros(batch * seq, d);
+    for (bh, block) in blocks.iter().enumerate() {
+        let (bi, h) = (bh / nh, bh % nh);
+        for si in 0..seq {
+            o.row_mut(bi * seq + si)[h * dh..(h + 1) * dh]
+                .copy_from_slice(&block[si * dh..(si + 1) * dh]);
+        }
+    }
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trainer::init_checkpoint;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(), vocab: 32, d_model: 16, n_heads: 2, n_layers: 2,
+            d_ff: 24, seq_len: 8, batch: 1, decode_len: 8, rope_theta: 1e4,
+        }
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let ck = init_checkpoint(&cfg(), 3);
+        let m = NativeModel::from_checkpoint(&ck).unwrap();
+        assert_eq!(m.dense_site_count(), 12);
+        assert_eq!(m.packed_site_count(), 0);
+        let tokens: Vec<i32> = (0..16).map(|i| (i * 5 % 32) as i32).collect();
+        let logits = m.forward(&tokens, 2, 8).unwrap();
+        assert_eq!(logits.shape(), (16, 32));
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+        let (nll, count) = m.nll(&tokens, 2, 8).unwrap();
+        assert!(nll.is_finite() && nll > 0.0);
+        assert_eq!(count, 14);
+    }
+
+    #[test]
+    fn forward_is_causal() {
+        // changing a future token must not change earlier positions' logits
+        let ck = init_checkpoint(&cfg(), 4);
+        let m = NativeModel::from_checkpoint(&ck).unwrap();
+        let mut tokens: Vec<i32> = (0..8).map(|i| (i * 3 % 32) as i32).collect();
+        let a = m.forward(&tokens, 1, 8).unwrap();
+        tokens[7] = (tokens[7] + 1) % 32;
+        let b = m.forward(&tokens, 1, 8).unwrap();
+        for i in 0..7 {
+            for (x, y) in a.row(i).iter().zip(b.row(i)) {
+                assert_eq!(x.to_bits(), y.to_bits(), "position {i} leaked");
+            }
+        }
+        assert_ne!(a.row(7), b.row(7), "last position must see its own token");
+    }
+
+    #[test]
+    fn batch_rows_are_independent() {
+        let ck = init_checkpoint(&cfg(), 5);
+        let m = NativeModel::from_checkpoint(&ck).unwrap();
+        let row: Vec<i32> = (0..8).map(|i| (i * 7 % 32) as i32).collect();
+        let single = m.forward(&row, 1, 8).unwrap();
+        let mut two = row.clone();
+        two.extend((0..8).map(|i| (i * 11 % 32) as i32));
+        let both = m.forward(&two, 2, 8).unwrap();
+        for i in 0..8 {
+            for (x, y) in single.row(i).iter().zip(both.row(i)) {
+                assert_eq!(x.to_bits(), y.to_bits(), "batch row 0 diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn logits_last_matches_forward() {
+        let ck = init_checkpoint(&cfg(), 6);
+        let m = NativeModel::from_checkpoint(&ck).unwrap();
+        let ctx: Vec<i32> = (0..6).map(|i| (i % 32) as i32).collect();
+        let last = m.logits_last(&ctx).unwrap();
+        let full = m.forward(&ctx, 1, 6).unwrap();
+        assert_eq!(last, full.row(5));
+    }
+
+    #[test]
+    fn construction_validates_inputs() {
+        let ck = init_checkpoint(&cfg(), 0);
+        // missing site
+        let err = NativeModel::with_site_weights(&ck, Vec::new());
+        assert!(format!("{:#}", err.unwrap_err()).contains("missing site"));
+        // out-of-vocab token
+        let m = NativeModel::from_checkpoint(&ck).unwrap();
+        assert!(m.forward(&[99], 1, 1).is_err());
+        assert!(m.forward(&[-1], 1, 1).is_err());
+        // geometry mismatch
+        assert!(m.forward(&[0, 1, 2], 2, 2).is_err());
+        // odd head_dim rejected
+        let mut bad = cfg();
+        bad.d_model = 6; // 6 / 2 heads = 3, odd
+        let bad_ck = init_checkpoint(&bad, 0);
+        assert!(NativeModel::from_checkpoint(&bad_ck).is_err());
+    }
+
+    #[test]
+    fn rmsnorm_matches_definition() {
+        let x = Matrix::randn(3, 8, 9);
+        let g: Vec<f32> = (0..8).map(|i| 1.0 + 0.1 * i as f32).collect();
+        let out = rmsnorm(&x, &g);
+        for i in 0..3 {
+            let ms: f64 = x.row(i).iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / 8.0;
+            let r = (1.0 / (ms + 1e-6).sqrt()) as f32;
+            for j in 0..8 {
+                assert_eq!(out.at(i, j).to_bits(), (x.at(i, j) * g[j] * r).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn rope_preserves_pair_norms() {
+        // a rotation: each (x1, x2) pair keeps its magnitude (approximately)
+        let mut x = Matrix::randn(4, 16, 11); // seq 4, 2 heads × dh 8
+        let before = x.clone();
+        let (cos, sin) = rope_tables(4, 8, 1e4);
+        rope_rows(&mut x, 4, 2, 8, &cos, &sin);
+        for i in 0..4 {
+            for h in 0..2 {
+                for c in 0..4 {
+                    let (a1, a2) = (before.at(i, h * 8 + c), before.at(i, h * 8 + 4 + c));
+                    let (b1, b2) = (x.at(i, h * 8 + c), x.at(i, h * 8 + 4 + c));
+                    let na = (a1 * a1 + a2 * a2).sqrt();
+                    let nb = (b1 * b1 + b2 * b2).sqrt();
+                    assert!((na - nb).abs() < 1e-4, "{na} vs {nb}");
+                }
+            }
+        }
+        // position 0 is the identity rotation
+        assert_eq!(x.row(0), before.row(0));
+    }
+
+    #[test]
+    fn attention_rows_sum_to_convex_combination() {
+        // with v = all-ones, any softmax-weighted average is exactly ~1
+        let q = Matrix::randn(6, 8, 12);
+        let k = Matrix::randn(6, 8, 13);
+        let v = Matrix::from_fn(6, 8, |_, _| 1.0);
+        let o = causal_attention(&q, &k, &v, 1, 6, 2, 4);
+        for val in &o.data {
+            assert!((val - 1.0).abs() < 1e-5, "{val}");
+        }
+    }
+}

@@ -101,6 +101,26 @@
 //! reproduces the dense path's quality numbers from the packed file alone
 //! (`repro inspect` prints the per-site footprint). See ARTIFACTS.md.
 //!
+//! ## Native inference
+//!
+//! [`infer`] is the native CPU transformer forward pass (embedding,
+//! pre-norm RoPE attention + SiLU MLP blocks, tied head — mirroring
+//! `python/compile/model.py::forward`) in which every linear site
+//! dispatches through [`infer::LinearOp`]: `Dense(&Matrix)` runs the
+//! blocked row-panel GEMM, `Packed(&PackedLinear)` runs the streaming
+//! dequant / survivor-only kernels straight off the packed bytes. A
+//! compressed artifact therefore *executes* without ever being assembled
+//! back into a dense f32 checkpoint, and because every GEMM variant
+//! shares the dense kernel's accumulation order, the packed and dense
+//! forward passes are **bit-identical** — logits, NLL, perplexity and
+//! greedy generation (`rust/tests/native_forward.rs`, plus
+//! `prop_native_packed_forward_matches_dense`). CLI: `repro eval
+//! --native` (runtime-free perplexity), `repro eval --native
+//! --from-artifact <file.apack>` (packed serving, zero decode-to-dense
+//! assemblies), `repro generate --native`. All forward-pass parallelism
+//! (GEMM panels, attention `(batch, head)` blocks, per-position NLL) runs
+//! under the `AWP_THREADS` budget and is thread-count invariant.
+//!
 //! ## Quick tour
 //!
 //! ```no_run
@@ -138,6 +158,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod infer;
 pub mod linalg;
 pub mod model;
 pub mod proj;

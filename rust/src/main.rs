@@ -2,12 +2,16 @@
 //!
 //! ```text
 //! repro train   --model small [--steps N]
-//! repro eval    --model small [--checkpoint path]
+//! repro eval    --model small [--checkpoint path] [--native]
+//!               # --native: perplexity through the native CPU forward pass
+//!               # (rust/src/infer) — no AOT runtime needed; with
+//!               # --from-artifact the block-linear sites execute straight
+//!               # off the packed bytes (zero decode-to-dense assemblies)
 //! repro compress --model small --method awp --mode prune --ratio 0.5 [--bits 4]
 //!               # --mode also takes nm:N:M (semi-structured sparsity, e.g.
 //!               # nm:2:4, nm:4:8) and jointnm:N:M (N:M ∩ INT grid from
 //!               # --bits/--group); N:M runs on the CPU backend (awp-cpu)
-//! repro generate --model small --prompt "..." [--tokens N]
+//! repro generate --model small --prompt "..." [--tokens N] [--native]
 //! repro experiment table1|table2|table3|table4|table5|fig1|all [--awp-backend cpu|hlo]
 //! repro e2e     # end-to-end driver: train → eval → compress → eval
 //! repro info    # artifacts / manifest summary
@@ -48,7 +52,8 @@ use awp::coordinator::{
     GramCache, Method,
 };
 use awp::data::Split;
-use awp::eval::{generate, perplexity, recompute_report};
+use awp::eval::{generate, native_generate, perplexity, recompute_report};
+use awp::infer::NativeModel;
 use awp::model::Checkpoint;
 use awp::runtime::{Manifest, Runtime};
 use awp::trainer;
@@ -238,6 +243,7 @@ fn main() -> Result<()> {
                      curve.last().map(|(_, l)| *l).unwrap_or(f64::NAN));
         }
         "eval" => {
+            let native = args.get("native").is_some();
             if let Some(apath) = args.get("from-artifact") {
                 // quality numbers from the packed file alone: decode the
                 // artifact's sites (bit-identical to the pipeline output)
@@ -251,6 +257,21 @@ fn main() -> Result<()> {
                            checkpoint {:016x}/calib {:016x}, current run is \
                            {:016x}/{:016x}", art.checkpoint, art.calib,
                           gk.checkpoint, gk.calib);
+                }
+                if native {
+                    // packed serving: block-linear sites execute straight
+                    // off the packed bytes through the native forward pass
+                    // — no AOT runtime, no decode-to-dense assembly
+                    let nm = NativeModel::from_artifact(&ck, &art)?;
+                    eprintln!("[native] {} sites packed, {} decode-to-dense \
+                               assemblies", nm.packed_site_count(),
+                              nm.dense_site_count());
+                    let rep = ctx.native_ppl(&model, &nm)?;
+                    println!("ppl = {:.4}  (nll/token {:.4}, {} tokens, \
+                              {} windows) [native, from artifact]",
+                             rep.ppl, rep.nll_per_token, rep.tokens,
+                             rep.batches);
+                    return Ok(());
                 }
                 if ctx.synthetic() {
                     // no runtime ⇒ no perplexity; recompute the per-site
@@ -312,6 +333,16 @@ fn main() -> Result<()> {
                 Some(p) => Arc::new(Checkpoint::load(p)?),
                 None => ctx.checkpoint(&model)?,
             };
+            if native {
+                let nm = NativeModel::from_checkpoint(&ck)?;
+                eprintln!("[native] {} sites dense f32",
+                          nm.dense_site_count());
+                let rep = ctx.native_ppl(&model, &nm)?;
+                println!("ppl = {:.4}  (nll/token {:.4}, {} tokens, \
+                          {} windows) [native]",
+                         rep.ppl, rep.nll_per_token, rep.tokens, rep.batches);
+                return Ok(());
+            }
             let batcher = ctx.batcher(&model)?;
             let rep = perplexity(&runtime.handle(), &manifest, &model, &ck,
                                  &batcher, Split::Val, cfg.eval_batches)?;
@@ -407,7 +438,11 @@ fn main() -> Result<()> {
                 Some(p) => Arc::new(Checkpoint::load(p)?),
                 None => ctx.checkpoint(&model)?,
             };
-            let text = generate(&runtime.handle(), &manifest, &model, &ck, &prompt, n)?;
+            let text = if args.get("native").is_some() {
+                native_generate(&NativeModel::from_checkpoint(&ck)?, &prompt, n)?
+            } else {
+                generate(&runtime.handle(), &manifest, &model, &ck, &prompt, n)?
+            };
             println!("{text}");
         }
         "experiment" => {

@@ -6,50 +6,21 @@
 //! jobs while assembling a bit-identical checkpoint (modeled on the Gram
 //! cache's warm-skip tests).
 
+mod common;
+
 use std::sync::Arc;
 
 use anyhow::Result;
-use awp::artifact::{
-    read_artifact, store_artifact, ArtifactKey, ArtifactStore, PackedLinear,
-};
+use awp::artifact::{read_artifact, store_artifact, ArtifactStore, PackedLinear};
 use awp::compress::magnitude::MagnitudePrune;
 use awp::compress::traits::{CompressedLayer, CompressionSpec, LayerCompressor};
-use awp::coordinator::cache::GramCacheKey;
 use awp::coordinator::calibrate::synthetic_grams;
 use awp::coordinator::{compress_model_cached, compress_model_with, Executor};
-use awp::model::{Checkpoint, ModelConfig};
 use awp::proj::ProjScratch;
 use awp::tensor::Matrix;
-use awp::util::tempdir::TempDir;
 
-fn cfg() -> ModelConfig {
-    ModelConfig {
-        name: "t".into(), vocab: 64, d_model: 32, n_heads: 2, n_layers: 2,
-        d_ff: 64, seq_len: 16, batch: 1, decode_len: 8, rope_theta: 1e4,
-    }
-}
-
-fn key_for(ck: &Checkpoint, method: &str, spec: &CompressionSpec) -> ArtifactKey {
-    ArtifactKey::new(
-        GramCacheKey {
-            model: ck.config.name.clone(),
-            checkpoint: ck.fingerprint(),
-            calib: 42,
-        },
-        method,
-        spec,
-    )
-}
-
-fn assert_ck_bits_equal(a: &Checkpoint, b: &Checkpoint) {
-    assert_eq!(a.tensors.len(), b.tensors.len());
-    for ((n1, s1, d1), (n2, s2, d2)) in a.tensors.iter().zip(&b.tensors) {
-        assert_eq!((n1, s1), (n2, s2));
-        for (x, y) in d1.iter().zip(d2) {
-            assert_eq!(x.to_bits(), y.to_bits(), "{n1}");
-        }
-    }
-}
+use common::{artifact_key_for as key_for, assert_ck_bits_equal, temp_cache_dir,
+             tiny_cfg, tiny_checkpoint};
 
 /// Every spec family round-trips bit-exactly through encode/decode when
 /// applied to its own projection's output — the codec's core law, swept
@@ -96,14 +67,13 @@ fn pack_is_lossless_even_off_constraint() {
 
 #[test]
 fn artifact_file_round_trip_preserves_sites_and_reports() {
-    let tiny = cfg();
-    let ck = awp::trainer::init_checkpoint(&tiny, 1);
-    let grams = synthetic_grams(&tiny, 5);
+    let ck = tiny_checkpoint(1);
+    let grams = synthetic_grams(&tiny_cfg(), 5);
     let spec = CompressionSpec::prune(0.5);
     let out = compress_model_with(&ck, &grams, &MagnitudePrune, &spec, true,
                                   &Executor::sequential())
         .unwrap();
-    let dir = TempDir::new("apack").unwrap();
+    let dir = temp_cache_dir("apack");
     let store = ArtifactStore::new(Some(dir.path().to_path_buf()));
     let key = key_for(&ck, "magnitude", &spec);
     // build + persist through the cached pipeline, then read the file raw
@@ -140,10 +110,9 @@ fn warm_rerun_submits_zero_compression_jobs() {
         }
     }
 
-    let tiny = cfg();
-    let ck = awp::trainer::init_checkpoint(&tiny, 1);
-    let grams = synthetic_grams(&tiny, 5);
-    let dir = TempDir::new("apack").unwrap();
+    let ck = tiny_checkpoint(1);
+    let grams = synthetic_grams(&tiny_cfg(), 5);
+    let dir = temp_cache_dir("apack");
 
     for spec in [
         CompressionSpec::prune(0.5),
@@ -179,11 +148,10 @@ fn warm_rerun_submits_zero_compression_jobs() {
 
 #[test]
 fn key_changes_invalidate_the_artifact() {
-    let tiny = cfg();
-    let ck = awp::trainer::init_checkpoint(&tiny, 1);
-    let grams = synthetic_grams(&tiny, 5);
+    let ck = tiny_checkpoint(1);
+    let grams = synthetic_grams(&tiny_cfg(), 5);
     let spec = CompressionSpec::prune(0.5);
-    let dir = TempDir::new("apack").unwrap();
+    let dir = temp_cache_dir("apack");
     let store = ArtifactStore::new(Some(dir.path().to_path_buf()));
     let key = key_for(&ck, "magnitude", &spec);
     compress_model_cached(&ck, &grams, &MagnitudePrune, &spec, true,
@@ -196,7 +164,7 @@ fn key_changes_invalidate_the_artifact() {
     assert!(store.load(&k2).is_none());
     let k3 = key_for(&ck, "wanda", &spec);
     assert!(store.load(&k3).is_none());
-    let ck2 = awp::trainer::init_checkpoint(&tiny, 2);
+    let ck2 = tiny_checkpoint(2);
     let k4 = key_for(&ck2, "magnitude", &spec);
     assert!(store.load(&k4).is_none());
     // the original still hits
@@ -205,11 +173,10 @@ fn key_changes_invalidate_the_artifact() {
 
 #[test]
 fn corrupt_artifact_degrades_to_recompute_and_heals() {
-    let tiny = cfg();
-    let ck = awp::trainer::init_checkpoint(&tiny, 1);
-    let grams = synthetic_grams(&tiny, 5);
+    let ck = tiny_checkpoint(1);
+    let grams = synthetic_grams(&tiny_cfg(), 5);
     let spec = CompressionSpec::prune(0.5);
-    let dir = TempDir::new("apack").unwrap();
+    let dir = temp_cache_dir("apack");
     let store = ArtifactStore::new(Some(dir.path().to_path_buf()));
     let key = key_for(&ck, "magnitude", &spec);
     let cold = compress_model_cached(&ck, &grams, &MagnitudePrune, &spec, true,
@@ -235,7 +202,7 @@ fn corrupt_artifact_degrades_to_recompute_and_heals() {
 
 #[test]
 fn truncated_and_garbage_files_error_cleanly() {
-    let dir = TempDir::new("apack").unwrap();
+    let dir = temp_cache_dir("apack");
     let path = dir.path().join("x.apack");
     std::fs::write(&path, b"not an artifact").unwrap();
     assert!(read_artifact(&path).is_err());
@@ -256,7 +223,7 @@ fn experiment_cells_are_incremental_over_the_store() {
     let manifest = Arc::new(Manifest::synthetic());
     let mut ctx = ExperimentCtx::new(runtime.handle(), manifest, RunConfig::default());
     ctx.set_synthetic(true);
-    let dir = TempDir::new("apack").unwrap();
+    let dir = temp_cache_dir("apack");
     ctx.set_artifact_store(Arc::new(ArtifactStore::new(
         Some(dir.path().to_path_buf()),
     )));
@@ -279,11 +246,10 @@ fn experiment_cells_are_incremental_over_the_store() {
 
 #[test]
 fn store_and_load_validate_identity() {
-    let tiny = cfg();
-    let ck = awp::trainer::init_checkpoint(&tiny, 1);
-    let grams = synthetic_grams(&tiny, 5);
+    let ck = tiny_checkpoint(1);
+    let grams = synthetic_grams(&tiny_cfg(), 5);
     let spec = CompressionSpec::prune(0.5);
-    let dir = TempDir::new("apack").unwrap();
+    let dir = temp_cache_dir("apack");
     let store = ArtifactStore::new(Some(dir.path().to_path_buf()));
     let key = key_for(&ck, "magnitude", &spec);
     let cached = compress_model_cached(&ck, &grams, &MagnitudePrune, &spec, true,

@@ -1,0 +1,121 @@
+//! Shared scaffolding for the integration suites — the tiny synthetic
+//! model/checkpoint builders, cache/artifact key builders, temp cache-dir
+//! helper and bitwise assertion helpers that were previously copy-pasted
+//! across `artifact_store.rs`, `packed_exec.rs`, `gram_cache.rs` and
+//! `cross_model_sweep.rs` (and that `native_forward.rs` now reuses).
+//!
+//! Each integration test is its own crate, so not every binary uses every
+//! helper — hence the module-wide `dead_code` allowance.
+#![allow(dead_code)]
+
+use awp::artifact::ArtifactKey;
+use awp::compress::traits::CompressionSpec;
+use awp::config::RunConfig;
+use awp::coordinator::cache::{CalibSpec, GramCacheKey};
+use awp::coordinator::calibrate::Grams;
+use awp::coordinator::{Method, TableSpec};
+use awp::model::{Checkpoint, ModelConfig};
+use awp::tensor::Matrix;
+use awp::util::tempdir::TempDir;
+
+/// The suites' standard tiny model: 2 blocks, 32-wide, vocab 64.
+pub fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        name: "t".into(),
+        vocab: 64,
+        d_model: 32,
+        n_heads: 2,
+        n_layers: 2,
+        d_ff: 64,
+        seq_len: 16,
+        batch: 1,
+        decode_len: 8,
+        rope_theta: 1e4,
+    }
+}
+
+/// [`tiny_cfg`] with the full byte vocabulary and a 2-row batch — what the
+/// native-forward suites use so corpus tokens (bytes) stay in range.
+pub fn lm_cfg() -> ModelConfig {
+    ModelConfig { name: "lm".into(), vocab: 256, batch: 2, ..tiny_cfg() }
+}
+
+/// Deterministic untrained checkpoint over [`tiny_cfg`].
+pub fn tiny_checkpoint(seed: u64) -> Checkpoint {
+    awp::trainer::init_checkpoint(&tiny_cfg(), seed)
+}
+
+/// Unique temp cache/store directory (auto-removed on drop).
+pub fn temp_cache_dir(tag: &str) -> TempDir {
+    TempDir::new(tag).unwrap()
+}
+
+/// Gram-cache key for `ck` under the default run config.
+pub fn gram_key_for(ck: &Checkpoint, provider: &str) -> GramCacheKey {
+    let rc = RunConfig::default();
+    GramCacheKey {
+        model: ck.config.name.clone(),
+        checkpoint: ck.fingerprint(),
+        calib: CalibSpec::from_run(&rc, &ck.config, provider).fingerprint(),
+    }
+}
+
+/// Artifact key for `(ck, method, spec)` with a fixed calib fingerprint.
+pub fn artifact_key_for(ck: &Checkpoint, method: &str, spec: &CompressionSpec)
+    -> ArtifactKey {
+    ArtifactKey::new(
+        GramCacheKey {
+            model: ck.config.name.clone(),
+            checkpoint: ck.fingerprint(),
+            calib: 42,
+        },
+        method,
+        spec,
+    )
+}
+
+/// Two-cell magnitude-prune table over `model` (sweep-scheduling suites).
+pub fn prune_table(name: &str, model: &str) -> TableSpec {
+    TableSpec {
+        name: name.into(),
+        model: model.into(),
+        col_header: "method".into(),
+        columns: vec!["50%".into(), "70%".into()],
+        methods: vec![Method::Magnitude],
+        specs: vec![CompressionSpec::prune(0.5), CompressionSpec::prune(0.7)],
+        title_prefix: format!("{name} title"),
+        title_extra: String::new(),
+    }
+}
+
+/// Bitwise matrix equality with an entry-indexed failure message.
+pub fn assert_bits_eq(a: &Matrix, b: &Matrix, what: &str) {
+    assert_eq!(a.shape(), b.shape(), "{what}");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what} entry {i}: {x} vs {y}");
+    }
+}
+
+/// Bitwise checkpoint equality across names, shapes and tensor bits.
+pub fn assert_ck_bits_equal(a: &Checkpoint, b: &Checkpoint) {
+    assert_eq!(a.tensors.len(), b.tensors.len());
+    for ((n1, s1, d1), (n2, s2, d2)) in a.tensors.iter().zip(&b.tensors) {
+        assert_eq!((n1, s1), (n2, s2));
+        for (x, y) in d1.iter().zip(d2) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{n1}");
+        }
+    }
+}
+
+/// Bitwise Gram-set equality (token counts, keys, every Gram entry).
+pub fn assert_grams_bit_equal(a: &Grams, b: &Grams) {
+    assert_eq!(a.tokens, b.tokens);
+    assert_eq!(a.map.len(), b.map.len());
+    for (k, m) in &a.map {
+        let n = b.map.get(k).unwrap_or_else(|| panic!("missing {k:?}"));
+        assert_eq!(m.shape(), n.shape(), "{k:?}");
+        for (i, (x, y)) in m.data.iter().zip(&n.data).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{k:?}[{i}]");
+        }
+    }
+}

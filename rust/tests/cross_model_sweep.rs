@@ -4,25 +4,15 @@
 //! model exactly once, and attribute failures to the lowest-index failing
 //! cell (or the failing model's preparation job).
 
+mod common;
+
 use std::collections::HashMap;
 use std::sync::Mutex;
 
-use awp::compress::traits::CompressionSpec;
-use awp::coordinator::{run_tables, sweep_cells, CellRef, Executor, Method, TableSpec};
+use awp::coordinator::{run_tables, sweep_cells, CellRef, Executor};
 use awp::report::Table;
 
-fn table(name: &str, model: &str) -> TableSpec {
-    TableSpec {
-        name: name.into(),
-        model: model.into(),
-        col_header: "method".into(),
-        columns: vec!["50%".into(), "70%".into()],
-        methods: vec![Method::Magnitude],
-        specs: vec![CompressionSpec::prune(0.5), CompressionSpec::prune(0.7)],
-        title_prefix: format!("{name} title"),
-        title_extra: String::new(),
-    }
-}
+use common::prune_table as table;
 
 /// Deterministic synthetic "perplexity" for a cell.
 fn fake_ppl(c: &CellRef) -> f64 {

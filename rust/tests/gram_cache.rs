@@ -7,6 +7,8 @@
 
 #![allow(clippy::field_reassign_with_default)]
 
+mod common;
+
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -18,41 +20,13 @@ use awp::coordinator::{
     cache, compress_model, CalibSpec, Executor, GramCache, GramCacheKey,
 };
 use awp::config::RunConfig;
-use awp::model::{Checkpoint, ModelConfig};
-use awp::util::tempdir::TempDir;
 
-fn cfg() -> ModelConfig {
-    ModelConfig {
-        name: "t".into(), vocab: 64, d_model: 32, n_heads: 2, n_layers: 2,
-        d_ff: 64, seq_len: 16, batch: 1, decode_len: 8, rope_theta: 1e4,
-    }
-}
-
-fn key_for(ck: &Checkpoint, provider: &str) -> GramCacheKey {
-    let rc = RunConfig::default();
-    GramCacheKey {
-        model: ck.config.name.clone(),
-        checkpoint: ck.fingerprint(),
-        calib: CalibSpec::from_run(&rc, &ck.config, provider).fingerprint(),
-    }
-}
-
-fn assert_grams_bit_equal(a: &Grams, b: &Grams) {
-    assert_eq!(a.tokens, b.tokens);
-    assert_eq!(a.map.len(), b.map.len());
-    for (k, m) in &a.map {
-        let n = b.map.get(k).unwrap_or_else(|| panic!("missing {k:?}"));
-        assert_eq!(m.shape(), n.shape(), "{k:?}");
-        for (i, (x, y)) in m.data.iter().zip(&n.data).enumerate() {
-            assert_eq!(x.to_bits(), y.to_bits(), "{k:?}[{i}]");
-        }
-    }
-}
-
+use common::{assert_grams_bit_equal, gram_key_for as key_for, temp_cache_dir,
+             tiny_cfg as cfg, tiny_checkpoint};
 #[test]
 fn disk_round_trip_is_bit_exact() {
-    let dir = TempDir::new("gc").unwrap();
-    let ck = awp::trainer::init_checkpoint(&cfg(), 1);
+    let dir = temp_cache_dir("gc");
+    let ck = tiny_checkpoint(1);
     let grams = synthetic_grams(&cfg(), 5);
     let key = key_for(&ck, "synthetic");
     cache::store_grams(dir.path(), &key, &grams).unwrap();
@@ -62,14 +36,14 @@ fn disk_round_trip_is_bit_exact() {
 
 #[test]
 fn key_invalidates_on_checkpoint_and_calib_changes() {
-    let dir = TempDir::new("gc").unwrap();
-    let ck = awp::trainer::init_checkpoint(&cfg(), 1);
+    let dir = temp_cache_dir("gc");
+    let ck = tiny_checkpoint(1);
     let grams = synthetic_grams(&cfg(), 5);
     let key = key_for(&ck, "synthetic");
     cache::store_grams(dir.path(), &key, &grams).unwrap();
 
     // a retrained checkpoint (different weights) misses
-    let ck2 = awp::trainer::init_checkpoint(&cfg(), 2);
+    let ck2 = tiny_checkpoint(2);
     assert_ne!(ck.fingerprint(), ck2.fingerprint());
     let key2 = key_for(&ck2, "synthetic");
     assert_ne!(key.hash(), key2.hash());
@@ -92,8 +66,8 @@ fn key_invalidates_on_checkpoint_and_calib_changes() {
 
 #[test]
 fn corrupt_files_degrade_to_recompute() {
-    let dir = TempDir::new("gc").unwrap();
-    let ck = awp::trainer::init_checkpoint(&cfg(), 1);
+    let dir = temp_cache_dir("gc");
+    let ck = tiny_checkpoint(1);
     let key = key_for(&ck, "synthetic");
     std::fs::create_dir_all(dir.path()).unwrap();
     std::fs::write(dir.path().join(key.file_name()), b"not a cache file").unwrap();
@@ -121,8 +95,8 @@ fn warm_cache_skips_the_calibration_provider_entirely() {
     // stands in for "a warm-cache run submits zero calib_capture
     // executions": the provider closure IS the calibration path, and on a
     // warm cache it must never run.
-    let dir = TempDir::new("gc").unwrap();
-    let ck = awp::trainer::init_checkpoint(&cfg(), 1);
+    let dir = temp_cache_dir("gc");
+    let ck = tiny_checkpoint(1);
     let key = key_for(&ck, "synthetic");
     let cold = GramCache::new(Some(dir.path().to_path_buf()));
     cold.get_or_compute(&key, || Ok(synthetic_grams(&cfg(), 5))).unwrap();
@@ -139,8 +113,8 @@ fn warm_cache_skips_the_calibration_provider_entirely() {
 
 #[test]
 fn compress_is_bit_identical_cold_vs_warm() {
-    let dir = TempDir::new("gc").unwrap();
-    let ck = awp::trainer::init_checkpoint(&cfg(), 1);
+    let dir = temp_cache_dir("gc");
+    let ck = tiny_checkpoint(1);
     let key = key_for(&ck, "synthetic");
     let spec = CompressionSpec::prune(0.5);
 
@@ -182,7 +156,7 @@ fn compress_is_bit_identical_cold_vs_warm() {
 #[test]
 fn concurrent_callers_share_one_computation() {
     let gc = Arc::new(GramCache::memory_only());
-    let ck = awp::trainer::init_checkpoint(&cfg(), 1);
+    let ck = tiny_checkpoint(1);
     let key = key_for(&ck, "synthetic");
     let calls = Arc::new(AtomicUsize::new(0));
     let mut grams: Vec<Arc<Grams>> = Vec::new();
@@ -238,7 +212,7 @@ fn warm_cache_submits_zero_calib_capture_executions_to_the_runtime() {
 
     // warm cache: the same calibration request is served from disk and the
     // actor sees no new calib_capture submission
-    let dir = TempDir::new("gc").unwrap();
+    let dir = temp_cache_dir("gc");
     let key = GramCacheKey {
         model: "tiny".into(),
         checkpoint: ck.fingerprint(),

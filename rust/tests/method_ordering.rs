@@ -6,6 +6,8 @@
 //! perplexity) is `repro experiment …`; this suite pins the orderings that
 //! must hold for those tables to come out right.
 
+mod common;
+
 use std::collections::HashMap;
 
 use awp::compress::awp::AwpHyper;
@@ -13,15 +15,10 @@ use awp::compress::traits::CompressionSpec;
 use awp::coordinator::calibrate::Grams;
 use awp::coordinator::{compress_model, make_compressor, Method};
 use awp::eval::reconstruction::summarize;
-use awp::model::{GramKey, ModelConfig};
+use awp::model::GramKey;
 use awp::tensor::Matrix;
 
-fn cfg() -> ModelConfig {
-    ModelConfig {
-        name: "t".into(), vocab: 64, d_model: 32, n_heads: 2, n_layers: 2,
-        d_ff: 64, seq_len: 16, batch: 1, decode_len: 8, rope_theta: 1e4,
-    }
-}
+use common::tiny_cfg as cfg;
 
 fn setup() -> (awp::model::Checkpoint, Grams) {
     let cfg = cfg();

@@ -5,6 +5,8 @@
 //! the pipeline's recorded numbers bit-for-bit — across every compressor
 //! family the artifact store serves.
 
+mod common;
+
 use awp::artifact::PackedLinear;
 use awp::compress::magnitude::MagnitudePrune;
 use awp::compress::rtn::RtnQuant;
@@ -14,12 +16,7 @@ use awp::eval::recompute_report;
 use awp::proj::{NmStructured, ProjScratch, Projection};
 use awp::tensor::{ops, Matrix};
 
-fn assert_bits_eq(a: &Matrix, b: &Matrix, what: &str) {
-    assert_eq!(a.shape(), b.shape(), "{what}");
-    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
-        assert_eq!(x.to_bits(), y.to_bits(), "{what} entry {i}: {x} vs {y}");
-    }
-}
+use common::assert_bits_eq;
 
 #[test]
 fn streaming_gemm_is_bit_identical_across_shapes_and_modes() {

@@ -8,6 +8,8 @@
 //! its own binary, `awp_threads_env.rs`, because mutating the environment
 //! is only safe in a process whose other threads don't read it.)
 
+mod common;
+
 use std::collections::HashMap;
 
 use anyhow::Result;
@@ -15,17 +17,12 @@ use awp::compress::traits::{CompressedLayer, CompressionSpec, LayerCompressor};
 use awp::compress::AwpCpu;
 use awp::coordinator::calibrate::Grams;
 use awp::coordinator::{compress_model_with, plan_jobs, Executor};
-use awp::model::{Checkpoint, GramKey, ModelConfig};
+use awp::model::{Checkpoint, GramKey};
 use awp::tensor::Matrix;
 
-fn cfg() -> ModelConfig {
-    // d_model/d_ff are multiples of the quant group (32) so the joint-spec
-    // verify pass can re-project every site
-    ModelConfig {
-        name: "t".into(), vocab: 64, d_model: 32, n_heads: 2, n_layers: 2,
-        d_ff: 64, seq_len: 16, batch: 1, decode_len: 8, rope_theta: 1e4,
-    }
-}
+// d_model/d_ff of the shared tiny config are multiples of the quant group
+// (32), so the joint-spec verify pass can re-project every site
+use common::tiny_cfg as cfg;
 
 fn setup() -> (Checkpoint, Grams) {
     let cfg = cfg();

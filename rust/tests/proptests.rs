@@ -211,6 +211,83 @@ fn prop_packed_linear_roundtrip_random_sites() {
 }
 
 #[test]
+fn prop_native_packed_forward_matches_dense() {
+    // the native-inference differential law over random architectures:
+    // whatever the projection produced and however the codec packed it,
+    // the packed forward pass is bit-identical to the dense one. Shapes
+    // sweep group tails (group clamped to narrow sites) and quad tails
+    // (d_ff not a multiple of 4, so N:M groups and the sparse GEMM's
+    // 4-quads end in a remainder).
+    use awp::artifact::PackedLinear;
+    use awp::infer::{NativeModel, SiteWeights};
+    use awp::model::sites::enumerate_sites;
+    use awp::proj::ProjScratch;
+
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(seed);
+        let quanty = rng.below(2) == 0;
+        // RoPE needs an even head_dim (2 heads ⇒ d_model % 4 == 0); the
+        // INT grid additionally needs widths the group divides
+        let d_model = if quanty { 32 } else { 4 * (2 + rng.below(10)) };
+        let d_ff = if quanty { 32 * (1 + rng.below(2)) } else { 9 + rng.below(70) };
+        let cfg = ModelConfig {
+            name: format!("n{seed}"),
+            vocab: 64,
+            d_model,
+            n_heads: 2,
+            n_layers: 1 + rng.below(2),
+            d_ff,
+            seq_len: 8,
+            batch: 1,
+            decode_len: 8,
+            rope_theta: 1e4,
+        };
+        let spec = if quanty {
+            let bits = [2u8, 3, 4][rng.below(3)];
+            let group = [16usize, 32, 64][rng.below(3)]; // 64 clamps: tail
+            if rng.below(2) == 0 {
+                CompressionSpec::quant(bits, group)
+            } else {
+                CompressionSpec::joint(0.5, bits, group)
+            }
+        } else {
+            match rng.below(3) {
+                0 => CompressionSpec::prune(0.5),
+                1 => CompressionSpec::structured_nm(2, 4),
+                _ => CompressionSpec::structured_nm(4, 8),
+            }
+        };
+        let ck = awp::trainer::init_checkpoint(&cfg, seed + 40);
+        let mut dense_sites = Vec::new();
+        let mut packed_sites = Vec::new();
+        for s in enumerate_sites(&cfg) {
+            let mut theta = ck.matrix(&s.param).unwrap();
+            spec.projection(theta.cols)
+                .project_rows(&mut theta, &mut ProjScratch::new());
+            let packed = PackedLinear::encode(&theta, &spec);
+            assert!(packed.reconstructs(&theta), "seed={seed} {}", s.param);
+            packed_sites.push((s.param.clone(), SiteWeights::Packed(packed)));
+            dense_sites.push((s.param, SiteWeights::Dense(theta)));
+        }
+        let dense = NativeModel::with_site_weights(&ck, dense_sites).unwrap();
+        let packed = NativeModel::with_site_weights(&ck, packed_sites).unwrap();
+        assert_eq!(packed.dense_site_count(), 0);
+        let tokens: Vec<i32> =
+            (0..2 * 8).map(|_| rng.below(cfg.vocab) as i32).collect();
+        let a = dense.forward(&tokens, 2, 8).unwrap();
+        let b = packed.forward(&tokens, 2, 8).unwrap();
+        assert_eq!(a.shape(), b.shape(), "seed={seed}");
+        for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(),
+                       "seed={seed} spec={spec:?} logit {i}: {x} vs {y}");
+        }
+        let (na, _) = dense.nll(&tokens, 2, 8).unwrap();
+        let (nb, _) = packed.nll(&tokens, 2, 8).unwrap();
+        assert_eq!(na.to_bits(), nb.to_bits(), "seed={seed} nll");
+    }
+}
+
+#[test]
 fn prop_json_fuzz_roundtrip() {
     fn random_json(rng: &mut Rng, depth: usize) -> Json {
         match if depth == 0 { rng.below(4) } else { rng.below(6) } {
