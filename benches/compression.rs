@@ -263,7 +263,7 @@ fn main() {
                 spec.projection(theta.cols)
                     .project_rows(&mut theta, &mut ProjScratch::new());
                 let packed = PackedLinear::encode(&theta, &spec);
-                packed_sites.push((s.param.clone(), SiteWeights::Packed(packed)));
+                packed_sites.push((s.param.clone(), SiteWeights::packed(packed)));
                 dense_sites.push((s.param, SiteWeights::Dense(theta)));
             }
             let dense = NativeModel::with_site_weights(&ck, dense_sites).unwrap();

@@ -1,0 +1,107 @@
+//! Kernel-tier GEMM benchmarks — the perf trajectory behind BENCH_6.json,
+//! with a criterion-style baseline workflow (the image carries no criterion,
+//! so the gating is hand-rolled on `awp::util::bench`):
+//!
+//! ```bash
+//! cargo bench --bench kernels                         # measure + print
+//! cargo bench --bench kernels -- --save-baseline main # snapshot to disk
+//! cargo bench --bench kernels -- --baseline main      # compare, exit 1 on
+//!                                                     # a large regression
+//! ```
+//!
+//! Measures, per compression family (int4/g32, 2:4, 4:8) and serving shape:
+//! the dense row-panel GEMM over the decoded weights, the reference packed
+//! kernel (streaming dequant / survivor-only), and the fast
+//! compressed-domain kernel — plus native forward tokens/sec on all three
+//! serving configurations. `--quick` shrinks everything to smoke scale.
+//!
+//! Baselines live in `target/awp-baselines/<name>.json` (same `awp-bench/1`
+//! schema as BENCH_6.json). The regression gate is deliberately loose
+//! (-35% on `fast_gflops`, keyed by family × shape): these are wall-clock
+//! numbers on shared machines, and the gate exists to catch "the fast tier
+//! silently fell back to scalar", not 5% noise. Policy in KERNELS.md.
+
+use std::path::PathBuf;
+use std::process::exit;
+
+use awp::report::perf::bench_report;
+use awp::util::Json;
+
+/// Fractional `fast_gflops` drop (vs baseline) that fails the gate.
+const REGRESSION_TOLERANCE: f64 = 0.35;
+
+fn baseline_path(name: &str) -> PathBuf {
+    PathBuf::from("target/awp-baselines").join(format!("{name}.json"))
+}
+
+/// `family m x k x n` — the stable identity a row is matched under.
+fn row_key(row: &Json) -> String {
+    let s = |k: &str| row.expect(k).unwrap().as_str().unwrap().to_string();
+    let u = |k: &str| row.expect(k).unwrap().as_usize().unwrap();
+    format!("{} {}x{}x{}", s("family"), u("m"), u("k"), u("n"))
+}
+
+fn main() {
+    let mut quick = false;
+    let mut save: Option<String> = None;
+    let mut compare: Option<String> = None;
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--quick" => quick = true,
+            "--save-baseline" => save = it.next(),
+            "--baseline" => compare = it.next(),
+            // tolerate harness-style args cargo may forward (e.g. --bench)
+            _ => {}
+        }
+    }
+
+    let report = bench_report(quick).expect("bench suite failed");
+    println!();
+    for row in report.expect("kernels").unwrap().as_arr().unwrap() {
+        let ratio = row.expect("fast_vs_reference").unwrap().as_f64().unwrap();
+        println!("{:24} fast/reference = {ratio:.2}x", row_key(row));
+    }
+    let native = report.expect("native").unwrap();
+    println!("native packed fast/reference = {:.2}x",
+             native.expect("fast_vs_reference").unwrap().as_f64().unwrap());
+
+    if let Some(name) = save {
+        let path = baseline_path(&name);
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, report.to_string() + "\n").unwrap();
+        println!("baseline '{name}' saved to {}", path.display());
+    }
+    if let Some(name) = compare {
+        let path = baseline_path(&name);
+        let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+            eprintln!("baseline '{name}' unreadable at {}: {e}", path.display());
+            exit(2);
+        });
+        let base = Json::parse(&text).expect("baseline is not valid JSON");
+        let base_rows = base.expect("kernels").unwrap().as_arr().unwrap();
+        let mut failed = false;
+        for row in report.expect("kernels").unwrap().as_arr().unwrap() {
+            let key = row_key(row);
+            let Some(b) = base_rows.iter().find(|r| row_key(r) == key) else {
+                println!("{key:24} (no baseline row — skipped)");
+                continue;
+            };
+            let now = row.expect("fast_gflops").unwrap().as_f64().unwrap();
+            let was = b.expect("fast_gflops").unwrap().as_f64().unwrap();
+            let floor = was * (1.0 - REGRESSION_TOLERANCE);
+            if now < floor {
+                println!("{key:24} REGRESSED: {now:.2} GFLOP/s < floor \
+                          {floor:.2} (baseline {was:.2})");
+                failed = true;
+            } else {
+                println!("{key:24} ok: {now:.2} GFLOP/s (baseline {was:.2})");
+            }
+        }
+        if failed {
+            eprintln!("kernel perf regression vs baseline '{name}'");
+            exit(1);
+        }
+        println!("no regression vs baseline '{name}'");
+    }
+}

@@ -19,9 +19,13 @@
 //!   rename-atomic writes, corrupt-file → logged recompute, per-site
 //!   layer reports persisted alongside the weights so warm reruns submit
 //!   **zero** compression jobs (`coordinator::pipeline::compress_model_cached`).
-//! * [`packed`] — the packed execution path: streaming dequant GEMM and
-//!   survivor-only N:M sparse GEMM over [`PackedLinear`], bit-identical
-//!   to the dense kernels on the decoded weights.
+//! * [`packed`] — the packed execution path, two kernel tiers
+//!   ([`crate::tensor::KernelTier`]): the *reference* tier (streaming
+//!   dequant GEMM and survivor-only N:M sparse GEMM over [`PackedLinear`],
+//!   bit-identical to the dense kernels on the decoded weights) and the
+//!   *fast* tier (integer-accumulate / palette-LUT / cache-blocked sparse
+//!   SIMD GEMMs over a [`PreparedPacked`], tolerance-validated — see
+//!   KERNELS.md).
 //!
 //! CLI surface: `repro compress --pack-out <file>`, `repro inspect
 //! <file>`, `repro eval --from-artifact <file>`; sweeps consult the store
@@ -35,6 +39,7 @@ pub mod store;
 
 pub use codec::PackedLinear;
 pub use keys::ArtifactKey;
+pub use packed::PreparedPacked;
 pub use store::{
     load_artifact, read_artifact, store_artifact, write_artifact, ArtifactCounts,
     ArtifactSite, ArtifactStore, ModelArtifact,

@@ -1,7 +1,9 @@
 //! Packed execution — GEMM kernels that consume [`PackedLinear`] weights
 //! without ever materialising the dense Θ.
 //!
-//! Two kernel families:
+//! Two tiers ([`crate::tensor::KernelTier`]):
+//!
+//! **Reference tier** (the oracle, bit-identical to dense):
 //!
 //! * [`PackedLinear::matmul`] — **streaming dequant GEMM**. Decodes one
 //!   coefficient row at a time (O(d_in) scratch, never O(d_out·d_in)) and
@@ -16,16 +18,55 @@
 //!   with the dense result whenever no accumulator passes through ±0.0
 //!   mid-chain (with nonzero survivors that requires exact cancellation;
 //!   the packed-exec tests pin equality on random inputs).
+//!
+//! **Fast tier** (compressed-domain + SIMD, tolerance-validated —
+//! KERNELS.md):
+//!
+//! * `GroupedInt` — **integer-accumulate GEMM**: multiplies activations
+//!   against the b-bit codes directly and applies the per-(row, group)
+//!   scale/zero-point once per group, using the identity
+//!   `Σ_t (q_t−zp)·s·B[t] = s·(Σ_t q_t·B[t] − zp·Σ_t B[t])`; the per-group
+//!   activation column sums `Σ_t B[t]` are computed once per launch and
+//!   amortised over every output row. No per-element dequant at all.
+//! * `SparseMask` — **cache-blocked survivor-only GEMM** over a prepared
+//!   CSR view (values + column indices), SIMD 4-survivor panels, output
+//!   processed in column blocks so wide activations stay L1/L2-resident.
+//! * `Palette`/`Dense` — **LUT-decode + SIMD row panel**: the per-group
+//!   table decode is already a LUT gather; the panel switches to
+//!   [`simd::row_panel_fast`].
+//!
+//! Per-launch decode offsets (palette table starts, sparse row starts, the
+//! CSR column index list) are precomputed once in [`PreparedPacked`] —
+//! [`PackedLinear::prepare`] — so serving does no per-call aux work; the
+//! reference-tier entry points on `PackedLinear` itself keep computing aux
+//! per call for one-shot users.
+
+use std::cell::RefCell;
 
 use crate::quant::pack::unpack_bits_into;
+use crate::tensor::simd::{self, KernelTier};
 use crate::tensor::{ops, Matrix};
 use crate::util::parallel::par_chunks_mut;
 
 use super::codec::PackedLinear;
 
+thread_local! {
+    /// Per-thread decode scratch (dequantized row + unpacked codes), grown
+    /// once and reused across rows — the kernels are allocation-free after
+    /// warm-up (the repo's usual inner-loop discipline, cf.
+    /// `proj::PgdWorkspace`).
+    static SCRATCH: RefCell<(Vec<f32>, Vec<u8>)> =
+        RefCell::new((Vec::new(), Vec::new()));
+    /// Per-thread integer-GEMM scratch: codes as f32, raw codes, per-group
+    /// accumulator.
+    static INT_SCRATCH: RefCell<(Vec<f32>, Vec<u8>, Vec<f32>)> =
+        RefCell::new((Vec::new(), Vec::new(), Vec::new()));
+}
+
 /// Per-matrix decode offsets computed once per kernel launch (palette
 /// tables and sparse values are variable-length, so row starts need a
 /// prefix pass).
+#[derive(Clone, Debug)]
 enum DecodeAux {
     None,
     /// `Palette`: start offset into `values` for each (row, group)
@@ -127,16 +168,10 @@ impl PackedLinear {
 
     /// Streaming dequant GEMM `Θ·B`: bit-identical to
     /// `ops::matmul(&self.decode(), b)` (shared row-panel kernel) with
-    /// O(d_in) decode scratch per worker thread instead of a dense Θ —
-    /// the scratch lives in a thread-local and grows once, so the row
-    /// loop is allocation-free after warm-up (the repo's usual inner-loop
-    /// discipline, cf. `proj::PgdWorkspace`).
+    /// O(d_in) decode scratch per worker thread instead of a dense Θ.
+    /// Computes decode aux per call; serving paths hold a
+    /// [`PreparedPacked`] instead.
     pub fn matmul(&self, b: &Matrix) -> Matrix {
-        use std::cell::RefCell;
-        thread_local! {
-            static SCRATCH: RefCell<(Vec<f32>, Vec<u8>)> =
-                RefCell::new((Vec::new(), Vec::new()));
-        }
         assert_eq!(
             self.cols(),
             b.rows,
@@ -146,18 +181,9 @@ impl PackedLinear {
             b.rows,
             b.cols
         );
-        let (k, n) = (self.cols(), b.cols);
         let aux = self.aux();
-        let mut out = Matrix::zeros(self.rows(), n);
-        par_chunks_mut(&mut out.data, n, |i, orow| {
-            SCRATCH.with(|cell| {
-                let mut scratch = cell.borrow_mut();
-                let (arow, qbuf) = &mut *scratch;
-                arow.resize(k, 0.0);
-                self.decode_row_into(i, &aux, qbuf, &mut arow[..k]);
-                ops::matmul_row_panel(&arow[..k], b, orow);
-            });
-        });
+        let mut out = Matrix::zeros(self.rows(), b.cols);
+        streaming_matmul_into(self, &aux, b, &mut out);
         out
     }
 
@@ -170,59 +196,299 @@ impl PackedLinear {
     /// is what keeps the result bit-identical to the dense GEMM. Panics on
     /// non-mask variants (callers dispatch on [`PackedLinear::mode_name`]).
     pub fn matmul_sparse(&self, b: &Matrix) -> Matrix {
-        let PackedLinear::SparseMask { rows, cols, mask, values } = self else {
+        let PackedLinear::SparseMask { rows, cols, .. } = self else {
             panic!("matmul_sparse needs a SparseMask site, got {}", self.mode_name());
         };
         assert_eq!(*cols, b.rows, "packed sparse matmul dimension mismatch");
-        let n = b.cols;
         let DecodeAux::RowStarts(starts) = self.aux() else { unreachable!() };
-        let mut out = Matrix::zeros(*rows, n);
-        par_chunks_mut(&mut out.data, n, |i, orow| {
-            let mut v = starts[i];
-            let row_base = i * cols;
-            let mut kk = 0usize;
-            // 4-quads aligned exactly like the dense kernel's k-unroll
-            // (KB = 64 is a multiple of 4, so dense quad boundaries are
-            // global multiples of 4 too)
-            while kk + 4 <= *cols {
-                let mut avs = [0.0f32; 4];
-                let mut bcol = [0usize; 4];
-                let mut cnt = 0usize;
-                for t in 0..4 {
-                    let idx = row_base + kk + t;
-                    if mask[idx / 8] >> (idx % 8) & 1 == 1 {
-                        avs[cnt] = values[v];
-                        bcol[cnt] = kk + t;
-                        v += 1;
-                        cnt += 1;
-                    }
-                }
-                if cnt > 0 {
-                    for j in 0..n {
-                        let mut acc = avs[0] * b.data[bcol[0] * n + j];
-                        for s in 1..cnt {
-                            acc += avs[s] * b.data[bcol[s] * n + j];
-                        }
-                        orow[j] += acc;
-                    }
-                }
-                kk += 4;
-            }
-            // tail columns: single adds, like the dense remainder loop
-            while kk < *cols {
-                let idx = row_base + kk;
+        let mut out = Matrix::zeros(*rows, b.cols);
+        sparse_matmul_into(self, &starts, b, &mut out);
+        out
+    }
+
+    /// Precompute the per-launch decode offsets (and, for masks, the CSR
+    /// column index list) once, yielding the serving-ready form every
+    /// repeated-matmul consumer should hold.
+    pub fn prepare(self) -> PreparedPacked {
+        PreparedPacked::new(self)
+    }
+}
+
+/// Reference streaming-dequant body over precomputed aux; `out` must
+/// arrive zeroed at `(rows, b.cols)`.
+fn streaming_matmul_into(p: &PackedLinear, aux: &DecodeAux, b: &Matrix,
+                         out: &mut Matrix) {
+    let (k, n) = (p.cols(), b.cols);
+    par_chunks_mut(&mut out.data, n, |i, orow| {
+        SCRATCH.with(|cell| {
+            let mut scratch = cell.borrow_mut();
+            let (arow, qbuf) = &mut *scratch;
+            arow.resize(k, 0.0);
+            p.decode_row_into(i, aux, qbuf, &mut arow[..k]);
+            ops::matmul_row_panel(&arow[..k], b, orow);
+        });
+    });
+}
+
+/// Reference survivor-only body over precomputed row starts; `out` must
+/// arrive zeroed at `(rows, b.cols)`.
+fn sparse_matmul_into(p: &PackedLinear, starts: &[usize], b: &Matrix,
+                      out: &mut Matrix) {
+    let PackedLinear::SparseMask { cols, mask, values, .. } = p else {
+        unreachable!()
+    };
+    let n = b.cols;
+    par_chunks_mut(&mut out.data, n, |i, orow| {
+        let mut v = starts[i];
+        let row_base = i * cols;
+        let mut kk = 0usize;
+        // 4-quads aligned exactly like the dense kernel's k-unroll
+        // (KB = 64 is a multiple of 4, so dense quad boundaries are
+        // global multiples of 4 too)
+        while kk + 4 <= *cols {
+            let mut avs = [0.0f32; 4];
+            let mut bcol = [0usize; 4];
+            let mut cnt = 0usize;
+            for t in 0..4 {
+                let idx = row_base + kk + t;
                 if mask[idx / 8] >> (idx % 8) & 1 == 1 {
-                    let av = values[v];
+                    avs[cnt] = values[v];
+                    bcol[cnt] = kk + t;
                     v += 1;
-                    let brow = &b.data[kk * n..kk * n + n];
-                    for j in 0..n {
-                        orow[j] += av * brow[j];
+                    cnt += 1;
+                }
+            }
+            if cnt > 0 {
+                for j in 0..n {
+                    let mut acc = avs[0] * b.data[bcol[0] * n + j];
+                    for s in 1..cnt {
+                        acc += avs[s] * b.data[bcol[s] * n + j];
+                    }
+                    orow[j] += acc;
+                }
+            }
+            kk += 4;
+        }
+        // tail columns: single adds, like the dense remainder loop
+        while kk < *cols {
+            let idx = row_base + kk;
+            if mask[idx / 8] >> (idx % 8) & 1 == 1 {
+                let av = values[v];
+                v += 1;
+                let brow = &b.data[kk * n..kk * n + n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+            kk += 1;
+        }
+    });
+}
+
+/// A [`PackedLinear`] with its per-launch decode state precomputed — the
+/// form the serving path ([`crate::infer::LinearOp`]) holds, so repeated
+/// matmuls do zero aux work and zero allocations after warm-up.
+///
+/// Dispatches both kernel tiers: [`KernelTier::Reference`] runs the exact
+/// streaming-dequant / survivor-only kernels above (bit-identical to the
+/// one-shot `PackedLinear` entry points), [`KernelTier::Fast`] runs the
+/// compressed-domain SIMD kernels (tolerance-validated, KERNELS.md).
+#[derive(Clone, Debug)]
+pub struct PreparedPacked {
+    packed: PackedLinear,
+    aux: DecodeAux,
+    /// `SparseMask` only: survivor column indices aligned with the packed
+    /// `values` (the CSR companion the cache-blocked fast kernel walks);
+    /// empty for other variants.
+    sparse_cols: Vec<u32>,
+}
+
+impl PreparedPacked {
+    pub fn new(packed: PackedLinear) -> PreparedPacked {
+        let aux = packed.aux();
+        let sparse_cols = match &packed {
+            PackedLinear::SparseMask { rows, cols, mask, values } => {
+                let mut sc = Vec::with_capacity(values.len());
+                for idx in 0..rows * cols {
+                    if mask[idx / 8] >> (idx % 8) & 1 == 1 {
+                        sc.push((idx % cols) as u32);
                     }
                 }
-                kk += 1;
+                debug_assert_eq!(sc.len(), values.len());
+                sc
+            }
+            _ => Vec::new(),
+        };
+        PreparedPacked { packed, aux, sparse_cols }
+    }
+
+    /// The underlying packed payload (for footprint/mode inspection).
+    pub fn packed(&self) -> &PackedLinear {
+        &self.packed
+    }
+
+    pub fn rows(&self) -> usize {
+        self.packed.rows()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.packed.cols()
+    }
+
+    pub fn mode_name(&self) -> &'static str {
+        self.packed.mode_name()
+    }
+
+    /// `Θ·B` on the selected tier (allocating form).
+    pub fn matmul_tier(&self, b: &Matrix, tier: KernelTier) -> Matrix {
+        let mut out = Matrix::zeros(self.rows(), b.cols);
+        self.matmul_tier_into(b, tier, &mut out);
+        out
+    }
+
+    /// `Θ·B` on the selected tier, into a caller-owned buffer (resized and
+    /// zeroed via [`Matrix::reset_zeroed`]). Reference tier dispatches
+    /// exactly like the one-shot entry points — survivor-only kernel for
+    /// masks, streaming dequant otherwise — so its output is bit-identical
+    /// to them (and therefore to the dense GEMM on the decoded weights).
+    pub fn matmul_tier_into(&self, b: &Matrix, tier: KernelTier,
+                            out: &mut Matrix) {
+        assert_eq!(
+            self.cols(),
+            b.rows,
+            "packed matmul {}x{} · {}x{}",
+            self.rows(),
+            self.cols(),
+            b.rows,
+            b.cols
+        );
+        out.reset_zeroed(self.rows(), b.cols);
+        match (tier, &self.packed) {
+            (KernelTier::Reference, PackedLinear::SparseMask { .. }) => {
+                let DecodeAux::RowStarts(starts) = &self.aux else {
+                    unreachable!()
+                };
+                sparse_matmul_into(&self.packed, starts, b, out);
+            }
+            (KernelTier::Reference, _) => {
+                streaming_matmul_into(&self.packed, &self.aux, b, out);
+            }
+            (KernelTier::Fast, PackedLinear::GroupedInt { .. }) => {
+                self.int_matmul_fast_into(b, out);
+            }
+            (KernelTier::Fast, PackedLinear::SparseMask { .. }) => {
+                self.sparse_matmul_fast_into(b, out);
+            }
+            // palette + dense payloads: LUT/copy row decode, SIMD panel
+            (KernelTier::Fast, _) => self.decode_matmul_fast_into(b, out),
+        }
+    }
+
+    /// Fast integer-accumulate GEMM for `GroupedInt`: per output row,
+    /// accumulate raw codes against B one group at a time
+    /// (`gacc = Σ_t q_t·B[t]`), then fold in scale and zero-point once per
+    /// group: `orow += s·gacc − s·zp·colsum_g`. The per-group activation
+    /// column sums `colsum_g = Σ_{t∈g} B[t]` cost one pass over B and are
+    /// shared by all `rows` output rows. The flat-group encoding
+    /// (scale = v, zp = −1, codes = 0) falls out correctly:
+    /// `s·(0 − (−1)·colsum) = v·colsum`.
+    fn int_matmul_fast_into(&self, b: &Matrix, out: &mut Matrix) {
+        let PackedLinear::GroupedInt { cols, bits, group, scales, zps, codes, .. } =
+            &self.packed
+        else {
+            unreachable!()
+        };
+        let (k, n) = (*cols, b.cols);
+        let ng = k / group;
+        let mut colsum = Matrix::zeros(ng, n);
+        par_chunks_mut(&mut colsum.data, n, |g, srow| {
+            for t in 0..*group {
+                let base = (g * group + t) * n;
+                simd::add_assign_fast(srow, &b.data[base..base + n]);
             }
         });
-        out
+        par_chunks_mut(&mut out.data, n, |i, orow| {
+            INT_SCRATCH.with(|cell| {
+                let mut scratch = cell.borrow_mut();
+                let (qf, qbuf, gacc) = &mut *scratch;
+                qbuf.resize(k, 0);
+                unpack_bits_into(codes, *bits, i * k, &mut qbuf[..k]);
+                qf.resize(k, 0.0);
+                for t in 0..k {
+                    qf[t] = qbuf[t] as f32;
+                }
+                gacc.resize(n, 0.0);
+                for g in 0..ng {
+                    gacc[..n].fill(0.0);
+                    simd::row_panel_fast(&qf[g * group..(g + 1) * group],
+                                         &b.data[g * group * n..(g + 1) * group * n],
+                                         n, &mut gacc[..n]);
+                    let s = scales[i * ng + g];
+                    let szp = s * zps[i * ng + g];
+                    simd::rescale_add_fast(orow, &gacc[..n],
+                                           &colsum.data[g * n..(g + 1) * n],
+                                           s, szp);
+                }
+            });
+        });
+    }
+
+    /// Fast cache-blocked survivor-only GEMM for `SparseMask`: walks the
+    /// prepared CSR view (values + column indices — no mask bit tests on
+    /// the hot path) in SIMD 4-survivor panels, processing the output row
+    /// in column blocks so the active orow slice and its B-row slices stay
+    /// cache-resident even for wide activations.
+    fn sparse_matmul_fast_into(&self, b: &Matrix, out: &mut Matrix) {
+        let PackedLinear::SparseMask { rows, values, .. } = &self.packed else {
+            unreachable!()
+        };
+        let DecodeAux::RowStarts(starts) = &self.aux else { unreachable!() };
+        let n = b.cols;
+        const JB: usize = 512; // output-column block (KERNELS.md)
+        par_chunks_mut(&mut out.data, n, |i, orow| {
+            let v0 = starts[i];
+            let v1 = if i + 1 < *rows { starts[i + 1] } else { values.len() };
+            let vals = &values[v0..v1];
+            let cls = &self.sparse_cols[v0..v1];
+            let mut jb = 0usize;
+            while jb < n {
+                let je = (jb + JB).min(n);
+                let ob = &mut orow[jb..je];
+                let brow = |c: u32| {
+                    let base = c as usize * n;
+                    &b.data[base + jb..base + je]
+                };
+                let mut t = 0usize;
+                while t + 4 <= vals.len() {
+                    simd::panel4_fast(
+                        [vals[t], vals[t + 1], vals[t + 2], vals[t + 3]],
+                        brow(cls[t]), brow(cls[t + 1]), brow(cls[t + 2]),
+                        brow(cls[t + 3]), ob,
+                    );
+                    t += 4;
+                }
+                while t < vals.len() {
+                    simd::axpy_fast(vals[t], brow(cls[t]), ob);
+                    t += 1;
+                }
+                jb = je;
+            }
+        });
+    }
+
+    /// Fast path for `Palette` (LUT gather decode) and `Dense` (row copy)
+    /// payloads: decode one row, run the SIMD panel over it.
+    fn decode_matmul_fast_into(&self, b: &Matrix, out: &mut Matrix) {
+        let (k, n) = (self.cols(), b.cols);
+        par_chunks_mut(&mut out.data, n, |i, orow| {
+            SCRATCH.with(|cell| {
+                let mut scratch = cell.borrow_mut();
+                let (arow, qbuf) = &mut *scratch;
+                arow.resize(k, 0.0);
+                self.packed.decode_row_into(i, &self.aux, qbuf, &mut arow[..k]);
+                simd::row_panel_fast(&arow[..k], &b.data, n, orow);
+            });
+        });
     }
 }
 
@@ -237,6 +503,14 @@ mod tests {
         assert_eq!(a.shape(), b.shape());
         for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
             assert_eq!(x.to_bits(), y.to_bits(), "entry {i}: {x} vs {y}");
+        }
+    }
+
+    fn assert_close(a: &Matrix, b: &Matrix, what: &str) {
+        assert_eq!(a.shape(), b.shape(), "{what}");
+        for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+            let tol = 1e-4 * (1.0 + x.abs() + y.abs());
+            assert!((x - y).abs() <= tol, "{what} entry {i}: {x} vs {y}");
         }
     }
 
@@ -293,5 +567,116 @@ mod tests {
         assert_bits_eq(&full, &theta);
         let b = Matrix::randn(32, 8, 5);
         assert_bits_eq(&p.matmul(&b), &ops::matmul(&theta, &b));
+    }
+
+    #[test]
+    fn prepared_reference_tier_is_bitwise_one_shot() {
+        // cached aux must not change a single bit on the reference tier
+        let b = Matrix::randn(64, 9, 300);
+        let q = project_qmax(&Matrix::randn(5, 64, 10), 15.0, 32);
+        let p = PackedLinear::encode(&q, &CompressionSpec::quant(4, 32));
+        let want = p.matmul(&b);
+        let prep = p.prepare();
+        assert_bits_eq(&prep.matmul_tier(&b, KernelTier::Reference), &want);
+        let mut nm = Matrix::randn(5, 64, 11);
+        NmStructured::new(2, 4).project_rows(&mut nm, &mut ProjScratch::new());
+        let p = PackedLinear::encode(&nm, &CompressionSpec::structured_nm(2, 4));
+        let want = p.matmul_sparse(&b);
+        let prep = p.prepare();
+        assert_bits_eq(&prep.matmul_tier(&b, KernelTier::Reference), &want);
+    }
+
+    #[test]
+    fn fast_int_gemm_matches_reference_within_tol() {
+        for (rows, cols, group, n) in
+            [(8usize, 64usize, 32usize, 24usize), (5, 96, 32, 7), (3, 32, 32, 17)]
+        {
+            let q = project_qmax(&Matrix::randn(rows, cols, n as u64), 15.0, group);
+            let p = PackedLinear::encode(&q, &CompressionSpec::quant(4, group));
+            assert_eq!(p.mode_name(), "int");
+            let b = Matrix::randn(cols, n, (rows + n) as u64);
+            let prep = p.prepare();
+            assert_close(&prep.matmul_tier(&b, KernelTier::Fast),
+                         &prep.matmul_tier(&b, KernelTier::Reference),
+                         &format!("int {rows}x{cols} g{group} n{n}"));
+        }
+    }
+
+    #[test]
+    fn fast_int_gemm_handles_flat_groups() {
+        // group-constant values encode as (scale = v, zp = −1, codes = 0);
+        // the zp-correction identity must reproduce v·colsum exactly-ish
+        let theta = Matrix::from_fn(4, 64, |i, j| (i as f32) - (j / 32) as f32 * 0.5);
+        let p = PackedLinear::encode(&theta, &CompressionSpec::quant(4, 32));
+        assert_eq!(p.mode_name(), "int");
+        let b = Matrix::randn(64, 13, 77);
+        let prep = p.prepare();
+        assert_close(&prep.matmul_tier(&b, KernelTier::Fast),
+                     &ops::matmul(&theta, &b), "flat groups");
+    }
+
+    #[test]
+    fn fast_sparse_gemm_matches_reference_within_tol() {
+        // quad tail (cols % 4 != 0) and a column count above the JB block
+        for (rows, cols, n) in [(6usize, 64usize, 16usize), (3, 30, 520), (4, 64, 1)] {
+            let mut w = Matrix::randn(rows, cols, (cols + n) as u64);
+            if cols % 4 == 0 {
+                NmStructured::new(2, 4).project_rows(&mut w, &mut ProjScratch::new());
+                let p = PackedLinear::encode(&w, &CompressionSpec::structured_nm(2, 4));
+                assert_eq!(p.mode_name(), "mask");
+                let b = Matrix::randn(cols, n, rows as u64);
+                let prep = p.prepare();
+                assert_close(&prep.matmul_tier(&b, KernelTier::Fast),
+                             &prep.matmul_tier(&b, KernelTier::Reference),
+                             &format!("nm mask {rows}x{cols} n{n}"));
+            } else {
+                // unstructured zeros with a ragged tail
+                for (i, v) in w.data.iter_mut().enumerate() {
+                    if i % 3 == 0 {
+                        *v = 0.0;
+                    }
+                }
+                let p = PackedLinear::encode(&w, &CompressionSpec::prune(0.3));
+                assert_eq!(p.mode_name(), "mask");
+                let b = Matrix::randn(cols, n, rows as u64);
+                let prep = p.prepare();
+                assert_close(&prep.matmul_tier(&b, KernelTier::Fast),
+                             &prep.matmul_tier(&b, KernelTier::Reference),
+                             &format!("ragged mask {rows}x{cols} n{n}"));
+            }
+        }
+    }
+
+    #[test]
+    fn fast_palette_and_dense_match_reference_within_tol() {
+        let theta = Matrix::from_fn(3, 32, |i, j| match (i + j) % 3 {
+            0 => 0.25,
+            1 => -1.5,
+            _ => 3.0,
+        });
+        let p = PackedLinear::encode(&theta, &CompressionSpec::quant(2, 16));
+        assert_eq!(p.mode_name(), "palette");
+        let b = Matrix::randn(32, 11, 8);
+        let prep = p.prepare();
+        assert_close(&prep.matmul_tier(&b, KernelTier::Fast),
+                     &prep.matmul_tier(&b, KernelTier::Reference), "palette");
+        let d = Matrix::randn(6, 33, 9); // odd k: quad + lane tails
+        let p = PackedLinear::encode(&d, &CompressionSpec::quant(4, 32));
+        assert_eq!(p.mode_name(), "dense");
+        let b = Matrix::randn(33, 10, 12);
+        let prep = p.prepare();
+        assert_close(&prep.matmul_tier(&b, KernelTier::Fast),
+                     &prep.matmul_tier(&b, KernelTier::Reference), "dense");
+    }
+
+    #[test]
+    fn fast_tier_is_thread_count_invariant() {
+        use crate::util::parallel::with_thread_budget;
+        let q = project_qmax(&Matrix::randn(8, 64, 21), 15.0, 32);
+        let p = PackedLinear::encode(&q, &CompressionSpec::quant(4, 32)).prepare();
+        let b = Matrix::randn(64, 24, 22);
+        let one = with_thread_budget(1, || p.matmul_tier(&b, KernelTier::Fast));
+        let four = with_thread_budget(4, || p.matmul_tier(&b, KernelTier::Fast));
+        assert_bits_eq(&one, &four);
     }
 }

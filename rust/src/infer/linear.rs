@@ -1,11 +1,17 @@
 //! Linear-site dispatch — every matmul in the native forward pass routes
-//! through [`LinearOp`], which either runs the dense row-panel GEMM over an
-//! f32 matrix or the packed kernels straight off a [`PackedLinear`]
-//! (streaming dequant for int/palette/dense payloads, survivor-only sparse
-//! GEMM for masks). The packed variants never materialise a dense Θ.
+//! through [`LinearOp`], which either runs the dense GEMM over an f32
+//! matrix or the packed kernels straight off a [`PreparedPacked`]
+//! (streaming dequant / survivor-only sparse on the reference tier,
+//! compressed-domain SIMD kernels on the fast tier — see
+//! [`crate::tensor::KernelTier`] and KERNELS.md). The packed variants
+//! never materialise a dense Θ, and [`LinearOp::apply_tier`] runs out of a
+//! per-thread workspace so both tiers are allocation-free after warm-up
+//! (modulo the returned activation matrix).
 
-use crate::artifact::PackedLinear;
-use crate::tensor::{ops, Matrix};
+use std::cell::RefCell;
+
+use crate::artifact::{PackedLinear, PreparedPacked};
+use crate::tensor::{ops, KernelTier, Matrix};
 
 /// One linear site's weights, as the forward pass sees them: a borrowed
 /// view that the model's math dispatches on per call.
@@ -13,9 +19,10 @@ use crate::tensor::{ops, Matrix};
 pub enum LinearOp<'a> {
     /// Dense f32 `(d_out, d_in)` — the assembled-checkpoint path.
     Dense(&'a Matrix),
-    /// Bit-packed site straight from a compressed artifact — executed by
-    /// the packed GEMMs, never decoded to a dense matrix.
-    Packed(&'a PackedLinear),
+    /// Bit-packed site straight from a compressed artifact, with its
+    /// decode offsets precomputed — executed by the packed GEMMs, never
+    /// decoded to a dense matrix.
+    Packed(&'a PreparedPacked),
 }
 
 impl LinearOp<'_> {
@@ -33,32 +40,55 @@ impl LinearOp<'_> {
         }
     }
 
-    /// `W · B`, dispatched to the dense row-panel GEMM
-    /// ([`ops::matmul`]), the streaming dequant GEMM
-    /// ([`PackedLinear::matmul`]) or the survivor-only sparse GEMM
-    /// ([`PackedLinear::matmul_sparse`]). All three share the dense
-    /// kernel's blocking and accumulation order, so on bit-identical
-    /// weights every variant produces bit-identical output — the invariant
+    /// `W · B` on the reference tier: the dense row-panel GEMM
+    /// ([`ops::matmul`]), the streaming dequant GEMM or the survivor-only
+    /// sparse GEMM. All three share the dense kernel's blocking and
+    /// accumulation order, so on bit-identical weights every variant
+    /// produces bit-identical output — the invariant
     /// `rust/tests/native_forward.rs` pins end-to-end.
     pub fn matmul(&self, b: &Matrix) -> Matrix {
+        self.matmul_tier(b, KernelTier::Reference)
+    }
+
+    /// `W · B` on the selected [`KernelTier`] ([`PreparedPacked`] holds the
+    /// per-variant dispatch; the fast tier is tolerance-validated, not
+    /// bitwise — KERNELS.md).
+    pub fn matmul_tier(&self, b: &Matrix, tier: KernelTier) -> Matrix {
         match self {
-            LinearOp::Dense(w) => ops::matmul(w, b),
-            LinearOp::Packed(p) => match p {
-                // mask sites take the survivor-only kernel: fully pruned
-                // quads cost nothing — the N:M payoff, inside the model
-                PackedLinear::SparseMask { .. } => p.matmul_sparse(b),
-                _ => p.matmul(b),
-            },
+            LinearOp::Dense(w) => ops::matmul_tier(w, b, tier),
+            LinearOp::Packed(p) => p.matmul_tier(b, tier),
         }
     }
 
     /// Activation-side application `X · Wᵀ` for row-major activations
     /// `x: (tokens, d_in)` → `(tokens, d_out)`, computed as `(W · Xᵀ)ᵀ` so
     /// both representations run the same `W · B` kernels (and therefore
-    /// stay bit-identical to each other).
+    /// stay bit-identical to each other on the reference tier).
     pub fn apply(&self, x: &Matrix) -> Matrix {
-        let xt = x.transpose();
-        self.matmul(&xt).transpose()
+        self.apply_tier(x, KernelTier::Reference)
+    }
+
+    /// [`LinearOp::apply`] on the selected tier. The `Xᵀ` staging buffer
+    /// and the `W·Xᵀ` product live in a per-thread workspace (grown once,
+    /// reused across calls — same discipline as `proj::PgdWorkspace`), so
+    /// the only per-call allocation on either tier is the returned
+    /// activation matrix; the packed kernels' decode scratch is per-thread
+    /// too (`artifact::packed`).
+    pub fn apply_tier(&self, x: &Matrix, tier: KernelTier) -> Matrix {
+        thread_local! {
+            static APPLY_SCRATCH: RefCell<(Matrix, Matrix)> =
+                RefCell::new((Matrix::zeros(0, 0), Matrix::zeros(0, 0)));
+        }
+        APPLY_SCRATCH.with(|cell| {
+            let mut scratch = cell.borrow_mut();
+            let (xt, wxt) = &mut *scratch;
+            x.transpose_into(xt);
+            match self {
+                LinearOp::Dense(w) => ops::matmul_tier_into(w, xt, tier, wxt),
+                LinearOp::Packed(p) => p.matmul_tier_into(xt, tier, wxt),
+            }
+            wxt.transpose()
+        })
     }
 }
 
@@ -67,10 +97,16 @@ impl LinearOp<'_> {
 #[derive(Debug)]
 pub enum SiteWeights {
     Dense(Matrix),
-    Packed(PackedLinear),
+    Packed(PreparedPacked),
 }
 
 impl SiteWeights {
+    /// Wrap a freshly decoded packed payload, preparing its decode
+    /// offsets once.
+    pub fn packed(p: PackedLinear) -> SiteWeights {
+        SiteWeights::Packed(p.prepare())
+    }
+
     pub fn op(&self) -> LinearOp<'_> {
         match self {
             SiteWeights::Dense(m) => LinearOp::Dense(m),
@@ -103,17 +139,51 @@ mod tests {
         let x = Matrix::randn(9, 64, 7);
         // quantized site → streaming dequant path
         let theta = project_qmax(&Matrix::randn(16, 64, 0), 15.0, 32);
-        let packed = PackedLinear::encode(&theta, &CompressionSpec::quant(4, 32));
+        let packed = PackedLinear::encode(&theta, &CompressionSpec::quant(4, 32))
+            .prepare();
         assert_eq!(packed.mode_name(), "int");
         assert_bits_eq(&LinearOp::Dense(&theta).apply(&x),
                        &LinearOp::Packed(&packed).apply(&x));
         // N:M site → survivor-only sparse path
         let mut nm = Matrix::randn(16, 64, 1);
         NmStructured::new(2, 4).project_rows(&mut nm, &mut ProjScratch::new());
-        let packed = PackedLinear::encode(&nm, &CompressionSpec::structured_nm(2, 4));
+        let packed = PackedLinear::encode(&nm, &CompressionSpec::structured_nm(2, 4))
+            .prepare();
         assert_eq!(packed.mode_name(), "mask");
         assert_bits_eq(&LinearOp::Dense(&nm).apply(&x),
                        &LinearOp::Packed(&packed).apply(&x));
+    }
+
+    #[test]
+    fn fast_apply_matches_reference_within_tol() {
+        let x = Matrix::randn(9, 64, 17);
+        let theta = project_qmax(&Matrix::randn(16, 64, 18), 15.0, 32);
+        let packed = PackedLinear::encode(&theta, &CompressionSpec::quant(4, 32))
+            .prepare();
+        let op = LinearOp::Packed(&packed);
+        let fast = op.apply_tier(&x, KernelTier::Fast);
+        let reference = op.apply(&x);
+        assert_eq!(fast.shape(), reference.shape());
+        for (i, (a, b)) in fast.data.iter().zip(&reference.data).enumerate() {
+            let tol = 1e-4 * (1.0 + a.abs() + b.abs());
+            assert!((a - b).abs() <= tol, "entry {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn apply_reuses_workspace_and_stays_correct_across_shapes() {
+        // same thread, alternating shapes: the workspace must resize
+        // correctly and never leak one call's values into the next
+        let w1 = Matrix::randn(5, 12, 2);
+        let w2 = Matrix::randn(7, 9, 3);
+        for round in 0..3u64 {
+            let x1 = Matrix::randn(4, 12, 10 + round);
+            let got = LinearOp::Dense(&w1).apply(&x1);
+            assert_bits_eq(&got, &ops::matmul(&w1, &x1.transpose()).transpose());
+            let x2 = Matrix::randn(6, 9, 20 + round);
+            let got = LinearOp::Dense(&w2).apply(&x2);
+            assert_bits_eq(&got, &ops::matmul(&w2, &x2.transpose()).transpose());
+        }
     }
 
     #[test]
@@ -130,6 +200,6 @@ mod tests {
         let w = Matrix::randn(4, 32, 5);
         assert!(!SiteWeights::Dense(w.clone()).is_packed());
         let p = PackedLinear::encode(&w, &CompressionSpec::prune(0.5));
-        assert!(SiteWeights::Packed(p).is_packed());
+        assert!(SiteWeights::packed(p).is_packed());
     }
 }

@@ -18,9 +18,21 @@
 //! accumulation order (`tensor::ops::matmul_row_panel`), packed and dense
 //! logits/perplexity are **bit-identical** — the contract
 //! `rust/tests/native_forward.rs` and the CI native-eval smoke pin.
+//!
+//! That bit-identity statement is the **reference tier**. The model also
+//! carries a [`crate::tensor::KernelTier`] ([`NativeModel::set_tier`],
+//! CLI `--fast`, env `AWP_KERNEL_TIER`): the *fast* tier swaps every site
+//! matmul and the tied head onto compressed-domain + SIMD kernels
+//! (integer-accumulate GEMM for int sites, cache-blocked survivor-only
+//! GEMM for masks, palette-LUT GEMM, AVX2/FMA row panels) that are
+//! tolerance-validated against the reference tier rather than bitwise —
+//! bounds and policy in KERNELS.md, differential coverage in
+//! `rust/tests/fast_kernels.rs`.
+//!
 //! Parallelism (GEMM row panels, attention `(batch, head)` blocks,
 //! per-position NLL) runs under the `AWP_THREADS` budget via
-//! [`crate::util::parallel`] and is thread-count invariant.
+//! [`crate::util::parallel`] and is thread-count invariant on *both*
+//! tiers (each output row is computed sequentially by one worker).
 
 pub mod linear;
 pub mod model;

@@ -23,7 +23,7 @@ use anyhow::{ensure, Context, Result};
 
 use crate::artifact::ModelArtifact;
 use crate::model::{sites, Checkpoint, ModelConfig};
-use crate::tensor::{ops, Matrix};
+use crate::tensor::{ops, KernelTier, Matrix};
 use crate::util::parallel::{par_chunks_mut, par_map};
 
 use super::linear::{LinearOp, SiteWeights};
@@ -44,6 +44,10 @@ pub struct NativeModel {
     ln_f: Vec<f32>,
     /// `n_layers × 6` sites in [`sites::enumerate_sites`] order
     site_weights: Vec<SiteWeights>,
+    /// Which GEMM tier every site matmul (and the tied head) runs on.
+    /// Defaults to [`KernelTier::Reference`] — the bit-identical oracle;
+    /// [`NativeModel::set_tier`] switches serving onto the fast kernels.
+    tier: KernelTier,
 }
 
 impl NativeModel {
@@ -97,7 +101,15 @@ impl NativeModel {
             ln2.push(norm(&format!("blocks.{l}.ln2"))?);
         }
         let ln_f = norm("ln_f")?;
-        Ok(NativeModel { cfg, embed, ln1, ln2, ln_f, site_weights: ordered })
+        Ok(NativeModel {
+            cfg,
+            embed,
+            ln1,
+            ln2,
+            ln_f,
+            site_weights: ordered,
+            tier: KernelTier::Reference,
+        })
     }
 
     /// All-dense native model over an assembled checkpoint — the reference
@@ -126,13 +138,26 @@ impl NativeModel {
                 .iter()
                 .find(|a| a.param == s.param)
                 .with_context(|| format!("artifact misses site {}", s.param))?;
-            sw.push((s.param.clone(), SiteWeights::Packed(site.packed.clone())));
+            sw.push((s.param.clone(), SiteWeights::packed(site.packed.clone())));
         }
         Self::with_site_weights(ck, sw)
     }
 
     pub fn config(&self) -> &ModelConfig {
         &self.cfg
+    }
+
+    /// Select the GEMM tier the forward pass runs on
+    /// ([`KernelTier::Reference`] by default). The fast tier changes
+    /// accumulation order/FMA only — logits stay within the documented
+    /// tolerance of the reference tier (KERNELS.md) and remain
+    /// deterministic across thread budgets.
+    pub fn set_tier(&mut self, tier: KernelTier) {
+        self.tier = tier;
+    }
+
+    pub fn tier(&self) -> KernelTier {
+        self.tier
     }
 
     /// Sites executing through the packed kernels.
@@ -172,24 +197,24 @@ impl NativeModel {
         for l in 0..self.cfg.n_layers {
             // attention half: pre-norm, q/k/v, RoPE, causal softmax, out
             let h = rmsnorm(&x, &self.ln1[l]);
-            let mut q = self.site(l, 0).apply(&h);
-            let mut k = self.site(l, 1).apply(&h);
-            let v = self.site(l, 2).apply(&h);
+            let mut q = self.site(l, 0).apply_tier(&h, self.tier);
+            let mut k = self.site(l, 1).apply_tier(&h, self.tier);
+            let v = self.site(l, 2).apply_tier(&h, self.tier);
             rope_rows(&mut q, seq, nh, dh, &cos, &sin);
             rope_rows(&mut k, seq, nh, dh, &cos, &sin);
             let o = causal_attention(&q, &k, &v, batch, seq, nh, dh);
-            let o = self.site(l, 3).apply(&o);
+            let o = self.site(l, 3).apply_tier(&o, self.tier);
             add_inplace(&mut x, &o);
             // MLP half: pre-norm, up, SiLU, down
             let h = rmsnorm(&x, &self.ln2[l]);
-            let mut u = self.site(l, 4).apply(&h);
+            let mut u = self.site(l, 4).apply_tier(&h, self.tier);
             silu_inplace(&mut u);
-            let down = self.site(l, 5).apply(&u);
+            let down = self.site(l, 5).apply_tier(&u, self.tier);
             add_inplace(&mut x, &down);
         }
         let xf = rmsnorm(&x, &self.ln_f);
-        // tied head: logits = Xf · Eᵀ, as (E · Xfᵀ)ᵀ on the shared kernel
-        Ok(ops::matmul(&self.embed, &xf.transpose()).transpose())
+        // tied head: logits = Xf · Eᵀ, as (E · Xfᵀ)ᵀ on the tier's kernel
+        Ok(ops::matmul_tier(&self.embed, &xf.transpose(), self.tier).transpose())
     }
 
     /// Summed next-token NLL plus predicted-token count over a `(batch,
@@ -377,6 +402,23 @@ mod tests {
         let (nll, count) = m.nll(&tokens, 2, 8).unwrap();
         assert!(nll.is_finite() && nll > 0.0);
         assert_eq!(count, 14);
+    }
+
+    #[test]
+    fn fast_tier_logits_match_reference_within_tol() {
+        let ck = init_checkpoint(&cfg(), 7);
+        let reference = NativeModel::from_checkpoint(&ck).unwrap();
+        let mut fast = NativeModel::from_checkpoint(&ck).unwrap();
+        assert_eq!(fast.tier(), KernelTier::Reference);
+        fast.set_tier(KernelTier::Fast);
+        let tokens: Vec<i32> = (0..16).map(|i| (i * 5 % 32) as i32).collect();
+        let a = reference.forward(&tokens, 2, 8).unwrap();
+        let b = fast.forward(&tokens, 2, 8).unwrap();
+        assert_eq!(a.shape(), b.shape());
+        for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+            let tol = 1e-4 * (1.0 + x.abs() + y.abs());
+            assert!((x - y).abs() <= tol, "logit {i}: {x} vs {y}");
+        }
     }
 
     #[test]

@@ -121,6 +121,25 @@
 //! (GEMM panels, attention `(batch, head)` blocks, per-position NLL) runs
 //! under the `AWP_THREADS` budget and is thread-count invariant.
 //!
+//! ## Fast kernels
+//!
+//! The bit-identical packed kernels above are the **reference tier** of a
+//! two-tier dispatch ([`tensor::KernelTier`]). The **fast tier** computes
+//! in the compressed domain instead of decoding first: integer-accumulate
+//! GEMM over the b-bit codes with one per-(row, group) scale/zero-point
+//! rescale (`Σ (q−zp)·s·b = s·(Σ q·b − zp·Σ b)`, with the group column
+//! sums hoisted out of the row loop), cache-blocked survivor-only GEMM
+//! for masks, palette-LUT GEMM, and runtime-selected AVX2+FMA row panels
+//! with a portable scalar fallback ([`tensor::simd`]). Selection:
+//! [`infer::NativeModel::set_tier`], CLI `--fast` on `eval --native` /
+//! `generate --native`, or `AWP_KERNEL_TIER=fast`. The fast tier changes
+//! accumulation order, so it is validated by tolerance-based differential
+//! tests against the reference tier (`rust/tests/fast_kernels.rs`) — and
+//! stays thread-count invariant. Perf is tracked by `repro bench-json`
+//! (`BENCH_6.json`) and gated by `cargo bench --bench kernels --
+//! --baseline <name>`. Policy, tolerance bounds and how to add a kernel:
+//! KERNELS.md.
+//!
 //! ## Quick tour
 //!
 //! ```no_run

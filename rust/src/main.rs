@@ -2,20 +2,25 @@
 //!
 //! ```text
 //! repro train   --model small [--steps N]
-//! repro eval    --model small [--checkpoint path] [--native]
+//! repro eval    --model small [--checkpoint path] [--native [--fast]]
 //!               # --native: perplexity through the native CPU forward pass
 //!               # (rust/src/infer) — no AOT runtime needed; with
 //!               # --from-artifact the block-linear sites execute straight
-//!               # off the packed bytes (zero decode-to-dense assemblies)
+//!               # off the packed bytes (zero decode-to-dense assemblies);
+//!               # --fast serves on the compressed-domain + SIMD kernel
+//!               # tier (also: AWP_KERNEL_TIER=fast) — see KERNELS.md
 //! repro compress --model small --method awp --mode prune --ratio 0.5 [--bits 4]
 //!               # --mode also takes nm:N:M (semi-structured sparsity, e.g.
 //!               # nm:2:4, nm:4:8) and jointnm:N:M (N:M ∩ INT grid from
 //!               # --bits/--group); N:M runs on the CPU backend (awp-cpu)
-//! repro generate --model small --prompt "..." [--tokens N] [--native]
+//! repro generate --model small --prompt "..." [--tokens N] [--native [--fast]]
 //! repro experiment table1|table2|table3|table4|table5|fig1|all [--awp-backend cpu|hlo]
 //! repro e2e     # end-to-end driver: train → eval → compress → eval
 //! repro info    # artifacts / manifest summary
 //! repro inspect <file.apack>   # per-site footprint of a packed artifact
+//! repro bench-json [--quick] [--out BENCH_6.json]
+//!               # kernel-tier perf snapshot: GEMM GFLOP/s per compression
+//!               # family (dense vs reference vs fast) + native tokens/sec
 //! ```
 //!
 //! Global flags: `--config <file.json>` (see rust/src/config), `--artifacts
@@ -56,6 +61,7 @@ use awp::eval::{generate, native_generate, perplexity, recompute_report};
 use awp::infer::NativeModel;
 use awp::model::Checkpoint;
 use awp::runtime::{Manifest, Runtime};
+use awp::tensor::{simd, KernelTier};
 use awp::trainer;
 
 /// Minimal flag parser: positional subcommand + `--key value` pairs.
@@ -104,6 +110,20 @@ impl Args {
             None => Ok(default),
         }
     }
+}
+
+/// Kernel tier for `--native` serving: explicit `--fast` wins, otherwise
+/// the `AWP_KERNEL_TIER` env knob (default: reference). Logged to stderr so
+/// smoke scripts can assert which tier actually ran.
+fn kernel_tier(args: &Args) -> KernelTier {
+    let tier = if args.get("fast").is_some() {
+        KernelTier::Fast
+    } else {
+        KernelTier::from_env()
+    };
+    eprintln!("[native] kernel tier: {} (simd: {})", tier.describe(),
+              simd::backend_name());
+    tier
 }
 
 fn run_config(args: &Args) -> Result<RunConfig> {
@@ -176,6 +196,17 @@ fn main() -> Result<()> {
         println!("total: packed {} bytes, dense {} bytes, ratio {:.2}x",
                  art.packed_bytes(), art.dense_bytes(),
                  art.dense_bytes() as f64 / art.packed_bytes().max(1) as f64);
+        return Ok(());
+    }
+    // `bench-json` is pure CPU kernel timing — no manifest or runtime either
+    if cmd == "bench-json" {
+        let quick = args.get("quick").is_some();
+        let out = args.get_or("out", "BENCH_6.json");
+        eprintln!("[bench] kernel tiers on {} threads, simd: {}{}",
+                  awp::util::parallel::num_threads(), simd::backend_name(),
+                  if quick { " (quick)" } else { "" });
+        awp::report::perf::write_bench_json(Path::new(&out), quick)?;
+        println!("bench-json written to {out}");
         return Ok(());
     }
     let synthetic = args.get("synthetic").is_some();
@@ -262,7 +293,8 @@ fn main() -> Result<()> {
                     // packed serving: block-linear sites execute straight
                     // off the packed bytes through the native forward pass
                     // — no AOT runtime, no decode-to-dense assembly
-                    let nm = NativeModel::from_artifact(&ck, &art)?;
+                    let mut nm = NativeModel::from_artifact(&ck, &art)?;
+                    nm.set_tier(kernel_tier(&args));
                     eprintln!("[native] {} sites packed, {} decode-to-dense \
                                assemblies", nm.packed_site_count(),
                               nm.dense_site_count());
@@ -334,7 +366,8 @@ fn main() -> Result<()> {
                 None => ctx.checkpoint(&model)?,
             };
             if native {
-                let nm = NativeModel::from_checkpoint(&ck)?;
+                let mut nm = NativeModel::from_checkpoint(&ck)?;
+                nm.set_tier(kernel_tier(&args));
                 eprintln!("[native] {} sites dense f32",
                           nm.dense_site_count());
                 let rep = ctx.native_ppl(&model, &nm)?;
@@ -439,7 +472,9 @@ fn main() -> Result<()> {
                 None => ctx.checkpoint(&model)?,
             };
             let text = if args.get("native").is_some() {
-                native_generate(&NativeModel::from_checkpoint(&ck)?, &prompt, n)?
+                let mut nm = NativeModel::from_checkpoint(&ck)?;
+                nm.set_tier(kernel_tier(&args));
+                native_generate(&nm, &prompt, n)?
             } else {
                 generate(&runtime.handle(), &manifest, &model, &ck, &prompt, n)?
             };

@@ -3,6 +3,11 @@
 //! Formats results the way the paper's tables do — including the
 //! order-of-magnitude shorthand for blown-up perplexities ("4e3", "1e4") —
 //! and emits both aligned console text and markdown for EXPERIMENTS.md.
+//!
+//! [`perf`] is the machine-readable side: the `repro bench-json` suite
+//! that snapshots kernel-tier GFLOP/s and native tokens/sec.
+
+pub mod perf;
 
 /// A rendered experiment table.
 #[derive(Clone, Debug)]

@@ -1,0 +1,257 @@
+//! The `repro bench-json` perf trajectory — a machine-readable snapshot of
+//! the kernel-tier speedups (`BENCH_<pr>.json` at the repo root).
+//!
+//! Two sections:
+//!
+//! * `kernels` — GEMM GFLOP/s per compression family × serving shape,
+//!   measured three ways: the dense row-panel kernel over the decoded
+//!   weights, the reference packed kernel (streaming dequant /
+//!   survivor-only), and the fast compressed-domain kernel
+//!   ([`KernelTier::Fast`]). `fast_vs_reference` is the headline ratio the
+//!   perf acceptance bar reads.
+//! * `native` — end-to-end tokens/sec of [`NativeModel::forward`] on a
+//!   small synthetic LM: dense, packed reference tier, packed fast tier.
+//!
+//! The harness is [`crate::util::bench`] (no criterion in the image); the
+//! same measurements back `benches/kernels.rs`, which adds the
+//! baseline-gating workflow described in KERNELS.md.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::artifact::PackedLinear;
+use crate::compress::traits::CompressionSpec;
+use crate::infer::{NativeModel, SiteWeights};
+use crate::model::{sites, ModelConfig};
+use crate::proj::{NmStructured, ProjScratch, Projection};
+use crate::quant::project_qmax;
+use crate::tensor::{ops, simd, KernelTier, Matrix};
+use crate::trainer::init_checkpoint;
+use crate::util::bench::bench;
+use crate::util::parallel::num_threads;
+use crate::util::Json;
+
+/// Compression families measured by the kernel section. Every family's
+/// `k` must divide by its group/M (the shapes below all satisfy 32 | k
+/// and 8 | k).
+const FAMILIES: [&str; 3] = ["int4-g32", "nm-2:4", "nm-4:8"];
+
+/// One measured GEMM row: `(m, k, n)` under one family, GFLOP/s on all
+/// three execution strategies.
+struct KernelRow {
+    family: &'static str,
+    mode: String,
+    m: usize,
+    k: usize,
+    n: usize,
+    dense_gflops: f64,
+    reference_gflops: f64,
+    fast_gflops: f64,
+}
+
+/// Build a weight matrix already on the family's constraint set, plus the
+/// spec that packs it into that family's `PackedLinear` mode.
+fn family_theta(family: &str, m: usize, k: usize, seed: u64)
+    -> (Matrix, CompressionSpec) {
+    match family {
+        "int4-g32" => (project_qmax(&Matrix::randn(m, k, seed), 15.0, 32),
+                       CompressionSpec::quant(4, 32)),
+        "nm-2:4" => {
+            let mut t = Matrix::randn(m, k, seed);
+            NmStructured::new(2, 4).project_rows(&mut t, &mut ProjScratch::new());
+            (t, CompressionSpec::structured_nm(2, 4))
+        }
+        "nm-4:8" => {
+            let mut t = Matrix::randn(m, k, seed);
+            NmStructured::new(4, 8).project_rows(&mut t, &mut ProjScratch::new());
+            (t, CompressionSpec::structured_nm(4, 8))
+        }
+        other => unreachable!("unknown bench family {other}"),
+    }
+}
+
+fn kernel_row(family: &'static str, m: usize, k: usize, n: usize,
+              budget_s: f64, seed: u64) -> KernelRow {
+    let (theta, spec) = family_theta(family, m, k, seed);
+    let packed = PackedLinear::encode(&theta, &spec).prepare();
+    let b = Matrix::randn(k, n, seed + 1);
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    let mut out = Matrix::zeros(m, n);
+    let label = |kind: &str| format!("{family} {m}x{k}x{n} {kind}");
+    let dense = bench(&label("dense"), budget_s, || {
+        ops::matmul_tier_into(&theta, &b, KernelTier::Reference, &mut out);
+        std::hint::black_box(&out);
+    });
+    let reference = bench(&label("reference"), budget_s, || {
+        packed.matmul_tier_into(&b, KernelTier::Reference, &mut out);
+        std::hint::black_box(&out);
+    });
+    let fast = bench(&label("fast"), budget_s, || {
+        packed.matmul_tier_into(&b, KernelTier::Fast, &mut out);
+        std::hint::black_box(&out);
+    });
+    KernelRow {
+        family,
+        mode: packed.mode_name().to_string(),
+        m,
+        k,
+        n,
+        dense_gflops: dense.gflops(flops),
+        reference_gflops: reference.gflops(flops),
+        fast_gflops: fast.gflops(flops),
+    }
+}
+
+/// The synthetic serving LM behind the `native` section. Small enough for
+/// a CI smoke in `--quick` mode; big enough full-size that the site GEMMs
+/// dominate the forward pass.
+fn native_cfg(quick: bool) -> ModelConfig {
+    if quick {
+        ModelConfig {
+            name: "bench-quick".into(), vocab: 64, d_model: 32, n_heads: 2,
+            n_layers: 2, d_ff: 64, seq_len: 16, batch: 1, decode_len: 8,
+            rope_theta: 1e4,
+        }
+    } else {
+        ModelConfig {
+            name: "bench".into(), vocab: 256, d_model: 128, n_heads: 4,
+            n_layers: 2, d_ff: 256, seq_len: 32, batch: 2, decode_len: 8,
+            rope_theta: 1e4,
+        }
+    }
+}
+
+/// Dense / packed-reference / packed-fast models over the *same* projected
+/// weights, so the three throughput numbers serve identical math.
+fn native_models(cfg: &ModelConfig) -> Result<(NativeModel, NativeModel, NativeModel)> {
+    let ck = init_checkpoint(cfg, 11);
+    let mut dense_sw = Vec::new();
+    let mut ref_sw = Vec::new();
+    let mut fast_sw = Vec::new();
+    for s in sites::enumerate_sites(cfg) {
+        let theta = project_qmax(&ck.matrix(&s.param)?, 15.0, 32);
+        let packed = PackedLinear::encode(&theta, &CompressionSpec::quant(4, 32));
+        ref_sw.push((s.param.clone(), SiteWeights::packed(packed.clone())));
+        fast_sw.push((s.param.clone(), SiteWeights::packed(packed)));
+        dense_sw.push((s.param.clone(), SiteWeights::Dense(theta)));
+    }
+    let dense = NativeModel::with_site_weights(&ck, dense_sw)?;
+    let reference = NativeModel::with_site_weights(&ck, ref_sw)?;
+    let mut fast = NativeModel::with_site_weights(&ck, fast_sw)?;
+    fast.set_tier(KernelTier::Fast);
+    Ok((dense, reference, fast))
+}
+
+fn tokens_per_s(name: &str, m: &NativeModel, tokens: &[i32], batch: usize,
+                seq: usize, budget_s: f64) -> Result<f64> {
+    m.forward(tokens, batch, seq)?; // surface errors before the timed loop
+    let r = bench(name, budget_s, || {
+        std::hint::black_box(m.forward(tokens, batch, seq).unwrap());
+    });
+    Ok(batch as f64 * seq as f64 / r.median_s)
+}
+
+/// Run the full suite and assemble the `awp-bench/1` document. `quick`
+/// shrinks shapes and budgets to CI-smoke scale (~a second) — same schema,
+/// not comparable numbers.
+pub fn bench_report(quick: bool) -> Result<Json> {
+    let shapes: &[(usize, usize, usize)] = if quick {
+        &[(64, 64, 32)]
+    } else {
+        &[(256, 256, 128), (1024, 256, 128), (256, 1024, 128)]
+    };
+    let budget = if quick { 0.02 } else { 0.25 };
+    let mut rows = Vec::new();
+    let mut seed = 100u64;
+    for family in FAMILIES {
+        for &(m, k, n) in shapes {
+            rows.push(kernel_row(family, m, k, n, budget, seed));
+            seed += 7;
+        }
+    }
+    let kernels = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("family", Json::Str(r.family.to_string())),
+                    ("mode", Json::Str(r.mode.clone())),
+                    ("m", Json::Num(r.m as f64)),
+                    ("k", Json::Num(r.k as f64)),
+                    ("n", Json::Num(r.n as f64)),
+                    ("dense_gflops", Json::Num(r.dense_gflops)),
+                    ("reference_gflops", Json::Num(r.reference_gflops)),
+                    ("fast_gflops", Json::Num(r.fast_gflops)),
+                    ("fast_vs_reference",
+                     Json::Num(r.fast_gflops / r.reference_gflops)),
+                ])
+            })
+            .collect(),
+    );
+    let cfg = native_cfg(quick);
+    let (batch, seq) = (cfg.batch, cfg.seq_len);
+    let tokens: Vec<i32> = (0..batch * seq)
+        .map(|i| (i * 7 % cfg.vocab) as i32)
+        .collect();
+    let (dense, reference, fast) = native_models(&cfg)?;
+    let nb = if quick { 0.05 } else { 0.3 };
+    let d = tokens_per_s("native dense forward", &dense, &tokens, batch, seq, nb)?;
+    let r = tokens_per_s("native packed reference forward", &reference, &tokens,
+                         batch, seq, nb)?;
+    let f = tokens_per_s("native packed fast forward", &fast, &tokens, batch,
+                         seq, nb)?;
+    let native = Json::obj(vec![
+        ("d_model", Json::Num(cfg.d_model as f64)),
+        ("n_layers", Json::Num(cfg.n_layers as f64)),
+        ("batch", Json::Num(batch as f64)),
+        ("seq", Json::Num(seq as f64)),
+        ("dense_tok_s", Json::Num(d)),
+        ("packed_reference_tok_s", Json::Num(r)),
+        ("packed_fast_tok_s", Json::Num(f)),
+        ("fast_vs_reference", Json::Num(f / r)),
+    ]);
+    Ok(Json::obj(vec![
+        ("schema", Json::Str("awp-bench/1".into())),
+        ("pr", Json::Num(6.0)),
+        ("quick", Json::Bool(quick)),
+        ("threads", Json::Num(num_threads() as f64)),
+        ("simd", Json::Str(simd::backend_name().into())),
+        ("kernels", kernels),
+        ("native", native),
+    ]))
+}
+
+/// Run [`bench_report`] and write it to `path` (the CLI default is
+/// `BENCH_6.json` at the repo root).
+pub fn write_bench_json(path: &Path, quick: bool) -> Result<()> {
+    let report = bench_report(quick)?;
+    fs::write(path, report.to_string() + "\n")
+        .with_context(|| format!("writing bench report {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_report_has_schema_and_positive_ratios() {
+        let report = bench_report(true).unwrap();
+        assert_eq!(report.expect("schema").unwrap().as_str().unwrap(),
+                   "awp-bench/1");
+        let kernels = report.expect("kernels").unwrap().as_arr().unwrap();
+        assert_eq!(kernels.len(), FAMILIES.len());
+        for row in kernels {
+            assert!(row.expect("fast_gflops").unwrap().as_f64().unwrap() > 0.0);
+            assert!(row.expect("fast_vs_reference").unwrap().as_f64().unwrap()
+                    > 0.0);
+        }
+        let native = report.expect("native").unwrap();
+        assert!(native.expect("packed_fast_tok_s").unwrap().as_f64().unwrap()
+                > 0.0);
+        // round-trips through the hand-rolled JSON parser
+        let parsed = Json::parse(&report.to_string()).unwrap();
+        assert_eq!(parsed.expect("pr").unwrap().as_usize().unwrap(), 6);
+    }
+}

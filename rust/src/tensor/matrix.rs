@@ -102,12 +102,31 @@ impl Matrix {
 
     pub fn transpose(&self) -> Matrix {
         let mut out = Matrix::zeros(self.cols, self.rows);
+        self.transpose_into(&mut out);
+        out
+    }
+
+    /// [`Matrix::transpose`] into a caller-owned buffer: `out` is resized
+    /// (reusing its allocation) and every entry overwritten. The
+    /// allocation-free form the per-thread apply workspace in
+    /// `infer::linear` runs on.
+    pub fn transpose_into(&self, out: &mut Matrix) {
+        out.reset_zeroed(self.cols, self.rows);
         for i in 0..self.rows {
             for j in 0..self.cols {
                 out.data[j * self.rows + i] = self.data[i * self.cols + j];
             }
         }
-        out
+    }
+
+    /// Reshape to `(rows, cols)` with all entries zeroed, reusing the
+    /// existing allocation when capacity suffices — equivalent to
+    /// `*self = Matrix::zeros(rows, cols)` without the allocation.
+    pub fn reset_zeroed(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
     }
 
     pub fn frob_norm(&self) -> f64 {
@@ -151,6 +170,17 @@ mod tests {
     fn transpose_involution() {
         let m = Matrix::randn(5, 7, 0);
         assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn transpose_into_reuses_dirty_buffer() {
+        let m = Matrix::randn(4, 6, 1);
+        let mut out = Matrix::from_fn(9, 2, |_, _| f32::NAN);
+        m.transpose_into(&mut out);
+        assert_eq!(out, m.transpose());
+        // and reset_zeroed really zeroes
+        out.reset_zeroed(3, 3);
+        assert_eq!(out, Matrix::zeros(3, 3));
     }
 
     #[test]

@@ -8,7 +8,9 @@
 
 pub mod matrix;
 pub mod ops;
+pub mod simd;
 pub mod topk;
 
 pub use matrix::Matrix;
+pub use simd::KernelTier;
 pub use topk::{row_topk_mask, row_topk_threshold};

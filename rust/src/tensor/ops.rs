@@ -6,19 +6,47 @@
 //! panels because `(W−Θ)·C` at `(1536, 384)·(384, 384)`-ish sizes dominates
 //! their profile (see EXPERIMENTS.md §Perf).
 
+use super::simd::{self, KernelTier};
 use super::Matrix;
 use crate::util::parallel::{par_chunks_mut, par_map};
 
 /// Blocked, thread-parallel `A·B` (row panels scheduled dynamically).
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.cols, b.rows, "matmul {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    matmul_tier(a, b, KernelTier::Reference)
+}
+
+/// [`matmul`] on the fast tier: same row-parallel schedule, SIMD panels
+/// ([`simd::row_panel_fast`]) instead of the reference kernel. Within
+/// tolerance of [`matmul`], not bitwise (see KERNELS.md).
+pub fn matmul_fast(a: &Matrix, b: &Matrix) -> Matrix {
+    matmul_tier(a, b, KernelTier::Fast)
+}
+
+/// `A·B` on the selected [`KernelTier`].
+pub fn matmul_tier(a: &Matrix, b: &Matrix, tier: KernelTier) -> Matrix {
+    let mut out = Matrix::zeros(a.rows, b.cols);
+    matmul_tier_into(a, b, tier, &mut out);
+    out
+}
+
+/// [`matmul_tier`] writing into a caller-owned buffer (resized and zeroed
+/// via [`Matrix::reset_zeroed`], so any dirty buffer works) — the
+/// allocation-free form the per-thread apply workspace runs on. On
+/// `Reference` this is the exact dense kernel over a zeroed buffer, so the
+/// result is bit-identical to [`matmul`].
+pub fn matmul_tier_into(a: &Matrix, b: &Matrix, tier: KernelTier,
+                        out: &mut Matrix) {
+    assert_eq!(a.cols, b.rows, "matmul {}x{} · {}x{}", a.rows, a.cols,
+               b.rows, b.cols);
     let (m, k, n) = (a.rows, a.cols, b.cols);
-    let mut out = Matrix::zeros(m, n);
+    out.reset_zeroed(m, n);
     par_chunks_mut(&mut out.data, n, |i, orow| {
         let arow = &a.data[i * k..(i + 1) * k];
-        matmul_row_panel(arow, b, orow);
+        match tier {
+            KernelTier::Reference => matmul_row_panel(arow, b, orow),
+            KernelTier::Fast => simd::row_panel_fast(arow, &b.data, n, orow),
+        }
     });
-    out
 }
 
 /// One output-row panel of [`matmul`]: `orow += arow · B`, with the KB
@@ -273,6 +301,31 @@ mod tests {
     fn matmul_identity() {
         let a = Matrix::randn(8, 8, 2);
         assert_close(&matmul(&a, &Matrix::eye(8)), &a, 1e-6);
+    }
+
+    #[test]
+    fn matmul_fast_matches_reference_within_tol() {
+        // odd k/n exercise the quad and SIMD-lane tails
+        for (m, k, n) in [(5usize, 33usize, 17usize), (8, 64, 24), (3, 7, 1)] {
+            let a = Matrix::randn(m, k, (m + k) as u64);
+            let b = Matrix::randn(k, n, (k + n) as u64);
+            let fast = matmul_fast(&a, &b);
+            let reference = matmul(&a, &b);
+            assert_close(&fast, &reference, 1e-3);
+        }
+    }
+
+    #[test]
+    fn matmul_tier_into_reference_is_bitwise_matmul() {
+        let a = Matrix::randn(6, 32, 40);
+        let b = Matrix::randn(32, 11, 41);
+        let want = matmul(&a, &b);
+        let mut out = Matrix::from_fn(2, 2, |_, _| f32::NAN); // dirty + wrong shape
+        matmul_tier_into(&a, &b, KernelTier::Reference, &mut out);
+        assert_eq!(out.shape(), want.shape());
+        for (x, y) in out.data.iter().zip(&want.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

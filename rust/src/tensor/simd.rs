@@ -1,0 +1,415 @@
+//! Fast-tier SIMD substrate: the runtime-dispatched row-panel primitives
+//! behind [`KernelTier::Fast`], plus the tier selector itself.
+//!
+//! The repo's reference kernels ([`super::ops::matmul_row_panel`], the
+//! packed GEMMs in `artifact::packed`) are deliberately bit-identical to
+//! each other — same blocking, same accumulation order — which makes them
+//! the *oracle* but pins them to scalar adds in a fixed order. The fast
+//! tier trades that bitwise pin for speed: explicit AVX2+FMA panels when
+//! the CPU has them (detected once at runtime), a portable unrolled scalar
+//! fallback otherwise. FMA fuses the multiply-add rounding step and the
+//! panels accumulate in a different association order, so fast-tier output
+//! is validated against the reference tier by *tolerance*, never by bits
+//! (`rust/tests/fast_kernels.rs`; bounds documented in KERNELS.md).
+//!
+//! `std::simd` is nightly-only and the CI toolchain is stable, so the SIMD
+//! path uses `core::arch::x86_64` intrinsics behind
+//! `is_x86_feature_detected!` (the "explicit AVX2 path" ROADMAP names);
+//! non-x86 targets compile the scalar fallback only.
+//!
+//! Everything here is a *panel* primitive operating on raw slices — the
+//! tier-dispatching GEMMs live in [`super::ops`] (dense) and
+//! `artifact::packed` (compressed domain), which parallelise over output
+//! rows and call into these per row. Each output row is computed
+//! sequentially by exactly one worker, so the fast tier is thread-count
+//! invariant bit-for-bit, just like the reference tier.
+
+/// Which GEMM implementation the serving path runs.
+///
+/// * [`KernelTier::Reference`] — the bit-identical oracle kernels
+///   (streaming dequant / survivor-only sparse / dense row panel, all
+///   sharing one accumulation order). Default everywhere.
+/// * [`KernelTier::Fast`] — compressed-domain + SIMD kernels: integer-
+///   accumulate GEMM for `GroupedInt`, palette-LUT GEMM for `Palette`,
+///   cache-blocked survivor-only GEMM for `SparseMask`, SIMD row panels
+///   for dense. Within documented tolerance of the reference tier, not
+///   bitwise. CLI: `--fast` on `repro eval/generate --native`; env:
+///   `AWP_KERNEL_TIER=fast`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelTier {
+    #[default]
+    Reference,
+    Fast,
+}
+
+impl KernelTier {
+    /// Parse a tier name (`"fast"`, `"reference"`/`"ref"`), case-insensitive.
+    pub fn parse(s: &str) -> Option<KernelTier> {
+        match s.to_ascii_lowercase().as_str() {
+            "fast" => Some(KernelTier::Fast),
+            "reference" | "ref" => Some(KernelTier::Reference),
+            _ => None,
+        }
+    }
+
+    /// Tier from the `AWP_KERNEL_TIER` env knob; unset ⇒ `Reference`,
+    /// unrecognised ⇒ `Reference` with a warning on stderr.
+    pub fn from_env() -> KernelTier {
+        match std::env::var("AWP_KERNEL_TIER") {
+            Ok(v) => KernelTier::parse(&v).unwrap_or_else(|| {
+                eprintln!("[kernels] unknown AWP_KERNEL_TIER '{v}' \
+                           (fast|reference), using reference");
+                KernelTier::Reference
+            }),
+            Err(_) => KernelTier::Reference,
+        }
+    }
+
+    pub fn describe(self) -> &'static str {
+        match self {
+            KernelTier::Reference => "reference",
+            KernelTier::Fast => "fast",
+        }
+    }
+
+    pub fn is_fast(self) -> bool {
+        self == KernelTier::Fast
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn use_avx2() -> bool {
+    use std::sync::OnceLock;
+    static AVX2: OnceLock<bool> = OnceLock::new();
+    *AVX2.get_or_init(|| {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    })
+}
+
+/// Name of the SIMD backend the fast tier selected at runtime —
+/// `"avx2+fma"` or `"portable-scalar"` (logged by the CLI and recorded in
+/// `BENCH_*.json` so perf numbers are comparable across machines).
+pub fn backend_name() -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        return "avx2+fma";
+    }
+    "portable-scalar"
+}
+
+/// Fast row panel `orow += arow · B`, where `bdata` holds `arow.len()`
+/// rows of width `n` contiguously (a sub-range of a row-major matrix is
+/// fine — the per-group quantized kernel passes one group's B rows).
+/// `orow` must arrive zeroed or holding a partial accumulation.
+pub fn row_panel_fast(arow: &[f32], bdata: &[f32], n: usize, orow: &mut [f32]) {
+    assert!(bdata.len() >= arow.len() * n, "B panel too short");
+    assert_eq!(orow.len(), n);
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // Safety: AVX2+FMA presence checked once via use_avx2()
+        unsafe { x86::row_panel(arow, bdata, n, orow) };
+        return;
+    }
+    row_panel_scalar(arow, bdata, n, orow);
+}
+
+fn row_panel_scalar(arow: &[f32], bdata: &[f32], n: usize, orow: &mut [f32]) {
+    let k = arow.len();
+    let mut kk = 0usize;
+    while kk + 4 <= k {
+        let (a0, a1, a2, a3) = (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
+        if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+            let b0 = &bdata[kk * n..kk * n + n];
+            let b1 = &bdata[(kk + 1) * n..(kk + 1) * n + n];
+            let b2 = &bdata[(kk + 2) * n..(kk + 2) * n + n];
+            let b3 = &bdata[(kk + 3) * n..(kk + 3) * n + n];
+            for j in 0..n {
+                orow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+            }
+        }
+        kk += 4;
+    }
+    while kk < k {
+        let av = arow[kk];
+        if av != 0.0 {
+            axpy_scalar(av, &bdata[kk * n..kk * n + n], orow);
+        }
+        kk += 1;
+    }
+}
+
+/// Fast `y += a · x` over equal-length slices.
+pub fn axpy_fast(a: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // Safety: AVX2+FMA presence checked once via use_avx2()
+        unsafe { x86::axpy(a, x, y) };
+        return;
+    }
+    axpy_scalar(a, x, y);
+}
+
+fn axpy_scalar(a: f32, x: &[f32], y: &mut [f32]) {
+    for (yv, xv) in y.iter_mut().zip(x) {
+        *yv += a * xv;
+    }
+}
+
+/// Fast 4-row panel over *non-contiguous* B rows:
+/// `orow += a[0]·r0 + a[1]·r1 + a[2]·r2 + a[3]·r3` — the survivor-quad
+/// primitive of the cache-blocked sparse GEMM (each `r` is one surviving
+/// coefficient's B-row slice within the current column block).
+pub fn panel4_fast(a: [f32; 4], r0: &[f32], r1: &[f32], r2: &[f32],
+                   r3: &[f32], orow: &mut [f32]) {
+    let n = orow.len();
+    assert!(r0.len() == n && r1.len() == n && r2.len() == n && r3.len() == n);
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // Safety: AVX2+FMA presence checked once via use_avx2()
+        unsafe { x86::panel4(a, r0, r1, r2, r3, orow) };
+        return;
+    }
+    for j in 0..n {
+        orow[j] += a[0] * r0[j] + a[1] * r1[j] + a[2] * r2[j] + a[3] * r3[j];
+    }
+}
+
+/// Fast grouped-int rescale `orow += s·gacc − szp·sums` — the once-per-
+/// group epilogue of the integer-accumulate GEMM (`gacc` is the raw code
+/// accumulation, `sums` the per-group activation column sums, `szp =
+/// scale·zero_point`).
+pub fn rescale_add_fast(orow: &mut [f32], gacc: &[f32], sums: &[f32],
+                        s: f32, szp: f32) {
+    let n = orow.len();
+    assert!(gacc.len() == n && sums.len() == n);
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // Safety: AVX2+FMA presence checked once via use_avx2()
+        unsafe { x86::rescale_add(orow, gacc, sums, s, szp) };
+        return;
+    }
+    for j in 0..n {
+        orow[j] += s * gacc[j] - szp * sums[j];
+    }
+}
+
+/// Fast element-wise `y += x`.
+pub fn add_assign_fast(y: &mut [f32], x: &[f32]) {
+    axpy_fast(1.0, x, y);
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! AVX2+FMA bodies. Every function is `unsafe` with the contract that
+    //! the caller verified `avx2` and `fma` are available (the public
+    //! wrappers gate on `use_avx2()`); slices are plain `&[f32]`, all
+    //! loads/stores unaligned.
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn row_panel(arow: &[f32], bdata: &[f32], n: usize,
+                            orow: &mut [f32]) {
+        let k = arow.len();
+        let bp = bdata.as_ptr();
+        let op = orow.as_mut_ptr();
+        let mut kk = 0usize;
+        // 4 B-rows per pass over the output row, 8 lanes per FMA
+        while kk + 4 <= k {
+            let a0 = _mm256_set1_ps(arow[kk]);
+            let a1 = _mm256_set1_ps(arow[kk + 1]);
+            let a2 = _mm256_set1_ps(arow[kk + 2]);
+            let a3 = _mm256_set1_ps(arow[kk + 3]);
+            let b0 = bp.add(kk * n);
+            let b1 = bp.add((kk + 1) * n);
+            let b2 = bp.add((kk + 2) * n);
+            let b3 = bp.add((kk + 3) * n);
+            let mut j = 0usize;
+            while j + 8 <= n {
+                let mut acc = _mm256_loadu_ps(op.add(j));
+                acc = _mm256_fmadd_ps(a0, _mm256_loadu_ps(b0.add(j)), acc);
+                acc = _mm256_fmadd_ps(a1, _mm256_loadu_ps(b1.add(j)), acc);
+                acc = _mm256_fmadd_ps(a2, _mm256_loadu_ps(b2.add(j)), acc);
+                acc = _mm256_fmadd_ps(a3, _mm256_loadu_ps(b3.add(j)), acc);
+                _mm256_storeu_ps(op.add(j), acc);
+                j += 8;
+            }
+            while j < n {
+                *op.add(j) += arow[kk] * *b0.add(j)
+                    + arow[kk + 1] * *b1.add(j)
+                    + arow[kk + 2] * *b2.add(j)
+                    + arow[kk + 3] * *b3.add(j);
+                j += 1;
+            }
+            kk += 4;
+        }
+        while kk < k {
+            let av = arow[kk];
+            if av != 0.0 {
+                axpy(av, std::slice::from_raw_parts(bp.add(kk * n), n), orow);
+            }
+            kk += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        let n = y.len();
+        let av = _mm256_set1_ps(a);
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut j = 0usize;
+        while j + 8 <= n {
+            let acc = _mm256_fmadd_ps(av, _mm256_loadu_ps(xp.add(j)),
+                                      _mm256_loadu_ps(yp.add(j)));
+            _mm256_storeu_ps(yp.add(j), acc);
+            j += 8;
+        }
+        while j < n {
+            *yp.add(j) += a * *xp.add(j);
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn panel4(a: [f32; 4], r0: &[f32], r1: &[f32], r2: &[f32],
+                         r3: &[f32], orow: &mut [f32]) {
+        let n = orow.len();
+        let a0 = _mm256_set1_ps(a[0]);
+        let a1 = _mm256_set1_ps(a[1]);
+        let a2 = _mm256_set1_ps(a[2]);
+        let a3 = _mm256_set1_ps(a[3]);
+        let op = orow.as_mut_ptr();
+        let mut j = 0usize;
+        while j + 8 <= n {
+            let mut acc = _mm256_loadu_ps(op.add(j));
+            acc = _mm256_fmadd_ps(a0, _mm256_loadu_ps(r0.as_ptr().add(j)), acc);
+            acc = _mm256_fmadd_ps(a1, _mm256_loadu_ps(r1.as_ptr().add(j)), acc);
+            acc = _mm256_fmadd_ps(a2, _mm256_loadu_ps(r2.as_ptr().add(j)), acc);
+            acc = _mm256_fmadd_ps(a3, _mm256_loadu_ps(r3.as_ptr().add(j)), acc);
+            _mm256_storeu_ps(op.add(j), acc);
+            j += 8;
+        }
+        while j < n {
+            *op.add(j) += a[0] * r0[j] + a[1] * r1[j] + a[2] * r2[j]
+                + a[3] * r3[j];
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn rescale_add(orow: &mut [f32], gacc: &[f32], sums: &[f32],
+                              s: f32, szp: f32) {
+        let n = orow.len();
+        let sv = _mm256_set1_ps(s);
+        let zv = _mm256_set1_ps(szp);
+        let op = orow.as_mut_ptr();
+        let mut j = 0usize;
+        while j + 8 <= n {
+            let mut acc = _mm256_loadu_ps(op.add(j));
+            acc = _mm256_fmadd_ps(sv, _mm256_loadu_ps(gacc.as_ptr().add(j)), acc);
+            acc = _mm256_fnmadd_ps(zv, _mm256_loadu_ps(sums.as_ptr().add(j)), acc);
+            _mm256_storeu_ps(op.add(j), acc);
+            j += 8;
+        }
+        while j < n {
+            *op.add(j) += s * gacc[j] - szp * sums[j];
+            j += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Matrix;
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+                    "{what} entry {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn tier_parse_and_describe() {
+        assert_eq!(KernelTier::parse("fast"), Some(KernelTier::Fast));
+        assert_eq!(KernelTier::parse("FAST"), Some(KernelTier::Fast));
+        assert_eq!(KernelTier::parse("reference"), Some(KernelTier::Reference));
+        assert_eq!(KernelTier::parse("ref"), Some(KernelTier::Reference));
+        assert_eq!(KernelTier::parse("warp"), None);
+        assert_eq!(KernelTier::default(), KernelTier::Reference);
+        assert_eq!(KernelTier::Fast.describe(), "fast");
+        assert!(KernelTier::Fast.is_fast() && !KernelTier::Reference.is_fast());
+    }
+
+    #[test]
+    fn backend_name_is_known() {
+        let name = backend_name();
+        assert!(name == "avx2+fma" || name == "portable-scalar", "{name}");
+    }
+
+    #[test]
+    fn row_panel_fast_matches_reference_panel() {
+        // odd k (quad tail) and odd n (lane tail) both exercised
+        for (k, n) in [(7usize, 5usize), (16, 8), (33, 17), (64, 24), (1, 1)] {
+            let a = Matrix::randn(1, k, k as u64);
+            let b = Matrix::randn(k, n, n as u64);
+            let mut want = vec![0.0f32; n];
+            crate::tensor::ops::matmul_row_panel(&a.data, &b, &mut want);
+            let mut got = vec![0.0f32; n];
+            row_panel_fast(&a.data, &b.data, n, &mut got);
+            assert_close(&got, &want, 1e-5, &format!("panel {k}x{n}"));
+        }
+    }
+
+    #[test]
+    fn row_panel_fast_accumulates_into_partial() {
+        let a = Matrix::randn(1, 12, 3);
+        let b = Matrix::randn(12, 9, 4);
+        let mut out = vec![2.0f32; 9];
+        let mut want = vec![2.0f32; 9];
+        row_panel_fast(&a.data, &b.data, 9, &mut out);
+        crate::tensor::ops::matmul_row_panel(&a.data, &b, &mut want);
+        assert_close(&out, &want, 1e-5, "partial accumulation");
+    }
+
+    #[test]
+    fn axpy_and_panel4_match_scalar_math() {
+        let x = Matrix::randn(4, 21, 9);
+        let mut y = vec![0.5f32; 21];
+        axpy_fast(0.75, x.row(0), &mut y);
+        for (j, v) in y.iter().enumerate() {
+            let want = 0.5 + 0.75 * x.row(0)[j];
+            assert!((v - want).abs() <= 1e-6 * (1.0 + want.abs()), "axpy {j}");
+        }
+        let a = [0.3f32, -1.1, 2.4, 0.05];
+        let mut o = vec![0.0f32; 21];
+        panel4_fast(a, x.row(0), x.row(1), x.row(2), x.row(3), &mut o);
+        for j in 0..21 {
+            let want = a[0] * x.row(0)[j] + a[1] * x.row(1)[j]
+                + a[2] * x.row(2)[j] + a[3] * x.row(3)[j];
+            assert!((o[j] - want).abs() <= 1e-5 * (1.0 + want.abs()),
+                    "panel4 {j}");
+        }
+    }
+
+    #[test]
+    fn rescale_add_matches_identity() {
+        let gacc = Matrix::randn(1, 19, 5);
+        let sums = Matrix::randn(1, 19, 6);
+        let (s, szp) = (0.125f32, 0.125 * 7.0);
+        let mut o = vec![1.0f32; 19];
+        rescale_add_fast(&mut o, &gacc.data, &sums.data, s, szp);
+        for j in 0..19 {
+            let want = 1.0 + s * gacc.data[j] - szp * sums.data[j];
+            assert!((o[j] - want).abs() <= 1e-5 * (1.0 + want.abs()),
+                    "rescale {j}");
+        }
+    }
+}

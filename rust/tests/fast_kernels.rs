@@ -1,0 +1,148 @@
+//! Differential validation of the fast kernel tier
+//! ([`awp::tensor::KernelTier::Fast`]): every compression family × awkward
+//! shape must match the reference tier within the documented tolerance
+//! (`|x − y| ≤ 1e-4 · (1 + |x| + |y|)` per entry — KERNELS.md), the
+//! reference tier must stay bitwise equal to the dense GEMM over the
+//! decoded weights, and the fast tier must be thread-count invariant.
+//!
+//! The fast kernels change accumulation order (8-lane FMA panels, per-group
+//! rescale of integer accumulators), so bit equality is the *wrong* oracle
+//! here — tolerance is the contract, and the tolerance is tight enough that
+//! any indexing, zero-point or tail-handling bug (O(1) errors) still fails.
+
+mod common;
+
+use awp::artifact::PackedLinear;
+use awp::compress::traits::CompressionSpec;
+use awp::infer::{NativeModel, SiteWeights};
+use awp::model::sites::enumerate_sites;
+use awp::proj::ProjScratch;
+use awp::tensor::{ops, KernelTier, Matrix};
+use awp::trainer::init_checkpoint;
+use awp::util::parallel::with_thread_budget;
+use awp::util::Rng;
+
+use common::{assert_bits_eq, lm_cfg};
+
+/// The fast-tier tolerance from KERNELS.md.
+fn assert_close(fast: &Matrix, reference: &Matrix, what: &str) {
+    assert_eq!(fast.shape(), reference.shape(), "{what}");
+    for (i, (a, b)) in fast.data.iter().zip(&reference.data).enumerate() {
+        let tol = 1e-4 * (1.0 + a.abs() + b.abs());
+        assert!((a - b).abs() <= tol, "{what} entry {i}: {a} vs {b}");
+    }
+}
+
+/// Proptest-style sweep: every spec family over widths that stress the
+/// kernels' edge cases — group-clamp widths (`k < group`), ragged N:M
+/// tails (`k % m != 0`), survivor-quad tails, and `n` that is not a
+/// multiple of the 8-float SIMD lane count (including `n = 1`).
+#[test]
+fn fast_gemm_matches_reference_over_random_shapes_and_families() {
+    let cases: &[(CompressionSpec, &[usize])] = &[
+        (CompressionSpec::prune(0.4), &[5, 17, 30, 64, 100]),
+        (CompressionSpec::quant(4, 32), &[16, 24, 32, 64, 96]),
+        (CompressionSpec::quant(2, 16), &[8, 16, 48, 64]),
+        (CompressionSpec::joint(0.5, 4, 32), &[16, 32, 64, 96]),
+        (CompressionSpec::structured_nm(2, 4), &[8, 30, 64, 100]),
+        (CompressionSpec::structured_nm(4, 8), &[16, 30, 64]),
+        (CompressionSpec::joint_nm(2, 4, 4, 32), &[32, 64, 96]),
+    ];
+    let ns = [1usize, 3, 7, 8, 17, 33];
+    let mut rng = Rng::new(0xFA57);
+    for (case, (spec, ks)) in cases.iter().enumerate() {
+        for &k in ks.iter() {
+            for draw in 0..2u64 {
+                let m = 1 + rng.below(12);
+                let n = ns[rng.below(ns.len())];
+                let seed = 1000 + case as u64 * 100 + k as u64 + draw;
+                let mut theta = Matrix::randn(m, k, seed);
+                spec.projection(theta.cols)
+                    .project_rows(&mut theta, &mut ProjScratch::new());
+                let packed = PackedLinear::encode(&theta, spec);
+                let prepared = packed.clone().prepare();
+                let b = Matrix::randn(k, n, seed + 1);
+                let what = format!("spec={:?} {m}x{k}x{n} mode={}",
+                                   spec.mode, prepared.mode_name());
+                let fast = prepared.matmul_tier(&b, KernelTier::Fast);
+                let reference = prepared.matmul_tier(&b, KernelTier::Reference);
+                assert_close(&fast, &reference, &what);
+                // the reference tier is the bitwise oracle: identical to
+                // the dense GEMM over the decoded weights
+                assert_bits_eq(&reference, &ops::matmul(&packed.decode(), &b),
+                               &what);
+            }
+        }
+    }
+}
+
+/// End-to-end serving: an all-packed int4 model on the fast tier produces
+/// logits and NLL within tolerance of the reference tier, and the fast
+/// tier's logits are bitwise identical across thread budgets.
+#[test]
+fn fast_model_matches_reference_and_is_thread_invariant() {
+    let cfg = lm_cfg();
+    let ck = init_checkpoint(&cfg, 9);
+    let spec = CompressionSpec::quant(4, 32);
+    let mut ref_sites = Vec::new();
+    let mut fast_sites = Vec::new();
+    for s in enumerate_sites(&cfg) {
+        let mut theta = ck.matrix(&s.param).unwrap();
+        spec.projection(theta.cols)
+            .project_rows(&mut theta, &mut ProjScratch::new());
+        let packed = PackedLinear::encode(&theta, &spec);
+        ref_sites.push((s.param.clone(), SiteWeights::packed(packed.clone())));
+        fast_sites.push((s.param, SiteWeights::packed(packed)));
+    }
+    let reference = NativeModel::with_site_weights(&ck, ref_sites).unwrap();
+    let mut fast = NativeModel::with_site_weights(&ck, fast_sites).unwrap();
+    fast.set_tier(KernelTier::Fast);
+    let (batch, seq) = (cfg.batch, cfg.seq_len);
+    let tokens: Vec<i32> = (0..batch * seq)
+        .map(|i| (i * 37 % cfg.vocab) as i32)
+        .collect();
+    let a = reference.forward(&tokens, batch, seq).unwrap();
+    let b = fast.forward(&tokens, batch, seq).unwrap();
+    assert_close(&b, &a, "fast vs reference logits");
+    let (nll_ref, c_ref) = reference.nll(&tokens, batch, seq).unwrap();
+    let (nll_fast, c_fast) = fast.nll(&tokens, batch, seq).unwrap();
+    assert_eq!(c_ref, c_fast);
+    assert!((nll_ref - nll_fast).abs() / nll_ref.abs() < 1e-3,
+            "nll {nll_ref} vs {nll_fast}");
+    // fast-tier parallelism splits only independent output rows, so the
+    // logits must not move with the thread budget — bitwise, like the
+    // reference tier's guarantee in rust/tests/awp_threads_env.rs
+    let f1 = with_thread_budget(1, || fast.forward(&tokens, batch, seq).unwrap());
+    let f4 = with_thread_budget(4, || fast.forward(&tokens, batch, seq).unwrap());
+    assert_bits_eq(&f1, &f4, "fast tier across thread budgets");
+}
+
+/// `generate --native --fast` path: greedy decode on the fast tier runs
+/// end-to-end. (Token-level equality with the reference tier is *not*
+/// asserted — a near-tie can legitimately flip under tolerance-level
+/// logit differences.)
+#[test]
+fn fast_tier_generation_runs() {
+    let cfg = lm_cfg();
+    let ck = init_checkpoint(&cfg, 21);
+    let mut nm = NativeModel::from_checkpoint(&ck).unwrap();
+    nm.set_tier(KernelTier::Fast);
+    let text = awp::eval::native_generate(&nm, "ab", 8).unwrap();
+    assert!(text.len() >= 2, "generation produced {text:?}");
+}
+
+/// The `AWP_KERNEL_TIER` env knob: explicit values parse, garbage falls
+/// back to the reference tier. Runs in this dedicated test binary because
+/// it mutates process env.
+#[test]
+fn kernel_tier_env_knob() {
+    assert_eq!(KernelTier::parse("fast"), Some(KernelTier::Fast));
+    assert_eq!(KernelTier::parse("REFERENCE"), Some(KernelTier::Reference));
+    assert_eq!(KernelTier::parse("turbo"), None);
+    std::env::set_var("AWP_KERNEL_TIER", "fast");
+    assert_eq!(KernelTier::from_env(), KernelTier::Fast);
+    std::env::set_var("AWP_KERNEL_TIER", "nonsense");
+    assert_eq!(KernelTier::from_env(), KernelTier::Reference);
+    std::env::remove_var("AWP_KERNEL_TIER");
+    assert_eq!(KernelTier::from_env(), KernelTier::Reference);
+}

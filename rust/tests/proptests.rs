@@ -266,7 +266,7 @@ fn prop_native_packed_forward_matches_dense() {
                 .project_rows(&mut theta, &mut ProjScratch::new());
             let packed = PackedLinear::encode(&theta, &spec);
             assert!(packed.reconstructs(&theta), "seed={seed} {}", s.param);
-            packed_sites.push((s.param.clone(), SiteWeights::Packed(packed)));
+            packed_sites.push((s.param.clone(), SiteWeights::packed(packed)));
             dense_sites.push((s.param, SiteWeights::Dense(theta)));
         }
         let dense = NativeModel::with_site_weights(&ck, dense_sites).unwrap();
