@@ -15,6 +15,12 @@ use super::perplexity::checkpoint_args;
 /// Right-aligned decode window: the last `window` tokens of `tokens`,
 /// left-padded with `pad` (the tokenizer's [`ByteTokenizer::pad_id`], not
 /// a hard-coded byte) when the prompt is shorter than the window.
+///
+/// Only the AOT `decode_step` executable still consumes this — its program
+/// is compiled for a fixed `(1, decode_len)` geometry. The native path
+/// ([`native_generate`], `repro serve`) decodes through a growing
+/// [`crate::infer::DecodeSession`] instead, where positions are stable and
+/// the K/V cache makes each step O(ctx).
 pub fn decode_window(tokens: &[i32], window: usize, pad: i32) -> Vec<i32> {
     let mut ctx = vec![pad; window];
     let take = tokens.len().min(window);
@@ -23,8 +29,8 @@ pub fn decode_window(tokens: &[i32], window: usize, pad: i32) -> Vec<i32> {
 }
 
 /// Greedy pick over a logit vector (ties break to the lowest id, like
-/// `jnp.argmax`).
-fn argmax(logits: &[f32]) -> i32 {
+/// `jnp.argmax`). Panics on an empty slice.
+pub fn argmax(logits: &[f32]) -> i32 {
     logits
         .iter()
         .enumerate()
@@ -56,19 +62,27 @@ pub fn generate(handle: &RuntimeHandle, manifest: &Manifest, model: &str,
 
 /// Greedy generation through the native forward pass — no runtime, and
 /// the model may hold packed sites ([`NativeModel::from_artifact`]): the
-/// first decode path that serves a compressed artifact without assembling
-/// it. Deterministic at any thread budget
-/// (`rust/tests/native_forward.rs`).
+/// decode path that serves a compressed artifact without assembling it.
+/// One KV-cached [`crate::infer::DecodeSession`] carries the whole run:
+/// the prompt is prefilled in one batched pass, then each new token is an
+/// O(ctx) `decode_step` over a growing left-aligned context (no sliding
+/// window, no pad tokens — positions are stable, which is what lets the
+/// cache be exact). Deterministic at any thread budget
+/// (`rust/tests/native_forward.rs`, `rust/tests/serve_decode.rs`).
 pub fn native_generate(model: &NativeModel, prompt: &str, n_tokens: usize)
     -> Result<String> {
-    let window = model.config().decode_len;
     let tok = ByteTokenizer;
     let mut tokens: Vec<i32> = tok.encode(prompt.as_bytes());
     ensure!(!tokens.is_empty(), "prompt must be non-empty");
-    for _ in 0..n_tokens {
-        let ctx = decode_window(&tokens, window, tok.pad_id());
-        let logits = model.logits_last(&ctx)?;
-        tokens.push(argmax(&logits));
+    let mut session = model.new_session(tokens.len() + n_tokens.max(1) - 1);
+    let mut logits = model.prefill(&mut session, &tokens)?;
+    for i in 0..n_tokens {
+        let next = argmax(&logits);
+        tokens.push(next);
+        if i + 1 < n_tokens {
+            // the final token's own logits are never consumed
+            logits = model.decode_step(&mut session, next)?;
+        }
     }
     Ok(tok.decode_lossy_string(&tokens))
 }

@@ -8,6 +8,6 @@ pub mod generate;
 pub mod perplexity;
 pub mod reconstruction;
 
-pub use generate::{decode_window, generate, native_generate};
+pub use generate::{argmax, decode_window, generate, native_generate};
 pub use perplexity::{native_perplexity, perplexity, PerplexityReport};
 pub use reconstruction::{layer_report, recompute_report, LayerReport};

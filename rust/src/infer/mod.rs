@@ -33,9 +33,15 @@
 //! per-position NLL) runs under the `AWP_THREADS` budget via
 //! [`crate::util::parallel`] and is thread-count invariant on *both*
 //! tiers (each output row is computed sequentially by one worker).
+//!
+//! Incremental decode rides on [`DecodeSession`] — per-block K/V caches
+//! plus the RoPE position offset — so generation and `repro serve` pay
+//! O(ctx) per token ([`NativeModel::prefill`] /
+//! [`NativeModel::decode_step`]), bit-identical to the full-window
+//! forward at the reference tier (`rust/tests/serve_decode.rs`).
 
 pub mod linear;
 pub mod model;
 
 pub use linear::{LinearOp, SiteWeights};
-pub use model::NativeModel;
+pub use model::{DecodeSession, NativeModel};

@@ -16,6 +16,22 @@
 //! units (rows, `(batch, head)` blocks), so logits are also deterministic
 //! across thread budgets. Together: packed logits ≡ dense logits ≡ the
 //! same bits at any `AWP_THREADS` (`rust/tests/native_forward.rs`).
+//!
+//! ### KV-cached incremental decode
+//!
+//! [`DecodeSession`] holds per-block post-RoPE K/V rows plus the next RoPE
+//! position, so generation pays O(ctx) per new token instead of re-running
+//! the O(ctx²) full window. [`NativeModel::prefill`] pushes a batch of
+//! tokens through every block once (appending their K/V rows),
+//! [`NativeModel::decode_step`] is the one-token case. At the
+//! [`KernelTier::Reference`] tier the cached path is **bit-identical** to
+//! [`NativeModel::forward`] over the same prefix: every reference GEMM
+//! accumulates each output element over `k` in a fixed order that does not
+//! depend on how many activation columns ride along, RMSNorm/RoPE/SiLU are
+//! row-local, and `cached_attention` replays `causal_attention`'s exact
+//! per-position dot/softmax/mix sequence against the cached rows
+//! (`rust/tests/serve_decode.rs` pins this differentially). The fast tier
+//! stays within the KERNELS.md tolerance, as for the full forward.
 
 use std::collections::HashMap;
 
@@ -31,6 +47,60 @@ use super::linear::{LinearOp, SiteWeights};
 /// Sites per transformer block, in [`sites::enumerate_sites`] order
 /// (wq, wk, wv, wo, w_up, w_down).
 const SITES_PER_BLOCK: usize = 6;
+
+/// Per-session decode state: one post-RoPE K buffer and one V buffer per
+/// transformer block (each `(capacity, d_model)`, rows `..len()` valid)
+/// plus the next RoPE position. Create with [`NativeModel::new_session`],
+/// grow with [`NativeModel::prefill`] / [`NativeModel::decode_step`]. The
+/// session owns no weights — it is pure context state, cheap to hold per
+/// connection in a server.
+#[derive(Debug)]
+pub struct DecodeSession {
+    /// Per-layer cached key rows (RoPE already applied).
+    k: Vec<Matrix>,
+    /// Per-layer cached value rows.
+    v: Vec<Matrix>,
+    /// Cached positions; also the RoPE offset of the next token.
+    len: usize,
+    /// Fixed context window this session was allocated for.
+    capacity: usize,
+}
+
+impl DecodeSession {
+    /// Positions cached so far — the RoPE offset the next token gets.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Maximum context length this session can hold.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Positions left before the session is full.
+    pub fn remaining(&self) -> usize {
+        self.capacity - self.len
+    }
+
+    /// Forget the cached context, keeping the allocated buffers.
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    /// Resident size of the K/V buffers in bytes (the LRU eviction
+    /// accounting unit in `serve::SessionStore`).
+    pub fn kv_bytes(&self) -> usize {
+        self.k
+            .iter()
+            .chain(&self.v)
+            .map(|m| m.data.len() * std::mem::size_of::<f32>())
+            .sum()
+    }
+}
 
 /// A transformer LM ready to run on the CPU: embeddings and norms held
 /// dense (they are never compressed), block-linear sites held as
@@ -241,12 +311,96 @@ impl NativeModel {
         Ok((nlls.into_iter().sum(), batch * (seq - 1)))
     }
 
-    /// Last-position logits of a `(1, len)` context — the decode step
-    /// behind [`crate::eval::native_generate`].
+    /// Last-position logits of a `(1, len)` context, computed through a
+    /// throwaway [`DecodeSession`]. One-shot callers get the same bits as
+    /// `forward(ctx, 1, len)`'s last row (pinned by test); loops that decode
+    /// token-by-token should hold their own session and call
+    /// [`NativeModel::decode_step`] instead.
     pub fn logits_last(&self, ctx: &[i32]) -> Result<Vec<f32>> {
         ensure!(!ctx.is_empty(), "decode context must be non-empty");
-        let logits = self.forward(ctx, 1, ctx.len())?;
-        Ok(logits.row(ctx.len() - 1).to_vec())
+        let mut session = self.new_session(ctx.len());
+        self.prefill(&mut session, ctx)
+    }
+
+    /// Allocate a [`DecodeSession`] holding up to `capacity` positions of
+    /// per-block K/V state for this model.
+    pub fn new_session(&self, capacity: usize) -> DecodeSession {
+        let capacity = capacity.max(1);
+        let d = self.cfg.d_model;
+        let alloc = || {
+            (0..self.cfg.n_layers)
+                .map(|_| Matrix::zeros(capacity, d))
+                .collect()
+        };
+        DecodeSession { k: alloc(), v: alloc(), len: 0, capacity }
+    }
+
+    /// Push `tokens` through the model in one batched pass, appending their
+    /// K/V rows to `session`, and return the logits of the **last** new
+    /// position. The first call plays the prompt (prefill); later calls
+    /// extend the same context, so `prefill(a); prefill(b)` ≡
+    /// `prefill(a ++ b)` and — at the reference tier — ≡ the last row of
+    /// `forward(a ++ b)`, bitwise.
+    pub fn prefill(&self, session: &mut DecodeSession, tokens: &[i32])
+        -> Result<Vec<f32>> {
+        let d = self.cfg.d_model;
+        let nh = self.cfg.n_heads;
+        let dh = d / nh;
+        ensure!(session.k.len() == self.cfg.n_layers
+                    && session.k.iter().all(|m| m.cols == d),
+                "decode session does not fit this model");
+        let seq = tokens.len();
+        ensure!(seq >= 1, "prefill needs at least one token");
+        let start = session.len;
+        ensure!(start + seq <= session.capacity,
+                "decode session full: {start} cached + {seq} new > capacity {}",
+                session.capacity);
+        let mut x = Matrix::zeros(seq, d);
+        for (i, &tok) in tokens.iter().enumerate() {
+            ensure!(tok >= 0 && (tok as usize) < self.cfg.vocab,
+                    "token {tok} outside vocab {}", self.cfg.vocab);
+            x.row_mut(i).copy_from_slice(self.embed.row(tok as usize));
+        }
+        // rotation tables for absolute positions start..start+seq — same
+        // bits as rows start.. of the full-window tables
+        let (cos, sin) = rope_tables_from(start, seq, dh, self.cfg.rope_theta);
+        for l in 0..self.cfg.n_layers {
+            let h = rmsnorm(&x, &self.ln1[l]);
+            let mut q = self.site(l, 0).apply_tier(&h, self.tier);
+            let mut k = self.site(l, 1).apply_tier(&h, self.tier);
+            let v = self.site(l, 2).apply_tier(&h, self.tier);
+            rope_rows(&mut q, seq, nh, dh, &cos, &sin);
+            rope_rows(&mut k, seq, nh, dh, &cos, &sin);
+            for i in 0..seq {
+                session.k[l].row_mut(start + i).copy_from_slice(k.row(i));
+                session.v[l].row_mut(start + i).copy_from_slice(v.row(i));
+            }
+            let o = cached_attention(&q, &session.k[l], &session.v[l], start,
+                                     seq, nh, dh);
+            let o = self.site(l, 3).apply_tier(&o, self.tier);
+            add_inplace(&mut x, &o);
+            let h = rmsnorm(&x, &self.ln2[l]);
+            let mut u = self.site(l, 4).apply_tier(&h, self.tier);
+            silu_inplace(&mut u);
+            let down = self.site(l, 5).apply_tier(&u, self.tier);
+            add_inplace(&mut x, &down);
+        }
+        session.len = start + seq;
+        // final norm + tied head for the last new position only
+        let mut last = Matrix::zeros(1, d);
+        last.row_mut(0).copy_from_slice(x.row(seq - 1));
+        let xf = rmsnorm(&last, &self.ln_f);
+        let logits =
+            ops::matmul_tier(&self.embed, &xf.transpose(), self.tier).transpose();
+        Ok(logits.row(0).to_vec())
+    }
+
+    /// Incremental decode: append one token to the cached context and return
+    /// its logits — O(ctx) per call where the full-window forward is
+    /// O(ctx²) per generated token.
+    pub fn decode_step(&self, session: &mut DecodeSession, token: i32)
+        -> Result<Vec<f32>> {
+        self.prefill(session, &[token])
     }
 }
 
@@ -287,10 +441,19 @@ fn silu_inplace(u: &mut Matrix) {
 
 /// Per-(position, frequency) rotation tables, `(seq × dh/2)` each.
 fn rope_tables(seq: usize, dh: usize, theta: f64) -> (Vec<f32>, Vec<f32>) {
+    rope_tables_from(0, seq, dh, theta)
+}
+
+/// Rotation tables for absolute positions `start..start + seq`. Each row is
+/// a pure function of the absolute position, so the table for position `p`
+/// is bit-identical whether built from 0 or from any offset — the property
+/// that lets an incremental decode step agree with the full window.
+fn rope_tables_from(start: usize, seq: usize, dh: usize, theta: f64)
+    -> (Vec<f32>, Vec<f32>) {
     let half = dh / 2;
     let mut cos = Vec::with_capacity(seq * half);
     let mut sin = Vec::with_capacity(seq * half);
-    for s in 0..seq {
+    for s in start..start + seq {
         for c in 0..half {
             let freq = theta.powf(-(c as f64) / half as f64);
             let ang = (s as f64 * freq) as f32;
@@ -371,6 +534,62 @@ fn causal_attention(q: &Matrix, k: &Matrix, v: &Matrix, batch: usize,
         let (bi, h) = (bh / nh, bh % nh);
         for si in 0..seq {
             o.row_mut(bi * seq + si)[h * dh..(h + 1) * dh]
+                .copy_from_slice(&block[si * dh..(si + 1) * dh]);
+        }
+    }
+    o
+}
+
+/// Causal attention of `seq` fresh query rows (absolute positions
+/// `start..start + seq`) against the cached K/V rows `0..start + seq` — the
+/// KV-cache counterpart of `causal_attention` (batch is always 1). For each
+/// query position it runs the *same* dot/softmax/mix sequence over the same
+/// key range in the same order, so given cache rows identical to the
+/// full-window K/V it produces bit-identical output rows.
+fn cached_attention(q: &Matrix, kc: &Matrix, vc: &Matrix, start: usize,
+                    seq: usize, nh: usize, dh: usize) -> Matrix {
+    let d = nh * dh;
+    let inv = 1.0 / (dh as f32).sqrt();
+    let total = start + seq;
+    let blocks = par_map(nh, |h| {
+        let col = h * dh;
+        let mut out = vec![0.0f32; seq * dh];
+        let mut scores = vec![0.0f32; total];
+        for si in 0..seq {
+            let pos = start + si;
+            let qrow = &q.row(si)[col..col + dh];
+            for sj in 0..=pos {
+                let krow = &kc.row(sj)[col..col + dh];
+                let mut dot = 0.0f32;
+                for c in 0..dh {
+                    dot += qrow[c] * krow[c];
+                }
+                scores[sj] = dot * inv;
+            }
+            let m = scores[..=pos]
+                .iter()
+                .cloned()
+                .fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0.0f32;
+            for s in scores[..=pos].iter_mut() {
+                *s = (*s - m).exp();
+                denom += *s;
+            }
+            let o = &mut out[si * dh..(si + 1) * dh];
+            for sj in 0..=pos {
+                let p = scores[sj] / denom;
+                let vrow = &vc.row(sj)[col..col + dh];
+                for c in 0..dh {
+                    o[c] += p * vrow[c];
+                }
+            }
+        }
+        out
+    });
+    let mut o = Matrix::zeros(seq, d);
+    for (h, block) in blocks.iter().enumerate() {
+        for si in 0..seq {
+            o.row_mut(si)[h * dh..(h + 1) * dh]
                 .copy_from_slice(&block[si * dh..(si + 1) * dh]);
         }
     }
@@ -462,6 +681,66 @@ mod tests {
         let last = m.logits_last(&ctx).unwrap();
         let full = m.forward(&ctx, 1, 6).unwrap();
         assert_eq!(last, full.row(5));
+    }
+
+    #[test]
+    fn decode_steps_match_full_window_bitwise() {
+        let ck = init_checkpoint(&cfg(), 8);
+        let m = NativeModel::from_checkpoint(&ck).unwrap();
+        let tokens: Vec<i32> = (0..8).map(|i| (i * 13 % 32) as i32).collect();
+        let mut sess = m.new_session(tokens.len());
+        let mut cached = vec![m.prefill(&mut sess, &tokens[..1]).unwrap()];
+        for &t in &tokens[1..] {
+            cached.push(m.decode_step(&mut sess, t).unwrap());
+        }
+        assert_eq!(sess.len(), tokens.len());
+        assert_eq!(sess.remaining(), 0);
+        for (i, got) in cached.iter().enumerate() {
+            let full = m.forward(&tokens[..=i], 1, i + 1).unwrap();
+            for (a, b) in got.iter().zip(full.row(i)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "position {i} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_equals_one_shot() {
+        let ck = init_checkpoint(&cfg(), 9);
+        let m = NativeModel::from_checkpoint(&ck).unwrap();
+        let tokens: Vec<i32> = (0..7).map(|i| (i * 9 % 32) as i32).collect();
+        let one_shot = m.logits_last(&tokens).unwrap();
+        let mut sess = m.new_session(16);
+        m.prefill(&mut sess, &tokens[..3]).unwrap();
+        let chunked = m.prefill(&mut sess, &tokens[3..]).unwrap();
+        assert_eq!(sess.len(), 7);
+        for (a, b) in one_shot.iter().zip(&chunked) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn session_capacity_and_reset() {
+        let ck = init_checkpoint(&cfg(), 10);
+        let m = NativeModel::from_checkpoint(&ck).unwrap();
+        let mut sess = m.new_session(4);
+        assert!(sess.is_empty());
+        assert!(sess.kv_bytes() > 0);
+        m.prefill(&mut sess, &[1, 2, 3]).unwrap();
+        let err = m.prefill(&mut sess, &[4, 5]).unwrap_err();
+        assert!(format!("{err:#}").contains("decode session full"));
+        assert_eq!(sess.len(), 3, "failed prefill must not advance");
+        sess.reset();
+        assert_eq!(sess.remaining(), 4);
+        let after_reset = m.prefill(&mut sess, &[1, 2, 3]).unwrap();
+        let fresh = m.logits_last(&[1, 2, 3]).unwrap();
+        assert_eq!(after_reset, fresh);
+        // a session sized for a different model is rejected
+        let mut other_cfg = cfg();
+        other_cfg.d_model = 32;
+        let other = NativeModel::from_checkpoint(
+            &init_checkpoint(&other_cfg, 10)).unwrap();
+        let mut foreign = other.new_session(4);
+        assert!(m.prefill(&mut foreign, &[1]).is_err());
     }
 
     #[test]

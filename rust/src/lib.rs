@@ -136,9 +136,25 @@
 //! accumulation order, so it is validated by tolerance-based differential
 //! tests against the reference tier (`rust/tests/fast_kernels.rs`) — and
 //! stays thread-count invariant. Perf is tracked by `repro bench-json`
-//! (`BENCH_6.json`) and gated by `cargo bench --bench kernels --
+//! (`BENCH_7.json`) and gated by `cargo bench --bench kernels --
 //! --baseline <name>`. Policy, tolerance bounds and how to add a kernel:
 //! KERNELS.md.
+//!
+//! ## Serving
+//!
+//! [`infer::DecodeSession`] gives the native engine KV-cached incremental
+//! decode: per-block K/V rows plus the RoPE position offset, so
+//! generation pays one batched [`infer::NativeModel::prefill`] for the
+//! prompt and an O(ctx) [`infer::NativeModel::decode_step`] per token —
+//! bit-identical to the full-window forward at the reference tier
+//! (`rust/tests/serve_decode.rs`). [`serve`] puts a long-lived server in
+//! front of it: `repro serve --from-artifact <file.apack>` loads a packed
+//! artifact once and serves `/v1/generate` (per-session KV continuation),
+//! `/v1/perplexity`, `/v1/inspect` and `/healthz` over a dependency-free
+//! HTTP/1.1 layer, with an [`serve::SessionStore`] LRU cap on live
+//! sessions, a worker pool under the `AWP_THREADS` budget, structured
+//! per-request log lines and graceful SIGINT drain. Serving defaults to
+//! the fast kernel tier. Endpoint schemas and operations: SERVING.md.
 //!
 //! ## Quick tour
 //!
@@ -153,6 +169,22 @@
 //! let out = AwpCpu::default().compress(&w, &c, &spec).unwrap();
 //! println!("activation-aware loss: {}", out.stats.final_loss);
 //! ```
+//!
+//! ## Documentation
+//!
+//! The repo-level docs map one-to-one onto the subsystems (same index as
+//! README.md):
+//!
+//! * **README.md** — paper summary, subsystem map, full CLI surface;
+//! * **EXECUTOR_DESIGN.md** — worker pool, thread budget, determinism
+//!   ([`coordinator::executor`]);
+//! * **PROJECTIONS.md** — projection-operator catalog and laws ([`proj`]);
+//! * **ARTIFACTS.md** — `AWPPACK1` container, key schema, packed
+//!   execution ([`artifact`]);
+//! * **KERNELS.md** — the two-tier GEMM dispatch, tolerance policy, perf
+//!   trajectory ([`tensor::simd`], [`tensor::ops`]);
+//! * **SERVING.md** — `repro serve` architecture, endpoint reference,
+//!   KV-session lifecycle, operational knobs ([`serve`], [`infer`]).
 
 // The CI clippy gate runs `-D warnings`; the seed tree's deliberate styles
 // are allowed explicitly rather than rewritten (hand-aligned numeric
@@ -184,6 +216,7 @@ pub mod proj;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sparse;
 pub mod tensor;
 pub mod trainer;

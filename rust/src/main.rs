@@ -18,9 +18,16 @@
 //! repro e2e     # end-to-end driver: train → eval → compress → eval
 //! repro info    # artifacts / manifest summary
 //! repro inspect <file.apack>   # per-site footprint of a packed artifact
-//! repro bench-json [--quick] [--out BENCH_6.json]
+//! repro bench-json [--quick] [--out BENCH_7.json]
 //!               # kernel-tier perf snapshot: GEMM GFLOP/s per compression
-//!               # family (dense vs reference vs fast) + native tokens/sec
+//!               # family (dense vs reference vs fast), native tokens/sec,
+//!               # and KV-cached vs uncached decode tokens/sec
+//! repro serve   --from-artifact <file.apack> [--addr host:port]
+//!               [--max-ctx N] [--max-sessions N] [--fast|--reference]
+//!               # long-lived HTTP server over the native packed engine:
+//!               # /v1/generate (per-session KV-cached decode),
+//!               # /v1/perplexity, /v1/inspect, /healthz. Fast tier by
+//!               # default; graceful SIGINT drain — see SERVING.md
 //! ```
 //!
 //! Global flags: `--config <file.json>` (see rust/src/config), `--artifacts
@@ -126,6 +133,24 @@ fn kernel_tier(args: &Args) -> KernelTier {
     tier
 }
 
+/// Kernel tier for `repro serve`: the default is **Fast** — the fast tier
+/// exists for the serving hot path — overridden by an explicit
+/// `--reference`/`--fast` flag or the `AWP_KERNEL_TIER` env knob.
+fn serve_tier(args: &Args) -> KernelTier {
+    let tier = if args.get("fast").is_some() {
+        KernelTier::Fast
+    } else if args.get("reference").is_some() {
+        KernelTier::Reference
+    } else if std::env::var("AWP_KERNEL_TIER").is_ok() {
+        KernelTier::from_env()
+    } else {
+        KernelTier::Fast
+    };
+    eprintln!("[serve] kernel tier: {} (simd: {})", tier.describe(),
+              simd::backend_name());
+    tier
+}
+
 fn run_config(args: &Args) -> Result<RunConfig> {
     let mut cfg = RunConfig::default();
     if let Some(path) = args.get("config") {
@@ -177,7 +202,8 @@ fn spec_from_args(args: &Args) -> Result<CompressionSpec> {
 fn main() -> Result<()> {
     let args = Args::parse();
     let Some(cmd) = args.positional.first().cloned() else {
-        eprintln!("usage: repro <train|eval|compress|generate|experiment|e2e|info> [flags]");
+        eprintln!("usage: repro <train|eval|compress|generate|experiment|e2e|\
+                   info|inspect|bench-json|serve> [flags]");
         std::process::exit(2);
     };
     let cfg = run_config(&args)?;
@@ -201,7 +227,7 @@ fn main() -> Result<()> {
     // `bench-json` is pure CPU kernel timing — no manifest or runtime either
     if cmd == "bench-json" {
         let quick = args.get("quick").is_some();
-        let out = args.get_or("out", "BENCH_6.json");
+        let out = args.get_or("out", "BENCH_7.json");
         eprintln!("[bench] kernel tiers on {} threads, simd: {}{}",
                   awp::util::parallel::num_threads(), simd::backend_name(),
                   if quick { " (quick)" } else { "" });
@@ -554,6 +580,50 @@ fn main() -> Result<()> {
                       exec {:.1}s, compile {:.1}s",
                      stats.executions, stats.compilations,
                      stats.exec_seconds, stats.compile_seconds);
+        }
+        "serve" => {
+            // long-lived serving: load the packed artifact once, verify its
+            // identity against the current checkpoint/calibration exactly
+            // like `eval --from-artifact`, and serve it packed — the CLI
+            // logs the zero decode-to-dense count the CI smoke pins
+            let apath = args
+                .get("from-artifact")
+                .context("repro serve requires --from-artifact <file.apack>")?;
+            let art = read_artifact(Path::new(apath))?;
+            let model = art.model.clone();
+            let ck = ctx.checkpoint(&model)?;
+            let gk = ctx.gram_key(&model)?;
+            if art.checkpoint != gk.checkpoint || art.calib != gk.calib {
+                bail!("artifact {apath} identity mismatch: packed against \
+                       checkpoint {:016x}/calib {:016x}, current run is \
+                       {:016x}/{:016x}", art.checkpoint, art.calib,
+                      gk.checkpoint, gk.calib);
+            }
+            let mut nm = NativeModel::from_artifact(&ck, &art)?;
+            nm.set_tier(serve_tier(&args));
+            eprintln!("[serve] {} sites packed, {} decode-to-dense \
+                       assemblies", nm.packed_site_count(),
+                      nm.dense_site_count());
+            let max_ctx =
+                args.get_usize("max-ctx", (ck.config.seq_len * 8).max(512))?;
+            let max_sessions = args.get_usize("max-sessions", 64)?;
+            let info = awp::serve::ServeInfo {
+                model: model.clone(),
+                source: apath.to_string(),
+                method: art.method.clone(),
+                spec: art.spec_desc.clone(),
+                packed_bytes: art.packed_bytes(),
+            };
+            let exec = ctx.executor();
+            let state =
+                awp::serve::ServeState::new(nm, info, exec, max_ctx,
+                                            max_sessions);
+            let addr = args.get_or("addr", "127.0.0.1:8080");
+            let listener = std::net::TcpListener::bind(&addr)
+                .with_context(|| format!("cannot bind {addr}"))?;
+            awp::serve::install_signal_handlers();
+            let server = awp::serve::Server::new(state, exec);
+            server.serve(listener, awp::serve::shutdown_flag())?;
         }
         other => bail!("unknown command '{other}'"),
     }

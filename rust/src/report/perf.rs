@@ -11,6 +11,11 @@
 //!   perf acceptance bar reads.
 //! * `native` — end-to-end tokens/sec of [`NativeModel::forward`] on a
 //!   small synthetic LM: dense, packed reference tier, packed fast tier.
+//! * `decode` — greedy decode tokens/sec on the packed fast-tier model
+//!   (the serving configuration), KV-cached
+//!   ([`NativeModel::prefill`]/[`NativeModel::decode_step`]) vs the old
+//!   full-window re-forward per token; `cached_vs_uncached` records the
+//!   O(ctx²) → O(ctx) win.
 //!
 //! The harness is [`crate::util::bench`] (no criterion in the image); the
 //! same measurements back `benches/kernels.rs`, which adds the
@@ -153,6 +158,38 @@ fn tokens_per_s(name: &str, m: &NativeModel, tokens: &[i32], batch: usize,
     Ok(batch as f64 * seq as f64 / r.median_s)
 }
 
+/// Greedy-decode throughput: extend `prompt` by `n_new` tokens, KV-cached
+/// (one prefill + O(ctx) `decode_step`s) or uncached (the pre-KV path: a
+/// full forward over the growing context per token). Returns generated
+/// tokens/sec; both variants produce the same tokens — only the cost
+/// model differs.
+fn decode_tok_s(name: &str, m: &NativeModel, prompt: &[i32], n_new: usize,
+                cached: bool, budget_s: f64) -> Result<f64> {
+    use crate::eval::argmax;
+    let run = || -> Result<()> {
+        if cached {
+            let mut sess = m.new_session(prompt.len() + n_new);
+            let mut logits = m.prefill(&mut sess, prompt)?;
+            for _ in 0..n_new {
+                let next = argmax(&logits);
+                logits = m.decode_step(&mut sess, next)?;
+            }
+            std::hint::black_box(&logits);
+        } else {
+            let mut ctx = prompt.to_vec();
+            for _ in 0..n_new {
+                let logits = m.forward(&ctx, 1, ctx.len())?;
+                ctx.push(argmax(logits.row(ctx.len() - 1)));
+            }
+            std::hint::black_box(&ctx);
+        }
+        Ok(())
+    };
+    run()?; // surface errors before the timed loop
+    let r = bench(name, budget_s, || run().unwrap());
+    Ok(n_new as f64 / r.median_s)
+}
+
 /// Run the full suite and assemble the `awp-bench/1` document. `quick`
 /// shrinks shapes and budgets to CI-smoke scale (~a second) — same schema,
 /// not comparable numbers.
@@ -211,19 +248,36 @@ pub fn bench_report(quick: bool) -> Result<Json> {
         ("packed_fast_tok_s", Json::Num(f)),
         ("fast_vs_reference", Json::Num(f / r)),
     ]);
+    // decode throughput on the serving configuration (packed, fast tier):
+    // KV-cached vs the old full-window re-forward per generated token
+    let (p_len, n_new) = if quick { (8, 8) } else { (32, 32) };
+    let prompt: Vec<i32> =
+        (0..p_len).map(|i| (i * 5 % cfg.vocab) as i32).collect();
+    let cached =
+        decode_tok_s("decode cached", &fast, &prompt, n_new, true, nb)?;
+    let uncached =
+        decode_tok_s("decode uncached", &fast, &prompt, n_new, false, nb)?;
+    let decode = Json::obj(vec![
+        ("prompt_tokens", Json::Num(p_len as f64)),
+        ("new_tokens", Json::Num(n_new as f64)),
+        ("cached_tok_s", Json::Num(cached)),
+        ("uncached_tok_s", Json::Num(uncached)),
+        ("cached_vs_uncached", Json::Num(cached / uncached)),
+    ]);
     Ok(Json::obj(vec![
         ("schema", Json::Str("awp-bench/1".into())),
-        ("pr", Json::Num(6.0)),
+        ("pr", Json::Num(7.0)),
         ("quick", Json::Bool(quick)),
         ("threads", Json::Num(num_threads() as f64)),
         ("simd", Json::Str(simd::backend_name().into())),
         ("kernels", kernels),
         ("native", native),
+        ("decode", decode),
     ]))
 }
 
 /// Run [`bench_report`] and write it to `path` (the CLI default is
-/// `BENCH_6.json` at the repo root).
+/// `BENCH_7.json` at the repo root).
 pub fn write_bench_json(path: &Path, quick: bool) -> Result<()> {
     let report = bench_report(quick)?;
     fs::write(path, report.to_string() + "\n")
@@ -250,8 +304,14 @@ mod tests {
         let native = report.expect("native").unwrap();
         assert!(native.expect("packed_fast_tok_s").unwrap().as_f64().unwrap()
                 > 0.0);
+        let decode = report.expect("decode").unwrap();
+        assert!(decode.expect("cached_tok_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(decode.expect("uncached_tok_s").unwrap().as_f64().unwrap()
+                > 0.0);
+        assert!(decode.expect("cached_vs_uncached").unwrap().as_f64().unwrap()
+                > 0.0);
         // round-trips through the hand-rolled JSON parser
         let parsed = Json::parse(&report.to_string()).unwrap();
-        assert_eq!(parsed.expect("pr").unwrap().as_usize().unwrap(), 6);
+        assert_eq!(parsed.expect("pr").unwrap().as_usize().unwrap(), 7);
     }
 }

@@ -1,0 +1,273 @@
+//! Dependency-free HTTP/1.1 request/response layer.
+//!
+//! The build is fully offline (no hyper/axum on the image), so the server
+//! carries its own wire protocol the same way `util::json` carries its own
+//! codec: a strict, bounded parser for the fragment of HTTP/1.1 the
+//! endpoints need (request line + headers + `Content-Length` body), and a
+//! writer that always answers `Connection: close` — one request per
+//! connection keeps the server state machine trivial and is plenty for an
+//! inference endpoint whose per-request work dwarfs connection setup.
+//!
+//! Bounds are enforced while reading, not after: header bytes are capped at
+//! [`MAX_HEADER_BYTES`] and bodies at [`MAX_BODY_BYTES`], so a misbehaving
+//! client cannot balloon memory. Anything malformed is an `Err` the server
+//! maps to a `400` — parsing never panics.
+
+use std::io::{BufRead, Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Cap on the request line + all header lines, bytes.
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Cap on a request body (`Content-Length`), bytes.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// A parsed request: method, split target, lower-cased headers, raw body.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Path component of the target (query string stripped).
+    pub path: String,
+    /// Raw query string after `?`, empty when absent.
+    pub query: String,
+    /// `(name, value)` pairs; names are lower-cased at parse time.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First value of header `name` (case-insensitive).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let want = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == want)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Body parsed as a JSON object (the POST endpoints' input contract).
+    pub fn json_body(&self) -> Result<Json> {
+        let text =
+            std::str::from_utf8(&self.body).context("request body is not UTF-8")?;
+        if text.trim().is_empty() {
+            bail!("request body is empty (expected a JSON object)");
+        }
+        Json::parse(text).context("request body is not valid JSON")
+    }
+}
+
+/// Read one line terminated by `\n`, stripping the trailing `\r\n`/`\n`.
+/// `budget` counts down the shared header-byte cap.
+fn read_line<R: BufRead>(reader: &mut R, budget: &mut usize) -> Result<String> {
+    let mut raw = Vec::new();
+    loop {
+        let mut byte = [0u8; 1];
+        if reader.read(&mut byte)? == 0 {
+            bail!("connection closed mid-line");
+        }
+        if *budget == 0 {
+            bail!("request head exceeds {MAX_HEADER_BYTES} bytes");
+        }
+        *budget -= 1;
+        if byte[0] == b'\n' {
+            break;
+        }
+        raw.push(byte[0]);
+    }
+    if raw.last() == Some(&b'\r') {
+        raw.pop();
+    }
+    String::from_utf8(raw).context("request head is not UTF-8")
+}
+
+/// Parse one HTTP/1.1 request off `reader` (blocking, bounded).
+pub fn read_request<R: BufRead>(reader: &mut R) -> Result<Request> {
+    let mut budget = MAX_HEADER_BYTES;
+    let line = read_line(reader, &mut budget)?;
+    let mut parts = line.split(' ');
+    let method = parts.next().unwrap_or("").to_string();
+    let target = parts.next().context("malformed request line")?.to_string();
+    let version = parts.next().context("malformed request line")?;
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported protocol version {version}");
+    }
+    if method.is_empty() || !target.starts_with('/') {
+        bail!("malformed request line '{line}'");
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target, String::new()),
+    };
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line(reader, &mut budget)?;
+        if line.is_empty() {
+            break;
+        }
+        let (name, value) = line.split_once(':').context("malformed header")?;
+        headers.push((name.trim().to_ascii_lowercase(),
+                      value.trim().to_string()));
+    }
+    let mut req =
+        Request { method, path, query, headers, body: Vec::new() };
+    if let Some(len) = req.header("content-length") {
+        let len: usize =
+            len.parse().context("malformed Content-Length header")?;
+        if len > MAX_BODY_BYTES {
+            bail!("request body of {len} bytes exceeds cap {MAX_BODY_BYTES}");
+        }
+        let mut body = vec![0u8; len];
+        reader
+            .read_exact(&mut body)
+            .context("connection closed mid-body")?;
+        req.body = body;
+    }
+    Ok(req)
+}
+
+/// An outgoing response. Every response closes the connection and carries
+/// an exact `Content-Length`, plus the structured-log fields the server's
+/// per-request line reports (`session`, `tokens`).
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+    /// Session id this request touched, `"-"` when none.
+    pub session: String,
+    /// Tokens processed (prompt + generated, or scored), 0 when n/a.
+    pub tokens: usize,
+}
+
+impl Response {
+    pub fn json(status: u16, value: &Json) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: value.to_string().into_bytes(),
+            session: "-".into(),
+            tokens: 0,
+        }
+    }
+
+    /// Attach the structured-log fields to this response.
+    pub fn logged(mut self, session: &str, tokens: usize) -> Response {
+        self.session = session.to_string();
+        self.tokens = tokens;
+        self
+    }
+
+    pub fn reason(status: u16) -> &'static str {
+        match status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            409 => "Conflict",
+            422 => "Unprocessable Entity",
+            500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            _ => "Unknown",
+        }
+    }
+
+    /// Serialise onto `w` (head + body, then flush).
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n\
+             Connection: close\r\n\r\n",
+            self.status,
+            Self::reason(self.status),
+            self.content_type,
+            self.body.len(),
+        )?;
+        w.write_all(&self.body)?;
+        w.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(raw: &str) -> Result<Request> {
+        read_request(&mut BufReader::new(raw.as_bytes()))
+    }
+
+    #[test]
+    fn parses_get_with_query_and_headers() {
+        let req = parse("GET /v1/inspect?verbose=1 HTTP/1.1\r\n\
+                         Host: localhost\r\nX-Test: a b\r\n\r\n")
+            .unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/v1/inspect");
+        assert_eq!(req.query, "verbose=1");
+        assert_eq!(req.header("host"), Some("localhost"));
+        assert_eq!(req.header("X-TEST"), Some("a b"));
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_body_by_content_length() {
+        let body = r#"{"prompt":"hi"}"#;
+        let raw = format!("POST /v1/generate HTTP/1.1\r\n\
+                           Content-Length: {}\r\n\r\n{body}",
+                          body.len());
+        let req = parse(&raw).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, body.as_bytes());
+        let json = req.json_body().unwrap();
+        assert_eq!(json.expect("prompt").unwrap().as_str().unwrap(), "hi");
+    }
+
+    #[test]
+    fn rejects_malformed_and_oversized_requests() {
+        assert!(parse("").is_err());
+        assert!(parse("GARBAGE\r\n\r\n").is_err());
+        assert!(parse("GET noslash HTTP/1.1\r\n\r\n").is_err());
+        assert!(parse("GET / SPDY/3\r\n\r\n").is_err());
+        assert!(parse("GET / HTTP/1.1\r\nbadheader\r\n\r\n").is_err());
+        // body longer than advertised cap
+        let raw = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+                          MAX_BODY_BYTES + 1);
+        assert!(parse(&raw).is_err());
+        // header flood
+        let mut raw = String::from("GET / HTTP/1.1\r\n");
+        while raw.len() <= MAX_HEADER_BYTES {
+            raw.push_str("X-Pad: aaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaa\r\n");
+        }
+        raw.push_str("\r\n");
+        assert!(parse(&raw).is_err());
+        // truncated body
+        assert!(parse("POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc")
+            .is_err());
+    }
+
+    #[test]
+    fn response_wire_format_is_exact() {
+        let resp = Response::json(
+            200,
+            &Json::obj(vec![("ok", Json::Bool(true))]),
+        );
+        let mut out = Vec::new();
+        resp.write_to(&mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Type: application/json\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        let body = text.split("\r\n\r\n").nth(1).unwrap();
+        assert_eq!(body, r#"{"ok":true}"#);
+        assert!(text.contains(&format!("Content-Length: {}\r\n", body.len())));
+    }
+
+    #[test]
+    fn empty_json_body_is_rejected() {
+        let req = parse("POST /v1/generate HTTP/1.1\r\n\r\n").unwrap();
+        assert!(req.json_body().is_err());
+    }
+}

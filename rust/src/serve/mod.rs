@@ -1,0 +1,37 @@
+//! Long-lived HTTP inference server over the native packed engine —
+//! `repro serve --from-artifact <file.apack>`.
+//!
+//! The serving hot path is the KV-cached decode the `infer` module grew
+//! for this subsystem: each connection's context lives in a
+//! [`crate::infer::DecodeSession`] (per-block K/V rows + RoPE offset), so
+//! a request pays one batched prefill for its prompt and O(ctx) per
+//! generated token — and a *continuation* request against the same
+//! session id pays nothing for the history at all. Artifacts serve
+//! packed (zero decode-to-dense assemblies), on the fast kernel tier by
+//! default.
+//!
+//! Layering, bottom to top:
+//!
+//! * [`http`] — bounded, dependency-free HTTP/1.1 parsing and writing
+//!   (the image carries no HTTP crate, as `util::json` carries no serde);
+//! * [`router`] — the static route table and typed handlers
+//!   (`/healthz`, `/v1/inspect`, `/v1/generate`, `/v1/perplexity`) over
+//!   [`ServeState`], with [`ApiError`] → JSON error mapping;
+//! * [`session`] — [`SessionStore`]: per-session KV state, exclusive
+//!   checkout, LRU eviction cap;
+//! * [`server`] — the accept loop and worker pool (sized by the
+//!   coordinator [`crate::coordinator::Executor`] budget), structured
+//!   per-request log lines, graceful SIGINT/SIGTERM drain.
+//!
+//! Operational reference — endpoints, JSON schemas, curl quickstart, tier
+//! and thread knobs — lives in SERVING.md.
+
+pub mod http;
+pub mod router;
+pub mod server;
+pub mod session;
+
+pub use http::{Request, Response};
+pub use router::{handle, ApiError, Route, ServeInfo, ServeState, ROUTES};
+pub use server::{install_signal_handlers, shutdown_flag, Server};
+pub use session::{ServeSession, SessionStore, TakeError};

@@ -1,0 +1,425 @@
+//! Typed routing: a static route table mapping `(method, path)` to handler
+//! functions over [`ServeState`], with errors as [`ApiError`] values that
+//! render to JSON error responses. Handlers are plain `fn`s — no macros, no
+//! extractors — and every endpoint's request/response schema is documented
+//! in SERVING.md with worked examples.
+
+use std::time::Instant;
+
+use crate::coordinator::Executor;
+use crate::data::ByteTokenizer;
+use crate::eval::argmax;
+use crate::infer::NativeModel;
+use crate::util::json::Json;
+
+use super::http::{Request, Response};
+use super::session::{ServeSession, SessionStore, TakeError};
+
+/// Static facts about the artifact being served, shown by `/v1/inspect`
+/// and the startup log (computed once in `main.rs` from the loaded
+/// artifact; the model itself holds only the packed sites).
+#[derive(Debug, Clone)]
+pub struct ServeInfo {
+    /// Model name (`ModelConfig::name`).
+    pub model: String,
+    /// Artifact path the server was started from.
+    pub source: String,
+    /// Compression method label ("awp", "rtn", …).
+    pub method: String,
+    /// Human-readable compression spec (`CompressionSpec::describe`).
+    pub spec: String,
+    /// Bit-packed payload bytes across all sites.
+    pub packed_bytes: usize,
+}
+
+/// Everything a handler can touch: the model (read-only — all mutable
+/// per-connection state lives in sessions), the session store, and the
+/// serving limits.
+pub struct ServeState {
+    pub model: NativeModel,
+    pub info: ServeInfo,
+    pub exec: Executor,
+    pub sessions: SessionStore,
+    /// Per-session context window (K/V rows a session can hold).
+    pub max_ctx: usize,
+    pub started: Instant,
+}
+
+impl ServeState {
+    pub fn new(model: NativeModel, info: ServeInfo, exec: Executor,
+               max_ctx: usize, max_sessions: usize) -> ServeState {
+        ServeState {
+            model,
+            info,
+            exec,
+            sessions: SessionStore::new(max_sessions),
+            max_ctx: max_ctx.max(2),
+            started: Instant::now(),
+        }
+    }
+}
+
+/// A handler failure: HTTP status plus a message the client sees as
+/// `{"error": message}`.
+#[derive(Debug)]
+pub struct ApiError {
+    pub status: u16,
+    pub message: String,
+}
+
+impl ApiError {
+    pub fn new(status: u16, message: impl Into<String>) -> ApiError {
+        ApiError { status, message: message.into() }
+    }
+
+    pub fn bad_request(message: impl Into<String>) -> ApiError {
+        ApiError::new(400, message)
+    }
+
+    pub fn to_response(&self) -> Response {
+        Response::json(
+            self.status,
+            &Json::obj(vec![("error", Json::Str(self.message.clone()))]),
+        )
+    }
+}
+
+impl From<anyhow::Error> for ApiError {
+    fn from(e: anyhow::Error) -> ApiError {
+        ApiError::new(500, format!("{e:#}"))
+    }
+}
+
+type Handler = fn(&ServeState, &Request) -> Result<Response, ApiError>;
+
+/// One row of the route table.
+pub struct Route {
+    pub method: &'static str,
+    pub path: &'static str,
+    pub handler: Handler,
+}
+
+/// The server's whole API surface, in match order.
+pub const ROUTES: &[Route] = &[
+    Route { method: "GET", path: "/healthz", handler: healthz },
+    Route { method: "GET", path: "/v1/inspect", handler: inspect },
+    Route { method: "POST", path: "/v1/generate", handler: generate },
+    Route { method: "POST", path: "/v1/perplexity", handler: perplexity },
+];
+
+/// Dispatch `req` against [`ROUTES`]: unknown path → 404, known path with
+/// the wrong method → 405, handler error → its status. Never panics on
+/// client input.
+pub fn handle(state: &ServeState, req: &Request) -> Response {
+    let mut path_known = false;
+    for route in ROUTES {
+        if route.path != req.path {
+            continue;
+        }
+        path_known = true;
+        if route.method == req.method {
+            return match (route.handler)(state, req) {
+                Ok(resp) => resp,
+                Err(e) => e.to_response(),
+            };
+        }
+    }
+    let status = if path_known { 405 } else { 404 };
+    ApiError::new(status, format!("no route for {} {}", req.method, req.path))
+        .to_response()
+}
+
+// --------------------------------------------------------------- handlers
+
+/// `GET /healthz` — liveness plus the numbers a load balancer would scrape.
+fn healthz(state: &ServeState, _req: &Request) -> Result<Response, ApiError> {
+    let body = Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("model", Json::Str(state.info.model.clone())),
+        ("tier", Json::Str(state.model.tier().describe().into())),
+        ("sessions", Json::Num(state.sessions.len() as f64)),
+        ("uptime_s", Json::Num(state.started.elapsed().as_secs_f64())),
+    ]);
+    Ok(Response::json(200, &body))
+}
+
+/// `GET /v1/inspect` — identity and footprint of the artifact being served.
+fn inspect(state: &ServeState, _req: &Request) -> Result<Response, ApiError> {
+    let body = Json::obj(vec![
+        ("model", Json::Str(state.info.model.clone())),
+        ("source", Json::Str(state.info.source.clone())),
+        ("method", Json::Str(state.info.method.clone())),
+        ("spec", Json::Str(state.info.spec.clone())),
+        ("packed_bytes", Json::Num(state.info.packed_bytes as f64)),
+        ("packed_sites", Json::Num(state.model.packed_site_count() as f64)),
+        ("dense_sites", Json::Num(state.model.dense_site_count() as f64)),
+        ("tier", Json::Str(state.model.tier().describe().into())),
+        ("max_ctx", Json::Num(state.max_ctx as f64)),
+        ("max_sessions", Json::Num(state.sessions.cap() as f64)),
+        ("sessions", Json::Num(state.sessions.len() as f64)),
+        ("evicted", Json::Num(state.sessions.evicted() as f64)),
+    ]);
+    Ok(Response::json(200, &body))
+}
+
+/// `POST /v1/generate` `{prompt, max_tokens?, session?}` — greedy
+/// generation through the KV-cached decode path. Without `session` a fresh
+/// [`crate::infer::DecodeSession`] is created and its id returned; with
+/// one, generation *continues* the cached context — the prompt is appended
+/// to everything the session has seen, at O(new tokens) cost, and the
+/// result is bit-identical (reference tier) to replaying the whole
+/// concatenated history.
+fn generate(state: &ServeState, req: &Request) -> Result<Response, ApiError> {
+    let body = req.json_body().map_err(|e| ApiError::bad_request(format!("{e:#}")))?;
+    let prompt = body
+        .get("prompt")
+        .and_then(|v| v.as_str().ok())
+        .ok_or_else(|| ApiError::bad_request("'prompt' (string) is required"))?;
+    if prompt.is_empty() {
+        return Err(ApiError::bad_request("'prompt' must be non-empty"));
+    }
+    let max_tokens = match body.get("max_tokens") {
+        Some(v) => v
+            .as_usize()
+            .map_err(|e| ApiError::bad_request(format!("'max_tokens': {e:#}")))?,
+        None => 16,
+    };
+    if max_tokens == 0 {
+        return Err(ApiError::bad_request("'max_tokens' must be >= 1"));
+    }
+    let tok = ByteTokenizer;
+    let prompt_tokens: Vec<i32> = tok.encode(prompt.as_bytes());
+    let vocab = state.model.config().vocab;
+    if prompt_tokens.iter().any(|&t| t as usize >= vocab) {
+        return Err(ApiError::new(
+            422,
+            format!("prompt contains bytes outside the model vocab ({vocab})"),
+        ));
+    }
+    // acquire a session: continuation checks the id out (exclusive), a
+    // fresh request allocates KV buffers for the full context window
+    let (id, mut sess) = match body.get("session") {
+        Some(v) => {
+            let id = v
+                .as_str()
+                .map_err(|e| ApiError::bad_request(format!("'session': {e:#}")))?;
+            let sess = state.sessions.take(id).map_err(|e| match e {
+                TakeError::Unknown => ApiError::new(
+                    404,
+                    format!("unknown session '{id}' (expired or evicted)"),
+                ),
+                TakeError::Busy => ApiError::new(
+                    409,
+                    format!("session '{id}' has a request in flight"),
+                ),
+            })?;
+            (id.to_string(), sess)
+        }
+        None => state.sessions.create(state.model.new_session(state.max_ctx)),
+    };
+    // the cache must cover prompt + every generated token so a follow-up
+    // request can continue exactly
+    let need = prompt_tokens.len() + max_tokens;
+    if need > sess.kv.remaining() {
+        let msg = format!(
+            "context window full: {} cached + {} requested > max_ctx {}",
+            sess.kv.len(), need, sess.kv.capacity(),
+        );
+        state.sessions.put(&id, sess); // unchanged — hand it back
+        return Err(ApiError::new(422, msg));
+    }
+    let mut run = || -> anyhow::Result<Vec<i32>> {
+        let mut logits = state.model.prefill(&mut sess.kv, &prompt_tokens)?;
+        let mut generated = Vec::with_capacity(max_tokens);
+        for _ in 0..max_tokens {
+            let next = argmax(&logits);
+            generated.push(next);
+            logits = state.model.decode_step(&mut sess.kv, next)?;
+        }
+        Ok(generated)
+    };
+    let generated = match run() {
+        Ok(g) => g,
+        Err(e) => {
+            // KV state no longer matches the token history — discard
+            state.sessions.remove(&id);
+            return Err(e.into());
+        }
+    };
+    sess.tokens.extend_from_slice(&prompt_tokens);
+    sess.tokens.extend_from_slice(&generated);
+    let context_tokens = sess.kv.len();
+    let text = tok.decode_lossy_string(&generated);
+    state.sessions.put(&id, sess);
+    let processed = prompt_tokens.len() + generated.len();
+    let body = Json::obj(vec![
+        ("session", Json::Str(id.clone())),
+        ("text", Json::Str(text)),
+        ("prompt_tokens", Json::Num(prompt_tokens.len() as f64)),
+        ("generated_tokens", Json::Num(generated.len() as f64)),
+        ("context_tokens", Json::Num(context_tokens as f64)),
+    ]);
+    Ok(Response::json(200, &body).logged(&id, processed))
+}
+
+/// `POST /v1/perplexity` `{text}` — held-out NLL/perplexity of `text`
+/// under the served model, scored over non-overlapping `seq_len` windows
+/// (the same protocol as `repro eval`'s batcher) fanned out through the
+/// executor pool.
+fn perplexity(state: &ServeState, req: &Request) -> Result<Response, ApiError> {
+    let body = req.json_body().map_err(|e| ApiError::bad_request(format!("{e:#}")))?;
+    let text = body
+        .get("text")
+        .and_then(|v| v.as_str().ok())
+        .ok_or_else(|| ApiError::bad_request("'text' (string) is required"))?;
+    let tok = ByteTokenizer;
+    let tokens: Vec<i32> = tok.encode(text.as_bytes());
+    let vocab = state.model.config().vocab;
+    if tokens.iter().any(|&t| t as usize >= vocab) {
+        return Err(ApiError::new(
+            422,
+            format!("text contains bytes outside the model vocab ({vocab})"),
+        ));
+    }
+    let seq = state.model.config().seq_len.max(2);
+    let windows: Vec<&[i32]> =
+        tokens.chunks(seq).filter(|w| w.len() >= 2).collect();
+    if windows.is_empty() {
+        return Err(ApiError::bad_request(
+            "'text' must be at least 2 tokens (bytes) long",
+        ));
+    }
+    let report = state
+        .exec
+        .run(windows.len(), |i| format!("ppl-window-{i}"), |i| {
+            state.model.nll(windows[i], 1, windows[i].len())
+        })
+        .map_err(ApiError::from)?;
+    let (mut nll, mut count) = (0.0f64, 0usize);
+    for (n, c) in &report.results {
+        nll += n;
+        count += c;
+    }
+    let per_token = nll / count.max(1) as f64;
+    let body = Json::obj(vec![
+        ("ppl", Json::Num(per_token.exp())),
+        ("nll_per_token", Json::Num(per_token)),
+        ("tokens", Json::Num(tokens.len() as f64)),
+        ("scored_tokens", Json::Num(count as f64)),
+        ("windows", Json::Num(windows.len() as f64)),
+    ]);
+    Ok(Response::json(200, &body).logged("-", tokens.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::trainer::init_checkpoint;
+
+    fn state() -> ServeState {
+        let cfg = ModelConfig {
+            name: "t".into(), vocab: 256, d_model: 16, n_heads: 2, n_layers: 1,
+            d_ff: 24, seq_len: 8, batch: 1, decode_len: 8, rope_theta: 1e4,
+        };
+        let ck = init_checkpoint(&cfg, 3);
+        let model = NativeModel::from_checkpoint(&ck).unwrap();
+        let info = ServeInfo {
+            model: "t".into(),
+            source: "test.apack".into(),
+            method: "proj".into(),
+            spec: "int4-g32".into(),
+            packed_bytes: 0,
+        };
+        ServeState::new(model, info, Executor::with_workers(2), 64, 4)
+    }
+
+    fn req(method: &str, path: &str, body: &str) -> Request {
+        Request {
+            method: method.into(),
+            path: path.into(),
+            query: String::new(),
+            headers: Vec::new(),
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    fn json_of(resp: &Response) -> Json {
+        Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn healthz_reports_ok() {
+        let st = state();
+        let resp = handle(&st, &req("GET", "/healthz", ""));
+        assert_eq!(resp.status, 200);
+        let v = json_of(&resp);
+        assert!(v.expect("ok").unwrap().as_bool().unwrap());
+        assert_eq!(v.expect("model").unwrap().as_str().unwrap(), "t");
+    }
+
+    #[test]
+    fn unknown_path_404_wrong_method_405() {
+        let st = state();
+        assert_eq!(handle(&st, &req("GET", "/nope", "")).status, 404);
+        assert_eq!(handle(&st, &req("POST", "/healthz", "")).status, 405);
+    }
+
+    #[test]
+    fn generate_roundtrip_and_session_continuation() {
+        let st = state();
+        let resp = handle(&st, &req("POST", "/v1/generate",
+                                    r#"{"prompt":"ab","max_tokens":3}"#));
+        assert_eq!(resp.status, 200, "{:?}", String::from_utf8_lossy(&resp.body));
+        let v = json_of(&resp);
+        let sid = v.expect("session").unwrap().as_str().unwrap().to_string();
+        assert_eq!(v.expect("prompt_tokens").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(v.expect("generated_tokens").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(v.expect("context_tokens").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(resp.tokens, 5);
+        assert_eq!(resp.session, sid);
+        // continuation advances the same cache
+        let cont = format!(r#"{{"prompt":"c","max_tokens":2,"session":"{sid}"}}"#);
+        let resp2 = handle(&st, &req("POST", "/v1/generate", &cont));
+        assert_eq!(resp2.status, 200);
+        let v2 = json_of(&resp2);
+        assert_eq!(v2.expect("session").unwrap().as_str().unwrap(), sid);
+        assert_eq!(v2.expect("context_tokens").unwrap().as_usize().unwrap(), 8);
+    }
+
+    #[test]
+    fn generate_input_validation() {
+        let st = state();
+        assert_eq!(handle(&st, &req("POST", "/v1/generate", "")).status, 400);
+        assert_eq!(handle(&st, &req("POST", "/v1/generate", "{}")).status, 400);
+        assert_eq!(
+            handle(&st, &req("POST", "/v1/generate",
+                             r#"{"prompt":""}"#)).status, 400);
+        assert_eq!(
+            handle(&st, &req("POST", "/v1/generate",
+                             r#"{"prompt":"a","max_tokens":0}"#)).status, 400);
+        assert_eq!(
+            handle(&st, &req("POST", "/v1/generate",
+                             r#"{"prompt":"a","session":"s-99"}"#)).status, 404);
+        // exceeding the context window is a clean 422
+        assert_eq!(
+            handle(&st, &req("POST", "/v1/generate",
+                             r#"{"prompt":"a","max_tokens":9999}"#)).status, 422);
+    }
+
+    #[test]
+    fn perplexity_scores_text() {
+        let st = state();
+        let resp = handle(&st, &req("POST", "/v1/perplexity",
+                                    r#"{"text":"hello serving world"}"#));
+        assert_eq!(resp.status, 200, "{:?}", String::from_utf8_lossy(&resp.body));
+        let v = json_of(&resp);
+        let ppl = v.expect("ppl").unwrap().as_f64().unwrap();
+        assert!(ppl.is_finite() && ppl > 1.0);
+        assert_eq!(v.expect("tokens").unwrap().as_usize().unwrap(), 19);
+        assert_eq!(v.expect("windows").unwrap().as_usize().unwrap(), 3);
+        // matches a direct nll computation over the same windows
+        assert_eq!(handle(&st, &req("POST", "/v1/perplexity",
+                                    r#"{"text":"x"}"#)).status, 400);
+    }
+}

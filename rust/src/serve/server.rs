@@ -1,0 +1,196 @@
+//! The accept loop: a non-blocking listener polled against a stop flag,
+//! feeding connections through a worker pool sized by the same
+//! [`Executor`] budget discipline as every other subsystem — `workers`
+//! request slots, each running its model math under a nested
+//! `with_thread_budget(inner_threads)`, so a serve process never exceeds
+//! `AWP_THREADS` no matter how many requests are in flight.
+//!
+//! Shutdown is graceful by construction: SIGINT/SIGTERM (or a test's stop
+//! flag) only stops *accepting*; the channel to the workers is then
+//! dropped, each worker drains the queued connections it can still
+//! receive, finishes its in-flight request, and the scope join returns.
+//! Every request logs one structured line to stderr:
+//!
+//! ```text
+//! [serve] method=POST path=/v1/generate status=200 session=s-1 tokens=21 ms=4.3
+//! ```
+
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::Executor;
+use crate::util::json::Json;
+use crate::util::parallel::with_thread_budget;
+
+use super::http::{read_request, Response};
+use super::router::{handle, ServeState};
+
+/// How long the accept loop sleeps when no connection is pending — the
+/// upper bound on shutdown latency once the stop flag flips.
+const ACCEPT_POLL: Duration = Duration::from_millis(20);
+/// Per-connection socket read/write timeout: a stalled client cannot pin
+/// a worker forever.
+const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Process-wide stop flag the signal handler flips.
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+/// The flag [`Server::serve`] should poll when running under
+/// [`install_signal_handlers`]. Tests pass their own flag instead.
+pub fn shutdown_flag() -> &'static AtomicBool {
+    &SHUTDOWN
+}
+
+#[cfg(unix)]
+extern "C" fn on_signal(_signum: i32) {
+    // async-signal-safe: a single atomic store
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+/// Route SIGINT and SIGTERM to [`shutdown_flag`] so Ctrl-C drains the
+/// server instead of killing it mid-request. No-op off Unix.
+#[cfg(unix)]
+pub fn install_signal_handlers() {
+    type SigHandler = extern "C" fn(i32);
+    extern "C" {
+        fn signal(signum: i32, handler: SigHandler) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_signal);
+        signal(SIGTERM, on_signal);
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install_signal_handlers() {}
+
+/// A running inference server: shared [`ServeState`] plus the worker-pool
+/// geometry.
+pub struct Server {
+    state: Arc<ServeState>,
+    workers: usize,
+    inner_threads: usize,
+}
+
+impl Server {
+    /// `exec` only sizes the pool (`workers × inner_threads`); request
+    /// scheduling is a plain queue — requests are heterogeneous and
+    /// latency-bound, not a batch with a known plan.
+    pub fn new(state: ServeState, exec: Executor) -> Server {
+        Server {
+            state: Arc::new(state),
+            workers: exec.workers().max(1),
+            inner_threads: exec.inner_threads().max(1),
+        }
+    }
+
+    /// Shared handle to the serving state (tests inspect sessions through
+    /// this; the handlers own all mutation).
+    pub fn state(&self) -> &Arc<ServeState> {
+        &self.state
+    }
+
+    /// Accept and serve connections on `listener` until `stop` flips true,
+    /// then drain: queued and in-flight requests complete before this
+    /// returns. Returns the number of requests served.
+    pub fn serve(&self, listener: TcpListener, stop: &AtomicBool) -> Result<u64> {
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        eprintln!(
+            "[serve] listening on {local} ({} workers x {} threads, tier: {})",
+            self.workers,
+            self.inner_threads,
+            self.state.model.tier().describe(),
+        );
+        let served = AtomicU64::new(0);
+        let (tx, rx) = mpsc::channel::<TcpStream>();
+        let rx = Mutex::new(rx);
+        std::thread::scope(|scope| {
+            for _ in 0..self.workers {
+                let rx = &rx;
+                let served = &served;
+                let state = &self.state;
+                let inner = self.inner_threads;
+                scope.spawn(move || {
+                    with_thread_budget(inner, || loop {
+                        // hold the receiver lock only while dequeuing
+                        let conn = rx.lock().unwrap().recv();
+                        match conn {
+                            Ok(stream) => {
+                                handle_connection(state, stream);
+                                served.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(_) => break, // channel closed: drained
+                        }
+                    });
+                });
+            }
+            while !stop.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        // a send can only fail if every worker died; surface
+                        // that instead of spinning silently
+                        if tx.send(stream).is_err() {
+                            eprintln!("[serve] worker pool gone; stopping");
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(ACCEPT_POLL);
+                    }
+                    Err(e) => {
+                        eprintln!("[serve] accept error: {e}");
+                        std::thread::sleep(ACCEPT_POLL);
+                    }
+                }
+            }
+            eprintln!("[serve] stop requested, draining in-flight sessions");
+            drop(tx); // workers exit once the queue is empty
+        });
+        let total = served.load(Ordering::Relaxed);
+        eprintln!(
+            "[serve] shutdown: drained, {total} requests served, {} sessions live",
+            self.state.sessions.len(),
+        );
+        Ok(total)
+    }
+}
+
+/// One connection: parse → route → respond → log. Parse failures answer
+/// 400; nothing here panics on client input.
+fn handle_connection(state: &ServeState, mut stream: TcpStream) {
+    let started = Instant::now();
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let parsed = read_request(&mut BufReader::new(&mut stream));
+    let (method, path, resp) = match parsed {
+        Ok(req) => {
+            let resp = handle(state, &req);
+            (req.method, req.path, resp)
+        }
+        Err(e) => {
+            let body =
+                Json::obj(vec![("error", Json::Str(format!("{e:#}")))]);
+            ("-".into(), "-".into(), Response::json(400, &body))
+        }
+    };
+    if let Err(e) = resp.write_to(&mut stream) {
+        eprintln!("[serve] write error on {method} {path}: {e:#}");
+    }
+    eprintln!(
+        "[serve] method={method} path={path} status={} session={} tokens={} \
+         ms={:.1}",
+        resp.status,
+        resp.session,
+        resp.tokens,
+        started.elapsed().as_secs_f64() * 1e3,
+    );
+}

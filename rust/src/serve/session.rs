@@ -1,0 +1,240 @@
+//! Per-session KV state with checkout semantics and an LRU eviction cap.
+//!
+//! A session is a [`DecodeSession`] (per-block K/V rows) plus the token
+//! history it covers. The store hands a session out to exactly one request
+//! at a time: [`SessionStore::take`] removes the state but leaves the id
+//! registered as *busy* (a second request for the same id gets a clean
+//! `Busy` error instead of corrupting the cache), and
+//! [`SessionStore::put`] returns it and bumps its recency. When the store
+//! grows past its cap, the least-recently-used idle session is evicted —
+//! busy sessions are never evicted out from under a running request, and
+//! an evicted id simply reads as unknown afterwards (the client starts a
+//! fresh session).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::infer::DecodeSession;
+
+/// One serving session: the KV cache plus the full token history it holds
+/// (prompt and generated tokens alike — the cache always covers exactly
+/// `tokens`, which is what makes continuation requests exact).
+#[derive(Debug)]
+pub struct ServeSession {
+    pub kv: DecodeSession,
+    pub tokens: Vec<i32>,
+}
+
+/// Why [`SessionStore::take`] refused.
+#[derive(Debug, PartialEq, Eq)]
+pub enum TakeError {
+    /// Never created, or evicted since.
+    Unknown,
+    /// Checked out by another in-flight request.
+    Busy,
+}
+
+struct Slot {
+    /// `None` while the session is checked out by a request.
+    session: Option<ServeSession>,
+    /// Monotone recency stamp (store-local, not wall-clock).
+    last_used: u64,
+}
+
+struct Inner {
+    slots: HashMap<String, Slot>,
+    tick: u64,
+    next_id: u64,
+    evicted: u64,
+}
+
+/// Thread-safe registry of [`ServeSession`]s, capped at `cap` live entries.
+pub struct SessionStore {
+    inner: Mutex<Inner>,
+    cap: usize,
+}
+
+impl SessionStore {
+    pub fn new(cap: usize) -> SessionStore {
+        SessionStore {
+            inner: Mutex::new(Inner {
+                slots: HashMap::new(),
+                tick: 0,
+                next_id: 1,
+                evicted: 0,
+            }),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Register a fresh session around `kv` and check it out to the caller.
+    /// The returned id is already reserved (busy) until [`SessionStore::put`].
+    pub fn create(&self, kv: DecodeSession) -> (String, ServeSession) {
+        let mut inner = self.inner.lock().unwrap();
+        let id = format!("s-{}", inner.next_id);
+        inner.next_id += 1;
+        inner.tick += 1;
+        let stamp = inner.tick;
+        inner
+            .slots
+            .insert(id.clone(), Slot { session: None, last_used: stamp });
+        (id, ServeSession { kv, tokens: Vec::new() })
+    }
+
+    /// Check session `id` out for exclusive use.
+    pub fn take(&self, id: &str) -> Result<ServeSession, TakeError> {
+        let mut inner = self.inner.lock().unwrap();
+        let slot = inner.slots.get_mut(id).ok_or(TakeError::Unknown)?;
+        slot.session.take().ok_or(TakeError::Busy)
+    }
+
+    /// Return a checked-out session, bump its recency, and evict beyond the
+    /// cap. A session whose id was dropped meanwhile (a raced
+    /// [`SessionStore::remove`]) is re-registered — put never loses state.
+    pub fn put(&self, id: &str, session: ServeSession) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let stamp = inner.tick;
+        inner
+            .slots
+            .entry(id.to_string())
+            .and_modify(|s| s.last_used = stamp)
+            .or_insert(Slot { session: None, last_used: stamp })
+            .session = Some(session);
+        while inner.slots.len() > self.cap {
+            // oldest idle slot; busy sessions and the one just returned
+            // (whose id the client is about to be handed) are untouchable
+            let victim = inner
+                .slots
+                .iter()
+                .filter(|(k, s)| s.session.is_some() && k.as_str() != id)
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    inner.slots.remove(&k);
+                    inner.evicted += 1;
+                }
+                None => break, // everything else is in flight; stay over cap
+            }
+        }
+    }
+
+    /// Drop `id` entirely (a request that failed mid-decode leaves the KV
+    /// state inconsistent with the token history — discard, don't reuse).
+    pub fn remove(&self, id: &str) {
+        self.inner.lock().unwrap().slots.remove(id);
+    }
+
+    /// Live entries (idle + busy).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Sessions evicted by the LRU cap since startup.
+    pub fn evicted(&self) -> u64 {
+        self.inner.lock().unwrap().evicted
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kv() -> DecodeSession {
+        use crate::infer::NativeModel;
+        use crate::model::ModelConfig;
+        let cfg = ModelConfig {
+            name: "t".into(), vocab: 32, d_model: 16, n_heads: 2, n_layers: 1,
+            d_ff: 24, seq_len: 8, batch: 1, decode_len: 8, rope_theta: 1e4,
+        };
+        let ck = crate::trainer::init_checkpoint(&cfg, 1);
+        NativeModel::from_checkpoint(&ck).unwrap().new_session(8)
+    }
+
+    #[test]
+    fn create_take_put_roundtrip() {
+        let store = SessionStore::new(4);
+        let (id, mut sess) = store.create(kv());
+        assert_eq!(id, "s-1");
+        assert_eq!(store.len(), 1);
+        // busy while checked out
+        assert_eq!(store.take(&id).unwrap_err(), TakeError::Busy);
+        sess.tokens.push(7);
+        store.put(&id, sess);
+        let again = store.take(&id).unwrap();
+        assert_eq!(again.tokens, [7]);
+        store.put(&id, again);
+        assert_eq!(store.take("s-999").unwrap_err(), TakeError::Unknown);
+    }
+
+    #[test]
+    fn lru_evicts_oldest_idle_session() {
+        let store = SessionStore::new(2);
+        let mut ids = Vec::new();
+        for _ in 0..3 {
+            let (id, sess) = store.create(kv());
+            store.put(&id, sess);
+            ids.push(id);
+        }
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.evicted(), 1);
+        // the first (oldest) session went; the newer two survive
+        assert_eq!(store.take(&ids[0]).unwrap_err(), TakeError::Unknown);
+        assert!(store.take(&ids[1]).is_ok());
+        assert!(store.take(&ids[2]).is_ok());
+    }
+
+    #[test]
+    fn touching_a_session_protects_it_from_eviction() {
+        let store = SessionStore::new(2);
+        let (a, sa) = store.create(kv());
+        store.put(&a, sa);
+        let (b, sb) = store.create(kv());
+        store.put(&b, sb);
+        // touch a so b becomes the LRU
+        let sa = store.take(&a).unwrap();
+        store.put(&a, sa);
+        let (c, sc) = store.create(kv());
+        store.put(&c, sc);
+        assert_eq!(store.take(&b).unwrap_err(), TakeError::Unknown);
+        assert!(store.take(&a).is_ok());
+    }
+
+    #[test]
+    fn busy_sessions_are_never_evicted() {
+        let store = SessionStore::new(1);
+        let (a, sa) = store.create(kv());
+        store.put(&a, sa);
+        let held = store.take(&a).unwrap(); // a is busy now
+        let (b, sb) = store.create(kv());
+        // over cap, but a is busy and b was just returned: nothing evictable,
+        // so the store rides over cap rather than breaking a live request
+        store.put(&b, sb);
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.evicted(), 0);
+        store.put(&a, held); // a comes back idle → now it can be chosen
+        let (c, sc) = store.create(kv());
+        store.put(&c, sc);
+        assert_eq!(store.len(), 1);
+        assert!(store.evicted() >= 2);
+        assert!(store.take(&c).is_ok());
+    }
+
+    #[test]
+    fn remove_discards_failed_sessions() {
+        let store = SessionStore::new(4);
+        let (id, _sess) = store.create(kv());
+        store.remove(&id);
+        assert_eq!(store.take(&id).unwrap_err(), TakeError::Unknown);
+        assert!(store.is_empty());
+    }
+}

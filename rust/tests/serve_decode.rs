@@ -1,0 +1,348 @@
+//! Differential + end-to-end coverage for the serving stack: KV-cached
+//! incremental decode must be **bit-identical** to the full-window forward
+//! at the reference tier (dense and packed sites, any thread budget),
+//! within the KERNELS.md tolerance at the fast tier; session eviction must
+//! follow the LRU contract; and a real `serve::Server` on a loopback
+//! socket must answer `/healthz` and `/v1/generate` — including an exact
+//! session continuation — over the wire.
+
+mod common;
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use awp::artifact::{ArtifactSite, ModelArtifact, PackedLinear};
+use awp::compress::traits::CompressionSpec;
+use awp::coordinator::Executor;
+use awp::data::ByteTokenizer;
+use awp::eval::{argmax, LayerReport};
+use awp::infer::{DecodeSession, NativeModel};
+use awp::model::{sites, Checkpoint, ModelConfig};
+use awp::proj::ProjScratch;
+use awp::serve::{Server, ServeInfo, ServeState, SessionStore, TakeError};
+use awp::tensor::KernelTier;
+use awp::util::json::Json;
+use awp::util::parallel::with_thread_budget;
+
+use common::{lm_cfg, tiny_cfg};
+
+/// Dense and packed models over the same projected weights (the
+/// `native_forward.rs` idiom) — the two site representations the decode
+/// differential sweeps.
+fn dense_and_packed(cfg: &ModelConfig, spec: &CompressionSpec, seed: u64)
+    -> (NativeModel, NativeModel) {
+    let ck = awp::trainer::init_checkpoint(cfg, seed);
+    let mut dense_ck = ck.with_tensors(Vec::new()).unwrap();
+    let mut packed_sites = Vec::new();
+    for s in sites::enumerate_sites(cfg) {
+        let mut theta = ck.matrix(&s.param).unwrap();
+        spec.projection(theta.cols)
+            .project_rows(&mut theta, &mut ProjScratch::new());
+        let packed = PackedLinear::encode(&theta, spec);
+        assert!(packed.reconstructs(&theta), "{}: lossy pack", s.param);
+        packed_sites.push(ArtifactSite {
+            param: s.param.clone(),
+            packed,
+            report: LayerReport {
+                param: s.param.clone(),
+                d_out: s.d_out,
+                d_in: s.d_in,
+                rel_loss: 0.0,
+                sparsity: 0.0,
+                row_uniform: false,
+                iterations: 0,
+                seconds: 0.0,
+            },
+        });
+        dense_ck.set(&s.param, theta.data).unwrap();
+    }
+    let art = ModelArtifact {
+        model: ck.config.name.clone(),
+        checkpoint: ck.fingerprint(),
+        calib: 0,
+        method: "proj".into(),
+        spec: spec.fingerprint(),
+        spec_desc: spec.describe(),
+        params: 0,
+        compressed_with: "proj".into(),
+        sites: packed_sites,
+    };
+    (NativeModel::from_checkpoint(&dense_ck).unwrap(),
+     NativeModel::from_artifact(&ck, &art).unwrap())
+}
+
+fn synthetic_tokens(cfg: &ModelConfig, n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = awp::util::Rng::new(seed);
+    (0..n).map(|_| rng.below(cfg.vocab) as i32).collect()
+}
+
+/// Every per-position logit vector of a token-by-token KV decode.
+fn decode_trace(m: &NativeModel, tokens: &[i32]) -> Vec<Vec<f32>> {
+    let mut sess = m.new_session(tokens.len());
+    let mut out = vec![m.prefill(&mut sess, &tokens[..1]).unwrap()];
+    for &t in &tokens[1..] {
+        out.push(m.decode_step(&mut sess, t).unwrap());
+    }
+    out
+}
+
+#[test]
+fn kv_decode_is_bit_identical_to_full_window_dense_and_packed() {
+    let cfg = tiny_cfg();
+    let specs = [("int4-g32", CompressionSpec::quant(4, 32)),
+                 ("nm:2:4", CompressionSpec::structured_nm(2, 4))];
+    for (name, spec) in specs {
+        let (dense, packed) = dense_and_packed(&cfg, &spec, 21);
+        assert_eq!(packed.dense_site_count(), 0, "{name}");
+        let tokens = synthetic_tokens(&cfg, 10, 300);
+        for m in [&dense, &packed] {
+            let trace = decode_trace(m, &tokens);
+            for (i, got) in trace.iter().enumerate() {
+                let full = m.forward(&tokens[..=i], 1, i + 1).unwrap();
+                for (j, (a, b)) in got.iter().zip(full.row(i)).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(),
+                               "{name} pos {i} logit {j}: {a} vs {b}");
+                }
+            }
+        }
+        // and packed ≡ dense on the cached path itself
+        let dt = decode_trace(&dense, &tokens);
+        let pt = decode_trace(&packed, &tokens);
+        for (i, (a, b)) in dt.iter().zip(&pt).enumerate() {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{name} dense≠packed @{i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn kv_decode_is_thread_count_invariant() {
+    let cfg = tiny_cfg();
+    let (dense, packed) =
+        dense_and_packed(&cfg, &CompressionSpec::quant(4, 32), 22);
+    let tokens = synthetic_tokens(&cfg, 9, 301);
+    for m in [&dense, &packed] {
+        let one = with_thread_budget(1, || decode_trace(m, &tokens));
+        let four = with_thread_budget(4, || decode_trace(m, &tokens));
+        for (i, (a, b)) in one.iter().zip(&four).enumerate() {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "1 vs 4 threads @{i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fast_tier_kv_decode_stays_within_tolerance_and_thread_invariant() {
+    let cfg = tiny_cfg();
+    let (_, mut fast) =
+        dense_and_packed(&cfg, &CompressionSpec::quant(4, 32), 23);
+    let (_, reference) =
+        dense_and_packed(&cfg, &CompressionSpec::quant(4, 32), 23);
+    fast.set_tier(KernelTier::Fast);
+    let tokens = synthetic_tokens(&cfg, 8, 302);
+    let ft = decode_trace(&fast, &tokens);
+    let rt = decode_trace(&reference, &tokens);
+    for (i, (a, b)) in ft.iter().zip(&rt).enumerate() {
+        for (j, (x, y)) in a.iter().zip(b).enumerate() {
+            let tol = 1e-4 * (1.0 + x.abs() + y.abs());
+            assert!((x - y).abs() <= tol, "pos {i} logit {j}: {x} vs {y}");
+        }
+    }
+    // the fast tier's cached path is still bitwise thread-invariant
+    let one = with_thread_budget(1, || decode_trace(&fast, &tokens));
+    let four = with_thread_budget(4, || decode_trace(&fast, &tokens));
+    for (a, b) in one.iter().zip(&four) {
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "fast tier 1 vs 4 threads");
+        }
+    }
+}
+
+#[test]
+fn chunked_prefill_matches_one_shot_on_packed_sites() {
+    let cfg = tiny_cfg();
+    let (_, packed) =
+        dense_and_packed(&cfg, &CompressionSpec::structured_nm(2, 4), 24);
+    let tokens = synthetic_tokens(&cfg, 12, 303);
+    let one_shot = packed.logits_last(&tokens).unwrap();
+    for split in [1, 5, 11] {
+        let mut sess = packed.new_session(tokens.len());
+        packed.prefill(&mut sess, &tokens[..split]).unwrap();
+        let chunked = packed.prefill(&mut sess, &tokens[split..]).unwrap();
+        for (a, b) in one_shot.iter().zip(&chunked) {
+            assert_eq!(a.to_bits(), b.to_bits(), "split at {split}");
+        }
+    }
+}
+
+#[test]
+fn session_store_checkout_and_lru_eviction() {
+    let cfg = tiny_cfg();
+    let (dense, _) = dense_and_packed(&cfg, &CompressionSpec::quant(4, 32), 25);
+    let store = SessionStore::new(2);
+    // create → busy until put
+    let (a, sa) = store.create(dense.new_session(8));
+    assert_eq!(store.take(&a).unwrap_err(), TakeError::Busy);
+    store.put(&a, sa);
+    // fill past the cap: the oldest idle session goes
+    let (b, sb) = store.create(dense.new_session(8));
+    store.put(&b, sb);
+    let (c, sc) = store.create(dense.new_session(8));
+    store.put(&c, sc);
+    assert_eq!(store.len(), 2);
+    assert_eq!(store.evicted(), 1);
+    assert_eq!(store.take(&a).unwrap_err(), TakeError::Unknown);
+    // surviving sessions still check out and carry their KV state
+    let mut sb = store.take(&b).unwrap();
+    dense.prefill(&mut sb.kv, &[1, 2, 3]).unwrap();
+    sb.tokens.extend_from_slice(&[1, 2, 3]);
+    store.put(&b, sb);
+    let sb = store.take(&b).unwrap();
+    assert_eq!(sb.kv.len(), 3);
+    assert_eq!(sb.tokens, [1, 2, 3]);
+}
+
+// ----------------------------------------------------------------- loopback
+
+/// Minimal HTTP/1.1 client for the loopback tests: one request per
+/// connection, returns (status, parsed JSON body).
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str)
+    -> (u16, Json) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write!(stream,
+           "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\
+            \r\n{body}",
+           body.len())
+        .unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap(); // server closes after response
+    let status: u16 = raw
+        .strip_prefix("HTTP/1.1 ")
+        .and_then(|r| r.split(' ').next())
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad response: {raw:?}"));
+    let json = Json::parse(raw.split("\r\n\r\n").nth(1).unwrap()).unwrap();
+    (status, json)
+}
+
+fn lm_state(ck: &Checkpoint, max_ctx: usize, max_sessions: usize) -> ServeState {
+    let model = NativeModel::from_checkpoint(ck).unwrap();
+    let info = ServeInfo {
+        model: ck.config.name.clone(),
+        source: "loopback-test".into(),
+        method: "proj".into(),
+        spec: "dense".into(),
+        packed_bytes: 0,
+    };
+    ServeState::new(model, info, Executor::with_workers(2), max_ctx,
+                    max_sessions)
+}
+
+/// Replay the `/v1/generate` handler's exact greedy loop locally.
+fn expected_generation(model: &NativeModel, sess: &mut DecodeSession,
+                       prompt: &str, max_tokens: usize) -> String {
+    let tok = ByteTokenizer;
+    let prompt_tokens: Vec<i32> = tok.encode(prompt.as_bytes());
+    let mut logits = model.prefill(sess, &prompt_tokens).unwrap();
+    let mut generated = Vec::new();
+    for _ in 0..max_tokens {
+        let next = argmax(&logits);
+        generated.push(next);
+        logits = model.decode_step(sess, next).unwrap();
+    }
+    tok.decode_lossy_string(&generated)
+}
+
+#[test]
+fn loopback_server_answers_healthz_and_generate() {
+    let cfg = lm_cfg(); // full byte vocab so arbitrary prompts stay in range
+    let ck = awp::trainer::init_checkpoint(&cfg, 31);
+    let server = Server::new(lm_state(&ck, 64, 4), Executor::with_workers(2));
+    let oracle = NativeModel::from_checkpoint(&ck).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let handle = scope.spawn(|| server.serve(listener, &stop).unwrap());
+        // healthz
+        let (status, v) = http(addr, "GET", "/healthz", "");
+        assert_eq!(status, 200);
+        assert!(v.expect("ok").unwrap().as_bool().unwrap());
+        assert_eq!(v.expect("model").unwrap().as_str().unwrap(), "lm");
+        // inspect
+        let (status, v) = http(addr, "GET", "/v1/inspect", "");
+        assert_eq!(status, 200);
+        assert_eq!(v.expect("max_ctx").unwrap().as_usize().unwrap(), 64);
+        // generate: a fresh session, then an exact continuation of it
+        let (status, v) = http(addr, "POST", "/v1/generate",
+                               r#"{"prompt":"ab","max_tokens":4}"#);
+        assert_eq!(status, 200, "{v:?}");
+        let sid = v.expect("session").unwrap().as_str().unwrap().to_string();
+        let text1 = v.expect("text").unwrap().as_str().unwrap().to_string();
+        let body = format!(
+            r#"{{"prompt":"cd","max_tokens":3,"session":"{sid}"}}"#);
+        let (status, v) = http(addr, "POST", "/v1/generate", &body);
+        assert_eq!(status, 200, "{v:?}");
+        let text2 = v.expect("text").unwrap().as_str().unwrap().to_string();
+        assert_eq!(v.expect("context_tokens").unwrap().as_usize().unwrap(),
+                   2 + 4 + 2 + 3);
+        // both responses must equal a local replay over one shared session
+        let mut sess = oracle.new_session(64);
+        assert_eq!(text1, expected_generation(&oracle, &mut sess, "ab", 4));
+        assert_eq!(text2, expected_generation(&oracle, &mut sess, "cd", 3));
+        // perplexity endpoint
+        let (status, v) = http(addr, "POST", "/v1/perplexity",
+                               r#"{"text":"the quick brown fox"}"#);
+        assert_eq!(status, 200, "{v:?}");
+        assert!(v.expect("ppl").unwrap().as_f64().unwrap() > 1.0);
+        // error paths over the wire
+        assert_eq!(http(addr, "GET", "/nope", "").0, 404);
+        assert_eq!(http(addr, "POST", "/healthz", "").0, 405);
+        assert_eq!(
+            http(addr, "POST", "/v1/generate",
+                 r#"{"prompt":"x","session":"s-404"}"#).0, 404);
+        assert_eq!(http(addr, "POST", "/v1/generate", "not json").0, 400);
+        // graceful stop: serve() drains and returns the request count
+        stop.store(true, Ordering::SeqCst);
+        let served = handle.join().unwrap();
+        assert!(served >= 9, "served {served}");
+    });
+    // the session survives in the state after shutdown (drained, not killed)
+    assert_eq!(server.state().sessions.len(), 1);
+}
+
+#[test]
+fn loopback_server_evicts_lru_sessions_at_cap() {
+    let cfg = lm_cfg();
+    let ck = awp::trainer::init_checkpoint(&cfg, 32);
+    let server = Server::new(lm_state(&ck, 32, 1), Executor::with_workers(1));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let handle = scope.spawn(|| server.serve(listener, &stop).unwrap());
+        let (_, v1) = http(addr, "POST", "/v1/generate",
+                           r#"{"prompt":"a","max_tokens":2}"#);
+        let s1 = v1.expect("session").unwrap().as_str().unwrap().to_string();
+        let (_, v2) = http(addr, "POST", "/v1/generate",
+                           r#"{"prompt":"b","max_tokens":2}"#);
+        let s2 = v2.expect("session").unwrap().as_str().unwrap().to_string();
+        assert_ne!(s1, s2);
+        // cap is 1: the older session was evicted, the newer one still works
+        let gone = format!(r#"{{"prompt":"c","session":"{s1}"}}"#);
+        assert_eq!(http(addr, "POST", "/v1/generate", &gone).0, 404);
+        let alive = format!(
+            r#"{{"prompt":"c","max_tokens":1,"session":"{s2}"}}"#);
+        assert_eq!(http(addr, "POST", "/v1/generate", &alive).0, 200);
+        // a request that cannot fit the context window is a clean 422
+        let too_big = format!(
+            r#"{{"prompt":"d","max_tokens":999,"session":"{s2}"}}"#);
+        assert_eq!(http(addr, "POST", "/v1/generate", &too_big).0, 422);
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
+    });
+    assert_eq!(server.state().sessions.evicted(), 1);
+}
