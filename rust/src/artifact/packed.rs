@@ -57,10 +57,11 @@ thread_local! {
     /// `proj::PgdWorkspace`).
     static SCRATCH: RefCell<(Vec<f32>, Vec<u8>)> =
         RefCell::new((Vec::new(), Vec::new()));
-    /// Per-thread integer-GEMM scratch: codes as f32, raw codes, per-group
-    /// accumulator.
-    static INT_SCRATCH: RefCell<(Vec<f32>, Vec<u8>, Vec<f32>)> =
-        RefCell::new((Vec::new(), Vec::new(), Vec::new()));
+    /// Per-thread integer-GEMM scratch: codes as f32, raw codes, and two
+    /// per-group accumulators (groups are retired pairwise through the
+    /// fused batched rescale epilogue).
+    static INT_SCRATCH: RefCell<(Vec<f32>, Vec<u8>, Vec<f32>, Vec<f32>)> =
+        RefCell::new((Vec::new(), Vec::new(), Vec::new(), Vec::new()));
 }
 
 /// Per-matrix decode offsets computed once per kernel launch (palette
@@ -389,9 +390,14 @@ impl PreparedPacked {
     /// (`gacc = Σ_t q_t·B[t]`), then fold in scale and zero-point once per
     /// group: `orow += s·gacc − s·zp·colsum_g`. The per-group activation
     /// column sums `colsum_g = Σ_{t∈g} B[t]` cost one pass over B and are
-    /// shared by all `rows` output rows. The flat-group encoding
-    /// (scale = v, zp = −1, codes = 0) falls out correctly:
-    /// `s·(0 − (−1)·colsum) = v·colsum`.
+    /// shared by all `rows` output rows — work that amortises over however
+    /// many activation columns (a decode batch of sessions) ride through
+    /// one launch. Groups retire pairwise through the fused
+    /// [`simd::rescale_add2_fast`] epilogue, halving the output-row
+    /// read/write traffic that dominates the epilogue at wide batch
+    /// widths; the fused pass is bit-identical to two unfused ones. The
+    /// flat-group encoding (scale = v, zp = −1, codes = 0) falls out
+    /// correctly: `s·(0 − (−1)·colsum) = v·colsum`.
     fn int_matmul_fast_into(&self, b: &Matrix, out: &mut Matrix) {
         let PackedLinear::GroupedInt { cols, bits, group, scales, zps, codes, .. } =
             &self.packed
@@ -410,24 +416,42 @@ impl PreparedPacked {
         par_chunks_mut(&mut out.data, n, |i, orow| {
             INT_SCRATCH.with(|cell| {
                 let mut scratch = cell.borrow_mut();
-                let (qf, qbuf, gacc) = &mut *scratch;
+                let (qf, qbuf, gacc_a, gacc_b) = &mut *scratch;
                 qbuf.resize(k, 0);
                 unpack_bits_into(codes, *bits, i * k, &mut qbuf[..k]);
                 qf.resize(k, 0.0);
                 for t in 0..k {
                     qf[t] = qbuf[t] as f32;
                 }
-                gacc.resize(n, 0.0);
-                for g in 0..ng {
-                    gacc[..n].fill(0.0);
+                gacc_a.resize(n, 0.0);
+                gacc_b.resize(n, 0.0);
+                let accumulate = |g: usize, gacc: &mut [f32]| {
+                    gacc.fill(0.0);
                     simd::row_panel_fast(&qf[g * group..(g + 1) * group],
                                          &b.data[g * group * n..(g + 1) * group * n],
-                                         n, &mut gacc[..n]);
+                                         n, gacc);
+                };
+                let mut g = 0usize;
+                while g + 2 <= ng {
+                    accumulate(g, &mut gacc_a[..n]);
+                    accumulate(g + 1, &mut gacc_b[..n]);
+                    let sa = scales[i * ng + g];
+                    let sb = scales[i * ng + g + 1];
+                    simd::rescale_add2_fast(
+                        orow,
+                        &gacc_a[..n], &colsum.data[g * n..(g + 1) * n],
+                        sa, sa * zps[i * ng + g],
+                        &gacc_b[..n], &colsum.data[(g + 1) * n..(g + 2) * n],
+                        sb, sb * zps[i * ng + g + 1],
+                    );
+                    g += 2;
+                }
+                if g < ng {
+                    accumulate(g, &mut gacc_a[..n]);
                     let s = scales[i * ng + g];
-                    let szp = s * zps[i * ng + g];
-                    simd::rescale_add_fast(orow, &gacc[..n],
+                    simd::rescale_add_fast(orow, &gacc_a[..n],
                                            &colsum.data[g * n..(g + 1) * n],
-                                           s, szp);
+                                           s, s * zps[i * ng + g]);
                 }
             });
         });

@@ -64,6 +64,16 @@ impl LinearOp<'_> {
     /// `x: (tokens, d_in)` → `(tokens, d_out)`, computed as `(W · Xᵀ)ᵀ` so
     /// both representations run the same `W · B` kernels (and therefore
     /// stay bit-identical to each other on the reference tier).
+    ///
+    /// The activation rows become B *columns*, and every kernel on either
+    /// tier accumulates each output element over `k` in an order that does
+    /// not depend on how many columns ride along — so each row of the
+    /// result is bit-identical whether it is applied alone or stacked with
+    /// other rows (pinned below). That row-count invariance is what lets
+    /// [`crate::infer::NativeModel::decode_step_batch`] fuse many sessions'
+    /// decode steps into one launch without changing any session's bits,
+    /// while the packed fast kernels amortise their per-launch hoisted work
+    /// (group column sums, survivor lists, palette LUTs) over the batch.
     pub fn apply(&self, x: &Matrix) -> Matrix {
         self.apply_tier(x, KernelTier::Reference)
     }
@@ -167,6 +177,49 @@ mod tests {
         for (i, (a, b)) in fast.data.iter().zip(&reference.data).enumerate() {
             let tol = 1e-4 * (1.0 + a.abs() + b.abs());
             assert!((a - b).abs() <= tol, "entry {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn apply_rows_are_batch_width_invariant() {
+        // each activation row's output is bit-identical whether applied
+        // alone or stacked with others — the invariance decode_step_batch
+        // rides on (dense, int-packed and mask-packed sites, both tiers)
+        let x = Matrix::randn(6, 64, 23);
+        let theta = project_qmax(&Matrix::randn(16, 64, 24), 15.0, 32);
+        let int_packed =
+            PackedLinear::encode(&theta, &CompressionSpec::quant(4, 32)).prepare();
+        let mut nm = Matrix::randn(16, 64, 25);
+        NmStructured::new(2, 4).project_rows(&mut nm, &mut ProjScratch::new());
+        let nm_packed =
+            PackedLinear::encode(&nm, &CompressionSpec::structured_nm(2, 4))
+                .prepare();
+        let ops: [LinearOp<'_>; 3] = [
+            LinearOp::Dense(&theta),
+            LinearOp::Packed(&int_packed),
+            LinearOp::Packed(&nm_packed),
+        ];
+        for op in &ops {
+            // reference tier: exact — the k-accumulation order per output
+            // element never looks at the column count
+            let stacked = op.apply(&x);
+            // fast tier: lane/tail split depends on the width, so batched
+            // rows are pinned to the reference answer by tolerance instead
+            let stacked_fast = op.apply_tier(&x, KernelTier::Fast);
+            for i in 0..x.rows {
+                let mut single = Matrix::zeros(1, x.cols);
+                single.row_mut(0).copy_from_slice(x.row(i));
+                let alone = op.apply(&single);
+                for (a, b) in alone.row(0).iter().zip(stacked.row(i)) {
+                    assert_eq!(a.to_bits(), b.to_bits(),
+                               "row {i} changed bits when batched");
+                }
+                for (a, b) in alone.row(0).iter().zip(stacked_fast.row(i)) {
+                    let tol = 1e-4 * (1.0 + a.abs() + b.abs());
+                    assert!((a - b).abs() <= tol,
+                            "fast row {i}: {a} vs {b}");
+                }
+            }
         }
     }
 

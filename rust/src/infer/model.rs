@@ -32,6 +32,23 @@
 //! per-position dot/softmax/mix sequence against the cached rows
 //! (`rust/tests/serve_decode.rs` pins this differentially). The fast tier
 //! stays within the KERNELS.md tolerance, as for the full forward.
+//!
+//! ### Batched decode across sessions
+//!
+//! [`NativeModel::decode_step_batch`] fuses one decode step of many
+//! sessions into a single forward: the new tokens stack into one
+//! `(batch, d_model)` activation matrix, so every linear site and the tied
+//! head run **once** per step and the packed fast kernels amortise their
+//! per-launch work (group column sums, survivor lists, palette LUTs) over
+//! the whole batch — the serving-throughput lever `serve::DecodeBatcher`
+//! schedules onto. The batch is *ragged*: each session keeps its own RoPE
+//! position and its own K/V cache, and attention stays per-session. The
+//! same argument as above makes the batched step bit-identical per session
+//! to serial [`NativeModel::decode_step`] at the reference tier: reference
+//! GEMMs accumulate each output element over `k` in a fixed order that is
+//! invariant to how many activation rows ride along, every non-GEMM op is
+//! row-local, and the per-row attention replays `cached_attention`'s exact
+//! dot/softmax/mix sequence over that session's own cache.
 
 use std::collections::HashMap;
 
@@ -402,6 +419,85 @@ impl NativeModel {
         -> Result<Vec<f32>> {
         self.prefill(session, &[token])
     }
+
+    /// One fused decode step over a **ragged batch** of sessions: token
+    /// `tokens[i]` is appended to `sessions[i]` (each at its own position)
+    /// and the per-session logits come back in order. Every linear site and
+    /// the tied head see the whole `(batch, d_model)` activation stack in
+    /// one launch, so the packed fast kernels amortise their hoisted decode
+    /// work across the batch; RoPE rotates each row at its own session's
+    /// absolute position and attention runs per session over that session's
+    /// own cache. At the reference tier every session's logits are
+    /// **bit-identical** to a serial [`NativeModel::decode_step`] on that
+    /// session alone (see the module docs for the argument;
+    /// `rust/tests/serve_decode.rs` pins it for ragged batches across
+    /// thread budgets). Aliased sessions are unrepresentable — `&mut`
+    /// exclusivity means one session cannot appear twice in the slice.
+    ///
+    /// Validation happens entirely up front: on `Err` no session has been
+    /// touched.
+    pub fn decode_step_batch(&self, sessions: &mut [&mut DecodeSession],
+                             tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+        let d = self.cfg.d_model;
+        let nh = self.cfg.n_heads;
+        let dh = d / nh;
+        let n = sessions.len();
+        ensure!(n >= 1, "decode batch is empty");
+        ensure!(tokens.len() == n,
+                "decode batch: {} tokens for {n} sessions", tokens.len());
+        for (i, s) in sessions.iter().enumerate() {
+            ensure!(s.k.len() == self.cfg.n_layers
+                        && s.k.iter().all(|m| m.cols == d),
+                    "decode session {i} does not fit this model");
+            ensure!(s.len < s.capacity,
+                    "decode session {i} full: {} cached + 1 new > capacity {}",
+                    s.len, s.capacity);
+        }
+        let mut x = Matrix::zeros(n, d);
+        for (i, &tok) in tokens.iter().enumerate() {
+            ensure!(tok >= 0 && (tok as usize) < self.cfg.vocab,
+                    "token {tok} outside vocab {}", self.cfg.vocab);
+            x.row_mut(i).copy_from_slice(self.embed.row(tok as usize));
+        }
+        let starts: Vec<usize> = sessions.iter().map(|s| s.len).collect();
+        // one table row per session, each at that session's own absolute
+        // position — row i is bit-identical to the row the session's serial
+        // step would build via rope_tables_from(starts[i], 1, ..)
+        let (cos, sin) = rope_tables_at(&starts, dh, self.cfg.rope_theta);
+        for l in 0..self.cfg.n_layers {
+            let h = rmsnorm(&x, &self.ln1[l]);
+            let mut q = self.site(l, 0).apply_tier(&h, self.tier);
+            let mut k = self.site(l, 1).apply_tier(&h, self.tier);
+            let v = self.site(l, 2).apply_tier(&h, self.tier);
+            // with seq = n, rope_rows maps activation row i onto table row i
+            rope_rows(&mut q, n, nh, dh, &cos, &sin);
+            rope_rows(&mut k, n, nh, dh, &cos, &sin);
+            for (i, s) in sessions.iter_mut().enumerate() {
+                s.k[l].row_mut(starts[i]).copy_from_slice(k.row(i));
+                s.v[l].row_mut(starts[i]).copy_from_slice(v.row(i));
+            }
+            let caches: Vec<(&Matrix, &Matrix, usize)> = sessions
+                .iter()
+                .zip(&starts)
+                .map(|(s, &pos)| (&s.k[l], &s.v[l], pos))
+                .collect();
+            let o = cached_attention_rows(&q, &caches, nh, dh);
+            let o = self.site(l, 3).apply_tier(&o, self.tier);
+            add_inplace(&mut x, &o);
+            let h = rmsnorm(&x, &self.ln2[l]);
+            let mut u = self.site(l, 4).apply_tier(&h, self.tier);
+            silu_inplace(&mut u);
+            let down = self.site(l, 5).apply_tier(&u, self.tier);
+            add_inplace(&mut x, &down);
+        }
+        for s in sessions.iter_mut() {
+            s.len += 1;
+        }
+        let xf = rmsnorm(&x, &self.ln_f);
+        let logits =
+            ops::matmul_tier(&self.embed, &xf.transpose(), self.tier).transpose();
+        Ok((0..n).map(|i| logits.row(i).to_vec()).collect())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -454,6 +550,27 @@ fn rope_tables_from(start: usize, seq: usize, dh: usize, theta: f64)
     let mut cos = Vec::with_capacity(seq * half);
     let mut sin = Vec::with_capacity(seq * half);
     for s in start..start + seq {
+        for c in 0..half {
+            let freq = theta.powf(-(c as f64) / half as f64);
+            let ang = (s as f64 * freq) as f32;
+            cos.push(ang.cos());
+            sin.push(ang.sin());
+        }
+    }
+    (cos, sin)
+}
+
+/// Rotation tables for an arbitrary list of absolute positions — output
+/// row `i` covers `positions[i]`. Each row evaluates the same per-position
+/// expression as [`rope_tables_from`], so a ragged batch of sessions at
+/// different offsets sees rotations bit-identical to the rows each
+/// session's own serial step would build.
+fn rope_tables_at(positions: &[usize], dh: usize, theta: f64)
+    -> (Vec<f32>, Vec<f32>) {
+    let half = dh / 2;
+    let mut cos = Vec::with_capacity(positions.len() * half);
+    let mut sin = Vec::with_capacity(positions.len() * half);
+    for &s in positions {
         for c in 0..half {
             let freq = theta.powf(-(c as f64) / half as f64);
             let ang = (s as f64 * freq) as f32;
@@ -596,6 +713,56 @@ fn cached_attention(q: &Matrix, kc: &Matrix, vc: &Matrix, start: usize,
     o
 }
 
+/// One decode step of attention over a ragged batch: query row `i`
+/// (absolute position `caches[i].2`) attends over its own session's cached
+/// K/V rows `0..=pos`. One independent unit per `(session, head)`; within
+/// a unit the dot/softmax/mix sequence is exactly [`cached_attention`]'s
+/// `seq = 1` body, so every output row is bit-identical to the one that
+/// session's serial decode step computes — and thread-count invariant,
+/// since `par_map` only splits across the independent units.
+fn cached_attention_rows(q: &Matrix, caches: &[(&Matrix, &Matrix, usize)],
+                         nh: usize, dh: usize) -> Matrix {
+    let n = caches.len();
+    let d = nh * dh;
+    let inv = 1.0 / (dh as f32).sqrt();
+    let blocks = par_map(n * nh, |u| {
+        let (i, h) = (u / nh, u % nh);
+        let (kc, vc, pos) = caches[i];
+        let col = h * dh;
+        let mut out = vec![0.0f32; dh];
+        let mut scores = vec![0.0f32; pos + 1];
+        let qrow = &q.row(i)[col..col + dh];
+        for (sj, score) in scores.iter_mut().enumerate() {
+            let krow = &kc.row(sj)[col..col + dh];
+            let mut dot = 0.0f32;
+            for c in 0..dh {
+                dot += qrow[c] * krow[c];
+            }
+            *score = dot * inv;
+        }
+        let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - m).exp();
+            denom += *s;
+        }
+        for sj in 0..=pos {
+            let p = scores[sj] / denom;
+            let vrow = &vc.row(sj)[col..col + dh];
+            for c in 0..dh {
+                out[c] += p * vrow[c];
+            }
+        }
+        out
+    });
+    let mut o = Matrix::zeros(n, d);
+    for (u, block) in blocks.iter().enumerate() {
+        let (i, h) = (u / nh, u % nh);
+        o.row_mut(i)[h * dh..(h + 1) * dh].copy_from_slice(block);
+    }
+    o
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -701,6 +868,62 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "position {i} diverged");
             }
         }
+    }
+
+    #[test]
+    fn batched_decode_step_matches_serial_bitwise() {
+        let ck = init_checkpoint(&cfg(), 21);
+        let m = NativeModel::from_checkpoint(&ck).unwrap();
+        // ragged batch: three sessions prefilled to different positions
+        let prompts: [&[i32]; 3] = [&[1, 2, 3], &[4], &[5, 6, 7, 8, 9]];
+        let mut serial: Vec<DecodeSession> = Vec::new();
+        let mut batched: Vec<DecodeSession> = Vec::new();
+        for p in prompts {
+            let mut a = m.new_session(16);
+            m.prefill(&mut a, p).unwrap();
+            serial.push(a);
+            let mut b = m.new_session(16);
+            m.prefill(&mut b, p).unwrap();
+            batched.push(b);
+        }
+        let steps: [[i32; 3]; 2] = [[10, 11, 12], [13, 14, 15]];
+        for toks in steps {
+            let want: Vec<Vec<f32>> = serial
+                .iter_mut()
+                .zip(toks)
+                .map(|(s, t)| m.decode_step(s, t).unwrap())
+                .collect();
+            let mut refs: Vec<&mut DecodeSession> =
+                batched.iter_mut().collect();
+            let got = m.decode_step_batch(&mut refs, &toks).unwrap();
+            for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+                for (a, b) in w.iter().zip(g) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "session {i} diverged");
+                }
+            }
+        }
+        for (s, b) in serial.iter().zip(&batched) {
+            assert_eq!(s.len(), b.len());
+        }
+    }
+
+    #[test]
+    fn batched_decode_validates_without_mutating() {
+        let ck = init_checkpoint(&cfg(), 22);
+        let m = NativeModel::from_checkpoint(&ck).unwrap();
+        let mut a = m.new_session(4);
+        m.prefill(&mut a, &[1, 2, 3, 4]).unwrap(); // full
+        let mut b = m.new_session(4);
+        m.prefill(&mut b, &[1]).unwrap();
+        let mut refs = vec![&mut a, &mut b];
+        let err = m.decode_step_batch(&mut refs, &[5, 6]).unwrap_err();
+        assert!(format!("{err:#}").contains("full"));
+        assert_eq!((a.len(), b.len()), (4, 1), "failed batch must not advance");
+        // geometry errors
+        let mut c = m.new_session(4);
+        assert!(m.decode_step_batch(&mut [], &[]).is_err());
+        assert!(m.decode_step_batch(&mut [&mut c], &[1, 2]).is_err());
+        assert!(m.decode_step_batch(&mut [&mut c], &[99]).is_err());
     }
 
     #[test]

@@ -18,16 +18,20 @@
 //! repro e2e     # end-to-end driver: train → eval → compress → eval
 //! repro info    # artifacts / manifest summary
 //! repro inspect <file.apack>   # per-site footprint of a packed artifact
-//! repro bench-json [--quick] [--out BENCH_7.json]
+//! repro bench-json [--quick] [--out BENCH_8.json]
 //!               # kernel-tier perf snapshot: GEMM GFLOP/s per compression
 //!               # family (dense vs reference vs fast), native tokens/sec,
-//!               # and KV-cached vs uncached decode tokens/sec
+//!               # KV-cached vs uncached decode tokens/sec, and batched vs
+//!               # serial multi-session decode (continuous batching)
 //! repro serve   --from-artifact <file.apack> [--addr host:port]
-//!               [--max-ctx N] [--max-sessions N] [--fast|--reference]
+//!               [--max-ctx N] [--max-sessions N] [--max-batch N]
+//!               [--max-kv-mb N] [--fast|--reference]
 //!               # long-lived HTTP server over the native packed engine:
-//!               # /v1/generate (per-session KV-cached decode),
-//!               # /v1/perplexity, /v1/inspect, /healthz. Fast tier by
-//!               # default; graceful SIGINT drain — see SERVING.md
+//!               # /v1/generate (per-session KV-cached decode, continuous
+//!               # batching across concurrent requests, ?stream=true for
+//!               # chunked token streaming), /v1/perplexity, /v1/inspect,
+//!               # /healthz. Keep-alive connections, fast tier by default;
+//!               # graceful SIGINT drain — see SERVING.md
 //! ```
 //!
 //! Global flags: `--config <file.json>` (see rust/src/config), `--artifacts
@@ -227,7 +231,7 @@ fn main() -> Result<()> {
     // `bench-json` is pure CPU kernel timing — no manifest or runtime either
     if cmd == "bench-json" {
         let quick = args.get("quick").is_some();
-        let out = args.get_or("out", "BENCH_7.json");
+        let out = args.get_or("out", "BENCH_8.json");
         eprintln!("[bench] kernel tiers on {} threads, simd: {}{}",
                   awp::util::parallel::num_threads(), simd::backend_name(),
                   if quick { " (quick)" } else { "" });
@@ -604,9 +608,22 @@ fn main() -> Result<()> {
             eprintln!("[serve] {} sites packed, {} decode-to-dense \
                        assemblies", nm.packed_site_count(),
                       nm.dense_site_count());
-            let max_ctx =
-                args.get_usize("max-ctx", (ck.config.seq_len * 8).max(512))?;
-            let max_sessions = args.get_usize("max-sessions", 64)?;
+            let limits = awp::serve::ServeLimits {
+                max_ctx: args
+                    .get_usize("max-ctx", (ck.config.seq_len * 8).max(512))?,
+                max_sessions: args.get_usize("max-sessions", 64)?,
+                max_batch: args.get_usize("max-batch", 8)?,
+                // resident KV budget in MiB; 0 / absent = unlimited
+                max_kv_bytes: match args.get_usize("max-kv-mb", 0)? {
+                    0 => usize::MAX,
+                    mb => mb * (1 << 20),
+                },
+            };
+            eprintln!("[serve] limits: max_ctx={} max_sessions={} \
+                       max_batch={} max_kv_mb={}",
+                      limits.max_ctx, limits.max_sessions, limits.max_batch,
+                      if limits.max_kv_bytes == usize::MAX { 0 }
+                      else { limits.max_kv_bytes >> 20 });
             let info = awp::serve::ServeInfo {
                 model: model.clone(),
                 source: apath.to_string(),
@@ -615,9 +632,7 @@ fn main() -> Result<()> {
                 packed_bytes: art.packed_bytes(),
             };
             let exec = ctx.executor();
-            let state =
-                awp::serve::ServeState::new(nm, info, exec, max_ctx,
-                                            max_sessions);
+            let state = awp::serve::ServeState::new(nm, info, exec, limits);
             let addr = args.get_or("addr", "127.0.0.1:8080");
             let listener = std::net::TcpListener::bind(&addr)
                 .with_context(|| format!("cannot bind {addr}"))?;

@@ -16,6 +16,12 @@
 //!   ([`NativeModel::prefill`]/[`NativeModel::decode_step`]) vs the old
 //!   full-window re-forward per token; `cached_vs_uncached` records the
 //!   O(ctx²) → O(ctx) win.
+//! * `decode_batch` — continuous-batching throughput: N concurrent
+//!   sessions decoded serially (N independent `decode_step` loops) vs
+//!   fused ([`NativeModel::decode_step_batch`], one forward per tick
+//!   carrying all N), at batch 1/4/16; `batched_vs_serial` records how
+//!   much of the packed kernels' per-launch decode aux the batch
+//!   amortises.
 //!
 //! The harness is [`crate::util::bench`] (no criterion in the image); the
 //! same measurements back `benches/kernels.rs`, which adds the
@@ -28,7 +34,7 @@ use anyhow::{Context, Result};
 
 use crate::artifact::PackedLinear;
 use crate::compress::traits::CompressionSpec;
-use crate::infer::{NativeModel, SiteWeights};
+use crate::infer::{DecodeSession, NativeModel, SiteWeights};
 use crate::model::{sites, ModelConfig};
 use crate::proj::{NmStructured, ProjScratch, Projection};
 use crate::quant::project_qmax;
@@ -190,6 +196,73 @@ fn decode_tok_s(name: &str, m: &NativeModel, prompt: &[i32], n_new: usize,
     Ok(n_new as f64 / r.median_s)
 }
 
+/// Multi-session decode throughput at one batch size: `bs` sessions with
+/// ragged prompts generate `n_new` tokens each, serially (`bs` independent
+/// prefill + `decode_step` loops — what the server did per request before
+/// continuous batching) vs fused (`bs` prefills, then `n_new` ticks of
+/// [`NativeModel::decode_step_batch`] carrying all `bs` sessions). Both
+/// include the prefills in the timed region; both produce identical tokens
+/// on the reference tier.
+fn batch_decode_row(m: &NativeModel, vocab: usize, bs: usize, n_new: usize,
+                    budget_s: f64) -> Result<Json> {
+    use crate::eval::argmax;
+    let prompts: Vec<Vec<i32>> = (0..bs)
+        .map(|s| {
+            (0..4 + s % 3)
+                .map(|i| ((i * 5 + s * 11) % vocab) as i32)
+                .collect()
+        })
+        .collect();
+    let cap = prompts.iter().map(|p| p.len()).max().unwrap() + n_new + 1;
+    let serial = || -> Result<()> {
+        for p in &prompts {
+            let mut sess = m.new_session(cap);
+            let mut logits = m.prefill(&mut sess, p)?;
+            for _ in 0..n_new {
+                let next = argmax(&logits);
+                logits = m.decode_step(&mut sess, next)?;
+            }
+            std::hint::black_box(&logits);
+        }
+        Ok(())
+    };
+    let batched = || -> Result<()> {
+        let mut sessions = Vec::with_capacity(bs);
+        let mut pending = Vec::with_capacity(bs);
+        for p in &prompts {
+            let mut sess = m.new_session(cap);
+            let logits = m.prefill(&mut sess, p)?;
+            pending.push(argmax(&logits));
+            sessions.push(sess);
+        }
+        for _ in 0..n_new {
+            let mut refs: Vec<&mut DecodeSession> =
+                sessions.iter_mut().collect();
+            let logits = m.decode_step_batch(&mut refs, &pending)?;
+            drop(refs);
+            for (p, l) in pending.iter_mut().zip(&logits) {
+                *p = argmax(l);
+            }
+        }
+        std::hint::black_box(&pending);
+        Ok(())
+    };
+    serial()?; // surface errors before the timed loops
+    batched()?;
+    let rs = bench(&format!("decode serial x{bs}"), budget_s,
+                   || serial().unwrap());
+    let rb = bench(&format!("decode batched x{bs}"), budget_s,
+                   || batched().unwrap());
+    let tok = (bs * n_new) as f64;
+    Ok(Json::obj(vec![
+        ("batch", Json::Num(bs as f64)),
+        ("new_tokens", Json::Num(n_new as f64)),
+        ("serial_tok_s", Json::Num(tok / rs.median_s)),
+        ("batched_tok_s", Json::Num(tok / rb.median_s)),
+        ("batched_vs_serial", Json::Num(rs.median_s / rb.median_s)),
+    ]))
+}
+
 /// Run the full suite and assemble the `awp-bench/1` document. `quick`
 /// shrinks shapes and budgets to CI-smoke scale (~a second) — same schema,
 /// not comparable numbers.
@@ -264,20 +337,31 @@ pub fn bench_report(quick: bool) -> Result<Json> {
         ("uncached_tok_s", Json::Num(uncached)),
         ("cached_vs_uncached", Json::Num(cached / uncached)),
     ]);
+    // continuous batching: fused multi-session decode vs per-session serial
+    // loops on the serving model (packed, fast tier)
+    let (batch_sizes, bd_new): (&[usize], usize) =
+        if quick { (&[1, 4], 4) } else { (&[1, 4, 16], 16) };
+    let decode_batch = Json::Arr(
+        batch_sizes
+            .iter()
+            .map(|&bs| batch_decode_row(&fast, cfg.vocab, bs, bd_new, nb))
+            .collect::<Result<Vec<_>>>()?,
+    );
     Ok(Json::obj(vec![
         ("schema", Json::Str("awp-bench/1".into())),
-        ("pr", Json::Num(7.0)),
+        ("pr", Json::Num(8.0)),
         ("quick", Json::Bool(quick)),
         ("threads", Json::Num(num_threads() as f64)),
         ("simd", Json::Str(simd::backend_name().into())),
         ("kernels", kernels),
         ("native", native),
         ("decode", decode),
+        ("decode_batch", decode_batch),
     ]))
 }
 
 /// Run [`bench_report`] and write it to `path` (the CLI default is
-/// `BENCH_7.json` at the repo root).
+/// `BENCH_8.json` at the repo root).
 pub fn write_bench_json(path: &Path, quick: bool) -> Result<()> {
     let report = bench_report(quick)?;
     fs::write(path, report.to_string() + "\n")
@@ -310,8 +394,20 @@ mod tests {
                 > 0.0);
         assert!(decode.expect("cached_vs_uncached").unwrap().as_f64().unwrap()
                 > 0.0);
+        let decode_batch = report.expect("decode_batch").unwrap()
+            .as_arr().unwrap();
+        assert_eq!(decode_batch.len(), 2); // quick mode: batch 1 and 4
+        for row in decode_batch {
+            assert!(row.expect("batch").unwrap().as_usize().unwrap() >= 1);
+            assert!(row.expect("serial_tok_s").unwrap().as_f64().unwrap()
+                    > 0.0);
+            assert!(row.expect("batched_tok_s").unwrap().as_f64().unwrap()
+                    > 0.0);
+            assert!(row.expect("batched_vs_serial").unwrap().as_f64().unwrap()
+                    > 0.0);
+        }
         // round-trips through the hand-rolled JSON parser
         let parsed = Json::parse(&report.to_string()).unwrap();
-        assert_eq!(parsed.expect("pr").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(parsed.expect("pr").unwrap().as_usize().unwrap(), 8);
     }
 }

@@ -1,0 +1,369 @@
+//! Continuous-batching decode scheduler: fuses concurrent requests' decode
+//! steps into one [`NativeModel::decode_step_batch`] launch per tick.
+//!
+//! Each `/v1/generate` request enqueues its session as a *stream*
+//! (session + pending token + remaining steps) and then drives the shared
+//! queue in a leader/follower discipline: whichever request thread finds no
+//! tick in flight elects itself leader, drains up to `max_batch` streams
+//! off the queue front — its own and anyone else's — runs **one** batched
+//! forward outside the lock, pushes the survivors to the back of the queue
+//! and hands leadership on. Followers sleep on the condvar and wake to
+//! collect the tokens the tick produced for them. Streams join and leave
+//! the batch *between ticks* as requests arrive and complete — continuous
+//! batching, not static batches — and round-robin rotation keeps every
+//! stream progressing when more than `max_batch` are live.
+//!
+//! Electing a request thread as leader (instead of parking a dedicated
+//! decode thread) keeps the worker-pool thread budget exact, makes the
+//! scheduler trivially correct under the server's drain (the last request
+//! out finishes its own decode), and lets the router's unit tests exercise
+//! the real scheduling path with no thread setup.
+//!
+//! Because the batched step is bit-identical per session to serial
+//! [`crate::infer::NativeModel::decode_step`] at the reference tier (see
+//! `infer::model`), scheduling is *invisible* in the output: whatever
+//! interleaving the ticks happen to take, every request's generation
+//! matches a serial replay of that session alone. The fast tier obeys the
+//! usual KERNELS.md tolerance.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+
+use crate::eval::argmax;
+use crate::infer::{DecodeSession, NativeModel};
+
+/// One request's decode stream while it sits in the scheduler.
+struct Stream {
+    id: u64,
+    sess: DecodeSession,
+    /// Last generated token, not yet appended to the KV cache.
+    pending: i32,
+    /// Decode steps left (the final step appends `pending` and emits
+    /// nothing, so the cache covers every generated token — exactly the
+    /// serial loop's contract).
+    remaining: usize,
+    /// Tokens decoded but not yet collected by the request thread.
+    out: Vec<i32>,
+    /// Largest tick occupancy this stream rode in.
+    occupancy: usize,
+}
+
+/// Terminal state of a stream, parked until its request thread collects it.
+enum Outcome {
+    Finished { sess: Box<DecodeSession>, out: Vec<i32>, occupancy: usize },
+    Failed { error: String },
+}
+
+struct BatchState {
+    next_id: u64,
+    /// Live streams in round-robin order (front = next to tick).
+    queue: VecDeque<Stream>,
+    /// Completed/failed streams keyed by id.
+    done: HashMap<u64, Outcome>,
+    /// A leader is running a tick outside the lock.
+    leading: bool,
+    /// Fused forwards run since startup (occupancy telemetry).
+    ticks: u64,
+    /// Sum of per-tick occupancies (mean occupancy = sum / ticks).
+    occupancy_sum: u64,
+}
+
+/// The shared decode scheduler. One per [`super::ServeState`]; handlers
+/// call [`DecodeBatcher::decode`] and get continuous batching for free.
+pub struct DecodeBatcher {
+    max_batch: usize,
+    inner: Mutex<BatchState>,
+    cv: Condvar,
+}
+
+impl DecodeBatcher {
+    /// `max_batch` bounds how many sessions one fused forward carries
+    /// (`--max-batch`; at 1 the scheduler degenerates to serial decode).
+    pub fn new(max_batch: usize) -> DecodeBatcher {
+        DecodeBatcher {
+            max_batch: max_batch.max(1),
+            inner: Mutex::new(BatchState {
+                next_id: 1,
+                queue: VecDeque::new(),
+                done: HashMap::new(),
+                leading: false,
+                ticks: 0,
+                occupancy_sum: 0,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// `(ticks, mean occupancy)` since startup.
+    pub fn stats(&self) -> (u64, f64) {
+        let st = self.inner.lock().unwrap();
+        let mean = if st.ticks == 0 {
+            0.0
+        } else {
+            st.occupancy_sum as f64 / st.ticks as f64
+        };
+        (st.ticks, mean)
+    }
+
+    /// Run `steps` greedy decode steps of `sess` through the shared batch
+    /// (the caller already appended the prompt via prefill and picked
+    /// `first` off the prefill logits). Emits each generated token through
+    /// `on_token` as its tick produces it — `steps − 1` tokens, matching
+    /// the serial loop, whose last step appends the final token's KV rows
+    /// and discards the logits. Returns the session and the largest batch
+    /// occupancy any of its ticks reached.
+    ///
+    /// On `Err` the session is gone — a failed model step leaves the KV
+    /// rows inconsistent with the token history (the caller must drop the
+    /// store entry), and a failed `on_token` sink means tokens the cache
+    /// already covers were never delivered.
+    pub fn decode(&self, model: &NativeModel, sess: DecodeSession, first: i32,
+                  steps: usize,
+                  on_token: &mut dyn FnMut(i32) -> anyhow::Result<()>)
+        -> Result<(DecodeSession, usize), String> {
+        let id = {
+            let mut st = self.inner.lock().unwrap();
+            let id = st.next_id;
+            st.next_id += 1;
+            st.queue.push_back(Stream {
+                id,
+                sess,
+                pending: first,
+                remaining: steps.max(1),
+                out: Vec::new(),
+                occupancy: 0,
+            });
+            id
+        };
+        self.cv.notify_all();
+        let mut st = self.inner.lock().unwrap();
+        loop {
+            // deliver tokens already decoded for this stream (streaming
+            // callers flush them to the socket outside the lock)
+            let waiting: Option<Vec<i32>> = st
+                .queue
+                .iter_mut()
+                .find(|s| s.id == id)
+                .filter(|s| !s.out.is_empty())
+                .map(|s| std::mem::take(&mut s.out));
+            if let Some(tokens) = waiting {
+                drop(st);
+                for t in tokens {
+                    if let Err(e) = on_token(t) {
+                        self.abandon(id);
+                        return Err(format!("token sink failed: {e:#}"));
+                    }
+                }
+                st = self.inner.lock().unwrap();
+                continue;
+            }
+            if let Some(outcome) = st.done.remove(&id) {
+                drop(st);
+                return match outcome {
+                    Outcome::Finished { sess, out, occupancy } => {
+                        for t in out {
+                            if let Err(e) = on_token(t) {
+                                return Err(format!("token sink failed: {e:#}"));
+                            }
+                        }
+                        Ok((*sess, occupancy))
+                    }
+                    Outcome::Failed { error } => Err(error),
+                };
+            }
+            if !st.leading && !st.queue.is_empty() {
+                // become leader: tick the queue front (which may or may not
+                // include this thread's own stream) outside the lock
+                st.leading = true;
+                let take = st.queue.len().min(self.max_batch);
+                let mut batch: Vec<Stream> = st.queue.drain(..take).collect();
+                drop(st);
+                let failure = tick(model, &mut batch);
+                st = self.inner.lock().unwrap();
+                st.leading = false;
+                st.ticks += 1;
+                st.occupancy_sum += batch.len() as u64;
+                for s in batch {
+                    if let Some(error) = &failure {
+                        st.done.insert(s.id, Outcome::Failed {
+                            error: error.clone(),
+                        });
+                    } else if s.remaining == 0 {
+                        st.done.insert(s.id, Outcome::Finished {
+                            sess: Box::new(s.sess),
+                            out: s.out,
+                            occupancy: s.occupancy,
+                        });
+                    } else {
+                        st.queue.push_back(s);
+                    }
+                }
+                self.cv.notify_all();
+            } else {
+                st = self.cv.wait(st).unwrap();
+            }
+        }
+    }
+
+    /// Forget stream `id` after a sink failure: wait until it is back under
+    /// the lock (it may be mid-tick) and drop it.
+    fn abandon(&self, id: u64) {
+        let mut st = self.inner.lock().unwrap();
+        loop {
+            if st.done.remove(&id).is_some() {
+                return;
+            }
+            if let Some(pos) = st.queue.iter().position(|s| s.id == id) {
+                st.queue.remove(pos);
+                return;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+}
+
+/// One fused decode step over every stream in `batch`. On success each
+/// stream's pending token is appended to its cache and — unless it was the
+/// stream's final step — the next greedy token is emitted into its `out`
+/// buffer. On failure every rider's session is poisoned (mid-forward state
+/// cannot be resumed), so all of them fail together.
+fn tick(model: &NativeModel, batch: &mut [Stream]) -> Option<String> {
+    let n = batch.len();
+    let tokens: Vec<i32> = batch.iter().map(|s| s.pending).collect();
+    let mut refs: Vec<&mut DecodeSession> =
+        batch.iter_mut().map(|s| &mut s.sess).collect();
+    let result = model.decode_step_batch(&mut refs, &tokens);
+    drop(refs);
+    match result {
+        Ok(logits) => {
+            for (s, l) in batch.iter_mut().zip(&logits) {
+                s.occupancy = s.occupancy.max(n);
+                s.remaining -= 1;
+                if s.remaining > 0 {
+                    let next = argmax(l);
+                    s.out.push(next);
+                    s.pending = next;
+                }
+            }
+            None
+        }
+        Err(e) => Some(format!("batched decode step failed: {e:#}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::trainer::init_checkpoint;
+
+    fn model() -> NativeModel {
+        let cfg = ModelConfig {
+            name: "t".into(), vocab: 32, d_model: 16, n_heads: 2, n_layers: 2,
+            d_ff: 24, seq_len: 8, batch: 1, decode_len: 8, rope_theta: 1e4,
+        };
+        NativeModel::from_checkpoint(&init_checkpoint(&cfg, 41)).unwrap()
+    }
+
+    /// Serial replay of the handler's greedy loop: prefill + decode_step.
+    fn serial(m: &NativeModel, prompt: &[i32], steps: usize) -> Vec<i32> {
+        let mut sess = m.new_session(32);
+        let mut logits = m.prefill(&mut sess, prompt).unwrap();
+        let mut out = Vec::new();
+        for _ in 0..steps {
+            let next = argmax(&logits);
+            out.push(next);
+            logits = m.decode_step(&mut sess, next).unwrap();
+        }
+        out
+    }
+
+    #[test]
+    fn single_stream_decode_matches_serial_replay() {
+        let m = model();
+        let batcher = DecodeBatcher::new(4);
+        let prompt = [1i32, 2, 3];
+        let steps = 5;
+        let mut sess = m.new_session(32);
+        let logits = m.prefill(&mut sess, &prompt).unwrap();
+        let first = argmax(&logits);
+        let mut got = vec![first];
+        let (sess, occupancy) = batcher
+            .decode(&m, sess, first, steps, &mut |t| {
+                got.push(t);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(got, serial(&m, &prompt, steps));
+        assert_eq!(sess.len(), prompt.len() + steps);
+        assert_eq!(occupancy, 1);
+        let (ticks, mean) = batcher.stats();
+        assert_eq!(ticks, steps as u64);
+        assert_eq!(mean, 1.0);
+    }
+
+    #[test]
+    fn concurrent_streams_batch_and_match_serial_replays() {
+        let m = model();
+        let batcher = DecodeBatcher::new(4);
+        let prompts: [&[i32]; 4] = [&[1, 2], &[3], &[4, 5, 6], &[7, 8]];
+        let steps = 6;
+        let outputs = std::thread::scope(|scope| {
+            let handles: Vec<_> = prompts
+                .iter()
+                .map(|prompt| {
+                    let (m, batcher) = (&m, &batcher);
+                    scope.spawn(move || {
+                        let mut sess = m.new_session(32);
+                        let logits = m.prefill(&mut sess, prompt).unwrap();
+                        let first = argmax(&logits);
+                        let mut got = vec![first];
+                        let (sess, occupancy) = batcher
+                            .decode(m, sess, first, steps, &mut |t| {
+                                got.push(t);
+                                Ok(())
+                            })
+                            .unwrap();
+                        assert_eq!(sess.len(), prompt.len() + steps);
+                        (got, occupancy)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
+        });
+        // whatever interleaving the ticks took, every stream's generation
+        // is bit-identical to a serial replay of that session alone
+        for (prompt, (got, _occ)) in prompts.iter().zip(&outputs) {
+            assert_eq!(got, &serial(&m, prompt, steps));
+        }
+        let (ticks, _mean) = batcher.stats();
+        assert!(ticks >= steps as u64, "at least one stream's worth of ticks");
+    }
+
+    #[test]
+    fn sink_failure_abandons_the_stream() {
+        let m = model();
+        let batcher = DecodeBatcher::new(2);
+        let mut sess = m.new_session(32);
+        let logits = m.prefill(&mut sess, &[1, 2]).unwrap();
+        let first = argmax(&logits);
+        let mut seen = 0usize;
+        let err = batcher
+            .decode(&m, sess, first, 6, &mut |_t| {
+                seen += 1;
+                anyhow::ensure!(seen < 2, "client went away");
+                Ok(())
+            })
+            .unwrap_err();
+        assert!(err.contains("token sink failed"), "{err}");
+        // the scheduler is empty again: a fresh stream still completes
+        let mut sess = m.new_session(32);
+        let logits = m.prefill(&mut sess, &[3]).unwrap();
+        let first = argmax(&logits);
+        assert!(batcher.decode(&m, sess, first, 2, &mut |_| Ok(())).is_ok());
+    }
+}

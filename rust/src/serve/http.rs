@@ -3,10 +3,13 @@
 //! The build is fully offline (no hyper/axum on the image), so the server
 //! carries its own wire protocol the same way `util::json` carries its own
 //! codec: a strict, bounded parser for the fragment of HTTP/1.1 the
-//! endpoints need (request line + headers + `Content-Length` body), and a
-//! writer that always answers `Connection: close` — one request per
-//! connection keeps the server state machine trivial and is plenty for an
-//! inference endpoint whose per-request work dwarfs connection setup.
+//! endpoints need (request line + headers + `Content-Length` body), a
+//! response writer with exact `Content-Length` framing, and chunked
+//! transfer-encoding writers for the streaming generate path. Connections
+//! follow HTTP/1.1 persistence semantics: keep-alive by default
+//! ([`Request::wants_keep_alive`]), `Connection: close` when the client
+//! asks for it or the server's per-connection request cap is reached —
+//! the [`Response::keep_alive`] flag picks the header the writer emits.
 //!
 //! Bounds are enforced while reading, not after: header bytes are capped at
 //! [`MAX_HEADER_BYTES`] and bodies at [`MAX_BODY_BYTES`], so a misbehaving
@@ -45,6 +48,27 @@ impl Request {
             .iter()
             .find(|(k, _)| *k == want)
             .map(|(_, v)| v.as_str())
+    }
+
+    /// HTTP/1.1 connection persistence: keep the connection open unless
+    /// the client sent `Connection: close` (token-matched, case-insensitive
+    /// — `keep-alive` and absence both mean persistent on HTTP/1.1).
+    pub fn wants_keep_alive(&self) -> bool {
+        match self.header("connection") {
+            Some(v) => !v
+                .split(',')
+                .any(|t| t.trim().eq_ignore_ascii_case("close")),
+            None => true,
+        }
+    }
+
+    /// `true` when query parameter `name` is present as `name`, `name=1`
+    /// or `name=true` (e.g. `/v1/generate?stream=true`).
+    pub fn query_flag(&self, name: &str) -> bool {
+        self.query.split('&').any(|pair| {
+            let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+            k == name && matches!(v, "" | "1" | "true")
+        })
     }
 
     /// Body parsed as a JSON object (the POST endpoints' input contract).
@@ -127,9 +151,9 @@ pub fn read_request<R: BufRead>(reader: &mut R) -> Result<Request> {
     Ok(req)
 }
 
-/// An outgoing response. Every response closes the connection and carries
-/// an exact `Content-Length`, plus the structured-log fields the server's
-/// per-request line reports (`session`, `tokens`).
+/// An outgoing response with exact `Content-Length` framing, plus the
+/// structured-log fields the server's per-request line reports (`session`,
+/// `tokens`, `batch`) and the connection-persistence decision.
 #[derive(Debug)]
 pub struct Response {
     pub status: u16,
@@ -139,6 +163,12 @@ pub struct Response {
     pub session: String,
     /// Tokens processed (prompt + generated, or scored), 0 when n/a.
     pub tokens: usize,
+    /// Peak decode-batch occupancy this request's ticks rode in, 0 when
+    /// the request never decoded.
+    pub batch: usize,
+    /// Emit `Connection: keep-alive` instead of `close`. Defaults to
+    /// `false`; the server sets it per connection state.
+    pub keep_alive: bool,
 }
 
 impl Response {
@@ -149,6 +179,8 @@ impl Response {
             body: value.to_string().into_bytes(),
             session: "-".into(),
             tokens: 0,
+            batch: 0,
+            keep_alive: false,
         }
     }
 
@@ -156,6 +188,18 @@ impl Response {
     pub fn logged(mut self, session: &str, tokens: usize) -> Response {
         self.session = session.to_string();
         self.tokens = tokens;
+        self
+    }
+
+    /// Record the decode-batch occupancy for the structured log line.
+    pub fn with_batch(mut self, batch: usize) -> Response {
+        self.batch = batch;
+        self
+    }
+
+    /// Set the connection-persistence header this response will carry.
+    pub fn keep_alive(mut self, keep_alive: bool) -> Response {
+        self.keep_alive = keep_alive;
         self
     }
 
@@ -167,6 +211,7 @@ impl Response {
             405 => "Method Not Allowed",
             409 => "Conflict",
             422 => "Unprocessable Entity",
+            429 => "Too Many Requests",
             500 => "Internal Server Error",
             503 => "Service Unavailable",
             _ => "Unknown",
@@ -178,16 +223,74 @@ impl Response {
         write!(
             w,
             "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n\
-             Connection: close\r\n\r\n",
+             Connection: {}\r\n\r\n",
             self.status,
             Self::reason(self.status),
             self.content_type,
             self.body.len(),
+            if self.keep_alive { "keep-alive" } else { "close" },
         )?;
         w.write_all(&self.body)?;
         w.flush()?;
         Ok(())
     }
+}
+
+/// Parse one request off `reader`, distinguishing "connection is done"
+/// from "request is malformed": `Ok(None)` when the peer closed (or an
+/// idle read timed out) *before sending any bytes* of a next request,
+/// `Err` for garbage after bytes started flowing. This is what lets the
+/// keep-alive loop wait quietly for a pipelined request without turning
+/// every clean close into a spurious 400.
+pub fn read_request_opt<R: BufRead>(reader: &mut R) -> Result<Option<Request>> {
+    match reader.fill_buf() {
+        Ok([]) => return Ok(None),
+        Ok(_) => {}
+        Err(e) if matches!(e.kind(),
+                           std::io::ErrorKind::WouldBlock
+                               | std::io::ErrorKind::TimedOut
+                               | std::io::ErrorKind::ConnectionReset) => {
+            return Ok(None)
+        }
+        Err(e) => return Err(e.into()),
+    }
+    read_request(reader).map(Some)
+}
+
+/// Write the head of a chunked streaming response (the `stream=true`
+/// generate path): committed status 200, newline-delimited JSON body,
+/// `Transfer-Encoding: chunked` framing so each token flushes as its own
+/// chunk the moment the scheduler emits it.
+pub fn write_stream_head<W: Write>(w: &mut W, keep_alive: bool) -> Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\n\
+         Transfer-Encoding: chunked\r\nConnection: {}\r\n\r\n",
+        if keep_alive { "keep-alive" } else { "close" },
+    )?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Write one chunk (hex length, payload, CRLF) and flush so the client
+/// sees it immediately. Empty payloads are skipped — a zero-length chunk
+/// is the stream terminator, which only [`write_last_chunk`] may emit.
+pub fn write_chunk<W: Write>(w: &mut W, data: &[u8]) -> Result<()> {
+    if data.is_empty() {
+        return Ok(());
+    }
+    write!(w, "{:x}\r\n", data.len())?;
+    w.write_all(data)?;
+    w.write_all(b"\r\n")?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Terminate a chunked stream (`0\r\n\r\n`).
+pub fn write_last_chunk<W: Write>(w: &mut W) -> Result<()> {
+    w.write_all(b"0\r\n\r\n")?;
+    w.flush()?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -269,5 +372,81 @@ mod tests {
     fn empty_json_body_is_rejected() {
         let req = parse("POST /v1/generate HTTP/1.1\r\n\r\n").unwrap();
         assert!(req.json_body().is_err());
+    }
+
+    #[test]
+    fn connection_persistence_follows_http11_semantics() {
+        // absent header → persistent (HTTP/1.1 default)
+        assert!(parse("GET / HTTP/1.1\r\n\r\n").unwrap().wants_keep_alive());
+        assert!(parse("GET / HTTP/1.1\r\nConnection: keep-alive\r\n\r\n")
+            .unwrap()
+            .wants_keep_alive());
+        // explicit close, any case, possibly in a token list
+        assert!(!parse("GET / HTTP/1.1\r\nConnection: close\r\n\r\n")
+            .unwrap()
+            .wants_keep_alive());
+        assert!(!parse("GET / HTTP/1.1\r\nConnection: Close\r\n\r\n")
+            .unwrap()
+            .wants_keep_alive());
+        assert!(!parse("GET / HTTP/1.1\r\nConnection: TE, close\r\n\r\n")
+            .unwrap()
+            .wants_keep_alive());
+    }
+
+    #[test]
+    fn query_flags_parse_all_spellings() {
+        let req = |q: &str| {
+            parse(&format!("POST /v1/generate{q} HTTP/1.1\r\n\r\n")).unwrap()
+        };
+        assert!(req("?stream=true").query_flag("stream"));
+        assert!(req("?stream=1").query_flag("stream"));
+        assert!(req("?stream").query_flag("stream"));
+        assert!(req("?a=b&stream=true").query_flag("stream"));
+        assert!(!req("?stream=false").query_flag("stream"));
+        assert!(!req("?streaming=true").query_flag("stream"));
+        assert!(!req("").query_flag("stream"));
+    }
+
+    #[test]
+    fn keep_alive_response_carries_the_header() {
+        let resp = Response::json(200, &Json::obj(vec![("ok", Json::Bool(true))]))
+            .keep_alive(true);
+        let mut out = Vec::new();
+        resp.write_to(&mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(!text.contains("Connection: close"));
+        assert_eq!(Response::reason(429), "Too Many Requests");
+    }
+
+    #[test]
+    fn read_request_opt_distinguishes_close_from_garbage() {
+        // clean EOF before any bytes → None, not an error
+        let mut empty = BufReader::new(&b""[..]);
+        assert!(read_request_opt(&mut empty).unwrap().is_none());
+        // a complete request parses as usual
+        let mut ok = BufReader::new(&b"GET /healthz HTTP/1.1\r\n\r\n"[..]);
+        let req = read_request_opt(&mut ok).unwrap().unwrap();
+        assert_eq!(req.path, "/healthz");
+        // bytes started flowing, then garbage → a real error (→ 400)
+        let mut bad = BufReader::new(&b"GARBAGE\r\n\r\n"[..]);
+        assert!(read_request_opt(&mut bad).is_err());
+    }
+
+    #[test]
+    fn chunked_stream_wire_format_is_exact() {
+        let mut out = Vec::new();
+        write_stream_head(&mut out, false).unwrap();
+        write_chunk(&mut out, br#"{"token":7}"#).unwrap();
+        write_chunk(&mut out, b"").unwrap(); // skipped, not a terminator
+        write_chunk(&mut out, b"0123456789abcdef").unwrap(); // 16 → "10"
+        write_last_chunk(&mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Transfer-Encoding: chunked\r\n"));
+        assert!(text.contains("Content-Type: application/x-ndjson\r\n"));
+        let body = text.split_once("\r\n\r\n").unwrap().1;
+        assert_eq!(body,
+                   "b\r\n{\"token\":7}\r\n10\r\n0123456789abcdef\r\n0\r\n\r\n");
     }
 }

@@ -8,30 +8,41 @@
 //! generated token — and a *continuation* request against the same
 //! session id pays nothing for the history at all. Artifacts serve
 //! packed (zero decode-to-dense assemblies), on the fast kernel tier by
-//! default.
+//! default. Concurrent requests' decode steps fuse into one batched
+//! forward per tick through the [`batcher`] — continuous batching that
+//! amortises every packed site's per-launch decode aux over the whole
+//! batch without changing any session's reference-tier bits.
 //!
 //! Layering, bottom to top:
 //!
 //! * [`http`] — bounded, dependency-free HTTP/1.1 parsing and writing
-//!   (the image carries no HTTP crate, as `util::json` carries no serde);
+//!   (the image carries no HTTP crate, as `util::json` carries no serde),
+//!   keep-alive negotiation, chunked streaming writers;
 //! * [`router`] — the static route table and typed handlers
-//!   (`/healthz`, `/v1/inspect`, `/v1/generate`, `/v1/perplexity`) over
-//!   [`ServeState`], with [`ApiError`] → JSON error mapping;
+//!   (`/healthz`, `/v1/inspect`, `/v1/generate` (buffered or
+//!   `?stream=true`), `/v1/perplexity`) over [`ServeState`], with
+//!   [`ApiError`] → JSON error mapping;
 //! * [`session`] — [`SessionStore`]: per-session KV state, exclusive
-//!   checkout, LRU eviction cap;
+//!   checkout, LRU eviction cap, resident-KV byte budget;
+//! * [`batcher`] — [`DecodeBatcher`]: the continuous-batching decode
+//!   scheduler every generate request joins;
 //! * [`server`] — the accept loop and worker pool (sized by the
-//!   coordinator [`crate::coordinator::Executor`] budget), structured
-//!   per-request log lines, graceful SIGINT/SIGTERM drain.
+//!   coordinator [`crate::coordinator::Executor`] budget), persistent
+//!   connections, structured per-request log lines, graceful
+//!   SIGINT/SIGTERM drain.
 //!
 //! Operational reference — endpoints, JSON schemas, curl quickstart, tier
 //! and thread knobs — lives in SERVING.md.
 
+pub mod batcher;
 pub mod http;
 pub mod router;
 pub mod server;
 pub mod session;
 
+pub use batcher::DecodeBatcher;
 pub use http::{Request, Response};
-pub use router::{handle, ApiError, Route, ServeInfo, ServeState, ROUTES};
+pub use router::{generate_stream, handle, ApiError, Route, ServeInfo,
+                 ServeLimits, ServeState, StreamOutcome, ROUTES};
 pub use server::{install_signal_handlers, shutdown_flag, Server};
-pub use session::{ServeSession, SessionStore, TakeError};
+pub use session::{ServeSession, SessionStore, StoreFull, TakeError};

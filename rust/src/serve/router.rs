@@ -4,6 +4,7 @@
 //! extractors — and every endpoint's request/response schema is documented
 //! in SERVING.md with worked examples.
 
+use std::io::Write;
 use std::time::Instant;
 
 use crate::coordinator::Executor;
@@ -12,6 +13,8 @@ use crate::eval::argmax;
 use crate::infer::NativeModel;
 use crate::util::json::Json;
 
+use super::batcher::DecodeBatcher;
+use super::http::{write_chunk, write_last_chunk, write_stream_head};
 use super::http::{Request, Response};
 use super::session::{ServeSession, SessionStore, TakeError};
 
@@ -32,14 +35,42 @@ pub struct ServeInfo {
     pub packed_bytes: usize,
 }
 
+/// The server's resource bounds, grouped so `main.rs` and tests configure
+/// them in one place (`..ServeLimits::default()` for the rest).
+#[derive(Debug, Clone, Copy)]
+pub struct ServeLimits {
+    /// Per-session context window (K/V rows a session can hold).
+    pub max_ctx: usize,
+    /// Live sessions the store admits (`--max-sessions`).
+    pub max_sessions: usize,
+    /// Sessions one fused decode tick carries (`--max-batch`).
+    pub max_batch: usize,
+    /// Resident KV-cache byte budget across all sessions (`--max-kv-mb`;
+    /// `usize::MAX` = unlimited).
+    pub max_kv_bytes: usize,
+}
+
+impl Default for ServeLimits {
+    fn default() -> ServeLimits {
+        ServeLimits {
+            max_ctx: 512,
+            max_sessions: 64,
+            max_batch: 8,
+            max_kv_bytes: usize::MAX,
+        }
+    }
+}
+
 /// Everything a handler can touch: the model (read-only — all mutable
-/// per-connection state lives in sessions), the session store, and the
-/// serving limits.
+/// per-connection state lives in sessions), the session store, the shared
+/// decode scheduler, and the serving limits.
 pub struct ServeState {
     pub model: NativeModel,
     pub info: ServeInfo,
     pub exec: Executor,
     pub sessions: SessionStore,
+    /// Continuous-batching decode scheduler every generate request joins.
+    pub batcher: DecodeBatcher,
     /// Per-session context window (K/V rows a session can hold).
     pub max_ctx: usize,
     pub started: Instant,
@@ -47,13 +78,15 @@ pub struct ServeState {
 
 impl ServeState {
     pub fn new(model: NativeModel, info: ServeInfo, exec: Executor,
-               max_ctx: usize, max_sessions: usize) -> ServeState {
+               limits: ServeLimits) -> ServeState {
         ServeState {
             model,
             info,
             exec,
-            sessions: SessionStore::new(max_sessions),
-            max_ctx: max_ctx.max(2),
+            sessions: SessionStore::with_kv_budget(limits.max_sessions,
+                                                   limits.max_kv_bytes),
+            batcher: DecodeBatcher::new(limits.max_batch),
+            max_ctx: limits.max_ctx.max(2),
             started: Instant::now(),
         }
     }
@@ -156,20 +189,27 @@ fn inspect(state: &ServeState, _req: &Request) -> Result<Response, ApiError> {
         ("tier", Json::Str(state.model.tier().describe().into())),
         ("max_ctx", Json::Num(state.max_ctx as f64)),
         ("max_sessions", Json::Num(state.sessions.cap() as f64)),
+        ("max_batch", Json::Num(state.batcher.max_batch() as f64)),
+        // 0 = unlimited (usize::MAX does not survive the f64 round-trip)
+        ("max_kv_bytes", Json::Num(
+            if state.sessions.max_kv_bytes() == usize::MAX { 0.0 }
+            else { state.sessions.max_kv_bytes() as f64 })),
+        ("kv_bytes", Json::Num(state.sessions.kv_bytes() as f64)),
         ("sessions", Json::Num(state.sessions.len() as f64)),
         ("evicted", Json::Num(state.sessions.evicted() as f64)),
+        ("decode_ticks", Json::Num(state.batcher.stats().0 as f64)),
+        ("mean_batch", Json::Num(state.batcher.stats().1)),
     ]);
     Ok(Response::json(200, &body))
 }
 
-/// `POST /v1/generate` `{prompt, max_tokens?, session?}` — greedy
-/// generation through the KV-cached decode path. Without `session` a fresh
-/// [`crate::infer::DecodeSession`] is created and its id returned; with
-/// one, generation *continues* the cached context — the prompt is appended
-/// to everything the session has seen, at O(new tokens) cost, and the
-/// result is bit-identical (reference tier) to replaying the whole
-/// concatenated history.
-fn generate(state: &ServeState, req: &Request) -> Result<Response, ApiError> {
+/// Validate a `/v1/generate` request and check its session out: everything
+/// up to (but not including) the first forward pass. Returns
+/// `(session id, checked-out session, prompt tokens, max_tokens)` — shared
+/// by the buffered and streaming generate paths, so both reject with
+/// identical statuses before any bytes of a streamed response commit.
+fn prepare_generate(state: &ServeState, req: &Request)
+    -> Result<(String, ServeSession, Vec<i32>, usize), ApiError> {
     let body = req.json_body().map_err(|e| ApiError::bad_request(format!("{e:#}")))?;
     let prompt = body
         .get("prompt")
@@ -197,8 +237,9 @@ fn generate(state: &ServeState, req: &Request) -> Result<Response, ApiError> {
         ));
     }
     // acquire a session: continuation checks the id out (exclusive), a
-    // fresh request allocates KV buffers for the full context window
-    let (id, mut sess) = match body.get("session") {
+    // fresh request allocates KV buffers for the full context window —
+    // refused with 429 when the store is wall-to-wall busy sessions
+    let (id, sess) = match body.get("session") {
         Some(v) => {
             let id = v
                 .as_str()
@@ -215,7 +256,14 @@ fn generate(state: &ServeState, req: &Request) -> Result<Response, ApiError> {
             })?;
             (id.to_string(), sess)
         }
-        None => state.sessions.create(state.model.new_session(state.max_ctx)),
+        None => state
+            .sessions
+            .create(state.model.new_session(state.max_ctx))
+            .map_err(|e| ApiError::new(
+                429,
+                format!("session store full: {} sessions busy; retry later",
+                        e.busy),
+            ))?,
     };
     // the cache must cover prompt + every generated token so a follow-up
     // request can continue exactly
@@ -228,28 +276,72 @@ fn generate(state: &ServeState, req: &Request) -> Result<Response, ApiError> {
         state.sessions.put(&id, sess); // unchanged — hand it back
         return Err(ApiError::new(422, msg));
     }
-    let mut run = || -> anyhow::Result<Vec<i32>> {
-        let mut logits = state.model.prefill(&mut sess.kv, &prompt_tokens)?;
-        let mut generated = Vec::with_capacity(max_tokens);
-        for _ in 0..max_tokens {
-            let next = argmax(&logits);
-            generated.push(next);
-            logits = state.model.decode_step(&mut sess.kv, next)?;
-        }
-        Ok(generated)
-    };
-    let generated = match run() {
-        Ok(g) => g,
+    Ok((id, sess, prompt_tokens, max_tokens))
+}
+
+/// Run a prepared generate request through the prefill path and the shared
+/// [`DecodeBatcher`]: the prompt prefills on this request's thread (ragged
+/// prompt lengths don't batch), then the decode loop joins the continuous
+/// batch, where concurrent requests' steps fuse into one forward per tick.
+/// Each generated token is pushed through `on_token` as its tick produces
+/// it (the streaming path's hook; the buffered path passes a no-op).
+///
+/// Returns the finished session, the generated tokens and the peak batch
+/// occupancy the request rode in. Any failure discards the session — its
+/// KV state no longer matches the token history.
+fn decode_generate(state: &ServeState, id: &str, mut sess: ServeSession,
+                   prompt_tokens: &[i32], max_tokens: usize,
+                   on_token: &mut dyn FnMut(i32) -> anyhow::Result<()>)
+    -> Result<(ServeSession, Vec<i32>, usize), ApiError> {
+    let logits = match state.model.prefill(&mut sess.kv, prompt_tokens) {
+        Ok(l) => l,
         Err(e) => {
-            // KV state no longer matches the token history — discard
-            state.sessions.remove(&id);
+            state.sessions.remove(id);
             return Err(e.into());
         }
     };
+    let first = argmax(&logits);
+    let mut generated = Vec::with_capacity(max_tokens);
+    generated.push(first);
+    if let Err(e) = on_token(first) {
+        state.sessions.remove(id);
+        return Err(ApiError::new(500, format!("token sink failed: {e:#}")));
+    }
+    let ServeSession { kv, tokens } = sess;
+    let mut collect = |t: i32| {
+        generated.push(t);
+        on_token(t)
+    };
+    match state.batcher.decode(&state.model, kv, first, max_tokens,
+                               &mut collect) {
+        Ok((kv, occupancy)) => {
+            Ok((ServeSession { kv, tokens }, generated, occupancy))
+        }
+        Err(msg) => {
+            state.sessions.remove(id);
+            Err(ApiError::new(500, msg))
+        }
+    }
+}
+
+/// `POST /v1/generate` `{prompt, max_tokens?, session?}` — greedy
+/// generation through the KV-cached decode path. Without `session` a fresh
+/// [`crate::infer::DecodeSession`] is created and its id returned; with
+/// one, generation *continues* the cached context — the prompt is appended
+/// to everything the session has seen, at O(new tokens) cost, and the
+/// result is bit-identical (reference tier) to replaying the whole
+/// concatenated history. Decode steps run through the shared continuous
+/// batch; `batch_occupancy` in the response reports the peak number of
+/// sessions this request's ticks were fused with.
+fn generate(state: &ServeState, req: &Request) -> Result<Response, ApiError> {
+    let (id, sess, prompt_tokens, max_tokens) = prepare_generate(state, req)?;
+    let (mut sess, generated, occupancy) =
+        decode_generate(state, &id, sess, &prompt_tokens, max_tokens,
+                        &mut |_| Ok(()))?;
     sess.tokens.extend_from_slice(&prompt_tokens);
     sess.tokens.extend_from_slice(&generated);
     let context_tokens = sess.kv.len();
-    let text = tok.decode_lossy_string(&generated);
+    let text = ByteTokenizer.decode_lossy_string(&generated);
     state.sessions.put(&id, sess);
     let processed = prompt_tokens.len() + generated.len();
     let body = Json::obj(vec![
@@ -258,8 +350,91 @@ fn generate(state: &ServeState, req: &Request) -> Result<Response, ApiError> {
         ("prompt_tokens", Json::Num(prompt_tokens.len() as f64)),
         ("generated_tokens", Json::Num(generated.len() as f64)),
         ("context_tokens", Json::Num(context_tokens as f64)),
+        ("batch_occupancy", Json::Num(occupancy as f64)),
     ]);
-    Ok(Response::json(200, &body).logged(&id, processed))
+    Ok(Response::json(200, &body).logged(&id, processed).with_batch(occupancy))
+}
+
+/// What a streamed generate did, for the server's structured log line (the
+/// wire status of a stream that failed mid-flight is still the committed
+/// 200; `status` here records the handler outcome instead).
+pub struct StreamOutcome {
+    pub status: u16,
+    pub session: String,
+    pub tokens: usize,
+    pub batch: usize,
+}
+
+/// `POST /v1/generate?stream=true` — same contract as [`generate`], but
+/// each token goes out as its own chunked-transfer JSON line
+/// (`{"token":N,"text":"…"}`) the moment the scheduler's tick produces it,
+/// followed by a `{"done":true,…}` line carrying the summary fields of the
+/// buffered response. Validation failures are rejected as ordinary JSON
+/// error responses *before* the stream head commits; a decode failure
+/// after commitment terminates the stream with an `{"error":…}` line.
+pub fn generate_stream(state: &ServeState, req: &Request,
+                       w: &mut dyn Write, keep_alive: bool) -> StreamOutcome {
+    let (id, sess, prompt_tokens, max_tokens) =
+        match prepare_generate(state, req) {
+            Ok(prepared) => prepared,
+            Err(e) => {
+                let _ = e.to_response().keep_alive(keep_alive).write_to(&mut *w);
+                return StreamOutcome {
+                    status: e.status,
+                    session: "-".into(),
+                    tokens: 0,
+                    batch: 0,
+                };
+            }
+        };
+    if let Err(e) = write_stream_head(&mut *w, keep_alive) {
+        // client went away before the head: nothing decoded, keep session
+        state.sessions.put(&id, sess);
+        let _ = e; // socket is dead; nowhere to report
+        return StreamOutcome { status: 500, session: id, tokens: 0, batch: 0 };
+    }
+    let tok = ByteTokenizer;
+    let mut emit = |t: i32| -> anyhow::Result<()> {
+        let line = Json::obj(vec![
+            ("token", Json::Num(t as f64)),
+            ("text", Json::Str(tok.decode_lossy_string(&[t]))),
+        ]);
+        write_chunk(&mut *w, format!("{line}\n").as_bytes())
+    };
+    match decode_generate(state, &id, sess, &prompt_tokens, max_tokens,
+                          &mut emit) {
+        Ok((mut sess, generated, occupancy)) => {
+            sess.tokens.extend_from_slice(&prompt_tokens);
+            sess.tokens.extend_from_slice(&generated);
+            let context_tokens = sess.kv.len();
+            state.sessions.put(&id, sess);
+            let done = Json::obj(vec![
+                ("done", Json::Bool(true)),
+                ("session", Json::Str(id.clone())),
+                ("prompt_tokens", Json::Num(prompt_tokens.len() as f64)),
+                ("generated_tokens", Json::Num(generated.len() as f64)),
+                ("context_tokens", Json::Num(context_tokens as f64)),
+                ("batch_occupancy", Json::Num(occupancy as f64)),
+            ]);
+            let _ = write_chunk(&mut *w, format!("{done}\n").as_bytes());
+            let _ = write_last_chunk(&mut *w);
+            StreamOutcome {
+                status: 200,
+                session: id,
+                tokens: prompt_tokens.len() + generated.len(),
+                batch: occupancy,
+            }
+        }
+        Err(e) => {
+            // the session is already discarded; tell the client in-band
+            let line = Json::obj(vec![
+                ("error", Json::Str(e.message.clone())),
+            ]);
+            let _ = write_chunk(&mut *w, format!("{line}\n").as_bytes());
+            let _ = write_last_chunk(&mut *w);
+            StreamOutcome { status: e.status, session: id, tokens: 0, batch: 0 }
+        }
+    }
 }
 
 /// `POST /v1/perplexity` `{text}` — held-out NLL/perplexity of `text`
@@ -331,7 +506,11 @@ mod tests {
             spec: "int4-g32".into(),
             packed_bytes: 0,
         };
-        ServeState::new(model, info, Executor::with_workers(2), 64, 4)
+        ServeState::new(model, info, Executor::with_workers(2), ServeLimits {
+            max_ctx: 64,
+            max_sessions: 4,
+            ..ServeLimits::default()
+        })
     }
 
     fn req(method: &str, path: &str, body: &str) -> Request {
@@ -376,7 +555,10 @@ mod tests {
         assert_eq!(v.expect("prompt_tokens").unwrap().as_usize().unwrap(), 2);
         assert_eq!(v.expect("generated_tokens").unwrap().as_usize().unwrap(), 3);
         assert_eq!(v.expect("context_tokens").unwrap().as_usize().unwrap(), 5);
+        // a lone request ticks through the batcher at occupancy 1
+        assert_eq!(v.expect("batch_occupancy").unwrap().as_usize().unwrap(), 1);
         assert_eq!(resp.tokens, 5);
+        assert_eq!(resp.batch, 1);
         assert_eq!(resp.session, sid);
         // continuation advances the same cache
         let cont = format!(r#"{{"prompt":"c","max_tokens":2,"session":"{sid}"}}"#);
@@ -405,6 +587,93 @@ mod tests {
         assert_eq!(
             handle(&st, &req("POST", "/v1/generate",
                              r#"{"prompt":"a","max_tokens":9999}"#)).status, 422);
+    }
+
+    #[test]
+    fn generate_429_when_store_is_full_of_busy_sessions() {
+        let cfg = ModelConfig {
+            name: "t".into(), vocab: 256, d_model: 16, n_heads: 2, n_layers: 1,
+            d_ff: 24, seq_len: 8, batch: 1, decode_len: 8, rope_theta: 1e4,
+        };
+        let model =
+            NativeModel::from_checkpoint(&init_checkpoint(&cfg, 3)).unwrap();
+        let info = ServeInfo {
+            model: "t".into(),
+            source: "test.apack".into(),
+            method: "proj".into(),
+            spec: "int4-g32".into(),
+            packed_bytes: 0,
+        };
+        let st = ServeState::new(model, info, Executor::with_workers(2),
+                                 ServeLimits {
+                                     max_ctx: 64,
+                                     max_sessions: 1,
+                                     ..ServeLimits::default()
+                                 });
+        let resp = handle(&st, &req("POST", "/v1/generate",
+                                    r#"{"prompt":"ab","max_tokens":2}"#));
+        assert_eq!(resp.status, 200);
+        let sid = json_of(&resp)
+            .expect("session").unwrap().as_str().unwrap().to_string();
+        // check the only slot out: the store is now wall-to-wall busy
+        let held = st.sessions.take(&sid).unwrap();
+        let resp = handle(&st, &req("POST", "/v1/generate",
+                                    r#"{"prompt":"cd","max_tokens":2}"#));
+        assert_eq!(resp.status, 429,
+                   "{:?}", String::from_utf8_lossy(&resp.body));
+        let v = json_of(&resp);
+        assert!(v.expect("error").unwrap().as_str().unwrap()
+            .contains("session store full"));
+        // once the session is idle again, a new request evicts it and runs
+        st.sessions.put(&sid, held);
+        let resp = handle(&st, &req("POST", "/v1/generate",
+                                    r#"{"prompt":"ef","max_tokens":2}"#));
+        assert_eq!(resp.status, 200);
+    }
+
+    #[test]
+    fn generate_stream_emits_chunked_token_lines() {
+        let st = state();
+        // buffered reference for the same prompt on a fresh session
+        let buffered = handle(&st, &req("POST", "/v1/generate",
+                                        r#"{"prompt":"ab","max_tokens":3}"#));
+        assert_eq!(buffered.status, 200);
+        let mut out = Vec::new();
+        let outcome = generate_stream(
+            &st, &req("POST", "/v1/generate", r#"{"prompt":"ab","max_tokens":3}"#),
+            &mut out, false);
+        assert_eq!(outcome.status, 200);
+        assert_eq!(outcome.tokens, 5);
+        assert_eq!(outcome.batch, 1);
+        let raw = String::from_utf8_lossy(&out).into_owned();
+        assert!(raw.starts_with("HTTP/1.1 200 OK\r\n"), "{raw}");
+        assert!(raw.contains("Transfer-Encoding: chunked\r\n"));
+        assert!(raw.contains("Connection: close\r\n"));
+        // one chunk per generated token, then the summary line
+        assert_eq!(raw.matches("\"token\":").count(), 3, "{raw}");
+        assert!(raw.contains("\"done\":true"), "{raw}");
+        assert!(raw.contains("\"generated_tokens\":3"), "{raw}");
+        assert!(raw.contains("\"context_tokens\":5"), "{raw}");
+        assert!(raw.ends_with("0\r\n\r\n"), "{raw}");
+        // the streamed session replays continuations exactly like the
+        // buffered one: both stores now hold a 5-token context
+        assert_eq!(st.sessions.len(), 2);
+    }
+
+    #[test]
+    fn generate_stream_rejects_before_committing_the_stream() {
+        let st = state();
+        let mut out = Vec::new();
+        let outcome =
+            generate_stream(&st, &req("POST", "/v1/generate", "{}"), &mut out,
+                            true);
+        assert_eq!(outcome.status, 400);
+        let raw = String::from_utf8_lossy(&out).into_owned();
+        // an ordinary JSON error response, not a chunked stream
+        assert!(raw.starts_with("HTTP/1.1 400 Bad Request\r\n"), "{raw}");
+        assert!(!raw.contains("Transfer-Encoding"));
+        assert!(raw.contains("Connection: keep-alive\r\n"));
+        assert!(raw.contains("\"error\""));
     }
 
     #[test]

@@ -5,14 +5,20 @@
 //! `with_thread_budget(inner_threads)`, so a serve process never exceeds
 //! `AWP_THREADS` no matter how many requests are in flight.
 //!
-//! Shutdown is graceful by construction: SIGINT/SIGTERM (or a test's stop
-//! flag) only stops *accepting*; the channel to the workers is then
-//! dropped, each worker drains the queued connections it can still
-//! receive, finishes its in-flight request, and the scope join returns.
-//! Every request logs one structured line to stderr:
+//! Connections are persistent (HTTP/1.1 keep-alive): a worker keeps
+//! serving requests off one connection until the client closes, sends
+//! `Connection: close`, idles past [`KEEPALIVE_IDLE`], hits the
+//! [`MAX_REQUESTS_PER_CONN`] cap, or the server starts draining. Shutdown
+//! stays graceful by construction: SIGINT/SIGTERM (or a test's stop flag)
+//! only stops *accepting*; the channel to the workers is then dropped,
+//! each worker drains the queued connections it can still receive,
+//! finishes its in-flight request (answering it `Connection: close`), and
+//! the scope join returns. Every request logs one structured line to
+//! stderr — `batch` is the peak decode-batch occupancy the request's
+//! ticks were fused at (0 when the request never decoded):
 //!
 //! ```text
-//! [serve] method=POST path=/v1/generate status=200 session=s-1 tokens=21 ms=4.3
+//! [serve] method=POST path=/v1/generate status=200 session=s-1 tokens=21 batch=3 ms=4.3
 //! ```
 
 use std::io::BufReader;
@@ -28,8 +34,8 @@ use crate::coordinator::Executor;
 use crate::util::json::Json;
 use crate::util::parallel::with_thread_budget;
 
-use super::http::{read_request, Response};
-use super::router::{handle, ServeState};
+use super::http::{read_request_opt, Response};
+use super::router::{generate_stream, handle, ServeState};
 
 /// How long the accept loop sleeps when no connection is pending — the
 /// upper bound on shutdown latency once the stop flag flips.
@@ -37,6 +43,12 @@ const ACCEPT_POLL: Duration = Duration::from_millis(20);
 /// Per-connection socket read/write timeout: a stalled client cannot pin
 /// a worker forever.
 const IO_TIMEOUT: Duration = Duration::from_secs(10);
+/// How long a keep-alive connection may sit idle between requests before
+/// the worker reclaims itself for the accept queue.
+const KEEPALIVE_IDLE: Duration = Duration::from_secs(2);
+/// Requests one keep-alive connection may carry before the server closes
+/// it (bounds how long a single client can monopolise a worker slot).
+const MAX_REQUESTS_PER_CONN: usize = 32;
 
 /// Process-wide stop flag the signal handler flips.
 static SHUTDOWN: AtomicBool = AtomicBool::new(false);
@@ -125,8 +137,8 @@ impl Server {
                         let conn = rx.lock().unwrap().recv();
                         match conn {
                             Ok(stream) => {
-                                handle_connection(state, stream);
-                                served.fetch_add(1, Ordering::Relaxed);
+                                let n = handle_connection(state, stream, stop);
+                                served.fetch_add(n, Ordering::Relaxed);
                             }
                             Err(_) => break, // channel closed: drained
                         }
@@ -164,33 +176,73 @@ impl Server {
     }
 }
 
-/// One connection: parse → route → respond → log. Parse failures answer
-/// 400; nothing here panics on client input.
-fn handle_connection(state: &ServeState, mut stream: TcpStream) {
-    let started = Instant::now();
-    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
-    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
-    let parsed = read_request(&mut BufReader::new(&mut stream));
-    let (method, path, resp) = match parsed {
-        Ok(req) => {
-            let resp = handle(state, &req);
-            (req.method, req.path, resp)
-        }
-        Err(e) => {
-            let body =
-                Json::obj(vec![("error", Json::Str(format!("{e:#}")))]);
-            ("-".into(), "-".into(), Response::json(400, &body))
-        }
-    };
-    if let Err(e) = resp.write_to(&mut stream) {
-        eprintln!("[serve] write error on {method} {path}: {e:#}");
-    }
+/// One structured log line per request.
+fn log_request(method: &str, path: &str, status: u16, session: &str,
+               tokens: usize, batch: usize, started: Instant) {
     eprintln!(
-        "[serve] method={method} path={path} status={} session={} tokens={} \
-         ms={:.1}",
-        resp.status,
-        resp.session,
-        resp.tokens,
+        "[serve] method={method} path={path} status={status} \
+         session={session} tokens={tokens} batch={batch} ms={:.1}",
         started.elapsed().as_secs_f64() * 1e3,
     );
+}
+
+/// One connection: parse → route → respond → log, repeated while the
+/// client keeps the connection alive. Returns the number of requests
+/// served. Parse failures answer 400 and close; a clean close (or an idle
+/// keep-alive timeout) between requests ends the loop silently; nothing
+/// here panics on client input. Streamed generates (`?stream=true`) write
+/// the chunked response themselves, straight onto the socket.
+fn handle_connection(state: &ServeState, stream: TcpStream,
+                     stop: &AtomicBool) -> u64 {
+    let mut served = 0u64;
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let Ok(read_half) = stream.try_clone() else { return 0 };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    for reqno in 0..MAX_REQUESTS_PER_CONN {
+        // the first request gets the full I/O window; between keep-alive
+        // requests an idle client is released much sooner
+        let idle = if reqno == 0 { IO_TIMEOUT } else { KEEPALIVE_IDLE };
+        let _ = reader.get_ref().set_read_timeout(Some(idle));
+        let started = Instant::now();
+        let req = match read_request_opt(&mut reader) {
+            Ok(Some(req)) => req,
+            Ok(None) => break, // clean close or idle timeout between requests
+            Err(e) => {
+                let body =
+                    Json::obj(vec![("error", Json::Str(format!("{e:#}")))]);
+                let resp = Response::json(400, &body);
+                let _ = resp.write_to(&mut writer);
+                log_request("-", "-", 400, "-", 0, 0, started);
+                served += 1;
+                break;
+            }
+        };
+        let keep_alive = req.wants_keep_alive()
+            && reqno + 1 < MAX_REQUESTS_PER_CONN
+            && !stop.load(Ordering::SeqCst);
+        if req.method == "POST" && req.path == "/v1/generate"
+            && req.query_flag("stream") {
+            let outcome = generate_stream(state, &req, &mut writer, keep_alive);
+            log_request(&req.method, &req.path, outcome.status,
+                        &outcome.session, outcome.tokens, outcome.batch,
+                        started);
+            served += 1;
+        } else {
+            let resp = handle(state, &req).keep_alive(keep_alive);
+            let write_err = resp.write_to(&mut writer).err();
+            log_request(&req.method, &req.path, resp.status, &resp.session,
+                        resp.tokens, resp.batch, started);
+            served += 1;
+            if let Some(e) = write_err {
+                eprintln!("[serve] write error on {} {}: {e:#}",
+                          req.method, req.path);
+                break;
+            }
+        }
+        if !keep_alive {
+            break;
+        }
+    }
+    served
 }

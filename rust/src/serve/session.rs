@@ -1,15 +1,21 @@
-//! Per-session KV state with checkout semantics and an LRU eviction cap.
+//! Per-session KV state with checkout semantics, an LRU eviction cap and a
+//! KV-cache byte budget.
 //!
 //! A session is a [`DecodeSession`] (per-block K/V rows) plus the token
 //! history it covers. The store hands a session out to exactly one request
 //! at a time: [`SessionStore::take`] removes the state but leaves the id
 //! registered as *busy* (a second request for the same id gets a clean
 //! `Busy` error instead of corrupting the cache), and
-//! [`SessionStore::put`] returns it and bumps its recency. When the store
-//! grows past its cap, the least-recently-used idle session is evicted —
-//! busy sessions are never evicted out from under a running request, and
-//! an evicted id simply reads as unknown afterwards (the client starts a
-//! fresh session).
+//! [`SessionStore::put`] returns it and bumps its recency. Admission is
+//! bounded two ways — a live-entry cap and a resident-KV byte budget
+//! ([`DecodeSession::kv_bytes`], which busy sessions count against too,
+//! since their buffers are merely checked out, not freed). When a
+//! [`SessionStore::create`] would exceed either bound, the
+//! least-recently-used *idle* session is evicted to make room; if every
+//! resident session is busy there is nothing safe to drop, and create
+//! refuses with [`StoreFull`] — the router maps that to `429` so clients
+//! retry instead of a running request losing its cache. An evicted id
+//! simply reads as unknown afterwards (the client starts a fresh session).
 
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -34,11 +40,22 @@ pub enum TakeError {
     Busy,
 }
 
+/// [`SessionStore::create`] refused: both bounds are exhausted and every
+/// resident session is checked out, so nothing can be evicted.
+#[derive(Debug, PartialEq, Eq)]
+pub struct StoreFull {
+    /// Sessions currently checked out by in-flight requests.
+    pub busy: usize,
+}
+
 struct Slot {
     /// `None` while the session is checked out by a request.
     session: Option<ServeSession>,
     /// Monotone recency stamp (store-local, not wall-clock).
     last_used: u64,
+    /// KV bytes this session pins ([`DecodeSession::kv_bytes`] — constant
+    /// for a given capacity, and still counted while checked out).
+    bytes: usize,
 }
 
 struct Inner {
@@ -48,14 +65,49 @@ struct Inner {
     evicted: u64,
 }
 
-/// Thread-safe registry of [`ServeSession`]s, capped at `cap` live entries.
+impl Inner {
+    fn kv_bytes(&self) -> usize {
+        self.slots.values().map(|s| s.bytes).sum()
+    }
+
+    /// Evict the least-recently-used idle slot (skipping `protect`).
+    /// `false` when everything resident is busy.
+    fn evict_lru_idle(&mut self, protect: Option<&str>) -> bool {
+        let victim = self
+            .slots
+            .iter()
+            .filter(|(k, s)| {
+                s.session.is_some() && Some(k.as_str()) != protect
+            })
+            .min_by_key(|(_, s)| s.last_used)
+            .map(|(k, _)| k.clone());
+        match victim {
+            Some(k) => {
+                self.slots.remove(&k);
+                self.evicted += 1;
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+/// Thread-safe registry of [`ServeSession`]s, capped at `cap` live entries
+/// and `max_kv_bytes` of resident KV cache.
 pub struct SessionStore {
     inner: Mutex<Inner>,
     cap: usize,
+    max_kv_bytes: usize,
 }
 
 impl SessionStore {
+    /// Entry-capped store with an unlimited KV byte budget.
     pub fn new(cap: usize) -> SessionStore {
+        SessionStore::with_kv_budget(cap, usize::MAX)
+    }
+
+    /// Entry cap plus a resident-KV byte budget (`--max-kv-mb`).
+    pub fn with_kv_budget(cap: usize, max_kv_bytes: usize) -> SessionStore {
         SessionStore {
             inner: Mutex::new(Inner {
                 slots: HashMap::new(),
@@ -64,21 +116,40 @@ impl SessionStore {
                 evicted: 0,
             }),
             cap: cap.max(1),
+            max_kv_bytes,
         }
     }
 
     /// Register a fresh session around `kv` and check it out to the caller.
     /// The returned id is already reserved (busy) until [`SessionStore::put`].
-    pub fn create(&self, kv: DecodeSession) -> (String, ServeSession) {
+    /// Evicts LRU idle sessions as needed to fit under both bounds; refuses
+    /// with [`StoreFull`] when only busy sessions remain. A lone session
+    /// larger than the whole byte budget is still admitted into an empty
+    /// store (refusing it forever would brick the endpoint).
+    pub fn create(&self, kv: DecodeSession)
+        -> Result<(String, ServeSession), StoreFull> {
         let mut inner = self.inner.lock().unwrap();
+        let bytes = kv.kv_bytes();
+        while inner.slots.len() >= self.cap
+            || inner.kv_bytes().saturating_add(bytes) > self.max_kv_bytes
+        {
+            if inner.evict_lru_idle(None) {
+                continue;
+            }
+            if inner.slots.is_empty() {
+                break;
+            }
+            return Err(StoreFull { busy: inner.slots.len() });
+        }
         let id = format!("s-{}", inner.next_id);
         inner.next_id += 1;
         inner.tick += 1;
         let stamp = inner.tick;
-        inner
-            .slots
-            .insert(id.clone(), Slot { session: None, last_used: stamp });
-        (id, ServeSession { kv, tokens: Vec::new() })
+        inner.slots.insert(
+            id.clone(),
+            Slot { session: None, last_used: stamp, bytes },
+        );
+        Ok((id, ServeSession { kv, tokens: Vec::new() }))
     }
 
     /// Check session `id` out for exclusive use.
@@ -89,33 +160,29 @@ impl SessionStore {
     }
 
     /// Return a checked-out session, bump its recency, and evict beyond the
-    /// cap. A session whose id was dropped meanwhile (a raced
-    /// [`SessionStore::remove`]) is re-registered — put never loses state.
+    /// bounds. A session whose id was dropped meanwhile (a raced
+    /// [`SessionStore::remove`]) is re-registered — put never loses state,
+    /// so when nothing is evictable the store rides over its bounds until
+    /// the in-flight sessions come back idle.
     pub fn put(&self, id: &str, session: ServeSession) {
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
         let stamp = inner.tick;
-        inner
+        let bytes = session.kv.kv_bytes();
+        let slot = inner
             .slots
             .entry(id.to_string())
             .and_modify(|s| s.last_used = stamp)
-            .or_insert(Slot { session: None, last_used: stamp })
-            .session = Some(session);
-        while inner.slots.len() > self.cap {
+            .or_insert(Slot { session: None, last_used: stamp, bytes });
+        slot.bytes = bytes;
+        slot.session = Some(session);
+        while inner.slots.len() > self.cap
+            || inner.kv_bytes() > self.max_kv_bytes
+        {
             // oldest idle slot; busy sessions and the one just returned
             // (whose id the client is about to be handed) are untouchable
-            let victim = inner
-                .slots
-                .iter()
-                .filter(|(k, s)| s.session.is_some() && k.as_str() != id)
-                .min_by_key(|(_, s)| s.last_used)
-                .map(|(k, _)| k.clone());
-            match victim {
-                Some(k) => {
-                    inner.slots.remove(&k);
-                    inner.evicted += 1;
-                }
-                None => break, // everything else is in flight; stay over cap
+            if !inner.evict_lru_idle(Some(id)) {
+                break;
             }
         }
     }
@@ -135,13 +202,22 @@ impl SessionStore {
         self.len() == 0
     }
 
-    /// Sessions evicted by the LRU cap since startup.
+    /// Sessions evicted by the bounds since startup.
     pub fn evicted(&self) -> u64 {
         self.inner.lock().unwrap().evicted
     }
 
     pub fn cap(&self) -> usize {
         self.cap
+    }
+
+    /// Resident KV bytes across all live sessions (busy ones included).
+    pub fn kv_bytes(&self) -> usize {
+        self.inner.lock().unwrap().kv_bytes()
+    }
+
+    pub fn max_kv_bytes(&self) -> usize {
+        self.max_kv_bytes
     }
 }
 
@@ -163,7 +239,7 @@ mod tests {
     #[test]
     fn create_take_put_roundtrip() {
         let store = SessionStore::new(4);
-        let (id, mut sess) = store.create(kv());
+        let (id, mut sess) = store.create(kv()).unwrap();
         assert_eq!(id, "s-1");
         assert_eq!(store.len(), 1);
         // busy while checked out
@@ -181,7 +257,7 @@ mod tests {
         let store = SessionStore::new(2);
         let mut ids = Vec::new();
         for _ in 0..3 {
-            let (id, sess) = store.create(kv());
+            let (id, sess) = store.create(kv()).unwrap();
             store.put(&id, sess);
             ids.push(id);
         }
@@ -196,43 +272,73 @@ mod tests {
     #[test]
     fn touching_a_session_protects_it_from_eviction() {
         let store = SessionStore::new(2);
-        let (a, sa) = store.create(kv());
+        let (a, sa) = store.create(kv()).unwrap();
         store.put(&a, sa);
-        let (b, sb) = store.create(kv());
+        let (b, sb) = store.create(kv()).unwrap();
         store.put(&b, sb);
         // touch a so b becomes the LRU
         let sa = store.take(&a).unwrap();
         store.put(&a, sa);
-        let (c, sc) = store.create(kv());
+        let (c, sc) = store.create(kv()).unwrap();
         store.put(&c, sc);
         assert_eq!(store.take(&b).unwrap_err(), TakeError::Unknown);
         assert!(store.take(&a).is_ok());
     }
 
     #[test]
-    fn busy_sessions_are_never_evicted() {
+    fn create_refuses_when_store_is_full_of_busy_sessions() {
         let store = SessionStore::new(1);
-        let (a, sa) = store.create(kv());
+        let (a, sa) = store.create(kv()).unwrap();
         store.put(&a, sa);
         let held = store.take(&a).unwrap(); // a is busy now
-        let (b, sb) = store.create(kv());
-        // over cap, but a is busy and b was just returned: nothing evictable,
-        // so the store rides over cap rather than breaking a live request
-        store.put(&b, sb);
-        assert_eq!(store.len(), 2);
-        assert_eq!(store.evicted(), 0);
-        store.put(&a, held); // a comes back idle → now it can be chosen
-        let (c, sc) = store.create(kv());
-        store.put(&c, sc);
+        // over cap with only a busy session resident: nothing evictable, so
+        // create refuses instead of breaking the live request
+        let err = store.create(kv()).unwrap_err();
+        assert_eq!(err, StoreFull { busy: 1 });
         assert_eq!(store.len(), 1);
-        assert!(store.evicted() >= 2);
-        assert!(store.take(&c).is_ok());
+        store.put(&a, held); // a comes back idle → now it can be chosen
+        let (b, sb) = store.create(kv()).unwrap();
+        store.put(&b, sb);
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.evicted(), 1);
+        assert!(store.take(&b).is_ok());
+        assert_eq!(store.take(&a).unwrap_err(), TakeError::Unknown);
+    }
+
+    #[test]
+    fn kv_byte_budget_evicts_idle_and_refuses_when_busy() {
+        let one = kv().kv_bytes();
+        assert!(one > 0);
+        // room for exactly two sessions' KV
+        let store = SessionStore::with_kv_budget(8, 2 * one + 1);
+        let (a, sa) = store.create(kv()).unwrap();
+        store.put(&a, sa);
+        let (b, sb) = store.create(kv()).unwrap();
+        store.put(&b, sb);
+        // a third would exceed the budget → LRU idle (a) makes room
+        let (c, sc) = store.create(kv()).unwrap();
+        store.put(&c, sc);
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.evicted(), 1);
+        assert_eq!(store.kv_bytes(), 2 * one);
+        assert_eq!(store.take(&a).unwrap_err(), TakeError::Unknown);
+        // busy sessions still pin their bytes: with both survivors checked
+        // out there is nothing safe to evict
+        let hb = store.take(&b).unwrap();
+        let hc = store.take(&c).unwrap();
+        let err = store.create(kv()).unwrap_err();
+        assert_eq!(err, StoreFull { busy: 2 });
+        store.put(&b, hb);
+        store.put(&c, hc);
+        // a lone session larger than the whole budget is still admitted
+        let tiny = SessionStore::with_kv_budget(4, 1);
+        assert!(tiny.create(kv()).is_ok());
     }
 
     #[test]
     fn remove_discards_failed_sessions() {
         let store = SessionStore::new(4);
-        let (id, _sess) = store.create(kv());
+        let (id, _sess) = store.create(kv()).unwrap();
         store.remove(&id);
         assert_eq!(store.take(&id).unwrap_err(), TakeError::Unknown);
         assert!(store.is_empty());

@@ -194,6 +194,33 @@ pub fn rescale_add_fast(orow: &mut [f32], gacc: &[f32], sums: &[f32],
     }
 }
 
+/// Fused two-group rescale `orow += sa·ga − szpa·suma; orow += sb·gb −
+/// szpb·sumb` in a single pass over the output row — the batched epilogue
+/// of the integer-accumulate GEMM. The epilogue's output-row traffic only
+/// matters when the row is wide, i.e. when many activation columns (a
+/// decode batch of sessions) ride through one launch; folding two groups
+/// into one load/store pass halves it there. The arithmetic is applied in
+/// the same per-element order as two [`rescale_add_fast`] calls, so the
+/// result is bit-identical to the unfused epilogue on either backend.
+#[allow(clippy::too_many_arguments)]
+pub fn rescale_add2_fast(orow: &mut [f32], ga: &[f32], suma: &[f32], sa: f32,
+                         szpa: f32, gb: &[f32], sumb: &[f32], sb: f32,
+                         szpb: f32) {
+    let n = orow.len();
+    assert!(ga.len() == n && suma.len() == n);
+    assert!(gb.len() == n && sumb.len() == n);
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // Safety: AVX2+FMA presence checked once via use_avx2()
+        unsafe { x86::rescale_add2(orow, ga, suma, sa, szpa, gb, sumb, sb, szpb) };
+        return;
+    }
+    for j in 0..n {
+        orow[j] += sa * ga[j] - szpa * suma[j];
+        orow[j] += sb * gb[j] - szpb * sumb[j];
+    }
+}
+
 /// Fast element-wise `y += x`.
 pub fn add_assign_fast(y: &mut [f32], x: &[f32]) {
     axpy_fast(1.0, x, y);
@@ -302,6 +329,37 @@ mod x86 {
 
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn rescale_add2(orow: &mut [f32], ga: &[f32], suma: &[f32],
+                               sa: f32, szpa: f32, gb: &[f32], sumb: &[f32],
+                               sb: f32, szpb: f32) {
+        let n = orow.len();
+        let sav = _mm256_set1_ps(sa);
+        let zav = _mm256_set1_ps(szpa);
+        let sbv = _mm256_set1_ps(sb);
+        let zbv = _mm256_set1_ps(szpb);
+        let op = orow.as_mut_ptr();
+        let mut j = 0usize;
+        // same FMA sequence as two rescale_add passes, minus the
+        // intermediate store/load — bit-identical, half the orow traffic
+        while j + 8 <= n {
+            let mut acc = _mm256_loadu_ps(op.add(j));
+            acc = _mm256_fmadd_ps(sav, _mm256_loadu_ps(ga.as_ptr().add(j)), acc);
+            acc = _mm256_fnmadd_ps(zav, _mm256_loadu_ps(suma.as_ptr().add(j)), acc);
+            acc = _mm256_fmadd_ps(sbv, _mm256_loadu_ps(gb.as_ptr().add(j)), acc);
+            acc = _mm256_fnmadd_ps(zbv, _mm256_loadu_ps(sumb.as_ptr().add(j)), acc);
+            _mm256_storeu_ps(op.add(j), acc);
+            j += 8;
+        }
+        while j < n {
+            *op.add(j) += sa * ga[j] - szpa * suma[j];
+            *op.add(j) += sb * gb[j] - szpb * sumb[j];
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
     pub unsafe fn rescale_add(orow: &mut [f32], gacc: &[f32], sums: &[f32],
                               s: f32, szp: f32) {
         let n = orow.len();
@@ -396,6 +454,29 @@ mod tests {
                 + a[2] * x.row(2)[j] + a[3] * x.row(3)[j];
             assert!((o[j] - want).abs() <= 1e-5 * (1.0 + want.abs()),
                     "panel4 {j}");
+        }
+    }
+
+    #[test]
+    fn fused_rescale_add2_is_bit_identical_to_two_passes() {
+        // wide (vector lanes) and narrow (scalar tail only) rows, the
+        // narrow case being the unbatched decode width
+        for n in [1usize, 7, 8, 19, 64] {
+            let ga = Matrix::randn(1, n, 31);
+            let gb = Matrix::randn(1, n, 32);
+            let suma = Matrix::randn(1, n, 33);
+            let sumb = Matrix::randn(1, n, 34);
+            let (sa, szpa) = (0.25f32, 0.25 * 3.0);
+            let (sb, szpb) = (0.0625f32, 0.0625 * -5.0);
+            let mut fused = vec![0.75f32; n];
+            rescale_add2_fast(&mut fused, &ga.data, &suma.data, sa, szpa,
+                              &gb.data, &sumb.data, sb, szpb);
+            let mut unfused = vec![0.75f32; n];
+            rescale_add_fast(&mut unfused, &ga.data, &suma.data, sa, szpa);
+            rescale_add_fast(&mut unfused, &gb.data, &sumb.data, sb, szpb);
+            for (j, (a, b)) in fused.iter().zip(&unfused).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "n={n} entry {j}");
+            }
         }
     }
 

@@ -1,14 +1,18 @@
 //! Differential + end-to-end coverage for the serving stack: KV-cached
 //! incremental decode must be **bit-identical** to the full-window forward
 //! at the reference tier (dense and packed sites, any thread budget),
-//! within the KERNELS.md tolerance at the fast tier; session eviction must
-//! follow the LRU contract; and a real `serve::Server` on a loopback
-//! socket must answer `/healthz` and `/v1/generate` — including an exact
-//! session continuation — over the wire.
+//! within the KERNELS.md tolerance at the fast tier; the fused
+//! multi-session `decode_step_batch` must be bit-identical per session to
+//! serial `decode_step` at the reference tier on ragged batches; session
+//! eviction must follow the LRU contract; and a real `serve::Server` on a
+//! loopback socket must answer `/healthz` and `/v1/generate` — including
+//! an exact session continuation, N concurrent clients whose generations
+//! each match a serial replay, keep-alive connection reuse, and chunked
+//! token streaming — over the wire.
 
 mod common;
 
-use std::io::{Read, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 
@@ -20,7 +24,8 @@ use awp::eval::{argmax, LayerReport};
 use awp::infer::{DecodeSession, NativeModel};
 use awp::model::{sites, Checkpoint, ModelConfig};
 use awp::proj::ProjScratch;
-use awp::serve::{Server, ServeInfo, ServeState, SessionStore, TakeError};
+use awp::serve::{ServeInfo, ServeLimits, ServeState, Server, SessionStore,
+                 TakeError};
 use awp::tensor::KernelTier;
 use awp::util::json::Json;
 use awp::util::parallel::with_thread_budget;
@@ -184,13 +189,13 @@ fn session_store_checkout_and_lru_eviction() {
     let (dense, _) = dense_and_packed(&cfg, &CompressionSpec::quant(4, 32), 25);
     let store = SessionStore::new(2);
     // create → busy until put
-    let (a, sa) = store.create(dense.new_session(8));
+    let (a, sa) = store.create(dense.new_session(8)).unwrap();
     assert_eq!(store.take(&a).unwrap_err(), TakeError::Busy);
     store.put(&a, sa);
     // fill past the cap: the oldest idle session goes
-    let (b, sb) = store.create(dense.new_session(8));
+    let (b, sb) = store.create(dense.new_session(8)).unwrap();
     store.put(&b, sb);
-    let (c, sc) = store.create(dense.new_session(8));
+    let (c, sc) = store.create(dense.new_session(8)).unwrap();
     store.put(&c, sc);
     assert_eq!(store.len(), 2);
     assert_eq!(store.evicted(), 1);
@@ -208,13 +213,15 @@ fn session_store_checkout_and_lru_eviction() {
 // ----------------------------------------------------------------- loopback
 
 /// Minimal HTTP/1.1 client for the loopback tests: one request per
-/// connection, returns (status, parsed JSON body).
+/// connection (`Connection: close` so the server hands the socket back
+/// immediately instead of holding it for keep-alive), returns
+/// (status, parsed JSON body).
 fn http(addr: SocketAddr, method: &str, path: &str, body: &str)
     -> (u16, Json) {
     let mut stream = TcpStream::connect(addr).unwrap();
     write!(stream,
-           "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\
-            \r\n{body}",
+           "{method} {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\n\
+            Content-Length: {}\r\n\r\n{body}",
            body.len())
         .unwrap();
     let mut raw = String::new();
@@ -228,7 +235,40 @@ fn http(addr: SocketAddr, method: &str, path: &str, body: &str)
     (status, json)
 }
 
-fn lm_state(ck: &Checkpoint, max_ctx: usize, max_sessions: usize) -> ServeState {
+/// Read exactly one HTTP response (status line + headers + a
+/// `Content-Length`-framed body) off a persistent connection, leaving the
+/// stream open for the next request. Returns (status, headers, body).
+fn read_response(reader: &mut BufReader<TcpStream>) -> (u16, String, String) {
+    let mut head = String::new();
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        if line == "\r\n" || line.is_empty() {
+            break;
+        }
+        head.push_str(&line);
+    }
+    let status: u16 = head
+        .strip_prefix("HTTP/1.1 ")
+        .and_then(|r| r.split(' ').next())
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad response head: {head:?}"));
+    let len: usize = head
+        .lines()
+        .find_map(|l| {
+            let lower = l.to_ascii_lowercase();
+            lower
+                .strip_prefix("content-length:")
+                .map(|v| v.trim().parse::<usize>().unwrap())
+        })
+        .expect("response has no Content-Length");
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body).unwrap();
+    (status, head, String::from_utf8_lossy(&body).into_owned())
+}
+
+fn lm_state(ck: &Checkpoint, max_ctx: usize, max_sessions: usize,
+            max_batch: usize) -> ServeState {
     let model = NativeModel::from_checkpoint(ck).unwrap();
     let info = ServeInfo {
         model: ck.config.name.clone(),
@@ -237,8 +277,12 @@ fn lm_state(ck: &Checkpoint, max_ctx: usize, max_sessions: usize) -> ServeState 
         spec: "dense".into(),
         packed_bytes: 0,
     };
-    ServeState::new(model, info, Executor::with_workers(2), max_ctx,
-                    max_sessions)
+    ServeState::new(model, info, Executor::with_workers(2), ServeLimits {
+        max_ctx,
+        max_sessions,
+        max_batch,
+        ..ServeLimits::default()
+    })
 }
 
 /// Replay the `/v1/generate` handler's exact greedy loop locally.
@@ -260,7 +304,7 @@ fn expected_generation(model: &NativeModel, sess: &mut DecodeSession,
 fn loopback_server_answers_healthz_and_generate() {
     let cfg = lm_cfg(); // full byte vocab so arbitrary prompts stay in range
     let ck = awp::trainer::init_checkpoint(&cfg, 31);
-    let server = Server::new(lm_state(&ck, 64, 4), Executor::with_workers(2));
+    let server = Server::new(lm_state(&ck, 64, 4, 4), Executor::with_workers(2));
     let oracle = NativeModel::from_checkpoint(&ck).unwrap();
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
@@ -318,7 +362,7 @@ fn loopback_server_answers_healthz_and_generate() {
 fn loopback_server_evicts_lru_sessions_at_cap() {
     let cfg = lm_cfg();
     let ck = awp::trainer::init_checkpoint(&cfg, 32);
-    let server = Server::new(lm_state(&ck, 32, 1), Executor::with_workers(1));
+    let server = Server::new(lm_state(&ck, 32, 1, 4), Executor::with_workers(1));
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let stop = AtomicBool::new(false);
@@ -345,4 +389,267 @@ fn loopback_server_evicts_lru_sessions_at_cap() {
         handle.join().unwrap();
     });
     assert_eq!(server.state().sessions.evicted(), 1);
+}
+
+// ------------------------------------------------------ continuous batching
+
+#[test]
+fn batched_decode_is_bitwise_serial_on_ragged_batches_at_reference_tier() {
+    let cfg = tiny_cfg();
+    let specs = [("int4-g32", CompressionSpec::quant(4, 32)),
+                 ("nm:2:4", CompressionSpec::structured_nm(2, 4))];
+    for (name, spec) in specs {
+        let (dense, packed) = dense_and_packed(&cfg, &spec, 26);
+        for (kind, m) in [("dense", &dense), ("packed", &packed)] {
+            for budget in [1usize, 4] {
+                with_thread_budget(budget, || {
+                    // ragged: different prompt lengths → different KV
+                    // depths and RoPE offsets per row of the fused step
+                    let prompts: [&[i32]; 3] =
+                        [&[1, 2, 3], &[4], &[5, 6, 7, 8, 9]];
+                    let ticks: [[i32; 3]; 2] =
+                        [[10, 11, 12], [13, 14, 15]];
+                    // serial oracle: one decode_step per session per tick
+                    let mut serial: Vec<DecodeSession> = prompts
+                        .iter()
+                        .map(|p| {
+                            let mut s = m.new_session(16);
+                            m.prefill(&mut s, p).unwrap();
+                            s
+                        })
+                        .collect();
+                    let mut serial_logits: Vec<Vec<Vec<f32>>> =
+                        vec![Vec::new(); prompts.len()];
+                    for toks in &ticks {
+                        for (i, s) in serial.iter_mut().enumerate() {
+                            serial_logits[i]
+                                .push(m.decode_step(s, toks[i]).unwrap());
+                        }
+                    }
+                    // fused: one decode_step_batch per tick
+                    let mut batched: Vec<DecodeSession> = prompts
+                        .iter()
+                        .map(|p| {
+                            let mut s = m.new_session(16);
+                            m.prefill(&mut s, p).unwrap();
+                            s
+                        })
+                        .collect();
+                    for (t, toks) in ticks.iter().enumerate() {
+                        let mut refs: Vec<&mut DecodeSession> =
+                            batched.iter_mut().collect();
+                        let logits =
+                            m.decode_step_batch(&mut refs, toks).unwrap();
+                        for (i, got) in logits.iter().enumerate() {
+                            for (j, (a, b)) in
+                                got.iter().zip(&serial_logits[i][t]).enumerate()
+                            {
+                                assert_eq!(
+                                    a.to_bits(), b.to_bits(),
+                                    "{name} {kind} budget={budget} sess {i} \
+                                     tick {t} logit {j}: {a} vs {b}");
+                            }
+                        }
+                    }
+                    // KV state advanced identically too
+                    for (i, (s, b)) in
+                        serial.iter().zip(&batched).enumerate()
+                    {
+                        assert_eq!(s.len(), b.len(), "{name} {kind} sess {i}");
+                        assert_eq!(s.len(), prompts[i].len() + ticks.len());
+                    }
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn fast_tier_batched_decode_stays_within_tolerance() {
+    let cfg = tiny_cfg();
+    let (_, mut fast) =
+        dense_and_packed(&cfg, &CompressionSpec::quant(4, 32), 27);
+    let (_, reference) =
+        dense_and_packed(&cfg, &CompressionSpec::quant(4, 32), 27);
+    fast.set_tier(KernelTier::Fast);
+    let prompts: [&[i32]; 3] = [&[1, 2, 3], &[4], &[5, 6, 7, 8, 9]];
+    let ticks: [[i32; 3]; 2] = [[10, 11, 12], [13, 14, 15]];
+    let mut serial: Vec<DecodeSession> = prompts
+        .iter()
+        .map(|p| {
+            let mut s = reference.new_session(16);
+            reference.prefill(&mut s, p).unwrap();
+            s
+        })
+        .collect();
+    let mut batched: Vec<DecodeSession> = prompts
+        .iter()
+        .map(|p| {
+            let mut s = fast.new_session(16);
+            fast.prefill(&mut s, p).unwrap();
+            s
+        })
+        .collect();
+    for toks in &ticks {
+        let serial_logits: Vec<Vec<f32>> = serial
+            .iter_mut()
+            .enumerate()
+            .map(|(i, s)| reference.decode_step(s, toks[i]).unwrap())
+            .collect();
+        let mut refs: Vec<&mut DecodeSession> = batched.iter_mut().collect();
+        let fast_logits = fast.decode_step_batch(&mut refs, toks).unwrap();
+        for (i, (f, r)) in fast_logits.iter().zip(&serial_logits).enumerate() {
+            for (j, (x, y)) in f.iter().zip(r).enumerate() {
+                let tol = 1e-4 * (1.0 + x.abs() + y.abs());
+                assert!((x - y).abs() <= tol,
+                        "sess {i} logit {j}: {x} vs {y}");
+            }
+        }
+    }
+}
+
+#[test]
+fn concurrent_clients_each_match_a_serial_replay_bitwise() {
+    let cfg = lm_cfg();
+    let ck = awp::trainer::init_checkpoint(&cfg, 34);
+    // max_batch 4: the four in-flight decodes may fuse into shared ticks;
+    // the contract is that fusion is invisible per session
+    let server =
+        Server::new(lm_state(&ck, 64, 8, 4), Executor::with_workers(4));
+    let oracle = NativeModel::from_checkpoint(&ck).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = AtomicBool::new(false);
+    let prompts = ["ab", "cde", "f", "ghij"];
+    let mut results: Vec<(u16, Json)> = Vec::new();
+    std::thread::scope(|scope| {
+        let handle = scope.spawn(|| server.serve(listener, &stop).unwrap());
+        let clients: Vec<_> = prompts
+            .iter()
+            .map(|p| {
+                scope.spawn(move || {
+                    let body =
+                        format!(r#"{{"prompt":"{p}","max_tokens":6}}"#);
+                    http(addr, "POST", "/v1/generate", &body)
+                })
+            })
+            .collect();
+        results = clients.into_iter().map(|c| c.join().unwrap()).collect();
+        stop.store(true, Ordering::SeqCst);
+        let served = handle.join().unwrap();
+        assert!(served >= prompts.len() as u64, "served {served}");
+    });
+    // each concurrent generation is bit-identical to its serial replay,
+    // whatever batch shapes the scheduler happened to fuse
+    for (&p, (status, v)) in prompts.iter().zip(&results) {
+        assert_eq!(*status, 200, "prompt {p}: {v:?}");
+        let text = v.expect("text").unwrap().as_str().unwrap();
+        let mut sess = oracle.new_session(64);
+        assert_eq!(text, expected_generation(&oracle, &mut sess, p, 6),
+                   "prompt {p}");
+    }
+    assert_eq!(server.state().sessions.len(), 4);
+}
+
+#[test]
+fn keep_alive_connection_serves_multiple_requests() {
+    let cfg = lm_cfg();
+    let ck = awp::trainer::init_checkpoint(&cfg, 33);
+    let server =
+        Server::new(lm_state(&ck, 64, 4, 4), Executor::with_workers(1));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let handle = scope.spawn(|| server.serve(listener, &stop).unwrap());
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        // no Connection header: HTTP/1.1 defaults to keep-alive
+        write!(stream, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+        let (status, head, body) = read_response(&mut reader);
+        assert_eq!(status, 200);
+        assert!(head.contains("Connection: keep-alive"), "{head:?}");
+        assert!(body.contains("\"ok\":true"));
+        // second request rides the same connection
+        let gen = r#"{"prompt":"ab","max_tokens":2}"#;
+        write!(stream,
+               "POST /v1/generate HTTP/1.1\r\nHost: t\r\n\
+                Content-Length: {}\r\n\r\n{gen}",
+               gen.len())
+            .unwrap();
+        let (status, head, body) = read_response(&mut reader);
+        assert_eq!(status, 200, "{body:?}");
+        assert!(head.contains("Connection: keep-alive"), "{head:?}");
+        assert!(body.contains("\"session\""));
+        // an explicit close is honoured
+        write!(stream,
+               "GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n")
+            .unwrap();
+        let (status, head, _) = read_response(&mut reader);
+        assert_eq!(status, 200);
+        assert!(head.contains("Connection: close"), "{head:?}");
+        // the server really closed: the next read sees EOF
+        let mut rest = String::new();
+        stream.set_read_timeout(Some(std::time::Duration::from_secs(5)))
+            .unwrap();
+        reader.read_to_string(&mut rest).unwrap();
+        assert!(rest.is_empty());
+        stop.store(true, Ordering::SeqCst);
+        // all three requests shared one connection
+        assert_eq!(handle.join().unwrap(), 3);
+    });
+}
+
+#[test]
+fn streamed_generate_emits_exact_tokens_over_chunked_wire() {
+    let cfg = lm_cfg();
+    let ck = awp::trainer::init_checkpoint(&cfg, 35);
+    let server =
+        Server::new(lm_state(&ck, 64, 4, 4), Executor::with_workers(1));
+    let oracle = NativeModel::from_checkpoint(&ck).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let handle = scope.spawn(|| server.serve(listener, &stop).unwrap());
+        let body = r#"{"prompt":"ab","max_tokens":4}"#;
+        let mut stream = TcpStream::connect(addr).unwrap();
+        write!(stream,
+               "POST /v1/generate?stream=true HTTP/1.1\r\nHost: t\r\n\
+                Connection: close\r\nContent-Length: {}\r\n\r\n{body}",
+               body.len())
+            .unwrap();
+        let mut buf = Vec::new();
+        stream.read_to_end(&mut buf).unwrap();
+        let raw = String::from_utf8_lossy(&buf);
+        assert!(raw.starts_with("HTTP/1.1 200 OK"), "{raw:?}");
+        assert!(raw.contains("Transfer-Encoding: chunked"), "{raw:?}");
+        assert!(raw.contains("Connection: close"), "{raw:?}");
+        assert!(raw.ends_with("0\r\n\r\n"), "{raw:?}");
+        assert!(raw.contains("\"done\":true"), "{raw:?}");
+        assert!(raw.contains("\"generated_tokens\":4"), "{raw:?}");
+        // the streamed token ids are exactly the serial greedy loop's
+        let prompt_tokens: Vec<i32> = ByteTokenizer.encode("ab".as_bytes());
+        let mut sess = oracle.new_session(64);
+        let mut logits = oracle.prefill(&mut sess, &prompt_tokens).unwrap();
+        let mut expected = Vec::new();
+        for _ in 0..4 {
+            let next = argmax(&logits);
+            expected.push(next);
+            logits = oracle.decode_step(&mut sess, next).unwrap();
+        }
+        let got: Vec<i32> = raw
+            .lines()
+            .filter(|l| l.starts_with('{') && l.contains("\"token\":"))
+            .map(|l| {
+                Json::parse(l).unwrap().expect("token").unwrap()
+                    .as_usize().unwrap() as i32
+            })
+            .collect();
+        assert_eq!(got, expected);
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
+    });
+    // the streamed session was put back just like a buffered one
+    assert_eq!(server.state().sessions.len(), 1);
 }
