@@ -43,6 +43,7 @@
 
 use std::cell::RefCell;
 
+use crate::obs::metrics;
 use crate::quant::pack::unpack_bits_into;
 use crate::tensor::simd::{self, KernelTier};
 use crate::tensor::{ops, Matrix};
@@ -364,6 +365,9 @@ impl PreparedPacked {
             b.cols
         );
         out.reset_zeroed(self.rows(), b.cols);
+        // kernel-tier busy accounting: every packed launch (both tiers,
+        // allocating or into-buffer) funnels through this dispatch
+        let t = metrics::timer();
         match (tier, &self.packed) {
             (KernelTier::Reference, PackedLinear::SparseMask { .. }) => {
                 let DecodeAux::RowStarts(starts) = &self.aux else {
@@ -383,6 +387,7 @@ impl PreparedPacked {
             // palette + dense payloads: LUT/copy row decode, SIMD panel
             (KernelTier::Fast, _) => self.decode_matmul_fast_into(b, out),
         }
+        metrics::observe_kernel(matches!(tier, KernelTier::Fast), t);
     }
 
     /// Fast integer-accumulate GEMM for `GroupedInt`: per output row,

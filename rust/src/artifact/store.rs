@@ -478,6 +478,7 @@ impl ArtifactStore {
         match load_artifact(dir, key) {
             Ok(Some(art)) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                crate::obs::metrics::REGISTRY.artifact_hits.inc();
                 eprintln!("[artifact] hit for '{}' {} {} [{:016x}] — {} sites, \
                            0 compression jobs needed",
                           key.gram.model, key.method, key.spec_desc, key.hash(),
@@ -486,10 +487,12 @@ impl ArtifactStore {
             }
             Ok(None) => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
+                crate::obs::metrics::REGISTRY.artifact_misses.inc();
                 None
             }
             Err(e) => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
+                crate::obs::metrics::REGISTRY.artifact_misses.inc();
                 eprintln!("[artifact] discarding unreadable artifact for '{}' \
                            [{:016x}]: {e:#}", key.gram.model, key.hash());
                 None
@@ -504,6 +507,7 @@ impl ArtifactStore {
         match store_artifact(dir, key, art) {
             Ok(path) => {
                 self.stores.fetch_add(1, Ordering::Relaxed);
+                crate::obs::metrics::REGISTRY.artifact_stores.inc();
                 eprintln!("[artifact] stored '{}' {} at {path:?} ({} → {} bytes, \
                            {:.2}x)",
                           key.gram.model, key.spec_desc, art.dense_bytes(),

@@ -399,6 +399,7 @@ impl GramCache {
                 match load_grams(dir, key) {
                     Ok(Some(g)) => {
                         self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                        crate::obs::metrics::REGISTRY.gram_disk_hits.inc();
                         eprintln!("[cache] gram cache hit (disk) for '{}' \
                                    [{hash:016x}] — skipping calibration", key.model);
                         return Ok(Arc::new(g));
@@ -411,6 +412,7 @@ impl GramCache {
                 }
             }
             self.misses.fetch_add(1, Ordering::Relaxed);
+            crate::obs::metrics::REGISTRY.gram_misses.inc();
             eprintln!("[cache] gram cache miss for '{}' [{hash:016x}] — calibrating",
                       key.model);
             let g = Arc::new(compute()?);
@@ -426,6 +428,7 @@ impl GramCache {
         })?;
         if !initialised {
             self.mem_hits.fetch_add(1, Ordering::Relaxed);
+            crate::obs::metrics::REGISTRY.gram_mem_hits.inc();
             eprintln!("[cache] gram cache hit (memory) for '{}' [{hash:016x}]",
                       key.model);
         }

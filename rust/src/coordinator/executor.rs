@@ -29,6 +29,7 @@ use std::sync::Mutex;
 
 use anyhow::Result;
 
+use crate::obs::{metrics, trace};
 use crate::util::parallel::{num_threads, with_thread_budget};
 use crate::util::Timer;
 
@@ -174,7 +175,18 @@ impl Executor {
                             break;
                         }
                         let t = Timer::start("job");
-                        match job(i) {
+                        let result = {
+                            let mut span = trace::span("executor_job", "coord");
+                            if trace::enabled() {
+                                span.set_arg("label", label(i));
+                            }
+                            job(i)
+                        };
+                        metrics::REGISTRY.executor_jobs.inc();
+                        metrics::REGISTRY
+                            .executor_job_seconds
+                            .observe(t.elapsed_s());
+                        match result {
                             Ok(v) => {
                                 let c = cost(i).max(1);
                                 let stats = JobStats {
@@ -244,7 +256,16 @@ impl Executor {
         let mut done_cost = 0u64;
         for i in 0..n {
             let t = Timer::start("job");
-            match with_thread_budget(inner, || job(i)) {
+            let result = {
+                let mut span = trace::span("executor_job", "coord");
+                if trace::enabled() {
+                    span.set_arg("label", label(i));
+                }
+                with_thread_budget(inner, || job(i))
+            };
+            metrics::REGISTRY.executor_jobs.inc();
+            metrics::REGISTRY.executor_job_seconds.observe(t.elapsed_s());
+            match result {
                 Ok(v) => {
                     let c = cost(i).max(1);
                     results.push(v);

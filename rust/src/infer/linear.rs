@@ -11,6 +11,7 @@
 use std::cell::RefCell;
 
 use crate::artifact::{PackedLinear, PreparedPacked};
+use crate::obs::metrics;
 use crate::tensor::{ops, KernelTier, Matrix};
 
 /// One linear site's weights, as the forward pass sees them: a borrowed
@@ -55,7 +56,15 @@ impl LinearOp<'_> {
     /// bitwise — KERNELS.md).
     pub fn matmul_tier(&self, b: &Matrix, tier: KernelTier) -> Matrix {
         match self {
-            LinearOp::Dense(w) => ops::matmul_tier(w, b, tier),
+            // dense launches are timed here; packed launches are timed at
+            // their own dispatch (`PreparedPacked::matmul_tier_into`), so
+            // every site launch is counted exactly once
+            LinearOp::Dense(w) => {
+                let t = metrics::timer();
+                let out = ops::matmul_tier(w, b, tier);
+                metrics::observe_kernel(matches!(tier, KernelTier::Fast), t);
+                out
+            }
             LinearOp::Packed(p) => p.matmul_tier(b, tier),
         }
     }
@@ -94,7 +103,11 @@ impl LinearOp<'_> {
             let (xt, wxt) = &mut *scratch;
             x.transpose_into(xt);
             match self {
-                LinearOp::Dense(w) => ops::matmul_tier_into(w, xt, tier, wxt),
+                LinearOp::Dense(w) => {
+                    let t = metrics::timer();
+                    ops::matmul_tier_into(w, xt, tier, wxt);
+                    metrics::observe_kernel(matches!(tier, KernelTier::Fast), t);
+                }
                 LinearOp::Packed(p) => p.matmul_tier_into(xt, tier, wxt),
             }
             wxt.transpose()

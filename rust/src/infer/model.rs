@@ -56,6 +56,7 @@ use anyhow::{ensure, Context, Result};
 
 use crate::artifact::ModelArtifact;
 use crate::model::{sites, Checkpoint, ModelConfig};
+use crate::obs::trace;
 use crate::tensor::{ops, KernelTier, Matrix};
 use crate::util::parallel::{par_chunks_mut, par_map};
 
@@ -360,6 +361,12 @@ impl NativeModel {
     /// `forward(a ++ b)`, bitwise.
     pub fn prefill(&self, session: &mut DecodeSession, tokens: &[i32])
         -> Result<Vec<f32>> {
+        // covers decode_step too (it delegates here); arg formatting is
+        // skipped entirely while the span sink is off
+        let mut _span = trace::span("prefill", "infer");
+        if trace::enabled() {
+            _span.set_arg("tokens", tokens.len().to_string());
+        }
         let d = self.cfg.d_model;
         let nh = self.cfg.n_heads;
         let dh = d / nh;
@@ -438,6 +445,10 @@ impl NativeModel {
     /// touched.
     pub fn decode_step_batch(&self, sessions: &mut [&mut DecodeSession],
                              tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+        let mut _span = trace::span("decode_step_batch", "infer");
+        if trace::enabled() {
+            _span.set_arg("batch", sessions.len().to_string());
+        }
         let d = self.cfg.d_model;
         let nh = self.cfg.n_heads;
         let dh = d / nh;

@@ -156,6 +156,26 @@
 //! per-request log lines and graceful SIGINT drain. Serving defaults to
 //! the fast kernel tier. Endpoint schemas and operations: SERVING.md.
 //!
+//! ## Observability
+//!
+//! [`obs`] is the cross-cutting metrics + tracing layer every subsystem
+//! emits into. [`obs::metrics`] keeps a process-global registry of atomic
+//! counters, gauges and fixed-bucket histograms (one relaxed atomic add
+//! per hot-path observation; globally disableable to a single relaxed
+//! load) covering the request path (`awp_requests_total` by route ×
+//! status, decode-tick latency, batch occupancy, queue wait), session
+//! residency (KV bytes, evictions), the Gram/artifact caches, executor
+//! job durations, and kernel-tier busy time — served as Prometheus text
+//! on `GET /metrics` and JSON on `GET /v1/stats`. [`obs::trace`] assigns
+//! every request a trace id (in every log line) and, under `repro
+//! serve|compress --trace-out <file>`, records RAII spans across the
+//! serve → batcher → infer path into a bounded sink exported as Chrome
+//! trace-event JSON. `repro serve --log-json` switches the per-request
+//! log to one JSONL object per request. Instrumentation never changes
+//! arithmetic — the bit-identity contracts hold with it on or off, and
+//! its residual cost is tracked by `bench-json`'s `obs_overhead` section.
+//! Inventory, span hierarchy and overhead policy: OBSERVABILITY.md.
+//!
 //! ## Quick tour
 //!
 //! ```no_run
@@ -184,7 +204,9 @@
 //! * **KERNELS.md** — the two-tier GEMM dispatch, tolerance policy, perf
 //!   trajectory ([`tensor::simd`], [`tensor::ops`]);
 //! * **SERVING.md** — `repro serve` architecture, endpoint reference,
-//!   KV-session lifecycle, operational knobs ([`serve`], [`infer`]).
+//!   KV-session lifecycle, operational knobs ([`serve`], [`infer`]);
+//! * **OBSERVABILITY.md** — metric inventory, span hierarchy, scrape
+//!   quickstart, overhead policy ([`obs`]).
 
 // The CI clippy gate runs `-D warnings`; the seed tree's deliberate styles
 // are allowed explicitly rather than rewritten (hand-aligned numeric
@@ -212,6 +234,7 @@ pub mod eval;
 pub mod infer;
 pub mod linalg;
 pub mod model;
+pub mod obs;
 pub mod proj;
 pub mod quant;
 pub mod report;

@@ -18,20 +18,24 @@
 //! repro e2e     # end-to-end driver: train → eval → compress → eval
 //! repro info    # artifacts / manifest summary
 //! repro inspect <file.apack>   # per-site footprint of a packed artifact
-//! repro bench-json [--quick] [--out BENCH_8.json]
+//! repro bench-json [--quick] [--out BENCH_9.json]
 //!               # kernel-tier perf snapshot: GEMM GFLOP/s per compression
 //!               # family (dense vs reference vs fast), native tokens/sec,
-//!               # KV-cached vs uncached decode tokens/sec, and batched vs
-//!               # serial multi-session decode (continuous batching)
+//!               # KV-cached vs uncached decode tokens/sec, batched vs
+//!               # serial multi-session decode (continuous batching), and
+//!               # the metrics-registry overhead gate (obs_overhead)
 //! repro serve   --from-artifact <file.apack> [--addr host:port]
 //!               [--max-ctx N] [--max-sessions N] [--max-batch N]
-//!               [--max-kv-mb N] [--fast|--reference]
+//!               [--max-kv-mb N] [--fast|--reference] [--log-json]
 //!               # long-lived HTTP server over the native packed engine:
 //!               # /v1/generate (per-session KV-cached decode, continuous
 //!               # batching across concurrent requests, ?stream=true for
 //!               # chunked token streaming), /v1/perplexity, /v1/inspect,
-//!               # /healthz. Keep-alive connections, fast tier by default;
-//!               # graceful SIGINT drain — see SERVING.md
+//!               # /metrics (Prometheus text), /v1/stats (the same registry
+//!               # as JSON), /healthz. Keep-alive connections, fast tier by
+//!               # default; graceful SIGINT drain; --log-json switches the
+//!               # per-request stderr line to JSONL — see SERVING.md and
+//!               # OBSERVABILITY.md
 //! ```
 //!
 //! Global flags: `--config <file.json>` (see rust/src/config), `--artifacts
@@ -46,7 +50,10 @@
 //! compression jobs), and `--synthetic` (runtime-free mode for
 //! `compress`/`eval --from-artifact`: untrained checkpoint + synthetic
 //! Grams, CPU methods only — exercises the cache subsystems on machines
-//! without AOT artifacts). `repro compress` also takes `--timings` (per-
+//! without AOT artifacts). `--trace-out <file>` (any subcommand; most
+//! useful on `serve` and `compress`) enables the span sink and writes a
+//! Chrome trace-event JSON on exit — load it in `chrome://tracing` /
+//! Perfetto (OBSERVABILITY.md). `repro compress` also takes `--timings` (per-
 //! layer executor telemetry) and `--pack-out <file>` (emit the bit-packed
 //! `AWPPACK1` artifact and print its footprint table); `repro eval
 //! --from-artifact <file>` reproduces quality numbers from the packed file
@@ -205,12 +212,32 @@ fn spec_from_args(args: &Args) -> Result<CompressionSpec> {
 
 fn main() -> Result<()> {
     let args = Args::parse();
+    // --trace-out: enable the span sink before any work runs, and write
+    // the Chrome trace on the way out — even when `run` early-returns or
+    // fails, so a crashed compress still leaves its trace behind
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    if trace_out.is_some() {
+        awp::obs::trace::set_enabled(true);
+    }
+    let result = run(&args);
+    if let Some(path) = &trace_out {
+        match awp::obs::trace::write_chrome_trace(path) {
+            Ok(n) => eprintln!("[trace] {n} spans written to {}",
+                               path.display()),
+            Err(e) => eprintln!("[trace] failed to write {}: {e:#}",
+                                path.display()),
+        }
+    }
+    result
+}
+
+fn run(args: &Args) -> Result<()> {
     let Some(cmd) = args.positional.first().cloned() else {
         eprintln!("usage: repro <train|eval|compress|generate|experiment|e2e|\
                    info|inspect|bench-json|serve> [flags]");
         std::process::exit(2);
     };
-    let cfg = run_config(&args)?;
+    let cfg = run_config(args)?;
     // `inspect` reads a packed artifact alone — no manifest or runtime
     if cmd == "inspect" {
         let path = args
@@ -231,7 +258,7 @@ fn main() -> Result<()> {
     // `bench-json` is pure CPU kernel timing — no manifest or runtime either
     if cmd == "bench-json" {
         let quick = args.get("quick").is_some();
-        let out = args.get_or("out", "BENCH_8.json");
+        let out = args.get_or("out", "BENCH_9.json");
         eprintln!("[bench] kernel tiers on {} threads, simd: {}{}",
                   awp::util::parallel::num_threads(), simd::backend_name(),
                   if quick { " (quick)" } else { "" });
@@ -324,7 +351,7 @@ fn main() -> Result<()> {
                     // off the packed bytes through the native forward pass
                     // — no AOT runtime, no decode-to-dense assembly
                     let mut nm = NativeModel::from_artifact(&ck, &art)?;
-                    nm.set_tier(kernel_tier(&args));
+                    nm.set_tier(kernel_tier(args));
                     eprintln!("[native] {} sites packed, {} decode-to-dense \
                                assemblies", nm.packed_site_count(),
                               nm.dense_site_count());
@@ -397,7 +424,7 @@ fn main() -> Result<()> {
             };
             if native {
                 let mut nm = NativeModel::from_checkpoint(&ck)?;
-                nm.set_tier(kernel_tier(&args));
+                nm.set_tier(kernel_tier(args));
                 eprintln!("[native] {} sites dense f32",
                           nm.dense_site_count());
                 let rep = ctx.native_ppl(&model, &nm)?;
@@ -415,7 +442,7 @@ fn main() -> Result<()> {
         "compress" => {
             let model = args.get_or("model", "small");
             let method = Method::parse(&args.get_or("method", "awp"))?;
-            let spec = spec_from_args(&args)?;
+            let spec = spec_from_args(args)?;
             let ck = ctx.checkpoint(&model)?;
             let grams = ctx.grams(&model)?;
             let hyper = AwpHyper { group: manifest.awp_group,
@@ -503,7 +530,7 @@ fn main() -> Result<()> {
             };
             let text = if args.get("native").is_some() {
                 let mut nm = NativeModel::from_checkpoint(&ck)?;
-                nm.set_tier(kernel_tier(&args));
+                nm.set_tier(kernel_tier(args));
                 native_generate(&nm, &prompt, n)?
             } else {
                 generate(&runtime.handle(), &manifest, &model, &ck, &prompt, n)?
@@ -604,7 +631,7 @@ fn main() -> Result<()> {
                       gk.checkpoint, gk.calib);
             }
             let mut nm = NativeModel::from_artifact(&ck, &art)?;
-            nm.set_tier(serve_tier(&args));
+            nm.set_tier(serve_tier(args));
             eprintln!("[serve] {} sites packed, {} decode-to-dense \
                        assemblies", nm.packed_site_count(),
                       nm.dense_site_count());
@@ -632,7 +659,8 @@ fn main() -> Result<()> {
                 packed_bytes: art.packed_bytes(),
             };
             let exec = ctx.executor();
-            let state = awp::serve::ServeState::new(nm, info, exec, limits);
+            let state = awp::serve::ServeState::new(nm, info, exec, limits)
+                .with_log_json(args.get("log-json").is_some());
             let addr = args.get_or("addr", "127.0.0.1:8080");
             let listener = std::net::TcpListener::bind(&addr)
                 .with_context(|| format!("cannot bind {addr}"))?;

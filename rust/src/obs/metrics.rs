@@ -1,0 +1,768 @@
+//! Lock-cheap metrics registry: counters, gauges, fixed-bucket histograms.
+//!
+//! The registry is dependency-free (no prometheus crate on the image, just
+//! as `util::json` carries no serde) and built so hot paths pay **one
+//! relaxed atomic add** per observation:
+//!
+//! * [`Counter`] / [`Gauge`] — a single `AtomicU64` each;
+//! * [`Histogram`] — a fixed bound slice chosen at construction plus one
+//!   atomic per bucket; `observe` is a linear scan over ≤ 15 bounds, one
+//!   `fetch_add` on the bucket, count, and micro-scaled sum;
+//! * [`LabeledCounter`] — a small mutex-guarded cell list for the one
+//!   *request-rate* metric with dynamic labels (route × status). Request
+//!   arrival is thousands/sec at most; the token-rate and GEMM-rate paths
+//!   never touch a lock.
+//!
+//! Every handle lives in the process-global [`REGISTRY`] (`static`,
+//! const-initialised — no lazy-init branch on the hot path). All metric
+//! names carry the `awp_` prefix on the wire.
+//!
+//! ## Disabling
+//!
+//! [`set_enabled`]`(false)` turns every observation into a single relaxed
+//! load + predictable branch — the no-op tier the `obs_overhead` bench
+//! section compares against (see OBSERVABILITY.md for the overhead
+//! policy). Instrumentation never changes math: timing wraps existing
+//! calls, so the reference-tier bit-identity contracts are untouched
+//! either way.
+//!
+//! ## Snapshots
+//!
+//! Reads are relaxed loads per atomic — a scrape is monotonic per metric
+//! but not a consistent cut across metrics, which is exactly the
+//! Prometheus contract. [`render_prometheus`] emits the text exposition
+//! format (`text/plain; version=0.0.4`); [`snapshot_json`] the same data
+//! as one JSON object for `/v1/stats`.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------- enable
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Serialises code that toggles [`set_enabled`] against tests that assert
+/// observation behaviour (the flag is process-global, tests run
+/// concurrently). Runtime serving code never takes this lock.
+#[doc(hidden)]
+pub static ENABLE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Hold this guard for the whole enabled-state-sensitive section (a test
+/// asserting counts, or a bench toggling the flag).
+#[doc(hidden)]
+pub fn enable_guard() -> std::sync::MutexGuard<'static, ()> {
+    ENABLE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Globally enable/disable all metric observations (default: enabled).
+/// Disabled observations cost one relaxed load and a predictable branch.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether observations are currently recorded.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// `Some(Instant::now())` when metrics are enabled, `None` otherwise —
+/// lets callers skip the clock read entirely on the disabled tier.
+#[inline]
+pub fn timer() -> Option<Instant> {
+    if enabled() {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+// --------------------------------------------------------------- counter
+
+/// Monotonic counter; one relaxed `fetch_add` per increment.
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Add seconds scaled to integer microseconds (for busy-time counters).
+    #[inline]
+    pub fn add_seconds(&self, s: f64) {
+        if enabled() {
+            self.0.fetch_add((s * 1e6) as u64, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Value of a micro-scaled counter back in seconds.
+    pub fn seconds(&self) -> f64 {
+        self.get() as f64 / 1e6
+    }
+}
+
+// ----------------------------------------------------------------- gauge
+
+/// Last-write-wins gauge (u64 values: bytes, session counts, …).
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        if enabled() {
+            self.0.store(v, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+// ------------------------------------------------------------- histogram
+
+/// Upper bound on buckets per histogram (bounds ≤ 15, plus the implicit
+/// `+Inf` overflow bucket).
+pub const MAX_BUCKETS: usize = 16;
+
+const ZERO: AtomicU64 = AtomicU64::new(0);
+
+/// Fixed-bucket histogram with Prometheus `le` semantics: bucket `i`
+/// counts observations `v <= bounds[i]`; everything above the last bound
+/// lands in the overflow (`+Inf`) bucket. The sum is kept micro-scaled in
+/// a u64 so observation stays a handful of relaxed adds.
+pub struct Histogram {
+    bounds: &'static [f64],
+    buckets: [AtomicU64; MAX_BUCKETS],
+    count: AtomicU64,
+    sum_micros: AtomicU64,
+}
+
+/// Point-in-time copy of a histogram (raw, non-cumulative buckets).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistSnapshot {
+    pub bounds: &'static [f64],
+    /// Raw per-bucket counts; `buckets[bounds.len()]` is the overflow.
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+impl Histogram {
+    /// `bounds` must be strictly increasing and at most `MAX_BUCKETS - 1`
+    /// long; checked by the registry unit test rather than at runtime so
+    /// construction stays `const`.
+    pub const fn new(bounds: &'static [f64]) -> Histogram {
+        Histogram {
+            bounds,
+            buckets: [ZERO; MAX_BUCKETS],
+            count: AtomicU64::new(0),
+            sum_micros: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn observe(&self, v: f64) {
+        if !enabled() {
+            return;
+        }
+        let mut idx = self.bounds.len(); // overflow slot
+        for (i, &b) in self.bounds.iter().enumerate() {
+            if v <= b {
+                idx = i;
+                break;
+            }
+        }
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_micros.fetch_add((v * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Observe the elapsed time of a [`timer`] started earlier, if any.
+    #[inline]
+    pub fn observe_since(&self, start: Option<Instant>) {
+        if let Some(t) = start {
+            self.observe(t.elapsed().as_secs_f64());
+        }
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        let n = self.bounds.len() + 1;
+        HistSnapshot {
+            bounds: self.bounds,
+            buckets: (0..n).map(|i| self.buckets[i].load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum_micros.load(Ordering::Relaxed) as f64 / 1e6,
+        }
+    }
+}
+
+impl HistSnapshot {
+    /// Cumulative counts in `le` order (Prometheus exposition form); the
+    /// final entry is the `+Inf` bucket and equals `count` as sampled.
+    pub fn cumulative(&self) -> Vec<u64> {
+        let mut acc = 0u64;
+        self.buckets
+            .iter()
+            .map(|&b| {
+                acc += b;
+                acc
+            })
+            .collect()
+    }
+}
+
+// ------------------------------------------------------- labeled counter
+
+/// Counter keyed by (route, status). Cells are registered on first use
+/// under a mutex; the cell list is tiny (routes × statuses actually
+/// seen), so an increment is one short critical section. Only the
+/// request-rate path uses this — never the per-token or per-GEMM paths.
+pub struct LabeledCounter {
+    cells: Mutex<Vec<((&'static str, u16), u64)>>,
+}
+
+impl LabeledCounter {
+    pub const fn new() -> LabeledCounter {
+        LabeledCounter { cells: Mutex::new(Vec::new()) }
+    }
+
+    pub fn inc(&self, route: &'static str, status: u16) {
+        if !enabled() {
+            return;
+        }
+        let mut cells = self.cells.lock().unwrap();
+        if let Some(cell) = cells.iter_mut().find(|(k, _)| *k == (route, status)) {
+            cell.1 += 1;
+        } else {
+            cells.push(((route, status), 1));
+        }
+    }
+
+    /// Cells sorted by (route, status) for deterministic rendering.
+    pub fn snapshot(&self) -> Vec<((&'static str, u16), u64)> {
+        let mut cells = self.cells.lock().unwrap().clone();
+        cells.sort_unstable_by_key(|&((r, s), _)| (r, s));
+        cells
+    }
+
+    /// Sum across all cells.
+    pub fn total(&self) -> u64 {
+        self.cells.lock().unwrap().iter().map(|(_, n)| n).sum()
+    }
+}
+
+// -------------------------------------------------------------- registry
+
+/// Latency-style bounds (seconds) for sub-second request/tick paths.
+pub const TICK_BOUNDS: &[f64] = &[
+    0.0001, 0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5,
+];
+
+/// Request-latency bounds (seconds) — generate requests span ms to tens
+/// of seconds depending on `max_tokens`.
+pub const REQUEST_BOUNDS: &[f64] =
+    &[0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0];
+
+/// Batch-occupancy bounds (stream count per decode tick).
+pub const OCCUPANCY_BOUNDS: &[f64] = &[1.0, 2.0, 3.0, 4.0, 6.0, 8.0, 12.0, 16.0, 32.0];
+
+/// Executor-job duration bounds (seconds) — layer jobs run ms to minutes.
+pub const JOB_BOUNDS: &[f64] =
+    &[0.001, 0.005, 0.01, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0, 120.0];
+
+/// Every metric the system exports, as typed handles. Fields are grouped
+/// by emitting subsystem; OBSERVABILITY.md carries the full inventory
+/// with wire names and label sets.
+pub struct Registry {
+    // serve/server.rs
+    /// `awp_requests_total{route,status}`
+    pub requests: LabeledCounter,
+    /// `awp_request_seconds`
+    pub request_seconds: Histogram,
+    // serve/batcher.rs
+    /// `awp_decode_ticks_total`
+    pub decode_ticks: Counter,
+    /// `awp_decode_tick_seconds`
+    pub decode_tick_seconds: Histogram,
+    /// `awp_batch_occupancy`
+    pub batch_occupancy: Histogram,
+    /// `awp_queue_wait_seconds`
+    pub queue_wait_seconds: Histogram,
+    /// `awp_generated_tokens_total`
+    pub generated_tokens: Counter,
+    // serve/session.rs
+    /// `awp_kv_bytes`
+    pub kv_bytes: Gauge,
+    /// `awp_sessions_live`
+    pub sessions_live: Gauge,
+    /// `awp_session_evictions_total`
+    pub session_evictions: Counter,
+    // coordinator/cache.rs
+    /// `awp_gram_cache_hits_total{layer="mem"|"disk"}`
+    pub gram_mem_hits: Counter,
+    pub gram_disk_hits: Counter,
+    /// `awp_gram_cache_misses_total`
+    pub gram_misses: Counter,
+    // artifact/store.rs
+    /// `awp_artifact_cache_hits_total` / `_misses_total` / `_stores_total`
+    pub artifact_hits: Counter,
+    pub artifact_misses: Counter,
+    pub artifact_stores: Counter,
+    // coordinator/executor.rs
+    /// `awp_executor_jobs_total`
+    pub executor_jobs: Counter,
+    /// `awp_executor_job_seconds`
+    pub executor_job_seconds: Histogram,
+    // infer/linear.rs + artifact/packed.rs
+    /// `awp_kernel_calls_total{tier}` and busy-time (micro-scaled)
+    /// `awp_kernel_busy_seconds_total{tier}`
+    pub kernel_reference_calls: Counter,
+    pub kernel_reference_micros: Counter,
+    pub kernel_fast_calls: Counter,
+    pub kernel_fast_micros: Counter,
+}
+
+impl Registry {
+    pub const fn new() -> Registry {
+        Registry {
+            requests: LabeledCounter::new(),
+            request_seconds: Histogram::new(REQUEST_BOUNDS),
+            decode_ticks: Counter::new(),
+            decode_tick_seconds: Histogram::new(TICK_BOUNDS),
+            batch_occupancy: Histogram::new(OCCUPANCY_BOUNDS),
+            queue_wait_seconds: Histogram::new(TICK_BOUNDS),
+            generated_tokens: Counter::new(),
+            kv_bytes: Gauge::new(),
+            sessions_live: Gauge::new(),
+            session_evictions: Counter::new(),
+            gram_mem_hits: Counter::new(),
+            gram_disk_hits: Counter::new(),
+            gram_misses: Counter::new(),
+            artifact_hits: Counter::new(),
+            artifact_misses: Counter::new(),
+            artifact_stores: Counter::new(),
+            executor_jobs: Counter::new(),
+            executor_job_seconds: Histogram::new(JOB_BOUNDS),
+            kernel_reference_calls: Counter::new(),
+            kernel_reference_micros: Counter::new(),
+            kernel_fast_calls: Counter::new(),
+            kernel_fast_micros: Counter::new(),
+        }
+    }
+}
+
+/// The process-global registry every subsystem emits into.
+pub static REGISTRY: Registry = Registry::new();
+
+// ------------------------------------------------------------- rendering
+
+fn fmt_bound(b: f64) -> String {
+    if b.fract() == 0.0 {
+        format!("{}", b as i64)
+    } else {
+        format!("{b}")
+    }
+}
+
+fn fmt_val(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn render_histogram(out: &mut String, name: &str, help: &str, h: &Histogram) {
+    let snap = h.snapshot();
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+    let cum = snap.cumulative();
+    for (i, &b) in snap.bounds.iter().enumerate() {
+        out.push_str(&format!("{name}_bucket{{le=\"{}\"}} {}\n", fmt_bound(b), cum[i]));
+    }
+    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", cum[snap.bounds.len()]));
+    out.push_str(&format!("{name}_sum {}\n", fmt_val(snap.sum)));
+    out.push_str(&format!("{name}_count {}\n", snap.count));
+}
+
+fn render_counter(out: &mut String, name: &str, help: &str, v: u64) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"));
+}
+
+fn render_gauge(out: &mut String, name: &str, help: &str, v: u64) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"));
+}
+
+/// Content-Type for the Prometheus text exposition format.
+pub const PROMETHEUS_CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
+/// Render the whole registry in the Prometheus text exposition format.
+pub fn render_prometheus() -> String {
+    let r = &REGISTRY;
+    let mut out = String::with_capacity(4096);
+
+    out.push_str(
+        "# HELP awp_requests_total HTTP requests served, by route and status.\n\
+         # TYPE awp_requests_total counter\n",
+    );
+    for ((route, status), n) in r.requests.snapshot() {
+        out.push_str(&format!(
+            "awp_requests_total{{route=\"{route}\",status=\"{status}\"}} {n}\n"
+        ));
+    }
+    render_histogram(
+        &mut out,
+        "awp_request_seconds",
+        "Wall-clock request latency in seconds.",
+        &r.request_seconds,
+    );
+
+    render_counter(
+        &mut out,
+        "awp_decode_ticks_total",
+        "Batched decode ticks executed.",
+        r.decode_ticks.get(),
+    );
+    render_histogram(
+        &mut out,
+        "awp_decode_tick_seconds",
+        "Latency of one batched decode tick in seconds.",
+        &r.decode_tick_seconds,
+    );
+    render_histogram(
+        &mut out,
+        "awp_batch_occupancy",
+        "Streams fused per decode tick.",
+        &r.batch_occupancy,
+    );
+    render_histogram(
+        &mut out,
+        "awp_queue_wait_seconds",
+        "Wait from stream submission to its first decode tick.",
+        &r.queue_wait_seconds,
+    );
+    render_counter(
+        &mut out,
+        "awp_generated_tokens_total",
+        "Tokens generated across all streams.",
+        r.generated_tokens.get(),
+    );
+
+    render_gauge(&mut out, "awp_kv_bytes", "Resident KV-cache bytes.", r.kv_bytes.get());
+    render_gauge(&mut out, "awp_sessions_live", "Live sessions in the store.", r.sessions_live.get());
+    render_counter(
+        &mut out,
+        "awp_session_evictions_total",
+        "Idle sessions evicted (LRU or KV budget).",
+        r.session_evictions.get(),
+    );
+
+    out.push_str(
+        "# HELP awp_gram_cache_hits_total Gram calibration cache hits, by layer.\n\
+         # TYPE awp_gram_cache_hits_total counter\n",
+    );
+    out.push_str(&format!(
+        "awp_gram_cache_hits_total{{layer=\"mem\"}} {}\n",
+        r.gram_mem_hits.get()
+    ));
+    out.push_str(&format!(
+        "awp_gram_cache_hits_total{{layer=\"disk\"}} {}\n",
+        r.gram_disk_hits.get()
+    ));
+    render_counter(
+        &mut out,
+        "awp_gram_cache_misses_total",
+        "Gram calibration cache misses (recomputed).",
+        r.gram_misses.get(),
+    );
+    render_counter(
+        &mut out,
+        "awp_artifact_cache_hits_total",
+        "Artifact store hits (warm compression reruns).",
+        r.artifact_hits.get(),
+    );
+    render_counter(
+        &mut out,
+        "awp_artifact_cache_misses_total",
+        "Artifact store misses.",
+        r.artifact_misses.get(),
+    );
+    render_counter(
+        &mut out,
+        "awp_artifact_cache_stores_total",
+        "Artifacts persisted to the store.",
+        r.artifact_stores.get(),
+    );
+
+    render_counter(
+        &mut out,
+        "awp_executor_jobs_total",
+        "Executor jobs completed.",
+        r.executor_jobs.get(),
+    );
+    render_histogram(
+        &mut out,
+        "awp_executor_job_seconds",
+        "Executor job duration in seconds.",
+        &r.executor_job_seconds,
+    );
+
+    out.push_str(
+        "# HELP awp_kernel_calls_total Linear-site GEMM launches, by kernel tier.\n\
+         # TYPE awp_kernel_calls_total counter\n",
+    );
+    out.push_str(&format!(
+        "awp_kernel_calls_total{{tier=\"reference\"}} {}\n",
+        r.kernel_reference_calls.get()
+    ));
+    out.push_str(&format!(
+        "awp_kernel_calls_total{{tier=\"fast\"}} {}\n",
+        r.kernel_fast_calls.get()
+    ));
+    out.push_str(
+        "# HELP awp_kernel_busy_seconds_total Time spent inside linear-site GEMMs, by tier.\n\
+         # TYPE awp_kernel_busy_seconds_total counter\n",
+    );
+    out.push_str(&format!(
+        "awp_kernel_busy_seconds_total{{tier=\"reference\"}} {}\n",
+        fmt_val(r.kernel_reference_micros.seconds())
+    ));
+    out.push_str(&format!(
+        "awp_kernel_busy_seconds_total{{tier=\"fast\"}} {}\n",
+        fmt_val(r.kernel_fast_micros.seconds())
+    ));
+    out
+}
+
+fn hist_json(h: &Histogram) -> Json {
+    let snap = h.snapshot();
+    Json::obj(vec![
+        ("bounds", Json::arr_f64(snap.bounds)),
+        (
+            "buckets",
+            Json::Arr(snap.buckets.iter().map(|&b| Json::Num(b as f64)).collect()),
+        ),
+        ("count", Json::Num(snap.count as f64)),
+        ("sum", Json::Num(snap.sum)),
+    ])
+}
+
+/// The whole registry as one JSON object (the `/v1/stats` body).
+pub fn snapshot_json() -> Json {
+    let r = &REGISTRY;
+    let requests = Json::Arr(
+        r.requests
+            .snapshot()
+            .into_iter()
+            .map(|((route, status), n)| {
+                Json::obj(vec![
+                    ("route", Json::Str(route.to_string())),
+                    ("status", Json::Num(status as f64)),
+                    ("count", Json::Num(n as f64)),
+                ])
+            })
+            .collect(),
+    );
+    Json::obj(vec![
+        ("requests", requests),
+        ("request_seconds", hist_json(&r.request_seconds)),
+        ("decode_ticks", Json::Num(r.decode_ticks.get() as f64)),
+        ("decode_tick_seconds", hist_json(&r.decode_tick_seconds)),
+        ("batch_occupancy", hist_json(&r.batch_occupancy)),
+        ("queue_wait_seconds", hist_json(&r.queue_wait_seconds)),
+        ("generated_tokens", Json::Num(r.generated_tokens.get() as f64)),
+        ("kv_bytes", Json::Num(r.kv_bytes.get() as f64)),
+        ("sessions_live", Json::Num(r.sessions_live.get() as f64)),
+        ("session_evictions", Json::Num(r.session_evictions.get() as f64)),
+        (
+            "gram_cache",
+            Json::obj(vec![
+                ("mem_hits", Json::Num(r.gram_mem_hits.get() as f64)),
+                ("disk_hits", Json::Num(r.gram_disk_hits.get() as f64)),
+                ("misses", Json::Num(r.gram_misses.get() as f64)),
+            ]),
+        ),
+        (
+            "artifact_cache",
+            Json::obj(vec![
+                ("hits", Json::Num(r.artifact_hits.get() as f64)),
+                ("misses", Json::Num(r.artifact_misses.get() as f64)),
+                ("stores", Json::Num(r.artifact_stores.get() as f64)),
+            ]),
+        ),
+        ("executor_jobs", Json::Num(r.executor_jobs.get() as f64)),
+        ("executor_job_seconds", hist_json(&r.executor_job_seconds)),
+        (
+            "kernels",
+            Json::obj(vec![
+                (
+                    "reference",
+                    Json::obj(vec![
+                        ("calls", Json::Num(r.kernel_reference_calls.get() as f64)),
+                        ("busy_s", Json::Num(r.kernel_reference_micros.seconds())),
+                    ]),
+                ),
+                (
+                    "fast",
+                    Json::obj(vec![
+                        ("calls", Json::Num(r.kernel_fast_calls.get() as f64)),
+                        ("busy_s", Json::Num(r.kernel_fast_micros.seconds())),
+                    ]),
+                ),
+            ]),
+        ),
+    ])
+}
+
+/// Record one kernel-tier GEMM launch of `seconds` on `fast`'s tier.
+#[inline]
+pub fn observe_kernel(fast: bool, start: Option<Instant>) {
+    if let Some(t) = start {
+        let s = t.elapsed().as_secs_f64();
+        if fast {
+            REGISTRY.kernel_fast_calls.inc();
+            REGISTRY.kernel_fast_micros.add_seconds(s);
+        } else {
+            REGISTRY.kernel_reference_calls.inc();
+            REGISTRY.kernel_reference_micros.add_seconds(s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let _g = enable_guard();
+        set_enabled(true);
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.set(17);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+    }
+
+    #[test]
+    fn histogram_le_semantics() {
+        let _g = enable_guard();
+        set_enabled(true);
+        static BOUNDS: &[f64] = &[1.0, 2.0, 5.0];
+        let h = Histogram::new(BOUNDS);
+        for v in [0.5, 1.0, 1.5, 2.0, 4.9, 5.0, 5.1, 100.0] {
+            h.observe(v);
+        }
+        let snap = h.snapshot();
+        // le=1: {0.5, 1.0}; le=2: {1.5, 2.0}; le=5: {4.9, 5.0}; +Inf: rest
+        assert_eq!(snap.buckets, vec![2, 2, 2, 2]);
+        assert_eq!(snap.cumulative(), vec![2, 4, 6, 8]);
+        assert_eq!(snap.count, 8);
+        assert!((snap.sum - 120.0).abs() < 1e-3, "sum {}", snap.sum);
+    }
+
+    #[test]
+    fn registry_bounds_are_valid() {
+        for bounds in [TICK_BOUNDS, REQUEST_BOUNDS, OCCUPANCY_BOUNDS, JOB_BOUNDS] {
+            assert!(bounds.len() < MAX_BUCKETS, "too many bounds");
+            for w in bounds.windows(2) {
+                assert!(w[0] < w[1], "bounds not increasing: {bounds:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn labeled_counter_sorts_deterministically() {
+        let _g = enable_guard();
+        set_enabled(true);
+        let c = LabeledCounter::new();
+        c.inc("/v1/generate", 200);
+        c.inc("/healthz", 200);
+        c.inc("/v1/generate", 429);
+        c.inc("/v1/generate", 200);
+        let snap = c.snapshot();
+        assert_eq!(
+            snap,
+            vec![
+                (("/healthz", 200), 1),
+                (("/v1/generate", 200), 2),
+                (("/v1/generate", 429), 1),
+            ]
+        );
+        assert_eq!(c.total(), 4);
+    }
+
+    #[test]
+    fn disabled_observations_are_dropped() {
+        let _g = enable_guard();
+        let c = Counter::new();
+        let h = Histogram::new(TICK_BOUNDS);
+        set_enabled(false);
+        c.inc();
+        h.observe(0.01);
+        assert!(timer().is_none());
+        set_enabled(true);
+        assert_eq!(c.get(), 0);
+        assert_eq!(h.snapshot().count, 0);
+        c.inc();
+        assert_eq!(c.get(), 1);
+    }
+
+    #[test]
+    fn prometheus_render_has_required_families() {
+        let _g = enable_guard();
+        set_enabled(true);
+        // Touch one cell so requests_total renders at least one sample.
+        REGISTRY.requests.inc("/healthz", 200);
+        let text = render_prometheus();
+        for needle in [
+            "# TYPE awp_requests_total counter",
+            "awp_requests_total{route=\"/healthz\",status=\"200\"}",
+            "# TYPE awp_decode_tick_seconds histogram",
+            "awp_decode_tick_seconds_bucket{le=\"+Inf\"}",
+            "# TYPE awp_batch_occupancy histogram",
+            "# TYPE awp_kv_bytes gauge",
+            "awp_session_evictions_total",
+            "awp_gram_cache_hits_total{layer=\"mem\"}",
+            "awp_artifact_cache_misses_total",
+            "# TYPE awp_executor_job_seconds histogram",
+            "awp_kernel_calls_total{tier=\"fast\"}",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn stats_json_parses_back() {
+        let j = snapshot_json();
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert!(back.get("decode_tick_seconds").is_some());
+        assert!(back.get("gram_cache").unwrap().get("misses").is_some());
+    }
+}

@@ -1,0 +1,24 @@
+//! Observability: process-global metrics registry + span/trace layer.
+//!
+//! This is the cross-cutting layer every subsystem emits into (see
+//! OBSERVABILITY.md for the full metric inventory, span hierarchy, and
+//! overhead policy):
+//!
+//! * [`metrics`] — dependency-free counters/gauges/fixed-bucket
+//!   histograms behind typed handles on one `static` [`metrics::REGISTRY`];
+//!   hot paths pay a single relaxed atomic add. Exported as Prometheus
+//!   text (`GET /metrics`) and JSON (`GET /v1/stats`) by the server.
+//! * [`trace`] — per-request trace IDs, RAII span timers over the
+//!   serve → batcher → infer → kernel path, a bounded in-memory span
+//!   sink, and Chrome trace-event JSON export
+//!   (`repro serve|compress --trace-out <file>`).
+//!
+//! Both layers are observation-only: they wrap existing calls with
+//! timing and counting, never change arithmetic, and are individually
+//! disableable down to one relaxed load per site — so the reference-tier
+//! bit-identity contracts (KERNELS.md, SERVING.md) hold with
+//! instrumentation on or off, and the residual cost is tracked by the
+//! `obs_overhead` section of `repro bench-json`.
+
+pub mod metrics;
+pub mod trace;

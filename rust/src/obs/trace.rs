@@ -1,0 +1,311 @@
+//! Span/trace layer: request trace IDs, RAII span timers, ring-buffer
+//! span sink, Chrome trace-event export.
+//!
+//! Two independent facilities live here:
+//!
+//! * **Trace IDs** — [`next_request_id`] hands out process-unique request
+//!   identifiers from one relaxed atomic; [`request_tag`] renders them as
+//!   the `t-N` tokens that appear in every per-request log line (legacy
+//!   text and `--log-json` alike). IDs are always on — they cost one
+//!   `fetch_add` per request and make concurrent keep-alive connections
+//!   distinguishable in the logs.
+//! * **Spans** — [`span`] returns an RAII guard that, when tracing is
+//!   enabled ([`set_enabled`]), records a completed-span event
+//!   (name, category, start, duration, thread, args) into a bounded
+//!   in-memory ring buffer on drop. When tracing is disabled (the
+//!   default) the guard is inert: construction is one relaxed load, no
+//!   clock read, no allocation. `repro serve --trace-out <file>` and
+//!   `repro compress --trace-out <file>` enable the sink and export it as
+//!   Chrome trace-event JSON ([`export_chrome`]) on exit — loadable in
+//!   `chrome://tracing` / Perfetto.
+//!
+//! The sink keeps the most recent [`CAPACITY`] spans (oldest dropped
+//! first). Spans record on *drop*, so a child span always lands in the
+//! buffer before its parent — consumers that want the tree re-nest by
+//! `[start, start+dur)` containment per thread, which is exactly what the
+//! Chrome viewer does.
+
+use std::collections::VecDeque;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+// ------------------------------------------------------------- trace ids
+
+static NEXT_REQUEST_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Process-unique request id (one relaxed `fetch_add`; always on).
+pub fn next_request_id() -> u64 {
+    NEXT_REQUEST_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// The `t-N` token a request id carries in log lines and span args.
+pub fn request_tag(id: u64) -> String {
+    format!("t-{id}")
+}
+
+// ---------------------------------------------------------------- enable
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Turn the span sink on/off (default: off — spans are inert guards).
+pub fn set_enabled(on: bool) {
+    if on {
+        epoch(); // pin the time origin before the first span
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether spans are currently recorded.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn thread_tag() -> u64 {
+    static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    }
+    TID.with(|t| *t)
+}
+
+// ------------------------------------------------------------------ sink
+
+/// Maximum retained spans; older spans are dropped first.
+pub const CAPACITY: usize = 16384;
+
+/// One completed span, as recorded into the sink.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    pub name: &'static str,
+    /// Coarse subsystem category (`serve`, `batch`, `infer`, `coord`).
+    pub cat: &'static str,
+    /// Microseconds since the process trace epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Small per-process thread tag (not the OS tid).
+    pub tid: u64,
+    pub args: Vec<(&'static str, String)>,
+}
+
+static SINK: Mutex<VecDeque<SpanRecord>> = Mutex::new(VecDeque::new());
+
+fn push(rec: SpanRecord) {
+    let mut sink = SINK.lock().unwrap();
+    if sink.len() >= CAPACITY {
+        sink.pop_front();
+    }
+    sink.push_back(rec);
+}
+
+/// Number of spans currently buffered.
+pub fn len() -> usize {
+    SINK.lock().unwrap().len()
+}
+
+/// Drain the sink (tests; export uses a non-draining snapshot).
+pub fn take_records() -> Vec<SpanRecord> {
+    SINK.lock().unwrap().drain(..).collect()
+}
+
+/// Copy of the buffered spans, oldest first.
+pub fn records() -> Vec<SpanRecord> {
+    SINK.lock().unwrap().iter().cloned().collect()
+}
+
+// ------------------------------------------------------------------ span
+
+/// RAII span timer: records into the sink on drop when tracing is
+/// enabled, inert otherwise. Create via [`span`].
+pub struct Span {
+    start: Option<Instant>,
+    name: &'static str,
+    cat: &'static str,
+    args: Vec<(&'static str, String)>,
+}
+
+/// Open a span; the guard records `[construction, drop)` when enabled.
+#[inline]
+pub fn span(name: &'static str, cat: &'static str) -> Span {
+    let start = if enabled() { Some(Instant::now()) } else { None };
+    Span { start, name, cat, args: Vec::new() }
+}
+
+impl Span {
+    /// Attach a key/value argument (no-op while the sink is disabled).
+    pub fn arg(mut self, key: &'static str, value: impl Into<String>) -> Span {
+        if self.start.is_some() {
+            self.args.push((key, value.into()));
+        }
+        self
+    }
+
+    /// Attach an argument after construction (for values only known at
+    /// the end of the spanned section, e.g. a tick's batch width).
+    pub fn set_arg(&mut self, key: &'static str, value: impl Into<String>) {
+        if self.start.is_some() {
+            self.args.push((key, value.into()));
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            let dur_us = start.elapsed().as_micros() as u64;
+            let start_us = start.saturating_duration_since(epoch()).as_micros() as u64;
+            push(SpanRecord {
+                name: self.name,
+                cat: self.cat,
+                start_us,
+                dur_us,
+                tid: thread_tag(),
+                args: std::mem::take(&mut self.args),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------- export
+
+/// The buffered spans as a Chrome trace-event JSON object
+/// (`{"traceEvents": [...]}`, complete `ph:"X"` events, µs timestamps).
+pub fn export_chrome() -> Json {
+    let events = records()
+        .into_iter()
+        .map(|rec| {
+            let args =
+                Json::Obj(rec.args.into_iter().map(|(k, v)| (k.to_string(), Json::Str(v))).collect());
+            Json::obj(vec![
+                ("name", Json::Str(rec.name.to_string())),
+                ("cat", Json::Str(rec.cat.to_string())),
+                ("ph", Json::Str("X".to_string())),
+                ("ts", Json::Num(rec.start_us as f64)),
+                ("dur", Json::Num(rec.dur_us as f64)),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(rec.tid as f64)),
+                ("args", args),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
+/// Write the Chrome trace to `path` and report the span count.
+pub fn write_chrome_trace(path: &Path) -> Result<usize> {
+    let n = len();
+    std::fs::write(path, export_chrome().to_string())
+        .with_context(|| format!("writing trace to {}", path.display()))?;
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tests share the process-global sink; serialise via the metrics
+    // enable lock (same discipline as the registry tests).
+    use crate::obs::metrics::enable_guard;
+
+    #[test]
+    fn request_ids_are_unique_and_tagged() {
+        let a = next_request_id();
+        let b = next_request_id();
+        assert_ne!(a, b);
+        assert_eq!(request_tag(7), "t-7");
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _g = enable_guard();
+        set_enabled(false);
+        let before = len();
+        {
+            let _s = span("noop", "test").arg("k", "v");
+        }
+        assert_eq!(len(), before);
+    }
+
+    #[test]
+    fn spans_nest_child_before_parent() {
+        let _g = enable_guard();
+        set_enabled(true);
+        take_records();
+        {
+            let _parent = span("parent", "test");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            {
+                let _child = span("child", "test").arg("n", "1");
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        set_enabled(false);
+        // Other tests may emit spans concurrently; look at ours only.
+        let recs: Vec<SpanRecord> = take_records()
+            .into_iter()
+            .filter(|r| r.name == "parent" || r.name == "child")
+            .collect();
+        assert_eq!(recs.len(), 2);
+        // Drop order: child lands first.
+        assert_eq!(recs[0].name, "child");
+        assert_eq!(recs[1].name, "parent");
+        let (child, parent) = (&recs[0], &recs[1]);
+        assert!(parent.start_us <= child.start_us);
+        assert!(child.start_us + child.dur_us <= parent.start_us + parent.dur_us + 1);
+        assert_eq!(child.args, vec![("n", "1".to_string())]);
+        assert_eq!(child.tid, parent.tid);
+    }
+
+    #[test]
+    fn chrome_export_roundtrips_through_parser() {
+        let _g = enable_guard();
+        set_enabled(true);
+        take_records();
+        {
+            let _s = span("tick", "batch").arg("occupancy", "3");
+        }
+        set_enabled(false);
+        let json = export_chrome();
+        let back = Json::parse(&json.to_string()).unwrap();
+        let events = back.expect("traceEvents").unwrap().as_arr().unwrap();
+        let ev = events
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str().ok()) == Some("tick"))
+            .expect("tick span exported");
+        assert_eq!(ev.expect("name").unwrap().as_str().unwrap(), "tick");
+        assert_eq!(ev.expect("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(
+            ev.expect("args").unwrap().expect("occupancy").unwrap().as_str().unwrap(),
+            "3"
+        );
+        take_records();
+    }
+
+    #[test]
+    fn sink_is_bounded() {
+        let _g = enable_guard();
+        set_enabled(true);
+        take_records();
+        for _ in 0..CAPACITY + 10 {
+            let _s = span("spin", "test");
+        }
+        assert_eq!(len(), CAPACITY);
+        set_enabled(false);
+        take_records();
+    }
+}

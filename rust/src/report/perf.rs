@@ -22,6 +22,10 @@
 //!   carrying all N), at batch 1/4/16; `batched_vs_serial` records how
 //!   much of the packed kernels' per-launch decode aux the batch
 //!   amortises.
+//! * `obs_overhead` — the observability gate (OBSERVABILITY.md): the same
+//!   KV-cached greedy decode with the metrics registry enabled (the
+//!   default) vs force-disabled; `enabled_vs_disabled` near 1.0 is the
+//!   "instrumentation is free" acceptance bar.
 //!
 //! The harness is [`crate::util::bench`] (no criterion in the image); the
 //! same measurements back `benches/kernels.rs`, which adds the
@@ -263,6 +267,37 @@ fn batch_decode_row(m: &NativeModel, vocab: usize, bs: usize, n_new: usize,
     ]))
 }
 
+/// The observability-overhead gate: KV-cached greedy decode throughput on
+/// the serving model with the metrics registry enabled vs force-disabled.
+/// The registry's hot-path cost is one relaxed load + branch per observe
+/// when disabled and one relaxed add (plus a clock read per histogram)
+/// when enabled, so the ratio should sit within bench noise of 1.0 —
+/// that's the policy OBSERVABILITY.md states and CI eyeballs.
+fn obs_overhead(fast: &NativeModel, vocab: usize, quick: bool, budget_s: f64)
+    -> Result<Json> {
+    use crate::obs::metrics;
+    let (p_len, n_new) = if quick { (8, 8) } else { (32, 32) };
+    let prompt: Vec<i32> =
+        (0..p_len).map(|i| (i * 3 % vocab) as i32).collect();
+    // serialise against any concurrent test toggling the global flag
+    let _g = metrics::enable_guard();
+    let was = metrics::enabled();
+    metrics::set_enabled(true);
+    let on = decode_tok_s("decode metrics-on", fast, &prompt, n_new, true,
+                          budget_s);
+    metrics::set_enabled(false);
+    let off = decode_tok_s("decode metrics-off", fast, &prompt, n_new, true,
+                           budget_s);
+    metrics::set_enabled(was);
+    let (on, off) = (on?, off?);
+    Ok(Json::obj(vec![
+        ("new_tokens", Json::Num(n_new as f64)),
+        ("enabled_tok_s", Json::Num(on)),
+        ("disabled_tok_s", Json::Num(off)),
+        ("enabled_vs_disabled", Json::Num(on / off)),
+    ]))
+}
+
 /// Run the full suite and assemble the `awp-bench/1` document. `quick`
 /// shrinks shapes and budgets to CI-smoke scale (~a second) — same schema,
 /// not comparable numbers.
@@ -347,9 +382,11 @@ pub fn bench_report(quick: bool) -> Result<Json> {
             .map(|&bs| batch_decode_row(&fast, cfg.vocab, bs, bd_new, nb))
             .collect::<Result<Vec<_>>>()?,
     );
+    // the observability gate rides the same serving model
+    let obs = obs_overhead(&fast, cfg.vocab, quick, nb)?;
     Ok(Json::obj(vec![
         ("schema", Json::Str("awp-bench/1".into())),
-        ("pr", Json::Num(8.0)),
+        ("pr", Json::Num(9.0)),
         ("quick", Json::Bool(quick)),
         ("threads", Json::Num(num_threads() as f64)),
         ("simd", Json::Str(simd::backend_name().into())),
@@ -357,11 +394,12 @@ pub fn bench_report(quick: bool) -> Result<Json> {
         ("native", native),
         ("decode", decode),
         ("decode_batch", decode_batch),
+        ("obs_overhead", obs),
     ]))
 }
 
 /// Run [`bench_report`] and write it to `path` (the CLI default is
-/// `BENCH_8.json` at the repo root).
+/// `BENCH_9.json` at the repo root).
 pub fn write_bench_json(path: &Path, quick: bool) -> Result<()> {
     let report = bench_report(quick)?;
     fs::write(path, report.to_string() + "\n")
@@ -406,8 +444,13 @@ mod tests {
             assert!(row.expect("batched_vs_serial").unwrap().as_f64().unwrap()
                     > 0.0);
         }
+        let obs = report.expect("obs_overhead").unwrap();
+        assert!(obs.expect("enabled_tok_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(obs.expect("disabled_tok_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(obs.expect("enabled_vs_disabled").unwrap().as_f64().unwrap()
+                > 0.0);
         // round-trips through the hand-rolled JSON parser
         let parsed = Json::parse(&report.to_string()).unwrap();
-        assert_eq!(parsed.expect("pr").unwrap().as_usize().unwrap(), 8);
+        assert_eq!(parsed.expect("pr").unwrap().as_usize().unwrap(), 9);
     }
 }

@@ -28,9 +28,11 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Condvar, Mutex};
+use std::time::Instant;
 
 use crate::eval::argmax;
 use crate::infer::{DecodeSession, NativeModel};
+use crate::obs::{metrics, trace};
 
 /// One request's decode stream while it sits in the scheduler.
 struct Stream {
@@ -46,6 +48,9 @@ struct Stream {
     out: Vec<i32>,
     /// Largest tick occupancy this stream rode in.
     occupancy: usize,
+    /// Submission time for the queue-wait histogram (`None` when metrics
+    /// are disabled — no clock read at all).
+    enqueued: Option<Instant>,
 }
 
 /// Terminal state of a stream, parked until its request thread collects it.
@@ -136,6 +141,7 @@ impl DecodeBatcher {
                 remaining: steps.max(1),
                 out: Vec::new(),
                 occupancy: 0,
+                enqueued: metrics::timer(),
             });
             id
         };
@@ -182,7 +188,33 @@ impl DecodeBatcher {
                 let take = st.queue.len().min(self.max_batch);
                 let mut batch: Vec<Stream> = st.queue.drain(..take).collect();
                 drop(st);
-                let failure = tick(model, &mut batch);
+                // queue wait: submission → first tick (occupancy 0 means
+                // this stream has never ridden a tick yet)
+                let m = &metrics::REGISTRY;
+                for s in &batch {
+                    if s.occupancy == 0 {
+                        if let Some(t0) = s.enqueued {
+                            m.queue_wait_seconds
+                                .observe(t0.elapsed().as_secs_f64());
+                        }
+                    }
+                }
+                let tick_timer = metrics::timer();
+                let failure = {
+                    let mut span = trace::span("decode_tick", "batch");
+                    if trace::enabled() {
+                        span.set_arg("occupancy", batch.len().to_string());
+                    }
+                    tick(model, &mut batch)
+                };
+                m.decode_tick_seconds.observe_since(tick_timer);
+                m.decode_ticks.inc();
+                m.batch_occupancy.observe(batch.len() as f64);
+                if failure.is_none() {
+                    let emitted =
+                        batch.iter().filter(|s| s.remaining > 0).count();
+                    m.generated_tokens.add(emitted as u64);
+                }
                 st = self.inner.lock().unwrap();
                 st.leading = false;
                 st.ticks += 1;

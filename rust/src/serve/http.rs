@@ -169,6 +169,9 @@ pub struct Response {
     /// Emit `Connection: keep-alive` instead of `close`. Defaults to
     /// `false`; the server sets it per connection state.
     pub keep_alive: bool,
+    /// Extra response headers beyond the framing trio (e.g.
+    /// `Retry-After` on 429s); written verbatim after `Connection:`.
+    pub extra_headers: Vec<(&'static str, String)>,
 }
 
 impl Response {
@@ -181,7 +184,29 @@ impl Response {
             tokens: 0,
             batch: 0,
             keep_alive: false,
+            extra_headers: Vec::new(),
         }
+    }
+
+    /// A non-JSON body with an explicit content type (the `/metrics`
+    /// Prometheus text exposition).
+    pub fn text(status: u16, content_type: &'static str, body: String) -> Response {
+        Response {
+            status,
+            content_type,
+            body: body.into_bytes(),
+            session: "-".into(),
+            tokens: 0,
+            batch: 0,
+            keep_alive: false,
+            extra_headers: Vec::new(),
+        }
+    }
+
+    /// Attach an extra response header.
+    pub fn with_header(mut self, name: &'static str, value: String) -> Response {
+        self.extra_headers.push((name, value));
+        self
     }
 
     /// Attach the structured-log fields to this response.
@@ -223,13 +248,17 @@ impl Response {
         write!(
             w,
             "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n\
-             Connection: {}\r\n\r\n",
+             Connection: {}\r\n",
             self.status,
             Self::reason(self.status),
             self.content_type,
             self.body.len(),
             if self.keep_alive { "keep-alive" } else { "close" },
         )?;
+        for (name, value) in &self.extra_headers {
+            write!(w, "{name}: {value}\r\n")?;
+        }
+        w.write_all(b"\r\n")?;
         w.write_all(&self.body)?;
         w.flush()?;
         Ok(())
@@ -417,6 +446,30 @@ mod tests {
         assert!(text.contains("Connection: keep-alive\r\n"));
         assert!(!text.contains("Connection: close"));
         assert_eq!(Response::reason(429), "Too Many Requests");
+    }
+
+    #[test]
+    fn extra_headers_are_written_after_the_framing_trio() {
+        let resp = Response::json(429, &Json::obj(vec![("error", Json::Str("full".into()))]))
+            .with_header("Retry-After", "1".to_string());
+        let mut out = Vec::new();
+        resp.write_to(&mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let head = text.split_once("\r\n\r\n").unwrap().0;
+        assert!(head.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(head.ends_with("Retry-After: 1"));
+        assert!(head.contains("Connection: close\r\n"));
+    }
+
+    #[test]
+    fn text_response_carries_the_given_content_type() {
+        let resp = Response::text(200, "text/plain; version=0.0.4",
+                                  "awp_requests_total 1\n".to_string());
+        let mut out = Vec::new();
+        resp.write_to(&mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Content-Type: text/plain; version=0.0.4\r\n"));
+        assert!(text.ends_with("awp_requests_total 1\n"));
     }
 
     #[test]

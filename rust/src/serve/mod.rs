@@ -20,7 +20,9 @@
 //!   keep-alive negotiation, chunked streaming writers;
 //! * [`router`] — the static route table and typed handlers
 //!   (`/healthz`, `/v1/inspect`, `/v1/generate` (buffered or
-//!   `?stream=true`), `/v1/perplexity`) over [`ServeState`], with
+//!   `?stream=true`), `/v1/perplexity`, plus the observability surface
+//!   `/metrics` (Prometheus text) and `/v1/stats` (JSON) over the
+//!   [`crate::obs::metrics`] registry) over [`ServeState`], with
 //!   [`ApiError`] → JSON error mapping;
 //! * [`session`] — [`SessionStore`]: per-session KV state, exclusive
 //!   checkout, LRU eviction cap, resident-KV byte budget;
@@ -32,7 +34,8 @@
 //!   SIGINT/SIGTERM drain.
 //!
 //! Operational reference — endpoints, JSON schemas, curl quickstart, tier
-//! and thread knobs — lives in SERVING.md.
+//! and thread knobs — lives in SERVING.md; the metric inventory, span
+//! hierarchy and `--trace-out`/`--log-json` knobs in OBSERVABILITY.md.
 
 pub mod batcher;
 pub mod http;

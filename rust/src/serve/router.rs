@@ -74,6 +74,9 @@ pub struct ServeState {
     /// Per-session context window (K/V rows a session can hold).
     pub max_ctx: usize,
     pub started: Instant,
+    /// Emit one JSONL object per request instead of the legacy text log
+    /// line (`repro serve --log-json`).
+    pub log_json: bool,
 }
 
 impl ServeState {
@@ -88,32 +91,62 @@ impl ServeState {
             batcher: DecodeBatcher::new(limits.max_batch),
             max_ctx: limits.max_ctx.max(2),
             started: Instant::now(),
+            log_json: false,
         }
+    }
+
+    /// Switch the per-request log to JSONL (`--log-json`).
+    pub fn with_log_json(mut self, on: bool) -> ServeState {
+        self.log_json = on;
+        self
     }
 }
 
 /// A handler failure: HTTP status plus a message the client sees as
-/// `{"error": message}`.
+/// `{"error": message}` (plus overload detail on 429s).
 #[derive(Debug)]
 pub struct ApiError {
     pub status: u16,
     pub message: String,
+    /// `Retry-After` header value (seconds) for retryable overload.
+    pub retry_after: Option<u32>,
+    /// Busy-session count behind a `StoreFull` rejection, echoed into the
+    /// JSON body as `busy_sessions`.
+    pub busy: Option<usize>,
 }
 
 impl ApiError {
     pub fn new(status: u16, message: impl Into<String>) -> ApiError {
-        ApiError { status, message: message.into() }
+        ApiError { status, message: message.into(), retry_after: None, busy: None }
     }
 
     pub fn bad_request(message: impl Into<String>) -> ApiError {
         ApiError::new(400, message)
     }
 
+    /// The `429` a session create gets when the store is wall-to-wall
+    /// busy sessions: carries `Retry-After: 1` and the busy count, on
+    /// both the buffered and streaming create paths (which share this
+    /// constructor via `prepare_generate`).
+    pub fn store_full(busy: usize) -> ApiError {
+        ApiError {
+            status: 429,
+            message: format!("session store full: {busy} sessions busy; retry later"),
+            retry_after: Some(1),
+            busy: Some(busy),
+        }
+    }
+
     pub fn to_response(&self) -> Response {
-        Response::json(
-            self.status,
-            &Json::obj(vec![("error", Json::Str(self.message.clone()))]),
-        )
+        let mut kvs = vec![("error", Json::Str(self.message.clone()))];
+        if let Some(busy) = self.busy {
+            kvs.push(("busy_sessions", Json::Num(busy as f64)));
+        }
+        let mut resp = Response::json(self.status, &Json::obj(kvs));
+        if let Some(secs) = self.retry_after {
+            resp = resp.with_header("Retry-After", secs.to_string());
+        }
+        resp
     }
 }
 
@@ -135,10 +168,18 @@ pub struct Route {
 /// The server's whole API surface, in match order.
 pub const ROUTES: &[Route] = &[
     Route { method: "GET", path: "/healthz", handler: healthz },
+    Route { method: "GET", path: "/metrics", handler: metrics },
     Route { method: "GET", path: "/v1/inspect", handler: inspect },
+    Route { method: "GET", path: "/v1/stats", handler: stats },
     Route { method: "POST", path: "/v1/generate", handler: generate },
     Route { method: "POST", path: "/v1/perplexity", handler: perplexity },
 ];
+
+/// Cardinality-bounded route label for the `awp_requests_total` metric:
+/// a known [`ROUTES`] path verbatim, anything else collapses to `other`.
+pub fn route_label(path: &str) -> &'static str {
+    ROUTES.iter().find(|r| r.path == path).map(|r| r.path).unwrap_or("other")
+}
 
 /// Dispatch `req` against [`ROUTES`]: unknown path → 404, known path with
 /// the wrong method → 405, handler error → its status. Never panics on
@@ -172,6 +213,26 @@ fn healthz(state: &ServeState, _req: &Request) -> Result<Response, ApiError> {
         ("tier", Json::Str(state.model.tier().describe().into())),
         ("sessions", Json::Num(state.sessions.len() as f64)),
         ("uptime_s", Json::Num(state.started.elapsed().as_secs_f64())),
+    ]);
+    Ok(Response::json(200, &body))
+}
+
+/// `GET /metrics` — the whole [`crate::obs::metrics::REGISTRY`] in the
+/// Prometheus text exposition format, scrape-ready.
+fn metrics(_state: &ServeState, _req: &Request) -> Result<Response, ApiError> {
+    Ok(Response::text(
+        200,
+        crate::obs::metrics::PROMETHEUS_CONTENT_TYPE,
+        crate::obs::metrics::render_prometheus(),
+    ))
+}
+
+/// `GET /v1/stats` — the same registry as one JSON object, plus server
+/// uptime (programmatic clients; Prometheus scrapes `/metrics`).
+fn stats(state: &ServeState, _req: &Request) -> Result<Response, ApiError> {
+    let body = Json::obj(vec![
+        ("uptime_s", Json::Num(state.started.elapsed().as_secs_f64())),
+        ("metrics", crate::obs::metrics::snapshot_json()),
     ]);
     Ok(Response::json(200, &body))
 }
@@ -259,11 +320,7 @@ fn prepare_generate(state: &ServeState, req: &Request)
         None => state
             .sessions
             .create(state.model.new_session(state.max_ctx))
-            .map_err(|e| ApiError::new(
-                429,
-                format!("session store full: {} sessions busy; retry later",
-                        e.busy),
-            ))?,
+            .map_err(|e| ApiError::store_full(e.busy))?,
     };
     // the cache must cover prompt + every generated token so a follow-up
     // request can continue exactly
@@ -624,11 +681,49 @@ mod tests {
         let v = json_of(&resp);
         assert!(v.expect("error").unwrap().as_str().unwrap()
             .contains("session store full"));
+        // overload detail rides both the header and the body
+        assert_eq!(v.expect("busy_sessions").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(resp.extra_headers,
+                   vec![("Retry-After", "1".to_string())]);
+        // the streaming create path rejects identically
+        let mut out = Vec::new();
+        let outcome = generate_stream(
+            &st, &req("POST", "/v1/generate",
+                      r#"{"prompt":"cd","max_tokens":2}"#),
+            &mut out, false);
+        assert_eq!(outcome.status, 429);
+        let raw = String::from_utf8_lossy(&out).into_owned();
+        assert!(raw.contains("Retry-After: 1\r\n"), "{raw}");
+        assert!(raw.contains("\"busy_sessions\":1"), "{raw}");
         // once the session is idle again, a new request evicts it and runs
         st.sessions.put(&sid, held);
         let resp = handle(&st, &req("POST", "/v1/generate",
                                     r#"{"prompt":"ef","max_tokens":2}"#));
         assert_eq!(resp.status, 200);
+    }
+
+    #[test]
+    fn metrics_and_stats_routes_serve_the_registry() {
+        let st = state();
+        let resp = handle(&st, &req("GET", "/metrics", ""));
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.content_type, "text/plain; version=0.0.4");
+        let text = String::from_utf8(resp.body.clone()).unwrap();
+        assert!(text.contains("# TYPE awp_decode_tick_seconds histogram"), "{text}");
+        assert!(text.contains("awp_kv_bytes"), "{text}");
+        let resp = handle(&st, &req("GET", "/v1/stats", ""));
+        assert_eq!(resp.status, 200);
+        let v = json_of(&resp);
+        assert!(v.expect("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(v.expect("metrics").unwrap().get("decode_ticks").is_some());
+    }
+
+    #[test]
+    fn route_labels_are_cardinality_bounded() {
+        assert_eq!(route_label("/v1/generate"), "/v1/generate");
+        assert_eq!(route_label("/metrics"), "/metrics");
+        assert_eq!(route_label("/nope"), "other");
+        assert_eq!(route_label("/v1/generate/../x"), "other");
     }
 
     #[test]

@@ -14,12 +14,21 @@
 //! each worker drains the queued connections it can still receive,
 //! finishes its in-flight request (answering it `Connection: close`), and
 //! the scope join returns. Every request logs one structured line to
-//! stderr — `batch` is the peak decode-batch occupancy the request's
-//! ticks were fused at (0 when the request never decoded):
+//! stderr — `trace` is the request's process-unique trace id (so
+//! concurrent keep-alive connections interleave unambiguously), `batch`
+//! the peak decode-batch occupancy the request's ticks were fused at (0
+//! when the request never decoded):
 //!
 //! ```text
-//! [serve] method=POST path=/v1/generate status=200 session=s-1 tokens=21 batch=3 ms=4.3
+//! [serve] trace=t-7 method=POST path=/v1/generate status=200 session=s-1 tokens=21 batch=3 ms=4.3
 //! ```
+//!
+//! Under `--log-json` ([`ServeState::with_log_json`]) the same fields go
+//! out as one JSONL object per request instead. Either way, every request
+//! increments `awp_requests_total{route,status}` and observes
+//! `awp_request_seconds` in the [`crate::obs::metrics::REGISTRY`], and —
+//! when `--trace-out` enabled the span sink — rides a `request` span
+//! nested in its connection's `connection` span.
 
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
@@ -31,11 +40,12 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::coordinator::Executor;
+use crate::obs::{metrics, trace};
 use crate::util::json::Json;
 use crate::util::parallel::with_thread_budget;
 
 use super::http::{read_request_opt, Response};
-use super::router::{generate_stream, handle, ServeState};
+use super::router::{generate_stream, handle, route_label, ServeState};
 
 /// How long the accept loop sleeps when no connection is pending — the
 /// upper bound on shutdown latency once the stop flag flips.
@@ -176,14 +186,42 @@ impl Server {
     }
 }
 
-/// One structured log line per request.
-fn log_request(method: &str, path: &str, status: u16, session: &str,
-               tokens: usize, batch: usize, started: Instant) {
-    eprintln!(
-        "[serve] method={method} path={path} status={status} \
-         session={session} tokens={tokens} batch={batch} ms={:.1}",
-        started.elapsed().as_secs_f64() * 1e3,
-    );
+/// One structured log line per request: the legacy text format (now
+/// carrying the trace id) or, under `--log-json`, one JSONL object.
+fn log_request(log_json: bool, trace: &str, method: &str, path: &str,
+               status: u16, session: &str, tokens: usize, batch: usize,
+               started: Instant) {
+    let ms = started.elapsed().as_secs_f64() * 1e3;
+    if log_json {
+        let ts = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0);
+        let line = Json::obj(vec![
+            ("ts", Json::Num((ts * 1e3).round() / 1e3)),
+            ("trace", Json::Str(trace.to_string())),
+            ("method", Json::Str(method.to_string())),
+            ("path", Json::Str(path.to_string())),
+            ("status", Json::Num(status as f64)),
+            ("session", Json::Str(session.to_string())),
+            ("tokens", Json::Num(tokens as f64)),
+            ("batch", Json::Num(batch as f64)),
+            ("ms", Json::Num((ms * 10.0).round() / 10.0)),
+        ]);
+        eprintln!("{}", line.to_string());
+    } else {
+        eprintln!(
+            "[serve] trace={trace} method={method} path={path} status={status} \
+             session={session} tokens={tokens} batch={batch} ms={ms:.1}",
+        );
+    }
+}
+
+/// Per-request registry bookkeeping: the route × status counter and the
+/// request-latency histogram.
+fn observe_request(path: &str, status: u16, started: Instant) {
+    metrics::REGISTRY.requests.inc(route_label(path), status);
+    metrics::REGISTRY.request_seconds.observe(started.elapsed().as_secs_f64());
 }
 
 /// One connection: parse → route → respond → log, repeated while the
@@ -199,12 +237,14 @@ fn handle_connection(state: &ServeState, stream: TcpStream,
     let Ok(read_half) = stream.try_clone() else { return 0 };
     let mut reader = BufReader::new(read_half);
     let mut writer = stream;
+    let _conn_span = trace::span("connection", "serve");
     for reqno in 0..MAX_REQUESTS_PER_CONN {
         // the first request gets the full I/O window; between keep-alive
         // requests an idle client is released much sooner
         let idle = if reqno == 0 { IO_TIMEOUT } else { KEEPALIVE_IDLE };
         let _ = reader.get_ref().set_read_timeout(Some(idle));
         let started = Instant::now();
+        let trace_id = trace::request_tag(trace::next_request_id());
         let req = match read_request_opt(&mut reader) {
             Ok(Some(req)) => req,
             Ok(None) => break, // clean close or idle timeout between requests
@@ -213,26 +253,37 @@ fn handle_connection(state: &ServeState, stream: TcpStream,
                     Json::obj(vec![("error", Json::Str(format!("{e:#}")))]);
                 let resp = Response::json(400, &body);
                 let _ = resp.write_to(&mut writer);
-                log_request("-", "-", 400, "-", 0, 0, started);
+                log_request(state.log_json, &trace_id, "-", "-", 400, "-", 0,
+                            0, started);
+                observe_request("-", 400, started);
                 served += 1;
                 break;
             }
         };
+        let mut req_span = trace::span("request", "serve")
+            .arg("trace", trace_id.clone())
+            .arg("method", req.method.clone())
+            .arg("path", req.path.clone());
         let keep_alive = req.wants_keep_alive()
             && reqno + 1 < MAX_REQUESTS_PER_CONN
             && !stop.load(Ordering::SeqCst);
         if req.method == "POST" && req.path == "/v1/generate"
             && req.query_flag("stream") {
             let outcome = generate_stream(state, &req, &mut writer, keep_alive);
-            log_request(&req.method, &req.path, outcome.status,
-                        &outcome.session, outcome.tokens, outcome.batch,
-                        started);
+            req_span.set_arg("status", outcome.status.to_string());
+            log_request(state.log_json, &trace_id, &req.method, &req.path,
+                        outcome.status, &outcome.session, outcome.tokens,
+                        outcome.batch, started);
+            observe_request(&req.path, outcome.status, started);
             served += 1;
         } else {
             let resp = handle(state, &req).keep_alive(keep_alive);
             let write_err = resp.write_to(&mut writer).err();
-            log_request(&req.method, &req.path, resp.status, &resp.session,
-                        resp.tokens, resp.batch, started);
+            req_span.set_arg("status", resp.status.to_string());
+            log_request(state.log_json, &trace_id, &req.method, &req.path,
+                        resp.status, &resp.session, resp.tokens, resp.batch,
+                        started);
+            observe_request(&req.path, resp.status, started);
             served += 1;
             if let Some(e) = write_err {
                 eprintln!("[serve] write error on {} {}: {e:#}",

@@ -21,6 +21,7 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 
 use crate::infer::DecodeSession;
+use crate::obs::metrics;
 
 /// One serving session: the KV cache plus the full token history it holds
 /// (prompt and generated tokens alike — the cache always covers exactly
@@ -70,6 +71,15 @@ impl Inner {
         self.slots.values().map(|s| s.bytes).sum()
     }
 
+    /// Mirror the store's occupancy into the process-global gauges. Called
+    /// by every mutator while the lock is held, so the gauges always
+    /// reflect the last store to change (one store per serve process).
+    fn sync_gauges(&self) {
+        let m = &metrics::REGISTRY;
+        m.kv_bytes.set(self.kv_bytes() as u64);
+        m.sessions_live.set(self.slots.len() as u64);
+    }
+
     /// Evict the least-recently-used idle slot (skipping `protect`).
     /// `false` when everything resident is busy.
     fn evict_lru_idle(&mut self, protect: Option<&str>) -> bool {
@@ -85,6 +95,7 @@ impl Inner {
             Some(k) => {
                 self.slots.remove(&k);
                 self.evicted += 1;
+                metrics::REGISTRY.session_evictions.inc();
                 true
             }
             None => false,
@@ -149,6 +160,7 @@ impl SessionStore {
             id.clone(),
             Slot { session: None, last_used: stamp, bytes },
         );
+        inner.sync_gauges();
         Ok((id, ServeSession { kv, tokens: Vec::new() }))
     }
 
@@ -185,12 +197,15 @@ impl SessionStore {
                 break;
             }
         }
+        inner.sync_gauges();
     }
 
     /// Drop `id` entirely (a request that failed mid-decode leaves the KV
     /// state inconsistent with the token history — discard, don't reuse).
     pub fn remove(&self, id: &str) {
-        self.inner.lock().unwrap().slots.remove(id);
+        let mut inner = self.inner.lock().unwrap();
+        inner.slots.remove(id);
+        inner.sync_gauges();
     }
 
     /// Live entries (idle + busy).

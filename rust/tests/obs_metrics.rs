@@ -1,0 +1,275 @@
+//! Observability-layer coverage: histogram bucket semantics and snapshot
+//! determinism, counter exactness under thread contention, the Prometheus
+//! wire format of `GET /metrics` scraped over a real loopback socket —
+//! pinned against `/v1/inspect`'s own tick accounting — and the
+//! `--trace-out` Chrome trace-event export (valid JSON, nested span
+//! ordering and containment).
+//!
+//! The metrics registry and the span sink are process-global, so every
+//! test that asserts observation behaviour holds `metrics::enable_guard`
+//! for its whole body (the same discipline as the unit tests in
+//! `obs/metrics.rs` and `obs/trace.rs`).
+
+mod common;
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use awp::coordinator::Executor;
+use awp::infer::NativeModel;
+use awp::model::Checkpoint;
+use awp::obs::{metrics, trace};
+use awp::serve::{ServeInfo, ServeLimits, ServeState, Server};
+use awp::util::json::Json;
+use awp::util::tempdir::TempDir;
+
+use common::lm_cfg;
+
+// ------------------------------------------------------------ primitives
+
+#[test]
+fn histogram_boundaries_and_snapshot_are_deterministic() {
+    let _g = metrics::enable_guard();
+    metrics::set_enabled(true);
+    static BOUNDS: &[f64] = &[0.001, 0.01, 0.1, 1.0];
+    let h = metrics::Histogram::new(BOUNDS);
+    // one observation exactly on each bound (le: on-bound lands inside),
+    // one strictly between each pair, one past the last bound
+    for v in [0.001, 0.005, 0.01, 0.05, 0.1, 0.5, 1.0, 2.0] {
+        h.observe(v);
+    }
+    let snap = h.snapshot();
+    assert_eq!(snap.buckets, vec![1, 2, 2, 2, 1]);
+    assert_eq!(snap.cumulative(), vec![1, 3, 5, 7, 8]);
+    assert_eq!(snap.count, 8);
+    assert_eq!(*snap.cumulative().last().unwrap(), snap.count);
+    assert!((snap.sum - 3.666).abs() < 1e-3, "sum {}", snap.sum);
+    // snapshots are pure reads: two in a row are identical
+    assert_eq!(h.snapshot(), snap);
+}
+
+#[test]
+fn counter_is_exact_under_four_thread_contention() {
+    let _g = metrics::enable_guard();
+    metrics::set_enabled(true);
+    let c = metrics::Counter::new();
+    const PER_THREAD: u64 = 50_000;
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            scope.spawn(|| {
+                for _ in 0..PER_THREAD {
+                    c.inc();
+                }
+            });
+        }
+    });
+    assert_eq!(c.get(), 4 * PER_THREAD);
+}
+
+// -------------------------------------------------------------- loopback
+
+/// One-shot HTTP/1.1 client that keeps the body raw (the `/metrics`
+/// exposition is Prometheus text, not JSON). Returns
+/// (status, head, body).
+fn http_raw(addr: SocketAddr, method: &str, path: &str, body: &str)
+    -> (u16, String, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write!(stream,
+           "{method} {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\n\
+            Content-Length: {}\r\n\r\n{body}",
+           body.len())
+        .unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap();
+    let status: u16 = raw
+        .strip_prefix("HTTP/1.1 ")
+        .and_then(|r| r.split(' ').next())
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad response: {raw:?}"));
+    let (head, body) = raw
+        .split_once("\r\n\r\n")
+        .unwrap_or_else(|| panic!("headerless response: {raw:?}"));
+    (status, head.to_string(), body.to_string())
+}
+
+fn lm_state(ck: &Checkpoint) -> ServeState {
+    let model = NativeModel::from_checkpoint(ck).unwrap();
+    let info = ServeInfo {
+        model: ck.config.name.clone(),
+        source: "obs-test".into(),
+        method: "proj".into(),
+        spec: "dense".into(),
+        packed_bytes: 0,
+    };
+    ServeState::new(model, info, Executor::with_workers(2), ServeLimits {
+        max_ctx: 64,
+        max_sessions: 4,
+        max_batch: 4,
+        ..ServeLimits::default()
+    })
+}
+
+/// The one cumulative-counter value named `sample` in a Prometheus
+/// exposition body (`sample` includes any label set, e.g.
+/// `awp_requests_total{route="/v1/generate",status="200"}`).
+fn prom_value(text: &str, sample: &str) -> u64 {
+    text.lines()
+        .find_map(|l| l.strip_prefix(sample))
+        .unwrap_or_else(|| panic!("no sample {sample:?} in:\n{text}"))
+        .trim()
+        .parse()
+        .unwrap_or_else(|e| panic!("bad value for {sample:?}: {e}"))
+}
+
+#[test]
+fn metrics_scrape_over_loopback_matches_inspect() {
+    let _g = metrics::enable_guard();
+    metrics::set_enabled(true);
+    let ck = awp::trainer::init_checkpoint(&lm_cfg(), 36);
+    let server = Server::new(lm_state(&ck), Executor::with_workers(2));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = AtomicBool::new(false);
+    // process-global registry: other suites (separate processes) can't
+    // touch it, and this guard serialises the binary's own tests
+    let r = &metrics::REGISTRY;
+    let ticks0 = r.decode_ticks.get();
+    let tokens0 = r.generated_tokens.get();
+    std::thread::scope(|scope| {
+        let handle = scope.spawn(|| server.serve(listener, &stop).unwrap());
+        let inspect = |tag: &str| -> u64 {
+            let (status, _, body) = http_raw(addr, "GET", "/v1/inspect", "");
+            assert_eq!(status, 200, "{tag}");
+            Json::parse(&body).unwrap()
+                .expect("decode_ticks").unwrap().as_usize().unwrap() as u64
+        };
+        let scrape = |tag: &str| -> String {
+            let (status, head, body) = http_raw(addr, "GET", "/metrics", "");
+            assert_eq!(status, 200, "{tag}");
+            assert!(head.contains(metrics::PROMETHEUS_CONTENT_TYPE),
+                    "{tag}: wrong content type in {head:?}");
+            body
+        };
+        let inspect0 = inspect("before");
+        let before = scrape("before");
+        let gen0 = before
+            .lines()
+            .find_map(|l| l.strip_prefix(
+                "awp_requests_total{route=\"/v1/generate\",status=\"200\"} "))
+            .map_or(0, |v| v.trim().parse().unwrap());
+
+        let (status, _, body) = http_raw(addr, "POST", "/v1/generate",
+                                         r#"{"prompt":"ab","max_tokens":4}"#);
+        assert_eq!(status, 200, "{body:?}");
+
+        let after = scrape("after");
+        let inspect1 = inspect("after");
+        // exposition format: every family the acceptance list names
+        for needle in [
+            "# TYPE awp_requests_total counter",
+            "# TYPE awp_request_seconds histogram",
+            "# TYPE awp_decode_tick_seconds histogram",
+            "# TYPE awp_batch_occupancy histogram",
+            "# TYPE awp_queue_wait_seconds histogram",
+            "# TYPE awp_kv_bytes gauge",
+            "# TYPE awp_sessions_live gauge",
+            "# TYPE awp_session_evictions_total counter",
+            "# TYPE awp_gram_cache_hits_total counter",
+            "# TYPE awp_artifact_cache_hits_total counter",
+            "# TYPE awp_executor_job_seconds histogram",
+            "# TYPE awp_kernel_calls_total counter",
+            "awp_kernel_busy_seconds_total{tier=\"reference\"}",
+        ] {
+            assert!(after.contains(needle), "missing {needle:?} in:\n{after}");
+        }
+        // the generate request shows up in its labelled cell, exactly once
+        let gen1 = prom_value(
+            &after,
+            "awp_requests_total{route=\"/v1/generate\",status=\"200\"} ");
+        assert_eq!(gen1, gen0 + 1);
+        // tick accounting: registry delta == the batcher's own count as
+        // /v1/inspect reports it == one tick per requested token
+        assert_eq!(inspect1 - inspect0, 4);
+        assert_eq!(r.decode_ticks.get() - ticks0, inspect1 - inspect0);
+        assert_eq!(prom_value(&after, "awp_decode_ticks_total "),
+                   r.decode_ticks.get());
+        // batcher-emitted tokens: steps − 1 (the first token comes off the
+        // prefill logits, outside the batcher — see Batcher::decode)
+        assert_eq!(r.generated_tokens.get() - tokens0, 3);
+        // the decode ticks landed in the latency histogram too
+        let inf = prom_value(&after,
+                             "awp_decode_tick_seconds_bucket{le=\"+Inf\"} ");
+        assert_eq!(inf, prom_value(&after, "awp_decode_tick_seconds_count "));
+        assert!(inf >= r.decode_ticks.get() - ticks0);
+        // one live session holding KV rows
+        assert_eq!(prom_value(&after, "awp_sessions_live "), 1);
+        assert!(prom_value(&after, "awp_kv_bytes ") > 0);
+        // /v1/stats mirrors the same registry as JSON
+        let (status, _, body) = http_raw(addr, "GET", "/v1/stats", "");
+        assert_eq!(status, 200);
+        let stats = Json::parse(&body).unwrap();
+        let m = stats.expect("metrics").unwrap();
+        assert_eq!(m.expect("decode_ticks").unwrap().as_usize().unwrap() as u64,
+                   r.decode_ticks.get());
+        assert_eq!(m.expect("sessions_live").unwrap().as_usize().unwrap(), 1);
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
+    });
+}
+
+// ------------------------------------------------------------- trace-out
+
+#[test]
+fn trace_export_is_valid_json_with_nested_span_ordering() {
+    // the span sink shares the toggle-discipline lock with the registry
+    let _g = metrics::enable_guard();
+    trace::set_enabled(true);
+    trace::take_records();
+    {
+        let _outer = trace::span("obs_it_outer", "test").arg("req", "t-1");
+        {
+            let _inner = trace::span("obs_it_inner", "test");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    let dir = TempDir::new("trace-out").unwrap();
+    let path = dir.path().join("trace.json");
+    let n = trace::write_chrome_trace(&path).unwrap();
+    assert!(n >= 2, "only {n} spans buffered");
+    trace::set_enabled(false);
+    trace::take_records();
+
+    // the file is one valid JSON object in Chrome trace-event shape
+    let raw = std::fs::read_to_string(&path).unwrap();
+    let doc = Json::parse(&raw).unwrap();
+    let events = doc.expect("traceEvents").unwrap().as_arr().unwrap();
+    let ours: Vec<&Json> = events
+        .iter()
+        .filter(|e| {
+            matches!(e.get("name").and_then(|n| n.as_str().ok()),
+                     Some(n) if n.starts_with("obs_it_"))
+        })
+        .collect();
+    assert_eq!(ours.len(), 2, "in {raw}");
+    let field = |e: &Json, k: &str| e.expect(k).unwrap().as_f64().unwrap();
+    // spans record on drop, so the child precedes its parent in the file;
+    // viewers re-nest by [ts, ts+dur) containment — assert both
+    assert_eq!(ours[0].expect("name").unwrap().as_str().unwrap(),
+               "obs_it_inner");
+    assert_eq!(ours[1].expect("name").unwrap().as_str().unwrap(),
+               "obs_it_outer");
+    let (inner, outer) = (ours[0], ours[1]);
+    for e in [inner, outer] {
+        assert_eq!(e.expect("ph").unwrap().as_str().unwrap(), "X");
+        assert!(field(e, "dur") >= 0.0);
+    }
+    assert!(field(outer, "ts") <= field(inner, "ts"));
+    assert!(field(inner, "ts") + field(inner, "dur")
+            <= field(outer, "ts") + field(outer, "dur") + 1.0);
+    assert_eq!(field(inner, "tid"), field(outer, "tid"));
+    assert_eq!(outer.expect("args").unwrap().expect("req").unwrap()
+                   .as_str().unwrap(),
+               "t-1");
+}
