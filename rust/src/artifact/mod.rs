@@ -15,10 +15,20 @@
 //! * [`keys`] — [`ArtifactKey`]: artifact identity = Gram cache key ×
 //!   [`crate::compress::traits::CompressionSpec::fingerprint`] × method,
 //!   re-validated on every load.
-//! * [`store`] — the `AWPPACK1` container and [`ArtifactStore`]:
-//!   rename-atomic writes, corrupt-file → logged recompute, per-site
-//!   layer reports persisted alongside the weights so warm reruns submit
-//!   **zero** compression jobs (`coordinator::pipeline::compress_model_cached`).
+//! * [`store`] — the `AWPPACK1`/`AWPPACK2` containers and
+//!   [`ArtifactStore`]: rename-atomic writes, corrupt-file → logged
+//!   recompute, per-site layer reports persisted alongside the weights so
+//!   warm reruns submit **zero** compression jobs
+//!   (`coordinator::pipeline::compress_model_cached`). The header alone
+//!   locates and sizes every site's payload range.
+//! * [`pack2`] — the `AWPPACK2` lossless second stage: a dependency-free
+//!   adaptive range coder applied per site, kept only where it shrinks
+//!   and round-trips bit-identically (encode-time verified).
+//! * [`pager`] — the model-weight pager ([`ArtifactPager`]): opens an
+//!   artifact by reading only its header, materialises each site into a
+//!   [`PreparedPacked`] on first touch (structural validation included),
+//!   and LRU-evicts under a byte budget so serving handles artifacts
+//!   larger than RAM.
 //! * [`packed`] — the packed execution path, two kernel tiers
 //!   ([`crate::tensor::KernelTier`]): the *reference* tier (streaming
 //!   dequant GEMM and survivor-only N:M sparse GEMM over [`PackedLinear`],
@@ -27,20 +37,25 @@
 //!   SIMD GEMMs over a [`PreparedPacked`], tolerance-validated — see
 //!   KERNELS.md).
 //!
-//! CLI surface: `repro compress --pack-out <file>`, `repro inspect
-//! <file>`, `repro eval --from-artifact <file>`; sweeps consult the store
-//! through `--artifact-dir` (default `cache/artifacts`). See ARTIFACTS.md
-//! for the container layout and the bit-packing spec.
+//! CLI surface: `repro compress --pack-out <file> [--pack2]`, `repro
+//! inspect <file>`, `repro eval --from-artifact <file>
+//! [--weight-budget-mb N]`; sweeps consult the store through
+//! `--artifact-dir` (default `cache/artifacts`). See ARTIFACTS.md for the
+//! container layouts and the bit-packing spec.
 
 pub mod codec;
 pub mod keys;
+pub mod pack2;
 pub mod packed;
+pub mod pager;
 pub mod store;
 
 pub use codec::PackedLinear;
 pub use keys::ArtifactKey;
 pub use packed::PreparedPacked;
+pub use pager::{ArtifactPager, PagerCounts};
 pub use store::{
-    load_artifact, read_artifact, store_artifact, write_artifact, ArtifactCounts,
-    ArtifactSite, ArtifactStore, ModelArtifact,
+    load_artifact, read_artifact, store_artifact, write_artifact,
+    write_artifact_opts, ArtifactCounts, ArtifactHeader, ArtifactSite,
+    ArtifactStore, ModelArtifact, SiteMeta,
 };

@@ -1,0 +1,229 @@
+//! The `AWPPACK2` lossless second stage: an adaptive order-0 byte range
+//! coder over each site's already-bit-packed payload.
+//!
+//! Bit-packed quantized weights still carry entropy slack — code
+//! distributions are rarely uniform, scale/zero-point f32 streams share
+//! exponent bytes, survivor masks are highly structured. A per-site
+//! second stage recovers that slack losslessly: the artifact writer codes
+//! each site's raw payload through [`rc_encode`] and keeps the coded form
+//! only when it is strictly smaller **and** round-trips bit-identically
+//! (verified at encode time, mirroring the codec's decode-verification
+//! discipline); otherwise the site is stored raw. Per-site fallback means
+//! an `AWPPACK2` payload is never larger than its `AWPPACK1` equivalent.
+//!
+//! The coder is a carryless range coder (Subbotin style, 32-bit state,
+//! byte renormalisation) with an adaptive order-0 model: 256 frequencies
+//! initialised to 1, incremented per symbol, halved when the total nears
+//! the precision bound. Dependency-free like everything else in the crate
+//! — no flate/zstd on the image.
+
+/// Renormalisation threshold: the top byte of `low` is settled once the
+/// interval no longer straddles a 2²⁴ boundary.
+const TOP: u32 = 1 << 24;
+/// Underflow threshold: below this the interval is force-aligned so
+/// renormalisation can continue without carry propagation.
+const BOT: u32 = 1 << 16;
+/// Per-symbol frequency increment of the adaptive model.
+const INC: u32 = 32;
+/// Halve the model when the total reaches this (must stay < [`BOT`] so
+/// `range / total >= 1` after renormalisation).
+const MAX_TOTAL: u32 = 1 << 15;
+
+/// Adaptive order-0 byte model — identical updates on the encode and
+/// decode side keep the two in lockstep.
+struct ByteModel {
+    freq: [u32; 256],
+    total: u32,
+}
+
+impl ByteModel {
+    fn new() -> ByteModel {
+        ByteModel { freq: [1; 256], total: 256 }
+    }
+
+    /// Cumulative frequency below `sym`.
+    fn cum(&self, sym: usize) -> u32 {
+        self.freq[..sym].iter().sum()
+    }
+
+    /// Symbol whose cumulative interval contains `dv`, plus the
+    /// cumulative frequency below it.
+    fn find(&self, dv: u32) -> (usize, u32) {
+        let mut cum = 0u32;
+        for (sym, &f) in self.freq.iter().enumerate() {
+            if dv < cum + f {
+                return (sym, cum);
+            }
+            cum += f;
+        }
+        (255, cum - self.freq[255])
+    }
+
+    fn update(&mut self, sym: usize) {
+        self.freq[sym] += INC;
+        self.total += INC;
+        if self.total >= MAX_TOTAL {
+            self.total = 0;
+            for f in self.freq.iter_mut() {
+                *f = (*f >> 1) | 1;
+                self.total += *f;
+            }
+        }
+    }
+}
+
+/// Range-code `data` with the adaptive order-0 model. The output carries
+/// no length header — callers store the raw length out of band (the
+/// artifact header's site entry already knows it).
+pub fn rc_encode(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() / 2 + 8);
+    let mut model = ByteModel::new();
+    let mut low: u32 = 0;
+    let mut range: u32 = u32::MAX;
+    for &b in data {
+        let sym = b as usize;
+        let cum = model.cum(sym);
+        range /= model.total;
+        low = low.wrapping_add(cum.wrapping_mul(range));
+        range = range.wrapping_mul(model.freq[sym]);
+        loop {
+            if (low ^ low.wrapping_add(range)) < TOP {
+                // top byte settled: emit it
+            } else if range < BOT {
+                // interval too small to renormalise but the top byte
+                // still straddles a boundary: force-align (carryless
+                // underflow handling)
+                range = low.wrapping_neg() & (BOT - 1);
+            } else {
+                break;
+            }
+            out.push((low >> 24) as u8);
+            low <<= 8;
+            range <<= 8;
+        }
+        model.update(sym);
+    }
+    // flush: enough of `low` for the decoder to disambiguate
+    for _ in 0..4 {
+        out.push((low >> 24) as u8);
+        low <<= 8;
+    }
+    out
+}
+
+/// Decode `n` bytes from a [`rc_encode`] stream into `out` (cleared and
+/// refilled — pass a reused buffer for allocation-free paging). A
+/// truncated or corrupt stream cannot fail structurally — it decodes to
+/// *some* byte string; callers relying on integrity must validate the
+/// decoded payload (the artifact reader's per-site structural checks) or
+/// compare round-trips (the writer's encode-time verification).
+pub fn rc_decode_into(coded: &[u8], n: usize, out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(n);
+    let mut model = ByteModel::new();
+    let mut input = coded.iter().copied();
+    let mut next = move || input.next().unwrap_or(0) as u32;
+    let mut low: u32 = 0;
+    let mut range: u32 = u32::MAX;
+    let mut code: u32 = 0;
+    for _ in 0..4 {
+        code = (code << 8) | next();
+    }
+    for _ in 0..n {
+        range /= model.total;
+        let dv = (code.wrapping_sub(low) / range).min(model.total - 1);
+        let (sym, cum) = model.find(dv);
+        low = low.wrapping_add(cum.wrapping_mul(range));
+        range = range.wrapping_mul(model.freq[sym]);
+        loop {
+            if (low ^ low.wrapping_add(range)) < TOP {
+            } else if range < BOT {
+                range = low.wrapping_neg() & (BOT - 1);
+            } else {
+                break;
+            }
+            code = (code << 8) | next();
+            low <<= 8;
+            range <<= 8;
+        }
+        out.push(sym as u8);
+        model.update(sym);
+    }
+}
+
+/// Allocating convenience form of [`rc_decode_into`].
+pub fn rc_decode(coded: &[u8], n: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(n);
+    rc_decode_into(coded, n, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn round_trip(data: &[u8]) {
+        let coded = rc_encode(data);
+        let back = rc_decode(&coded, data.len());
+        assert_eq!(back, data, "round-trip failed for {} bytes", data.len());
+    }
+
+    #[test]
+    fn empty_and_tiny_round_trip() {
+        round_trip(b"");
+        round_trip(b"a");
+        round_trip(b"ab");
+        round_trip(&[0u8, 255, 0, 255]);
+    }
+
+    #[test]
+    fn random_bytes_round_trip() {
+        let mut rng = Rng::new(11);
+        for len in [1usize, 7, 64, 1000, 4096] {
+            let data: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            round_trip(&data);
+        }
+    }
+
+    #[test]
+    fn constant_and_skewed_streams_compress() {
+        let flat = vec![42u8; 4096];
+        let coded = rc_encode(&flat);
+        assert!(coded.len() < flat.len() / 8, "constant stream: {} bytes", coded.len());
+        round_trip(&flat);
+        // 90% zeros, 10% spread: order-0 entropy well under 8 bits/byte
+        let mut rng = Rng::new(3);
+        let skew: Vec<u8> = (0..4096)
+            .map(|_| if rng.below(10) == 0 { rng.below(256) as u8 } else { 0 })
+            .collect();
+        let coded = rc_encode(&skew);
+        assert!(coded.len() < skew.len(), "skewed stream did not shrink");
+        round_trip(&skew);
+    }
+
+    #[test]
+    fn all_byte_values_round_trip() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(2048).collect();
+        round_trip(&data);
+    }
+
+    #[test]
+    fn model_halving_keeps_sides_in_sync() {
+        // long enough to trigger many MAX_TOTAL halvings
+        let mut rng = Rng::new(9);
+        let data: Vec<u8> = (0..40_000).map(|_| rng.below(4) as u8).collect();
+        round_trip(&data);
+    }
+
+    #[test]
+    fn decode_into_reuses_the_buffer() {
+        let a = rc_encode(b"hello world");
+        let b = rc_encode(b"bye");
+        let mut buf = Vec::new();
+        rc_decode_into(&a, 11, &mut buf);
+        assert_eq!(buf, b"hello world");
+        rc_decode_into(&b, 3, &mut buf);
+        assert_eq!(buf, b"bye");
+    }
+}

@@ -341,6 +341,19 @@ impl PreparedPacked {
         self.packed.mode_name()
     }
 
+    /// Approximate heap footprint of this prepared site: the packed
+    /// payload plus the precomputed decode aux and CSR companion. The
+    /// pager's byte-budgeted eviction charges sites at this size.
+    pub fn resident_bytes(&self) -> usize {
+        let aux = match &self.aux {
+            DecodeAux::None => 0,
+            DecodeAux::TableStarts(v) | DecodeAux::RowStarts(v) => {
+                v.len() * std::mem::size_of::<usize>()
+            }
+        };
+        self.packed.packed_bytes() + aux + self.sparse_cols.len() * 4
+    }
+
     /// `Θ·B` on the selected tier (allocating form).
     pub fn matmul_tier(&self, b: &Matrix, tier: KernelTier) -> Matrix {
         let mut out = Matrix::zeros(self.rows(), b.cols);

@@ -1,0 +1,433 @@
+//! The model-weight pager: a `Reader`-backed lazy view of an artifact
+//! file that makes serving independent of artifact size.
+//!
+//! [`ArtifactPager::open`] reads **only the container header** — magic,
+//! header length, header JSON — and nothing of the payload. Every site is
+//! then an offset-addressed byte range ([`SiteMeta`]): first touch seeks
+//! to `payload_start + offset`, reads exactly `stored_len` bytes into a
+//! reused buffer, range-decodes transparently for `AWPPACK2` `rc` sites,
+//! runs the structural validation the eager loader used to do up front
+//! ([`decode_site_bytes`] — palette code bounds, mask popcounts,
+//! allocation-free via the pager's scratch), and materialises a
+//! [`PreparedPacked`] ready for both kernel tiers. Later touches are
+//! cache hits handing out the same `Arc`.
+//!
+//! With a byte budget (`--weight-budget-mb`) the pager LRU-evicts
+//! resident sites once the prepared footprint exceeds it, so `repro
+//! serve` / `eval --from-artifact` can run models whose packed form is
+//! larger than RAM. The just-touched site is never the victim — a single
+//! site larger than the whole budget stays resident while in use. Without
+//! a budget the pager is simply a lazy loader: cold start pays one site,
+//! not O(model).
+//!
+//! Identity and shape validation stay eager: the header carries every
+//! identity field and each site's shape, so [`crate::infer::NativeModel`]
+//! can wire a full model from metadata alone — weights follow on demand.
+//! Corrupt payload bytes surface as a clean `Err` on the *request* that
+//! first touches the damaged site; intact sites keep serving.
+
+use std::fs::File;
+use std::io::{BufReader, Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::obs::metrics::REGISTRY;
+
+use super::packed::PreparedPacked;
+use super::store::{decode_site_bytes, read_artifact_header, ArtifactHeader,
+                   SiteEnc, SiteMeta};
+
+/// Hit/miss/eviction counters (snapshot of [`ArtifactPager::counts`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PagerCounts {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+/// Mutable paging state — one lock around the file handle, the residency
+/// table and the reusable page-in buffers. Weight materialisation is
+/// rare (misses only); the hot path is a lock, a table lookup and an
+/// `Arc` clone.
+struct PagerState {
+    file: File,
+    resident: Vec<Option<Arc<PreparedPacked>>>,
+    /// LRU stamps, parallel to `resident` (0 = never touched)
+    stamp: Vec<u64>,
+    tick: u64,
+    resident_bytes: usize,
+    /// stored-byte read buffer (reused across page-ins)
+    stored: Vec<u8>,
+    /// range-decode output buffer (reused, `rc` sites only)
+    raw: Vec<u8>,
+    /// structural-validation scratch handed to [`decode_site_bytes`]
+    scratch: Vec<u8>,
+}
+
+/// A lazily-paged artifact: header eagerly parsed, sites materialised on
+/// first touch, optionally evicted under a byte budget. Cheap to share —
+/// serving holds one behind an `Arc` and resolves sites per request.
+pub struct ArtifactPager {
+    path: PathBuf,
+    header: ArtifactHeader,
+    /// eviction budget over [`PreparedPacked::resident_bytes`] (`None` =
+    /// never evict: plain lazy loading)
+    budget: Option<usize>,
+    state: Mutex<PagerState>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl ArtifactPager {
+    /// Open `path`, reading and validating **only the header**. No
+    /// payload byte is read until a site is touched. `budget_bytes`
+    /// bounds the total prepared-site footprint (`None` = unbounded).
+    pub fn open(path: &Path, budget_bytes: Option<usize>) -> Result<ArtifactPager> {
+        let file = File::open(path).with_context(|| format!("open {path:?}"))?;
+        // buffer only the header parse: the File (not the BufReader) is
+        // kept, so no payload readahead can happen behind our back
+        let mut reader = BufReader::new(file);
+        let header = read_artifact_header(&mut reader, path)?;
+        let file = reader.into_inner();
+        let nsites = header.sites.len();
+        Ok(ArtifactPager {
+            path: path.to_path_buf(),
+            header,
+            budget: budget_bytes,
+            state: Mutex::new(PagerState {
+                file,
+                resident: vec![None; nsites],
+                stamp: vec![0; nsites],
+                tick: 0,
+                resident_bytes: 0,
+                stored: Vec::new(),
+                raw: Vec::new(),
+                scratch: Vec::new(),
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        })
+    }
+
+    /// The parsed header (identity fields, site shapes, footprints).
+    pub fn header(&self) -> &ArtifactHeader {
+        &self.header
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Per-site metadata, index-aligned with [`ArtifactPager::site`].
+    pub fn sites(&self) -> &[SiteMeta] {
+        &self.header.sites
+    }
+
+    pub fn site_count(&self) -> usize {
+        self.header.sites.len()
+    }
+
+    /// Raw packed payload bytes across all sites (header arithmetic —
+    /// equals [`super::ModelArtifact::packed_bytes`] for the same file).
+    pub fn packed_bytes(&self) -> usize {
+        self.header.packed_bytes()
+    }
+
+    /// Dense f32 bytes for the same sites (header arithmetic).
+    pub fn dense_bytes(&self) -> usize {
+        self.header.dense_bytes()
+    }
+
+    /// Current prepared-site footprint charged against the budget.
+    pub fn resident_bytes(&self) -> usize {
+        self.state.lock().unwrap().resident_bytes
+    }
+
+    /// Number of currently resident (materialised) sites.
+    pub fn resident_sites(&self) -> usize {
+        self.state.lock().unwrap().resident.iter().flatten().count()
+    }
+
+    pub fn counts(&self) -> PagerCounts {
+        PagerCounts {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Resolve site `idx`: hand out the resident `Arc`, or page the site
+    /// in — seek, bounded read, transparent range-decode, first-touch
+    /// structural validation, prepare — then LRU-evict down to the
+    /// budget (never the site just touched).
+    pub fn site(&self, idx: usize) -> Result<Arc<PreparedPacked>> {
+        let meta = &self.header.sites[idx];
+        let mut st = self.state.lock().unwrap();
+        st.tick += 1;
+        let tick = st.tick;
+        if let Some(p) = &st.resident[idx] {
+            let p = p.clone();
+            st.stamp[idx] = tick;
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            REGISTRY.pager_hits.inc();
+            return Ok(p);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        REGISTRY.pager_misses.inc();
+
+        let start = self.header.payload_start + meta.offset as u64;
+        let PagerState { file, stored, raw, scratch, .. } = &mut *st;
+        file.seek(SeekFrom::Start(start))
+            .with_context(|| format!("{:?}: seeking site {}", self.path, meta.param))?;
+        stored.resize(meta.stored_len, 0);
+        file.read_exact(stored).with_context(|| {
+            format!("{:?}: {}: reading {} stored bytes at {start}",
+                    self.path, meta.param, meta.stored_len)
+        })?;
+        let bytes: &[u8] = match meta.enc {
+            SiteEnc::Raw => stored,
+            SiteEnc::Rc => {
+                super::pack2::rc_decode_into(stored, meta.raw_len, raw);
+                raw
+            }
+        };
+        let packed = decode_site_bytes(meta, bytes, scratch)
+            .with_context(|| format!("{:?}: paging in {}", self.path, meta.param))?;
+        let prepared = Arc::new(packed.prepare());
+
+        st.resident_bytes += prepared.resident_bytes();
+        st.resident[idx] = Some(prepared.clone());
+        st.stamp[idx] = tick;
+        if let Some(budget) = self.budget {
+            self.evict_over_budget(&mut st, budget, idx);
+        }
+        REGISTRY.weight_resident_bytes.set(st.resident_bytes as u64);
+        Ok(prepared)
+    }
+
+    /// Drop least-recently-used sites until the footprint fits `budget`.
+    /// `keep` (the site being handed out) is exempt, so one over-budget
+    /// site still serves — the budget degrades to "one site at a time".
+    fn evict_over_budget(&self, st: &mut PagerState, budget: usize, keep: usize) {
+        while st.resident_bytes > budget {
+            let victim = st
+                .resident
+                .iter()
+                .enumerate()
+                .filter(|(i, p)| *i != keep && p.is_some())
+                .min_by_key(|(i, _)| st.stamp[*i])
+                .map(|(i, _)| i);
+            let Some(v) = victim else { break };
+            let p = st.resident[v].take().expect("victim was resident");
+            st.resident_bytes -= p.resident_bytes();
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+            REGISTRY.pager_evictions.inc();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artifact::store::{write_artifact, write_artifact_opts};
+    use crate::artifact::{ModelArtifact, PackedLinear};
+    use crate::artifact::store::ArtifactSite;
+    use crate::compress::traits::CompressionSpec;
+    use crate::eval::reconstruction::LayerReport;
+    use crate::proj::{NmStructured, ProjScratch, Projection};
+    use crate::quant::project_qmax;
+    use crate::tensor::Matrix;
+    use crate::util::tempdir::TempDir;
+
+    fn report(param: &str, rows: usize, cols: usize) -> LayerReport {
+        LayerReport {
+            param: param.into(), d_out: rows, d_in: cols, rel_loss: 0.1,
+            sparsity: 0.5, row_uniform: true, iterations: 3, seconds: 0.01,
+        }
+    }
+
+    /// Three sites covering the int, mask and dense payload modes.
+    fn artifact() -> ModelArtifact {
+        let q = project_qmax(&Matrix::randn(8, 64, 1), 15.0, 32);
+        let int = PackedLinear::encode(&q, &CompressionSpec::quant(4, 32));
+        let mut nm = Matrix::randn(8, 64, 2);
+        NmStructured::new(2, 4).project_rows(&mut nm, &mut ProjScratch::new());
+        let mask = PackedLinear::encode(&nm, &CompressionSpec::structured_nm(2, 4));
+        let dense = PackedLinear::encode(&Matrix::randn(4, 32, 3),
+                                         &CompressionSpec::quant(4, 32));
+        ModelArtifact {
+            model: "t".into(),
+            checkpoint: 1,
+            calib: 2,
+            method: "rtn".into(),
+            spec: 3,
+            spec_desc: "int4-g32".into(),
+            params: 4,
+            compressed_with: "rtn".into(),
+            sites: vec![
+                ArtifactSite { param: "a".into(), packed: int,
+                               report: report("a", 8, 64) },
+                ArtifactSite { param: "b".into(), packed: mask,
+                               report: report("b", 8, 64) },
+                ArtifactSite { param: "c".into(), packed: dense,
+                               report: report("c", 4, 32) },
+            ],
+        }
+    }
+
+    fn write(dir: &TempDir, name: &str, art: &ModelArtifact, pack2: bool)
+        -> std::path::PathBuf {
+        let path = dir.path().join(name);
+        write_artifact_opts(&path, art, pack2).unwrap();
+        path
+    }
+
+    fn assert_site_bits_equal(a: &PackedLinear, b: &PackedLinear, what: &str) {
+        let (da, db) = (a.decode(), b.decode());
+        assert_eq!(da.shape(), db.shape(), "{what}");
+        for (x, y) in da.data.iter().zip(&db.data) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}");
+        }
+    }
+
+    #[test]
+    fn paged_sites_are_bit_identical_to_eager_load() {
+        let dir = TempDir::new("pager").unwrap();
+        let art = artifact();
+        for pack2 in [false, true] {
+            let path = write(&dir, if pack2 { "v2" } else { "v1" }, &art, pack2);
+            let eager = crate::artifact::read_artifact(&path).unwrap();
+            let pager = ArtifactPager::open(&path, None).unwrap();
+            assert_eq!(pager.site_count(), 3);
+            assert_eq!(pager.packed_bytes(), art.packed_bytes());
+            for i in 0..3 {
+                let p = pager.site(i).unwrap();
+                assert_site_bits_equal(p.packed(), &eager.sites[i].packed,
+                                       &art.sites[i].param);
+            }
+            let c = pager.counts();
+            assert_eq!((c.hits, c.misses), (0, 3));
+            // second touch: all hits, same Arc
+            let again = pager.site(1).unwrap();
+            assert!(Arc::ptr_eq(&again, &pager.site(1).unwrap()));
+            assert_eq!(pager.counts().hits, 2);
+        }
+    }
+
+    #[test]
+    fn open_reads_only_the_header() {
+        // truncate the file to the end of the header: open must succeed
+        // (no payload byte is needed), site() must fail cleanly
+        let dir = TempDir::new("pager").unwrap();
+        let art = artifact();
+        let path = write(&dir, "t", &art, false);
+        let pager = ArtifactPager::open(&path, None).unwrap();
+        let head_end = pager.header().payload_start as usize;
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.len() > head_end);
+        std::fs::write(&path, &bytes[..head_end]).unwrap();
+        let lazy = ArtifactPager::open(&path, None).unwrap();
+        assert_eq!(lazy.site_count(), 3);
+        assert!(lazy.site(0).is_err(), "payload is gone, touch must fail");
+    }
+
+    #[test]
+    fn budget_evicts_least_recently_used() {
+        let dir = TempDir::new("pager").unwrap();
+        let art = artifact();
+        let path = write(&dir, "t", &art, false);
+        // budget of one byte: after every touch exactly the touched site
+        // stays (a lone over-budget site is exempt from eviction)
+        let pager = ArtifactPager::open(&path, Some(1)).unwrap();
+        for i in 0..3 {
+            let p = pager.site(i).unwrap();
+            assert_eq!(pager.resident_sites(), 1);
+            assert_eq!(pager.resident_bytes(), p.resident_bytes());
+        }
+        assert_eq!(pager.counts().evictions, 2);
+        // re-touching an evicted site is a miss that pages it back in
+        pager.site(0).unwrap();
+        assert_eq!(pager.counts().misses, 4);
+        // a budget large enough for everything never evicts
+        let roomy = ArtifactPager::open(&path, Some(1 << 30)).unwrap();
+        for i in 0..3 {
+            roomy.site(i).unwrap();
+        }
+        assert_eq!(roomy.resident_sites(), 3);
+        assert_eq!(roomy.counts().evictions, 0);
+    }
+
+    #[test]
+    fn lru_victim_is_the_stalest_site() {
+        let dir = TempDir::new("pager").unwrap();
+        let art = artifact();
+        let path = write(&dir, "t", &art, false);
+        let total: usize = {
+            let p = ArtifactPager::open(&path, None).unwrap();
+            (0..3).map(|i| p.site(i).unwrap().resident_bytes()).sum()
+        };
+        // room for all but one byte: paging in the third site must evict
+        // exactly the least recently touched one (site 1 after we
+        // refresh site 0)
+        let pager = ArtifactPager::open(&path, Some(total - 1)).unwrap();
+        pager.site(0).unwrap();
+        pager.site(1).unwrap();
+        pager.site(0).unwrap(); // refresh 0 → 1 is now stalest
+        pager.site(2).unwrap();
+        assert_eq!(pager.counts().evictions, 1);
+        assert!(pager.site(0).is_ok() && pager.site(2).is_ok());
+        assert_eq!(pager.counts().hits, 3);
+        let before = pager.counts().misses;
+        pager.site(1).unwrap(); // was evicted → miss
+        assert_eq!(pager.counts().misses, before + 1);
+    }
+
+    #[test]
+    fn corrupt_site_fails_first_touch_but_spares_the_rest() {
+        let dir = TempDir::new("pager").unwrap();
+        let art = artifact();
+        let path = write(&dir, "t", &art, false);
+        let probe = ArtifactPager::open(&path, None).unwrap();
+        let head = probe.header().payload_start as usize;
+        let m0_len = probe.sites()[0].stored_len;
+        // flip one mask bit of site 1 (the mask site): the popcount is
+        // now off by one, so its first touch must fail; sites 0 and 2
+        // stay servable
+        let mut bytes = std::fs::read(&path).unwrap();
+        let m1 = &probe.sites()[1];
+        bytes[head + m1.offset] ^= 1;
+        assert_eq!(m1.offset, m0_len, "sites tile contiguously");
+        std::fs::write(&path, &bytes).unwrap();
+        let pager = ArtifactPager::open(&path, None).unwrap();
+        assert!(pager.site(0).is_ok());
+        let err = pager.site(1).unwrap_err();
+        assert!(format!("{err:#}").contains("paging in b"),
+                "error names the site: {err:#}");
+        assert!(pager.site(2).is_ok());
+        // the failed site is not cached — a healed file would be re-read
+        assert_eq!(pager.resident_sites(), 2);
+    }
+
+    #[test]
+    fn pack2_pager_decodes_rc_sites_transparently() {
+        let dir = TempDir::new("pager").unwrap();
+        let art = artifact();
+        let p2 = write(&dir, "v2", &art, true);
+        let pager = ArtifactPager::open(&p2, Some(1)).unwrap();
+        // under an eviction budget every touch re-decodes from disk;
+        // bits must survive the rc round trip every time
+        for _ in 0..2 {
+            for i in 0..3 {
+                let p = pager.site(i).unwrap();
+                assert_site_bits_equal(p.packed(), &art.sites[i].packed,
+                                       &art.sites[i].param);
+            }
+        }
+        assert!(pager.header().stored_bytes() <= pager.packed_bytes());
+    }
+}

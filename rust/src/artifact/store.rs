@@ -1,4 +1,5 @@
-//! The `AWPPACK1` compressed-artifact container and its on-disk store.
+//! The `AWPPACK1`/`AWPPACK2` compressed-artifact containers and their
+//! on-disk store.
 //!
 //! One file per `(Gram cache key, spec, method)` — a whole model's
 //! compressed sites in their packed representations plus their layer
@@ -29,6 +30,21 @@
 //!     palette: counts u8     | values f32 LE | bit-packed codes
 //!     mask:    mask bytes    | survivor values f32 LE
 //! ```
+//!
+//! `AWPPACK2` is the same container with a lossless second stage: each
+//! site's payload may be range-coded ([`super::pack2`]), in which case
+//! its header entry carries `enc: "rc"` plus the stored (`clen`) byte
+//! length; sites where coding does not win stay `enc: "raw"`. Site
+//! offsets address *stored* bytes, so the header alone still locates
+//! every site.
+//!
+//! The header is self-sufficient: every site's stored byte range and raw
+//! payload length are computable from its header entry alone. That is
+//! the contract the model-weight pager ([`super::pager`]) builds on —
+//! [`read_artifact_header`] reads nothing past the header, and
+//! [`decode_site_bytes`] materialises one site from its bytes on demand,
+//! carrying the structural validation (palette code bounds, mask
+//! popcounts) that used to run at load time.
 
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
@@ -41,9 +57,12 @@ use crate::util::Json;
 
 use super::codec::{codes_len, PackedLinear};
 use super::keys::ArtifactKey;
+use super::pack2::{rc_decode, rc_decode_into, rc_encode};
 
 const MAGIC: &[u8; 8] = b"AWPPACK1";
+const MAGIC2: &[u8; 8] = b"AWPPACK2";
 const VERSION: usize = 1;
+const VERSION2: usize = 2;
 /// Implausibility bound for header-declared dimensions (mirrors the Gram
 /// cache's untrusted-header discipline).
 const MAX_DIM: usize = 1 << 20;
@@ -133,6 +152,227 @@ impl ModelArtifact {
 }
 
 // ---------------------------------------------------------------------------
+// site metadata (the header's view of a site — no payload bytes)
+
+/// Payload encoding of one site: stored bytes as-is (`raw`, the only v1
+/// form) or range-coded through the `AWPPACK2` second stage (`rc`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SiteEnc {
+    Raw,
+    Rc,
+}
+
+/// One site's header entry — everything needed to locate, size and later
+/// decode its payload without touching any payload bytes. Header-level
+/// (cheap, shape/offset arithmetic) validation happens at parse time;
+/// payload-level structural validation (palette code bounds, mask
+/// popcounts) is deferred to [`decode_site_bytes`], i.e. first touch.
+#[derive(Clone, Debug)]
+pub struct SiteMeta {
+    pub param: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub mode: String,
+    pub bits: usize,
+    pub group: usize,
+    pub nvalues: usize,
+    /// byte offset of this site's stored bytes inside the payload region
+    pub offset: usize,
+    /// raw (decoded) payload length, computed from shape + mode
+    pub raw_len: usize,
+    pub enc: SiteEnc,
+    /// stored byte length in the file (equals `raw_len` when raw)
+    pub stored_len: usize,
+    pub report: LayerReport,
+}
+
+impl SiteMeta {
+    /// Dense f32 footprint of this site (header-only).
+    pub fn dense_bytes(&self) -> usize {
+        self.rows * self.cols * 4
+    }
+}
+
+fn parse_site_meta(e: &Json, pack2: bool) -> Result<SiteMeta> {
+    let param = e.expect("param")?.as_str()?.to_string();
+    let rows = e.expect("rows")?.as_usize()?;
+    let cols = e.expect("cols")?.as_usize()?;
+    ensure!(rows >= 1 && rows <= MAX_DIM && cols >= 1 && cols <= MAX_DIM,
+            "{param}: implausible shape {rows}x{cols}");
+    let n = rows.checked_mul(cols).with_context(|| format!("{param}: size overflow"))?;
+    let mode = e.expect("mode")?.as_str()?.to_string();
+    let bits = e.expect("bits")?.as_usize()?;
+    let group = e.expect("group")?.as_usize()?;
+    let nvalues = e.expect("nvalues")?.as_usize()?;
+    let offset = e.expect("offset")?.as_usize()?;
+
+    // raw payload length is a pure function of the header entry — the
+    // invariant the pager's offset-addressed site ranges rely on
+    let raw_len = match mode.as_str() {
+        "dense" => n * 4,
+        "int" | "palette" => {
+            ensure!((1..=8).contains(&bits), "{param}: bad bits {bits}");
+            ensure!(group >= 1 && group <= cols && cols % group == 0,
+                    "{param}: bad group {group} for width {cols}");
+            let ng = rows * (cols / group);
+            if mode == "int" {
+                ng * 4 + ng * 4 + codes_len(rows, cols, bits as u8)
+            } else {
+                ensure!(nvalues <= 256 * ng,
+                        "{param}: implausible palette size {nvalues}");
+                ng + nvalues * 4 + codes_len(rows, cols, bits as u8)
+            }
+        }
+        "mask" => {
+            ensure!(nvalues <= n, "{param}: mask nvalues {nvalues} > size {n}");
+            n.div_ceil(8) + nvalues * 4
+        }
+        other => bail!("{param}: unknown packed mode '{other}'"),
+    };
+
+    let (enc, stored_len) = if pack2 {
+        let enc = match e.expect("enc")?.as_str()? {
+            "raw" => SiteEnc::Raw,
+            "rc" => SiteEnc::Rc,
+            other => bail!("{param}: unknown site encoding '{other}'"),
+        };
+        let stored_len = e.expect("clen")?.as_usize()?;
+        match enc {
+            SiteEnc::Raw => ensure!(stored_len == raw_len,
+                    "{param}: raw clen {stored_len} != payload {raw_len}"),
+            SiteEnc::Rc => ensure!(stored_len <= raw_len,
+                    "{param}: coded clen {stored_len} exceeds raw {raw_len}"),
+        }
+        (enc, stored_len)
+    } else {
+        (SiteEnc::Raw, raw_len)
+    };
+
+    let r = e.expect("report")?;
+    let report = LayerReport {
+        param: param.clone(),
+        d_out: rows,
+        d_in: cols,
+        rel_loss: r.expect("rel_loss")?.as_f64()?,
+        sparsity: r.expect("sparsity")?.as_f64()?,
+        row_uniform: r.expect("row_uniform")?.as_bool()?,
+        iterations: r.expect("iterations")?.as_usize()?,
+        seconds: r.expect("seconds")?.as_f64()?,
+    };
+    Ok(SiteMeta {
+        param, rows, cols, mode, bits, group, nvalues, offset, raw_len,
+        enc, stored_len, report,
+    })
+}
+
+/// Parsed artifact header: identity fields plus per-site metadata and the
+/// file offset where the payload region begins. This is everything an
+/// open needs — no payload bytes are read to produce one.
+#[derive(Clone, Debug)]
+pub struct ArtifactHeader {
+    pub model: String,
+    pub checkpoint: u64,
+    pub calib: u64,
+    pub method: String,
+    pub spec: u64,
+    pub spec_desc: String,
+    pub params: u64,
+    pub compressed_with: String,
+    /// true for `AWPPACK2` containers (second-stage coding allowed)
+    pub pack2: bool,
+    pub sites: Vec<SiteMeta>,
+    /// absolute file offset of the payload region
+    pub payload_start: u64,
+}
+
+impl ArtifactHeader {
+    /// Identity check against a requested key (the load-time gate).
+    pub fn matches_key(&self, key: &ArtifactKey) -> bool {
+        self.model == key.gram.model
+            && self.checkpoint == key.gram.checkpoint
+            && self.calib == key.gram.calib
+            && self.method == key.method
+            && self.spec == key.spec
+            && self.spec_desc == key.spec_desc
+            && self.params == key.params
+    }
+
+    /// Raw (decoded) payload bytes across sites — equal to
+    /// [`ModelArtifact::packed_bytes`] for the same artifact.
+    pub fn packed_bytes(&self) -> usize {
+        self.sites.iter().map(|s| s.raw_len).sum()
+    }
+
+    /// Stored payload bytes in the file (smaller than
+    /// [`ArtifactHeader::packed_bytes`] where the second stage won).
+    pub fn stored_bytes(&self) -> usize {
+        self.sites.iter().map(|s| s.stored_len).sum()
+    }
+
+    /// Dense f32 bytes for the same sites.
+    pub fn dense_bytes(&self) -> usize {
+        self.sites.iter().map(|s| s.dense_bytes()).sum()
+    }
+}
+
+/// Read and parse only the container header (magic, length, JSON) from
+/// `f`, leaving the reader positioned at the first payload byte. The
+/// returned header fully describes every site's stored byte range; no
+/// payload bytes are consumed.
+pub fn read_artifact_header<R: Read>(f: &mut R, path: &Path) -> Result<ArtifactHeader> {
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic).context("reading magic")?;
+    let pack2 = if &magic == MAGIC {
+        false
+    } else if &magic == MAGIC2 {
+        true
+    } else {
+        bail!("{path:?}: not an AWP artifact (bad magic)");
+    };
+    let mut lenb = [0u8; 8];
+    f.read_exact(&mut lenb).context("reading header length")?;
+    let hlen = u64::from_le_bytes(lenb) as usize;
+    if hlen > 64 << 20 {
+        bail!("{path:?}: implausible header length {hlen}");
+    }
+    let mut hjson = vec![0u8; hlen];
+    f.read_exact(&mut hjson).context("reading header")?;
+    let header = Json::parse(std::str::from_utf8(&hjson)?)?;
+    let version = header.expect("version")?.as_usize()?;
+    let expected = if pack2 { VERSION2 } else { VERSION };
+    if version != expected {
+        bail!("{path:?}: unsupported artifact version {version}");
+    }
+    let mut sites = Vec::new();
+    for e in header.expect("sites")?.as_arr()? {
+        sites.push(parse_site_meta(e, pack2).with_context(|| format!("{path:?}"))?);
+    }
+    // sites must tile the payload region contiguously — rejects headers
+    // whose offsets alias or leave holes, and makes a sequential
+    // seek-free read correct by construction
+    let mut at = 0usize;
+    for s in &sites {
+        ensure!(s.offset == at,
+                "{path:?}: {}: offset {} != expected {at}", s.param, s.offset);
+        at = at.checked_add(s.stored_len)
+            .with_context(|| format!("{}: offset overflow", s.param))?;
+    }
+    Ok(ArtifactHeader {
+        model: header.expect("model")?.as_str()?.to_string(),
+        checkpoint: parse_hex64(header.expect("checkpoint")?.as_str()?)?,
+        calib: parse_hex64(header.expect("calib")?.as_str()?)?,
+        method: header.expect("method")?.as_str()?.to_string(),
+        spec: parse_hex64(header.expect("spec")?.as_str()?)?,
+        spec_desc: header.expect("spec_desc")?.as_str()?.to_string(),
+        params: parse_hex64(header.expect("params")?.as_str()?)?,
+        compressed_with: header.expect("compressed_with")?.as_str()?.to_string(),
+        pack2,
+        sites,
+        payload_start: (8 + 8 + hlen) as u64,
+    })
+}
+
+// ---------------------------------------------------------------------------
 // serialisation
 
 fn f32s_le(data: &[f32]) -> Vec<u8> {
@@ -165,7 +405,7 @@ fn site_payload(p: &PackedLinear) -> Vec<u8> {
     buf
 }
 
-fn site_header(s: &ArtifactSite, offset: usize) -> Json {
+fn site_header(s: &ArtifactSite, offset: usize, enc: Option<(&str, usize)>) -> Json {
     let (bits, group, nvalues) = match &s.packed {
         PackedLinear::Dense { .. } => (0usize, 0usize, 0usize),
         PackedLinear::GroupedInt { bits, group, .. } => (*bits as usize, *group, 0),
@@ -174,7 +414,7 @@ fn site_header(s: &ArtifactSite, offset: usize) -> Json {
         }
         PackedLinear::SparseMask { values, .. } => (0, 0, values.len()),
     };
-    Json::obj(vec![
+    let mut fields = vec![
         ("param", Json::Str(s.param.clone())),
         ("rows", Json::Num(s.packed.rows() as f64)),
         ("cols", Json::Num(s.packed.cols() as f64)),
@@ -183,28 +423,56 @@ fn site_header(s: &ArtifactSite, offset: usize) -> Json {
         ("group", Json::Num(group as f64)),
         ("nvalues", Json::Num(nvalues as f64)),
         ("offset", Json::Num(offset as f64)),
-        ("report", Json::obj(vec![
-            ("rel_loss", Json::Num(s.report.rel_loss)),
-            ("sparsity", Json::Num(s.report.sparsity)),
-            ("row_uniform", Json::Bool(s.report.row_uniform)),
-            ("iterations", Json::Num(s.report.iterations as f64)),
-            ("seconds", Json::Num(s.report.seconds)),
-        ])),
-    ])
+    ];
+    if let Some((enc, clen)) = enc {
+        fields.push(("enc", Json::Str(enc.to_string())));
+        fields.push(("clen", Json::Num(clen as f64)));
+    }
+    fields.push(("report", Json::obj(vec![
+        ("rel_loss", Json::Num(s.report.rel_loss)),
+        ("sparsity", Json::Num(s.report.sparsity)),
+        ("row_uniform", Json::Bool(s.report.row_uniform)),
+        ("iterations", Json::Num(s.report.iterations as f64)),
+        ("seconds", Json::Num(s.report.seconds)),
+    ])));
+    Json::obj(fields)
 }
 
-/// Serialise `art` to `path` via a unique temp file + rename (atomic
-/// install; concurrent writers of the same artifact are benign because
-/// their contents are bit-identical).
+/// Serialise `art` to `path` as `AWPPACK1` via a unique temp file +
+/// rename (atomic install; concurrent writers of the same artifact are
+/// benign because their contents are bit-identical).
 pub fn write_artifact(path: &Path, art: &ModelArtifact) -> Result<()> {
+    write_artifact_opts(path, art, false)
+}
+
+/// [`write_artifact`] with container selection. With `pack2` the file is
+/// `AWPPACK2`: each site's payload is offered to the lossless second
+/// stage ([`rc_encode`]) and stored coded only when that is strictly
+/// smaller *and* verified at encode time to round-trip bit-identically;
+/// otherwise the site stays raw — a v2 payload is never larger than its
+/// v1 equivalent.
+pub fn write_artifact_opts(path: &Path, art: &ModelArtifact, pack2: bool) -> Result<()> {
     let mut entries = Vec::with_capacity(art.sites.len());
+    let mut payloads = Vec::with_capacity(art.sites.len());
     let mut offset = 0usize;
     for s in &art.sites {
-        entries.push(site_header(s, offset));
-        offset += s.packed.packed_bytes();
+        let raw = site_payload(&s.packed);
+        let (enc, bytes) = if pack2 {
+            let coded = rc_encode(&raw);
+            if coded.len() < raw.len() && rc_decode(&coded, raw.len()) == raw {
+                ("rc", coded)
+            } else {
+                ("raw", raw)
+            }
+        } else {
+            ("raw", raw)
+        };
+        entries.push(site_header(s, offset, pack2.then(|| (enc, bytes.len()))));
+        offset += bytes.len();
+        payloads.push(bytes);
     }
     let header = Json::obj(vec![
-        ("version", Json::Num(VERSION as f64)),
+        ("version", Json::Num(if pack2 { VERSION2 } else { VERSION } as f64)),
         ("model", Json::Str(art.model.clone())),
         ("checkpoint", Json::Str(format!("{:016x}", art.checkpoint))),
         ("calib", Json::Str(format!("{:016x}", art.calib))),
@@ -231,11 +499,11 @@ pub fn write_artifact(path: &Path, art: &ModelArtifact) -> Result<()> {
         let mut f = std::io::BufWriter::new(
             std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?,
         );
-        f.write_all(MAGIC)?;
+        f.write_all(if pack2 { MAGIC2 } else { MAGIC })?;
         f.write_all(&(hjson.len() as u64).to_le_bytes())?;
         f.write_all(&hjson)?;
-        for s in &art.sites {
-            f.write_all(&site_payload(&s.packed))?;
+        for p in &payloads {
+            f.write_all(p)?;
         }
         // explicit flush: a drop-time flush error would be swallowed and a
         // truncated file installed as if the write succeeded
@@ -269,125 +537,127 @@ fn parse_hex64(s: &str) -> Result<u64> {
     u64::from_str_radix(s, 16).with_context(|| format!("bad hex field '{s}'"))
 }
 
-fn read_site(e: &Json, payload: &[u8]) -> Result<ArtifactSite> {
-    let param = e.expect("param")?.as_str()?.to_string();
-    let rows = e.expect("rows")?.as_usize()?;
-    let cols = e.expect("cols")?.as_usize()?;
-    ensure!(rows >= 1 && rows <= MAX_DIM && cols >= 1 && cols <= MAX_DIM,
-            "{param}: implausible shape {rows}x{cols}");
-    let n = rows.checked_mul(cols).with_context(|| format!("{param}: size overflow"))?;
-    let mode = e.expect("mode")?.as_str()?.to_string();
-    let bits = e.expect("bits")?.as_usize()?;
-    let group = e.expect("group")?.as_usize()?;
-    let nvalues = e.expect("nvalues")?.as_usize()?;
-    let mut pos = e.expect("offset")?.as_usize()?;
-
-    let packed = match mode.as_str() {
+/// Decode one site's raw payload bytes into a [`PackedLinear`], running
+/// the structural validation deferred from header parse time (palette
+/// code bounds, mask popcount, palette-count consistency). `scratch` is
+/// caller-provided so repeated first-touch validation — the pager's
+/// page-in path — allocates nothing beyond the materialised weights
+/// themselves.
+pub fn decode_site_bytes(meta: &SiteMeta, bytes: &[u8], scratch: &mut Vec<u8>)
+    -> Result<PackedLinear> {
+    let param = meta.param.as_str();
+    let (rows, cols) = (meta.rows, meta.cols);
+    let n = rows * cols;
+    ensure!(bytes.len() == meta.raw_len,
+            "{param}: site payload is {} bytes, expected {}",
+            bytes.len(), meta.raw_len);
+    let mut pos = 0usize;
+    let packed = match meta.mode.as_str() {
         "dense" => {
-            let data = read_f32s(take(payload, &mut pos, n * 4, &param)?);
+            let data = read_f32s(take(bytes, &mut pos, n * 4, param)?);
             PackedLinear::Dense { rows, cols, data }
         }
-        "int" | "palette" => {
-            ensure!((1..=8).contains(&bits), "{param}: bad bits {bits}");
-            ensure!(group >= 1 && group <= cols && cols % group == 0,
-                    "{param}: bad group {group} for width {cols}");
-            let ng = rows * (cols / group);
-            let clen = codes_len(rows, cols, bits as u8);
-            if mode == "int" {
-                let scales = read_f32s(take(payload, &mut pos, ng * 4, &param)?);
-                let zps = read_f32s(take(payload, &mut pos, ng * 4, &param)?);
-                let codes = take(payload, &mut pos, clen, &param)?.to_vec();
-                PackedLinear::GroupedInt {
-                    rows, cols, bits: bits as u8, group, scales, zps, codes,
-                }
-            } else {
-                let counts = take(payload, &mut pos, ng, &param)?.to_vec();
-                let total: usize = counts.iter().map(|&c| c as usize + 1).sum();
-                ensure!(total == nvalues,
-                        "{param}: palette counts sum {total} != nvalues {nvalues}");
-                let values =
-                    read_f32s(take(payload, &mut pos, nvalues * 4, &param)?);
-                let codes = take(payload, &mut pos, clen, &param)?.to_vec();
-                // every code must index inside its group's table, or a
-                // later decode would panic on a corrupt file
-                let unpacked = crate::quant::pack::unpack_bits(&codes, bits as u8, n);
-                for (idx, &q) in unpacked.iter().enumerate() {
-                    let gidx = (idx / cols) * (cols / group) + (idx % cols) / group;
-                    ensure!((q as usize) <= counts[gidx] as usize,
-                            "{param}: code {q} out of table at {idx}");
-                }
-                PackedLinear::Palette {
-                    rows, cols, bits: bits as u8, group, counts, values, codes,
-                }
+        "int" => {
+            let ng = rows * (cols / meta.group);
+            let clen = codes_len(rows, cols, meta.bits as u8);
+            let scales = read_f32s(take(bytes, &mut pos, ng * 4, param)?);
+            let zps = read_f32s(take(bytes, &mut pos, ng * 4, param)?);
+            let codes = take(bytes, &mut pos, clen, param)?.to_vec();
+            PackedLinear::GroupedInt {
+                rows, cols, bits: meta.bits as u8, group: meta.group,
+                scales, zps, codes,
+            }
+        }
+        "palette" => {
+            let ng = rows * (cols / meta.group);
+            let clen = codes_len(rows, cols, meta.bits as u8);
+            let counts = take(bytes, &mut pos, ng, param)?.to_vec();
+            let total: usize = counts.iter().map(|&c| c as usize + 1).sum();
+            ensure!(total == meta.nvalues,
+                    "{param}: palette counts sum {total} != nvalues {}",
+                    meta.nvalues);
+            let values = read_f32s(take(bytes, &mut pos, meta.nvalues * 4, param)?);
+            let codes = take(bytes, &mut pos, clen, param)?.to_vec();
+            // every code must index inside its group's table, or a later
+            // decode would panic on a corrupt file
+            scratch.resize(n, 0);
+            crate::quant::pack::unpack_bits_into(&codes, meta.bits as u8, 0,
+                                                 &mut scratch[..n]);
+            for (idx, &q) in scratch[..n].iter().enumerate() {
+                let gidx =
+                    (idx / cols) * (cols / meta.group) + (idx % cols) / meta.group;
+                ensure!((q as usize) <= counts[gidx] as usize,
+                        "{param}: code {q} out of table at {idx}");
+            }
+            PackedLinear::Palette {
+                rows, cols, bits: meta.bits as u8, group: meta.group,
+                counts, values, codes,
             }
         }
         "mask" => {
-            let mask = take(payload, &mut pos, n.div_ceil(8), &param)?.to_vec();
+            let mask = take(bytes, &mut pos, n.div_ceil(8), param)?.to_vec();
             let set: usize = (0..n)
                 .filter(|idx| mask[idx / 8] >> (idx % 8) & 1 == 1)
                 .count();
-            ensure!(set == nvalues,
-                    "{param}: mask popcount {set} != nvalues {nvalues}");
-            let values = read_f32s(take(payload, &mut pos, nvalues * 4, &param)?);
+            ensure!(set == meta.nvalues,
+                    "{param}: mask popcount {set} != nvalues {}", meta.nvalues);
+            let values = read_f32s(take(bytes, &mut pos, meta.nvalues * 4, param)?);
             PackedLinear::SparseMask { rows, cols, mask, values }
         }
+        // parse_site_meta already rejected unknown modes; kept for safety
         other => bail!("{param}: unknown packed mode '{other}'"),
     };
-
-    let r = e.expect("report")?;
-    let report = LayerReport {
-        param: param.clone(),
-        d_out: rows,
-        d_in: cols,
-        rel_loss: r.expect("rel_loss")?.as_f64()?,
-        sparsity: r.expect("sparsity")?.as_f64()?,
-        row_uniform: r.expect("row_uniform")?.as_bool()?,
-        iterations: r.expect("iterations")?.as_usize()?,
-        seconds: r.expect("seconds")?.as_f64()?,
-    };
-    Ok(ArtifactSite { param, packed, report })
+    Ok(packed)
 }
 
-/// Parse an artifact file. `Err` on anything inconsistent — callers going
-/// through [`ArtifactStore::load`] treat that as a miss; direct consumers
-/// (`repro inspect`, `repro eval --from-artifact`) surface it.
+/// Parse an artifact file eagerly (all sites materialised). `Err` on
+/// anything inconsistent — callers going through [`ArtifactStore::load`]
+/// treat that as a miss; direct consumers (`repro inspect`, `repro eval
+/// --from-artifact`) surface it. Reads the payload site by site into
+/// bounded reusable buffers — never the whole payload at once; lazy
+/// consumers use [`super::pager::ArtifactPager`] instead and touch no
+/// payload bytes at open.
 pub fn read_artifact(path: &Path) -> Result<ModelArtifact> {
     let mut f = std::io::BufReader::new(
         std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
     );
-    let mut magic = [0u8; 8];
-    f.read_exact(&mut magic).context("reading magic")?;
-    if &magic != MAGIC {
-        bail!("{path:?}: not an AWP artifact (bad magic)");
-    }
-    let mut lenb = [0u8; 8];
-    f.read_exact(&mut lenb).context("reading header length")?;
-    let hlen = u64::from_le_bytes(lenb) as usize;
-    if hlen > 64 << 20 {
-        bail!("{path:?}: implausible header length {hlen}");
-    }
-    let mut hjson = vec![0u8; hlen];
-    f.read_exact(&mut hjson).context("reading header")?;
-    let header = Json::parse(std::str::from_utf8(&hjson)?)?;
-    if header.expect("version")?.as_usize()? != VERSION {
-        bail!("{path:?}: unsupported artifact version");
-    }
-    let mut payload = Vec::new();
-    f.read_to_end(&mut payload)?;
-
-    let mut sites = Vec::new();
-    for e in header.expect("sites")?.as_arr()? {
-        sites.push(read_site(e, &payload).with_context(|| format!("{path:?}"))?);
+    let header = read_artifact_header(&mut f, path)?;
+    let mut sites = Vec::with_capacity(header.sites.len());
+    let mut stored = Vec::new();
+    let mut raw = Vec::new();
+    let mut scratch = Vec::new();
+    for meta in &header.sites {
+        // site offsets tile the payload contiguously (checked by the
+        // header parse), so a sequential read needs no seeking
+        stored.resize(meta.stored_len, 0);
+        f.read_exact(&mut stored).with_context(|| {
+            format!("{path:?}: {}: reading {} stored bytes",
+                    meta.param, meta.stored_len)
+        })?;
+        let bytes: &[u8] = match meta.enc {
+            SiteEnc::Raw => &stored,
+            SiteEnc::Rc => {
+                rc_decode_into(&stored, meta.raw_len, &mut raw);
+                &raw
+            }
+        };
+        let packed = decode_site_bytes(meta, bytes, &mut scratch)
+            .with_context(|| format!("{path:?}"))?;
+        sites.push(ArtifactSite {
+            param: meta.param.clone(),
+            packed,
+            report: meta.report.clone(),
+        });
     }
     Ok(ModelArtifact {
-        model: header.expect("model")?.as_str()?.to_string(),
-        checkpoint: parse_hex64(header.expect("checkpoint")?.as_str()?)?,
-        calib: parse_hex64(header.expect("calib")?.as_str()?)?,
-        method: header.expect("method")?.as_str()?.to_string(),
-        spec: parse_hex64(header.expect("spec")?.as_str()?)?,
-        spec_desc: header.expect("spec_desc")?.as_str()?.to_string(),
-        params: parse_hex64(header.expect("params")?.as_str()?)?,
-        compressed_with: header.expect("compressed_with")?.as_str()?.to_string(),
+        model: header.model,
+        checkpoint: header.checkpoint,
+        calib: header.calib,
+        method: header.method,
+        spec: header.spec,
+        spec_desc: header.spec_desc,
+        params: header.params,
+        compressed_with: header.compressed_with,
         sites,
     })
 }
@@ -566,6 +836,17 @@ mod tests {
         }
     }
 
+    fn assert_sites_bit_equal(a: &ModelArtifact, b: &ModelArtifact) {
+        assert_eq!(a.sites.len(), b.sites.len());
+        for (x, y) in a.sites.iter().zip(&b.sites) {
+            assert_eq!(x.param, y.param);
+            let (da, db) = (x.packed.decode(), y.packed.decode());
+            for (u, v) in da.data.iter().zip(&db.data) {
+                assert_eq!(u.to_bits(), v.to_bits(), "{}", x.param);
+            }
+        }
+    }
+
     #[test]
     fn file_round_trip_is_bit_exact() {
         let dir = TempDir::new("apack").unwrap();
@@ -579,10 +860,42 @@ mod tests {
         assert_eq!(a.param, b.param);
         assert_eq!(a.report.rel_loss, b.report.rel_loss);
         assert_eq!(a.report.iterations, b.report.iterations);
-        let (da, db) = (a.packed.decode(), b.packed.decode());
-        for (x, y) in da.data.iter().zip(&db.data) {
-            assert_eq!(x.to_bits(), y.to_bits());
-        }
+        assert_sites_bit_equal(&art, &back);
+    }
+
+    #[test]
+    fn pack2_round_trips_and_never_stores_more() {
+        let dir = TempDir::new("apack2").unwrap();
+        let art = artifact();
+        let p1 = dir.path().join("v1.apack");
+        let p2 = dir.path().join("v2.apack");
+        write_artifact(&p1, &art).unwrap();
+        write_artifact_opts(&p2, &art, true).unwrap();
+        // transparent on read: same artifact bit-for-bit
+        let back = read_artifact(&p2).unwrap();
+        assert_sites_bit_equal(&art, &back);
+        // stored payload never exceeds the raw (v1) payload
+        let mut f = std::io::BufReader::new(std::fs::File::open(&p2).unwrap());
+        let h = read_artifact_header(&mut f, &p2).unwrap();
+        assert!(h.pack2);
+        assert!(h.stored_bytes() <= h.packed_bytes(),
+                "stored {} > raw {}", h.stored_bytes(), h.packed_bytes());
+        assert_eq!(h.packed_bytes(), art.packed_bytes());
+    }
+
+    #[test]
+    fn header_read_stops_before_the_payload() {
+        let dir = TempDir::new("apack").unwrap();
+        let art = artifact();
+        let path = dir.path().join("a.apack");
+        write_artifact(&path, &art).unwrap();
+        let mut f = std::io::BufReader::new(std::fs::File::open(&path).unwrap());
+        let h = read_artifact_header(&mut f, &path).unwrap();
+        use std::io::Seek;
+        assert_eq!(f.stream_position().unwrap(), h.payload_start);
+        assert_eq!(h.sites.len(), 1);
+        assert_eq!(h.sites[0].raw_len, art.sites[0].packed.packed_bytes());
+        assert!(h.matches_key(&key()));
     }
 
     #[test]

@@ -9,8 +9,11 @@
 //! (modulo the returned activation matrix).
 
 use std::cell::RefCell;
+use std::sync::Arc;
 
-use crate::artifact::{PackedLinear, PreparedPacked};
+use anyhow::Result;
+
+use crate::artifact::{ArtifactPager, PackedLinear, PreparedPacked};
 use crate::obs::metrics;
 use crate::tensor::{ops, KernelTier, Matrix};
 
@@ -117,10 +120,28 @@ impl LinearOp<'_> {
 
 /// Owned storage behind a [`LinearOp`] — the
 /// [`NativeModel`](super::NativeModel) site table.
-#[derive(Debug)]
 pub enum SiteWeights {
     Dense(Matrix),
     Packed(PreparedPacked),
+    /// Lazily paged site: the weights live in the pager's residency
+    /// cache (or on disk) and are resolved per application — this is the
+    /// variant that lets serving run artifacts larger than RAM.
+    Paged(Arc<ArtifactPager>, usize),
+}
+
+impl std::fmt::Debug for SiteWeights {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SiteWeights::Dense(m) => write!(f, "Dense({}x{})", m.rows, m.cols),
+            SiteWeights::Packed(p) => {
+                write!(f, "Packed({}x{} {})", p.rows(), p.cols(), p.mode_name())
+            }
+            SiteWeights::Paged(pg, i) => {
+                let m = &pg.sites()[*i];
+                write!(f, "Paged({}x{} {} @{})", m.rows, m.cols, m.mode, m.param)
+            }
+        }
+    }
 }
 
 impl SiteWeights {
@@ -130,16 +151,53 @@ impl SiteWeights {
         SiteWeights::Packed(p.prepare())
     }
 
-    pub fn op(&self) -> LinearOp<'_> {
+    /// Site `idx` of `pager`, resolved lazily on each application.
+    pub fn paged(pager: Arc<ArtifactPager>, idx: usize) -> SiteWeights {
+        SiteWeights::Paged(pager, idx)
+    }
+
+    /// Output width — header metadata for paged sites, so no page-in.
+    pub fn d_out(&self) -> usize {
         match self {
-            SiteWeights::Dense(m) => LinearOp::Dense(m),
-            SiteWeights::Packed(p) => LinearOp::Packed(p),
+            SiteWeights::Dense(m) => m.rows,
+            SiteWeights::Packed(p) => p.rows(),
+            SiteWeights::Paged(pg, i) => pg.sites()[*i].rows,
         }
     }
 
-    /// `true` when the site executes through the packed kernels.
+    /// Input width — header metadata for paged sites, so no page-in.
+    pub fn d_in(&self) -> usize {
+        match self {
+            SiteWeights::Dense(m) => m.cols,
+            SiteWeights::Packed(p) => p.cols(),
+            SiteWeights::Paged(pg, i) => pg.sites()[*i].cols,
+        }
+    }
+
+    /// [`LinearOp::apply_tier`] over this site's weights, resolving
+    /// paged sites through their pager first — the only fallible step
+    /// (I/O + first-touch validation), which is why this returns
+    /// `Result` while the borrowed [`LinearOp`] stays infallible.
+    pub fn apply_tier(&self, x: &Matrix, tier: KernelTier) -> Result<Matrix> {
+        match self {
+            SiteWeights::Dense(m) => Ok(LinearOp::Dense(m).apply_tier(x, tier)),
+            SiteWeights::Packed(p) => Ok(LinearOp::Packed(p).apply_tier(x, tier)),
+            SiteWeights::Paged(pg, i) => {
+                let p = pg.site(*i)?;
+                Ok(LinearOp::Packed(&p).apply_tier(x, tier))
+            }
+        }
+    }
+
+    /// Reference-tier [`SiteWeights::apply_tier`].
+    pub fn apply(&self, x: &Matrix) -> Result<Matrix> {
+        self.apply_tier(x, KernelTier::Reference)
+    }
+
+    /// `true` when the site executes through the packed kernels (paged
+    /// sites always do — the pager only hands out [`PreparedPacked`]).
     pub fn is_packed(&self) -> bool {
-        matches!(self, SiteWeights::Packed(_))
+        matches!(self, SiteWeights::Packed(_) | SiteWeights::Paged(..))
     }
 }
 

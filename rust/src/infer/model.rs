@@ -1,13 +1,13 @@
 //! The native CPU transformer forward pass — the Rust mirror of
 //! `python/compile/model.py::forward` (pre-norm blocks, RoPE causal
 //! attention, SiLU MLP, tied embedding head), with every block-linear site
-//! dispatched through [`LinearOp`].
+//! dispatched through [`SiteWeights`].
 //!
 //! ### The packed ≡ dense contract
 //!
 //! [`NativeModel::from_checkpoint`] (all sites dense f32) and
 //! [`NativeModel::from_artifact`] (all sites packed) run the *same* code:
-//! the only difference is which [`LinearOp`] variant each site matmul
+//! the only difference is which [`SiteWeights`] variant each site matmul
 //! dispatches to, and those variants are bit-identical to each other on
 //! bit-identical weights (shared row-panel kernel — see
 //! `artifact::packed`). Everything around the site matmuls (norms, RoPE,
@@ -51,16 +51,17 @@
 //! dot/softmax/mix sequence over that session's own cache.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
 
-use crate::artifact::ModelArtifact;
+use crate::artifact::{ArtifactPager, ModelArtifact};
 use crate::model::{sites, Checkpoint, ModelConfig};
 use crate::obs::trace;
 use crate::tensor::{ops, KernelTier, Matrix};
 use crate::util::parallel::{par_chunks_mut, par_map};
 
-use super::linear::{LinearOp, SiteWeights};
+use super::linear::SiteWeights;
 
 /// Sites per transformer block, in [`sites::enumerate_sites`] order
 /// (wq, wk, wv, wo, w_up, w_down).
@@ -166,7 +167,7 @@ impl NativeModel {
             let w = by_name
                 .remove(&s.param)
                 .with_context(|| format!("native model missing site {}", s.param))?;
-            let (rows, cols) = (w.op().d_out(), w.op().d_in());
+            let (rows, cols) = (w.d_out(), w.d_in());
             ensure!((rows, cols) == (s.d_out, s.d_in),
                     "site {}: weights are {}x{}, expected {}x{}", s.param, rows,
                     cols, s.d_out, s.d_in);
@@ -231,6 +232,27 @@ impl NativeModel {
         Self::with_site_weights(ck, sw)
     }
 
+    /// Paged native model over an open [`ArtifactPager`]: every
+    /// block-linear site is a lazy [`SiteWeights::Paged`] handle that
+    /// materialises from the artifact file on first touch and may be
+    /// evicted again under the pager's byte budget. Shapes are validated
+    /// against the artifact **header** alone — construction reads zero
+    /// payload bytes, so cold open is O(header) no matter how large the
+    /// artifact is.
+    pub fn from_pager(ck: &Checkpoint, pager: Arc<ArtifactPager>)
+        -> Result<NativeModel> {
+        let mut sw = Vec::new();
+        for s in sites::enumerate_sites(&ck.config) {
+            let idx = pager
+                .sites()
+                .iter()
+                .position(|m| m.param == s.param)
+                .with_context(|| format!("artifact misses site {}", s.param))?;
+            sw.push((s.param.clone(), SiteWeights::paged(pager.clone(), idx)));
+        }
+        Self::with_site_weights(ck, sw)
+    }
+
     pub fn config(&self) -> &ModelConfig {
         &self.cfg
     }
@@ -260,8 +282,8 @@ impl NativeModel {
         self.site_weights.len() - self.packed_site_count()
     }
 
-    fn site(&self, layer: usize, slot: usize) -> LinearOp<'_> {
-        self.site_weights[layer * SITES_PER_BLOCK + slot].op()
+    fn site(&self, layer: usize, slot: usize) -> &SiteWeights {
+        &self.site_weights[layer * SITES_PER_BLOCK + slot]
     }
 
     /// Full forward pass over a row-major `(batch, seq)` token block;
@@ -285,19 +307,19 @@ impl NativeModel {
         for l in 0..self.cfg.n_layers {
             // attention half: pre-norm, q/k/v, RoPE, causal softmax, out
             let h = rmsnorm(&x, &self.ln1[l]);
-            let mut q = self.site(l, 0).apply_tier(&h, self.tier);
-            let mut k = self.site(l, 1).apply_tier(&h, self.tier);
-            let v = self.site(l, 2).apply_tier(&h, self.tier);
+            let mut q = self.site(l, 0).apply_tier(&h, self.tier)?;
+            let mut k = self.site(l, 1).apply_tier(&h, self.tier)?;
+            let v = self.site(l, 2).apply_tier(&h, self.tier)?;
             rope_rows(&mut q, seq, nh, dh, &cos, &sin);
             rope_rows(&mut k, seq, nh, dh, &cos, &sin);
             let o = causal_attention(&q, &k, &v, batch, seq, nh, dh);
-            let o = self.site(l, 3).apply_tier(&o, self.tier);
+            let o = self.site(l, 3).apply_tier(&o, self.tier)?;
             add_inplace(&mut x, &o);
             // MLP half: pre-norm, up, SiLU, down
             let h = rmsnorm(&x, &self.ln2[l]);
-            let mut u = self.site(l, 4).apply_tier(&h, self.tier);
+            let mut u = self.site(l, 4).apply_tier(&h, self.tier)?;
             silu_inplace(&mut u);
-            let down = self.site(l, 5).apply_tier(&u, self.tier);
+            let down = self.site(l, 5).apply_tier(&u, self.tier)?;
             add_inplace(&mut x, &down);
         }
         let xf = rmsnorm(&x, &self.ln_f);
@@ -390,9 +412,9 @@ impl NativeModel {
         let (cos, sin) = rope_tables_from(start, seq, dh, self.cfg.rope_theta);
         for l in 0..self.cfg.n_layers {
             let h = rmsnorm(&x, &self.ln1[l]);
-            let mut q = self.site(l, 0).apply_tier(&h, self.tier);
-            let mut k = self.site(l, 1).apply_tier(&h, self.tier);
-            let v = self.site(l, 2).apply_tier(&h, self.tier);
+            let mut q = self.site(l, 0).apply_tier(&h, self.tier)?;
+            let mut k = self.site(l, 1).apply_tier(&h, self.tier)?;
+            let v = self.site(l, 2).apply_tier(&h, self.tier)?;
             rope_rows(&mut q, seq, nh, dh, &cos, &sin);
             rope_rows(&mut k, seq, nh, dh, &cos, &sin);
             for i in 0..seq {
@@ -401,12 +423,12 @@ impl NativeModel {
             }
             let o = cached_attention(&q, &session.k[l], &session.v[l], start,
                                      seq, nh, dh);
-            let o = self.site(l, 3).apply_tier(&o, self.tier);
+            let o = self.site(l, 3).apply_tier(&o, self.tier)?;
             add_inplace(&mut x, &o);
             let h = rmsnorm(&x, &self.ln2[l]);
-            let mut u = self.site(l, 4).apply_tier(&h, self.tier);
+            let mut u = self.site(l, 4).apply_tier(&h, self.tier)?;
             silu_inplace(&mut u);
-            let down = self.site(l, 5).apply_tier(&u, self.tier);
+            let down = self.site(l, 5).apply_tier(&u, self.tier)?;
             add_inplace(&mut x, &down);
         }
         session.len = start + seq;
@@ -477,9 +499,9 @@ impl NativeModel {
         let (cos, sin) = rope_tables_at(&starts, dh, self.cfg.rope_theta);
         for l in 0..self.cfg.n_layers {
             let h = rmsnorm(&x, &self.ln1[l]);
-            let mut q = self.site(l, 0).apply_tier(&h, self.tier);
-            let mut k = self.site(l, 1).apply_tier(&h, self.tier);
-            let v = self.site(l, 2).apply_tier(&h, self.tier);
+            let mut q = self.site(l, 0).apply_tier(&h, self.tier)?;
+            let mut k = self.site(l, 1).apply_tier(&h, self.tier)?;
+            let v = self.site(l, 2).apply_tier(&h, self.tier)?;
             // with seq = n, rope_rows maps activation row i onto table row i
             rope_rows(&mut q, n, nh, dh, &cos, &sin);
             rope_rows(&mut k, n, nh, dh, &cos, &sin);
@@ -493,12 +515,12 @@ impl NativeModel {
                 .map(|(s, &pos)| (&s.k[l], &s.v[l], pos))
                 .collect();
             let o = cached_attention_rows(&q, &caches, nh, dh);
-            let o = self.site(l, 3).apply_tier(&o, self.tier);
+            let o = self.site(l, 3).apply_tier(&o, self.tier)?;
             add_inplace(&mut x, &o);
             let h = rmsnorm(&x, &self.ln2[l]);
-            let mut u = self.site(l, 4).apply_tier(&h, self.tier);
+            let mut u = self.site(l, 4).apply_tier(&h, self.tier)?;
             silu_inplace(&mut u);
-            let down = self.site(l, 5).apply_tier(&u, self.tier);
+            let down = self.site(l, 5).apply_tier(&u, self.tier)?;
             add_inplace(&mut x, &down);
         }
         for s in sessions.iter_mut() {

@@ -18,7 +18,7 @@
 //! repro e2e     # end-to-end driver: train → eval → compress → eval
 //! repro info    # artifacts / manifest summary
 //! repro inspect <file.apack>   # per-site footprint of a packed artifact
-//! repro bench-json [--quick] [--out BENCH_9.json]
+//! repro bench-json [--quick] [--out BENCH_10.json]
 //!               # kernel-tier perf snapshot: GEMM GFLOP/s per compression
 //!               # family (dense vs reference vs fast), native tokens/sec,
 //!               # KV-cached vs uncached decode tokens/sec, batched vs
@@ -26,8 +26,14 @@
 //!               # the metrics-registry overhead gate (obs_overhead)
 //! repro serve   --from-artifact <file.apack> [--addr host:port]
 //!               [--max-ctx N] [--max-sessions N] [--max-batch N]
-//!               [--max-kv-mb N] [--fast|--reference] [--log-json]
-//!               # long-lived HTTP server over the native packed engine:
+//!               [--max-kv-mb N] [--weight-budget-mb N]
+//!               [--fast|--reference] [--log-json]
+//!               # long-lived HTTP server over the native packed engine.
+//!               # Weights are *paged*: serve opens the artifact by reading
+//!               # only its header and materialises each site on first
+//!               # touch; --weight-budget-mb bounds resident packed weights
+//!               # with LRU eviction (0/absent = unlimited), so artifacts
+//!               # larger than RAM serve fine — see ARTIFACTS.md.
 //!               # /v1/generate (per-session KV-cached decode, continuous
 //!               # batching across concurrent requests, ?stream=true for
 //!               # chunked token streaming), /v1/perplexity, /v1/inspect,
@@ -55,9 +61,12 @@
 //! Chrome trace-event JSON on exit — load it in `chrome://tracing` /
 //! Perfetto (OBSERVABILITY.md). `repro compress` also takes `--timings` (per-
 //! layer executor telemetry) and `--pack-out <file>` (emit the bit-packed
-//! `AWPPACK1` artifact and print its footprint table); `repro eval
-//! --from-artifact <file>` reproduces quality numbers from the packed file
-//! alone. The CLI is hand-rolled (the image has no argument-parsing
+//! `AWPPACK1` artifact and print its footprint table; add `--pack2` for the
+//! `AWPPACK2` container, whose per-site payloads are entropy-coded when that
+//! wins — lossless, read transparently); `repro eval --from-artifact <file>`
+//! reproduces quality numbers from the packed file alone (`--native
+//! --weight-budget-mb N` routes it through the weight pager instead of the
+//! eager load). The CLI is hand-rolled (the image has no argument-parsing
 //! crate); see `Args` below.
 
 use std::path::{Path, PathBuf};
@@ -65,7 +74,8 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use awp::artifact::{read_artifact, write_artifact, ArtifactStore};
+use awp::artifact::{read_artifact, write_artifact_opts, ArtifactPager,
+                    ArtifactStore};
 use awp::compress::awp::AwpHyper;
 use awp::compress::traits::CompressionSpec;
 use awp::config::RunConfig;
@@ -258,7 +268,7 @@ fn run(args: &Args) -> Result<()> {
     // `bench-json` is pure CPU kernel timing — no manifest or runtime either
     if cmd == "bench-json" {
         let quick = args.get("quick").is_some();
-        let out = args.get_or("out", "BENCH_9.json");
+        let out = args.get_or("out", "BENCH_10.json");
         eprintln!("[bench] kernel tiers on {} threads, simd: {}{}",
                   awp::util::parallel::num_threads(), simd::backend_name(),
                   if quick { " (quick)" } else { "" });
@@ -333,6 +343,44 @@ fn run(args: &Args) -> Result<()> {
         "eval" => {
             let native = args.get("native").is_some();
             if let Some(apath) = args.get("from-artifact") {
+                if native && args.get("weight-budget-mb").is_some() {
+                    // paged route: open by header only, materialise sites
+                    // on first touch, LRU-evict under the byte budget —
+                    // same bits as the eager load at the reference tier
+                    let budget_mb = args.get_usize("weight-budget-mb", 0)?;
+                    let pager = Arc::new(ArtifactPager::open(
+                        Path::new(apath),
+                        match budget_mb {
+                            0 => None,
+                            mb => Some(mb << 20),
+                        },
+                    )?);
+                    let model = pager.header().model.clone();
+                    let ck = ctx.checkpoint(&model)?;
+                    let gk = ctx.gram_key(&model)?;
+                    let h = pager.header();
+                    if h.checkpoint != gk.checkpoint || h.calib != gk.calib {
+                        bail!("artifact {apath} identity mismatch: packed \
+                               against checkpoint {:016x}/calib {:016x}, \
+                               current run is {:016x}/{:016x}",
+                              h.checkpoint, h.calib, gk.checkpoint, gk.calib);
+                    }
+                    let mut nm = NativeModel::from_pager(&ck, pager.clone())?;
+                    nm.set_tier(kernel_tier(args));
+                    eprintln!("[native] {} sites packed, {} decode-to-dense \
+                               assemblies", nm.packed_site_count(),
+                              nm.dense_site_count());
+                    let rep = ctx.native_ppl(&model, &nm)?;
+                    println!("ppl = {:.4}  (nll/token {:.4}, {} tokens, \
+                              {} windows) [native, paged artifact]",
+                             rep.ppl, rep.nll_per_token, rep.tokens,
+                             rep.batches);
+                    let pc = pager.counts();
+                    eprintln!("[pager] {} hits, {} misses, {} evictions, \
+                               {} bytes resident", pc.hits, pc.misses,
+                              pc.evictions, pager.resident_bytes());
+                    return Ok(());
+                }
                 // quality numbers from the packed file alone: decode the
                 // artifact's sites (bit-identical to the pipeline output)
                 // over the base checkpoint and evaluate that assembly
@@ -498,11 +546,16 @@ fn run(args: &Args) -> Result<()> {
                        {} stores", ac.hits, ac.misses, ac.stores);
             if let Some(path) = &pack_out {
                 let art = artifact.as_ref().expect("--pack-out implies packing");
-                write_artifact(Path::new(path), art)?;
+                // --pack2: AWPPACK2 container — per-site entropy coding
+                // where it wins, bit-identical on read, never larger
+                let pack2 = args.get("pack2").is_some();
+                write_artifact_opts(Path::new(path), art, pack2)?;
                 print!("{}", art.footprint_table().to_console());
-                println!("packed artifact written to {path}: {} dense bytes → \
-                          {} on disk ({:.2}x)",
-                         art.dense_bytes(), art.packed_bytes(),
+                let disk = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+                println!("packed artifact written to {path} ({}): {} dense \
+                          bytes → {} packed, {} on disk ({:.2}x)",
+                         if pack2 { "AWPPACK2" } else { "AWPPACK1" },
+                         art.dense_bytes(), art.packed_bytes(), disk,
                          art.dense_bytes() as f64
                              / art.packed_bytes().max(1) as f64);
             }
@@ -613,28 +666,47 @@ fn run(args: &Args) -> Result<()> {
                      stats.exec_seconds, stats.compile_seconds);
         }
         "serve" => {
-            // long-lived serving: load the packed artifact once, verify its
-            // identity against the current checkpoint/calibration exactly
-            // like `eval --from-artifact`, and serve it packed — the CLI
+            // long-lived serving over the weight pager: open the artifact
+            // by reading only its header, verify identity against the
+            // current checkpoint/calibration exactly like `eval
+            // --from-artifact`, and page sites in on first touch —
+            // --weight-budget-mb bounds resident packed weights with LRU
+            // eviction so artifacts larger than RAM still serve. The CLI
             // logs the zero decode-to-dense count the CI smoke pins
             let apath = args
                 .get("from-artifact")
                 .context("repro serve requires --from-artifact <file.apack>")?;
-            let art = read_artifact(Path::new(apath))?;
-            let model = art.model.clone();
+            // resident packed-weight budget in MiB; 0 / absent = unlimited
+            let budget_mb = args.get_usize("weight-budget-mb", 0)?;
+            let pager = Arc::new(ArtifactPager::open(
+                Path::new(apath),
+                match budget_mb {
+                    0 => None,
+                    mb => Some(mb << 20),
+                },
+            )?);
+            let model = pager.header().model.clone();
             let ck = ctx.checkpoint(&model)?;
             let gk = ctx.gram_key(&model)?;
-            if art.checkpoint != gk.checkpoint || art.calib != gk.calib {
-                bail!("artifact {apath} identity mismatch: packed against \
-                       checkpoint {:016x}/calib {:016x}, current run is \
-                       {:016x}/{:016x}", art.checkpoint, art.calib,
-                      gk.checkpoint, gk.calib);
-            }
-            let mut nm = NativeModel::from_artifact(&ck, &art)?;
+            let (method, spec_desc, packed_bytes) = {
+                let h = pager.header();
+                if h.checkpoint != gk.checkpoint || h.calib != gk.calib {
+                    bail!("artifact {apath} identity mismatch: packed against \
+                           checkpoint {:016x}/calib {:016x}, current run is \
+                           {:016x}/{:016x}", h.checkpoint, h.calib,
+                          gk.checkpoint, gk.calib);
+                }
+                (h.method.clone(), h.spec_desc.clone(), h.packed_bytes())
+            };
+            let mut nm = NativeModel::from_pager(&ck, pager.clone())?;
             nm.set_tier(serve_tier(args));
             eprintln!("[serve] {} sites packed, {} decode-to-dense \
                        assemblies", nm.packed_site_count(),
                       nm.dense_site_count());
+            eprintln!("[serve] weight pager: {} sites, {} packed bytes, \
+                       budget {}", pager.site_count(), packed_bytes,
+                      if budget_mb == 0 { "unlimited".to_string() }
+                      else { format!("{budget_mb} MiB") });
             let limits = awp::serve::ServeLimits {
                 max_ctx: args
                     .get_usize("max-ctx", (ck.config.seq_len * 8).max(512))?,
@@ -654,9 +726,9 @@ fn run(args: &Args) -> Result<()> {
             let info = awp::serve::ServeInfo {
                 model: model.clone(),
                 source: apath.to_string(),
-                method: art.method.clone(),
-                spec: art.spec_desc.clone(),
-                packed_bytes: art.packed_bytes(),
+                method,
+                spec: spec_desc,
+                packed_bytes,
             };
             let exec = ctx.executor();
             let state = awp::serve::ServeState::new(nm, info, exec, limits)

@@ -332,6 +332,13 @@ pub struct Registry {
     pub artifact_hits: Counter,
     pub artifact_misses: Counter,
     pub artifact_stores: Counter,
+    // artifact/pager.rs
+    /// `awp_pager_hits_total` / `_misses_total` / `_evictions_total`
+    pub pager_hits: Counter,
+    pub pager_misses: Counter,
+    pub pager_evictions: Counter,
+    /// `awp_weight_resident_bytes`
+    pub weight_resident_bytes: Gauge,
     // coordinator/executor.rs
     /// `awp_executor_jobs_total`
     pub executor_jobs: Counter,
@@ -365,6 +372,10 @@ impl Registry {
             artifact_hits: Counter::new(),
             artifact_misses: Counter::new(),
             artifact_stores: Counter::new(),
+            pager_hits: Counter::new(),
+            pager_misses: Counter::new(),
+            pager_evictions: Counter::new(),
+            weight_resident_bytes: Gauge::new(),
             executor_jobs: Counter::new(),
             executor_job_seconds: Histogram::new(JOB_BOUNDS),
             kernel_reference_calls: Counter::new(),
@@ -519,6 +530,31 @@ pub fn render_prometheus() -> String {
 
     render_counter(
         &mut out,
+        "awp_pager_hits_total",
+        "Weight-pager site touches served from residency.",
+        r.pager_hits.get(),
+    );
+    render_counter(
+        &mut out,
+        "awp_pager_misses_total",
+        "Weight-pager site touches paged in from disk.",
+        r.pager_misses.get(),
+    );
+    render_counter(
+        &mut out,
+        "awp_pager_evictions_total",
+        "Weight-pager sites evicted under the byte budget.",
+        r.pager_evictions.get(),
+    );
+    render_gauge(
+        &mut out,
+        "awp_weight_resident_bytes",
+        "Prepared model-weight bytes resident in the pager.",
+        r.weight_resident_bytes.get(),
+    );
+
+    render_counter(
+        &mut out,
         "awp_executor_jobs_total",
         "Executor jobs completed.",
         r.executor_jobs.get(),
@@ -611,6 +647,15 @@ pub fn snapshot_json() -> Json {
                 ("hits", Json::Num(r.artifact_hits.get() as f64)),
                 ("misses", Json::Num(r.artifact_misses.get() as f64)),
                 ("stores", Json::Num(r.artifact_stores.get() as f64)),
+            ]),
+        ),
+        (
+            "pager",
+            Json::obj(vec![
+                ("hits", Json::Num(r.pager_hits.get() as f64)),
+                ("misses", Json::Num(r.pager_misses.get() as f64)),
+                ("evictions", Json::Num(r.pager_evictions.get() as f64)),
+                ("resident_bytes", Json::Num(r.weight_resident_bytes.get() as f64)),
             ]),
         ),
         ("executor_jobs", Json::Num(r.executor_jobs.get() as f64)),
@@ -751,6 +796,9 @@ mod tests {
             "awp_session_evictions_total",
             "awp_gram_cache_hits_total{layer=\"mem\"}",
             "awp_artifact_cache_misses_total",
+            "awp_pager_hits_total",
+            "awp_pager_evictions_total",
+            "# TYPE awp_weight_resident_bytes gauge",
             "# TYPE awp_executor_job_seconds histogram",
             "awp_kernel_calls_total{tier=\"fast\"}",
         ] {

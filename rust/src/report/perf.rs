@@ -26,6 +26,10 @@
 //!   KV-cached greedy decode with the metrics registry enabled (the
 //!   default) vs force-disabled; `enabled_vs_disabled` near 1.0 is the
 //!   "instrumentation is free" acceptance bar.
+//! * `artifact_load` — the cold-open story behind `--weight-budget-mb`:
+//!   eager whole-payload [`read_artifact`] vs a header-only
+//!   [`ArtifactPager::open`] vs open-plus-paging-in every site, and the
+//!   `AWPPACK1` vs `AWPPACK2` on-disk byte counts for the same artifact.
 //!
 //! The harness is [`crate::util::bench`] (no criterion in the image); the
 //! same measurements back `benches/kernels.rs`, which adds the
@@ -36,8 +40,10 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::artifact::PackedLinear;
+use crate::artifact::{read_artifact, write_artifact_opts, ArtifactPager,
+                      ArtifactSite, ModelArtifact, PackedLinear};
 use crate::compress::traits::CompressionSpec;
+use crate::eval::reconstruction::LayerReport;
 use crate::infer::{DecodeSession, NativeModel, SiteWeights};
 use crate::model::{sites, ModelConfig};
 use crate::proj::{NmStructured, ProjScratch, Projection};
@@ -46,6 +52,7 @@ use crate::tensor::{ops, simd, KernelTier, Matrix};
 use crate::trainer::init_checkpoint;
 use crate::util::bench::bench;
 use crate::util::parallel::num_threads;
+use crate::util::tempdir::TempDir;
 use crate::util::Json;
 
 /// Compression families measured by the kernel section. Every family's
@@ -298,6 +305,69 @@ fn obs_overhead(fast: &NativeModel, vocab: usize, quick: bool, budget_s: f64)
     ]))
 }
 
+/// The artifact cold-open / page-in rows: how much work a process does
+/// before it can serve. `eager_open_s` is the legacy whole-payload
+/// [`read_artifact`]; `pager_open_s` is the header-only
+/// [`ArtifactPager::open`] behind `repro serve`; `page_in_all_s` adds a
+/// first touch (decode + validate + prepare) of every site. The byte
+/// columns record the lossless second stage's win — `AWPPACK2` on disk vs
+/// `AWPPACK1` for the same payload.
+fn artifact_load_section(quick: bool, budget_s: f64) -> Result<Json> {
+    let (m, k, n_sites) = if quick { (32, 64, 4) } else { (128, 256, 9) };
+    let mut sites = Vec::with_capacity(n_sites);
+    for i in 0..n_sites {
+        let (theta, spec) =
+            family_theta(FAMILIES[i % FAMILIES.len()], m, k, 500 + i as u64);
+        let param = format!("site{i}");
+        sites.push(ArtifactSite {
+            param: param.clone(),
+            packed: PackedLinear::encode(&theta, &spec),
+            report: LayerReport {
+                param, d_out: m, d_in: k, rel_loss: 0.0, sparsity: 0.0,
+                row_uniform: true, iterations: 1, seconds: 0.0,
+            },
+        });
+    }
+    let art = ModelArtifact {
+        model: "bench".into(), checkpoint: 1, calib: 2, method: "rtn".into(),
+        spec: 3, spec_desc: "bench".into(), params: 4,
+        compressed_with: "rtn".into(), sites,
+    };
+    let dir = TempDir::new("bench-apack")?;
+    let v1 = dir.path().join("bench.apack");
+    let v2 = dir.path().join("bench.apack2");
+    write_artifact_opts(&v1, &art, false)?;
+    write_artifact_opts(&v2, &art, true)?;
+    let file_bytes =
+        |p: &Path| fs::metadata(p).map(|md| md.len()).unwrap_or(0);
+    // surface errors before the timed loops
+    read_artifact(&v1)?;
+    ArtifactPager::open(&v1, None)?.site(0)?;
+    let eager = bench("artifact eager open", budget_s, || {
+        std::hint::black_box(read_artifact(&v1).unwrap());
+    });
+    let cold = bench("artifact pager open", budget_s, || {
+        std::hint::black_box(ArtifactPager::open(&v1, None).unwrap());
+    });
+    let paged = bench("artifact pager page-in all", budget_s, || {
+        let pager = ArtifactPager::open(&v1, None).unwrap();
+        for i in 0..pager.site_count() {
+            std::hint::black_box(pager.site(i).unwrap());
+        }
+    });
+    Ok(Json::obj(vec![
+        ("sites", Json::Num(n_sites as f64)),
+        ("packed_bytes", Json::Num(art.packed_bytes() as f64)),
+        ("pack1_file_bytes", Json::Num(file_bytes(&v1) as f64)),
+        ("pack2_file_bytes", Json::Num(file_bytes(&v2) as f64)),
+        ("eager_open_s", Json::Num(eager.median_s)),
+        ("pager_open_s", Json::Num(cold.median_s)),
+        ("page_in_all_s", Json::Num(paged.median_s)),
+        ("pager_vs_eager_open",
+         Json::Num(eager.median_s / cold.median_s)),
+    ]))
+}
+
 /// Run the full suite and assemble the `awp-bench/1` document. `quick`
 /// shrinks shapes and budgets to CI-smoke scale (~a second) — same schema,
 /// not comparable numbers.
@@ -384,9 +454,11 @@ pub fn bench_report(quick: bool) -> Result<Json> {
     );
     // the observability gate rides the same serving model
     let obs = obs_overhead(&fast, cfg.vocab, quick, nb)?;
+    // artifact cold-open vs pager page-in (the serve startup path)
+    let artifact_load = artifact_load_section(quick, budget)?;
     Ok(Json::obj(vec![
         ("schema", Json::Str("awp-bench/1".into())),
-        ("pr", Json::Num(9.0)),
+        ("pr", Json::Num(10.0)),
         ("quick", Json::Bool(quick)),
         ("threads", Json::Num(num_threads() as f64)),
         ("simd", Json::Str(simd::backend_name().into())),
@@ -395,11 +467,12 @@ pub fn bench_report(quick: bool) -> Result<Json> {
         ("decode", decode),
         ("decode_batch", decode_batch),
         ("obs_overhead", obs),
+        ("artifact_load", artifact_load),
     ]))
 }
 
 /// Run [`bench_report`] and write it to `path` (the CLI default is
-/// `BENCH_9.json` at the repo root).
+/// `BENCH_10.json` at the repo root).
 pub fn write_bench_json(path: &Path, quick: bool) -> Result<()> {
     let report = bench_report(quick)?;
     fs::write(path, report.to_string() + "\n")
@@ -449,8 +522,20 @@ mod tests {
         assert!(obs.expect("disabled_tok_s").unwrap().as_f64().unwrap() > 0.0);
         assert!(obs.expect("enabled_vs_disabled").unwrap().as_f64().unwrap()
                 > 0.0);
+        let load = report.expect("artifact_load").unwrap();
+        assert!(load.expect("sites").unwrap().as_usize().unwrap() >= 1);
+        assert!(load.expect("packed_bytes").unwrap().as_usize().unwrap() > 0);
+        assert!(load.expect("pack1_file_bytes").unwrap().as_usize().unwrap()
+                > 0);
+        assert!(load.expect("pack2_file_bytes").unwrap().as_usize().unwrap()
+                > 0);
+        assert!(load.expect("eager_open_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(load.expect("pager_open_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(load.expect("page_in_all_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(load.expect("pager_vs_eager_open").unwrap().as_f64().unwrap()
+                > 0.0);
         // round-trips through the hand-rolled JSON parser
         let parsed = Json::parse(&report.to_string()).unwrap();
-        assert_eq!(parsed.expect("pr").unwrap().as_usize().unwrap(), 9);
+        assert_eq!(parsed.expect("pr").unwrap().as_usize().unwrap(), 10);
     }
 }

@@ -12,9 +12,14 @@
 //! the [`Response::keep_alive`] flag picks the header the writer emits.
 //!
 //! Bounds are enforced while reading, not after: header bytes are capped at
-//! [`MAX_HEADER_BYTES`] and bodies at [`MAX_BODY_BYTES`], so a misbehaving
-//! client cannot balloon memory. Anything malformed is an `Err` the server
-//! maps to a `400` — parsing never panics.
+//! [`MAX_HEADER_BYTES`] (checked *before* each byte is consumed) and bodies
+//! at [`MAX_BODY_BYTES`], so a misbehaving client cannot balloon memory.
+//! Anything malformed is an `Err` the server maps to a `400` — parsing
+//! never panics. Protocol features the parser deliberately refuses carry a
+//! typed [`HttpError`] so the server can answer with the right status:
+//! `Transfer-Encoding` request bodies get `501 Not Implemented` (framing
+//! this parser does not speak — silently ignoring it would desync the
+//! keep-alive byte stream), duplicate `Content-Length` headers get `400`.
 
 use std::io::{BufRead, Read, Write};
 
@@ -26,6 +31,25 @@ use crate::util::json::Json;
 pub const MAX_HEADER_BYTES: usize = 16 * 1024;
 /// Cap on a request body (`Content-Length`), bytes.
 pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// A request-parse failure that maps to a specific HTTP status code.
+/// [`read_request`] wraps refusals that are not the client's syntax's
+/// fault — protocol features this parser intentionally does not implement
+/// — so the server's error arm can pick `501` over the generic `400` via
+/// `downcast_ref`.
+#[derive(Debug)]
+pub struct HttpError {
+    pub status: u16,
+    pub message: String,
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.message)
+    }
+}
+
+impl std::error::Error for HttpError {}
 
 /// A parsed request: method, split target, lower-cased headers, raw body.
 #[derive(Debug)]
@@ -87,12 +111,15 @@ impl Request {
 fn read_line<R: BufRead>(reader: &mut R, budget: &mut usize) -> Result<String> {
     let mut raw = Vec::new();
     loop {
+        // cap first, read second: a head that would need byte
+        // MAX_HEADER_BYTES + 1 is rejected without consuming it, so the
+        // boundary is exact — a head of exactly the cap still parses
+        if *budget == 0 {
+            bail!("request head exceeds {MAX_HEADER_BYTES} bytes");
+        }
         let mut byte = [0u8; 1];
         if reader.read(&mut byte)? == 0 {
             bail!("connection closed mid-line");
-        }
-        if *budget == 0 {
-            bail!("request head exceeds {MAX_HEADER_BYTES} bytes");
         }
         *budget -= 1;
         if byte[0] == b'\n' {
@@ -136,7 +163,32 @@ pub fn read_request<R: BufRead>(reader: &mut R) -> Result<Request> {
     }
     let mut req =
         Request { method, path, query, headers, body: Vec::new() };
-    if let Some(len) = req.header("content-length") {
+    // `Transfer-Encoding` request bodies use framing this parser does not
+    // speak. Taking any Content-Length that rides along (or assuming "no
+    // body") would leave the chunked body bytes unread, and the keep-alive
+    // loop would parse them as the next request's head — a connection
+    // desync. Refuse loudly with a typed 501 instead.
+    if req.header("transfer-encoding").is_some() {
+        return Err(HttpError {
+            status: 501,
+            message: "Transfer-Encoding request bodies are not supported"
+                .into(),
+        }
+        .into());
+    }
+    // Multiple Content-Length headers (even identical ones) are the
+    // classic request-smuggling / desync vector: different parsers pick
+    // different values. Reject the request outright.
+    let mut lengths = req
+        .headers
+        .iter()
+        .filter(|(k, _)| k == "content-length")
+        .map(|(_, v)| v.clone());
+    let content_length = lengths.next();
+    if lengths.next().is_some() {
+        bail!("duplicate Content-Length headers");
+    }
+    if let Some(len) = content_length {
         let len: usize =
             len.parse().context("malformed Content-Length header")?;
         if len > MAX_BODY_BYTES {
@@ -238,6 +290,7 @@ impl Response {
             422 => "Unprocessable Entity",
             429 => "Too Many Requests",
             500 => "Internal Server Error",
+            501 => "Not Implemented",
             503 => "Service Unavailable",
             _ => "Unknown",
         }
@@ -378,6 +431,47 @@ mod tests {
         // truncated body
         assert!(parse("POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc")
             .is_err());
+    }
+
+    #[test]
+    fn header_cap_boundary_is_exact() {
+        // a head of exactly MAX_HEADER_BYTES parses; one byte more fails
+        let base = "GET / HTTP/1.1\r\nX-Pad: ";
+        let tail = "\r\n\r\n";
+        let pad = MAX_HEADER_BYTES - base.len() - tail.len();
+        let at_cap = format!("{base}{}{tail}", "a".repeat(pad));
+        assert_eq!(at_cap.len(), MAX_HEADER_BYTES);
+        assert_eq!(parse(&at_cap).unwrap().path, "/");
+        let over_cap = format!("{base}{}{tail}", "a".repeat(pad + 1));
+        let err = parse(&over_cap).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds"), "{err:#}");
+    }
+
+    #[test]
+    fn transfer_encoding_bodies_get_a_typed_501() {
+        let err = parse("POST /v1/generate HTTP/1.1\r\n\
+                         Transfer-Encoding: chunked\r\n\r\n\
+                         5\r\nhello\r\n0\r\n\r\n")
+            .unwrap_err();
+        let he = err.downcast_ref::<HttpError>().expect("typed HttpError");
+        assert_eq!(he.status, 501);
+        assert!(he.message.contains("Transfer-Encoding"));
+        assert_eq!(Response::reason(501), "Not Implemented");
+    }
+
+    #[test]
+    fn duplicate_content_length_is_rejected() {
+        // conflicting values: a desync waiting to happen
+        let conflicting = "POST / HTTP/1.1\r\nContent-Length: 3\r\n\
+                           Content-Length: 5\r\n\r\nabcde";
+        let err = parse(conflicting).unwrap_err();
+        assert!(format!("{err:#}").contains("duplicate Content-Length"));
+        // even identical duplicates are refused (smuggling vector) and the
+        // refusal is a plain parse error → the generic 400 path
+        let identical = "POST / HTTP/1.1\r\nContent-Length: 3\r\n\
+                         Content-Length: 3\r\n\r\nabc";
+        let err = parse(identical).unwrap_err();
+        assert!(err.downcast_ref::<HttpError>().is_none());
     }
 
     #[test]

@@ -44,7 +44,7 @@ pub mod server;
 pub mod session;
 
 pub use batcher::DecodeBatcher;
-pub use http::{Request, Response};
+pub use http::{HttpError, Request, Response};
 pub use router::{generate_stream, handle, ApiError, Route, ServeInfo,
                  ServeLimits, ServeState, StreamOutcome, ROUTES};
 pub use server::{install_signal_handlers, shutdown_flag, Server};

@@ -266,11 +266,16 @@ fn inspect(state: &ServeState, _req: &Request) -> Result<Response, ApiError> {
 
 /// Validate a `/v1/generate` request and check its session out: everything
 /// up to (but not including) the first forward pass. Returns
-/// `(session id, checked-out session, prompt tokens, max_tokens)` — shared
-/// by the buffered and streaming generate paths, so both reject with
-/// identical statuses before any bytes of a streamed response commit.
+/// `(session id, checked-out session, prompt tokens, max_tokens, fresh)` —
+/// shared by the buffered and streaming generate paths, so both reject
+/// with identical statuses before any bytes of a streamed response commit.
+/// `fresh` is true when this request created the session: error paths that
+/// fire before the id reaches the client must `remove` a fresh session
+/// (the client can never continue or release an id it was never told, so
+/// handing it back would pin a store slot and its KV bytes forever) and
+/// `put` back a continuation (the client still holds that id).
 fn prepare_generate(state: &ServeState, req: &Request)
-    -> Result<(String, ServeSession, Vec<i32>, usize), ApiError> {
+    -> Result<(String, ServeSession, Vec<i32>, usize, bool), ApiError> {
     let body = req.json_body().map_err(|e| ApiError::bad_request(format!("{e:#}")))?;
     let prompt = body
         .get("prompt")
@@ -300,7 +305,7 @@ fn prepare_generate(state: &ServeState, req: &Request)
     // acquire a session: continuation checks the id out (exclusive), a
     // fresh request allocates KV buffers for the full context window —
     // refused with 429 when the store is wall-to-wall busy sessions
-    let (id, sess) = match body.get("session") {
+    let (id, sess, fresh) = match body.get("session") {
         Some(v) => {
             let id = v
                 .as_str()
@@ -315,12 +320,15 @@ fn prepare_generate(state: &ServeState, req: &Request)
                     format!("session '{id}' has a request in flight"),
                 ),
             })?;
-            (id.to_string(), sess)
+            (id.to_string(), sess, false)
         }
-        None => state
-            .sessions
-            .create(state.model.new_session(state.max_ctx))
-            .map_err(|e| ApiError::store_full(e.busy))?,
+        None => {
+            let (id, sess) = state
+                .sessions
+                .create(state.model.new_session(state.max_ctx))
+                .map_err(|e| ApiError::store_full(e.busy))?;
+            (id, sess, true)
+        }
     };
     // the cache must cover prompt + every generated token so a follow-up
     // request can continue exactly
@@ -330,10 +338,16 @@ fn prepare_generate(state: &ServeState, req: &Request)
             "context window full: {} cached + {} requested > max_ctx {}",
             sess.kv.len(), need, sess.kv.capacity(),
         );
-        state.sessions.put(&id, sess); // unchanged — hand it back
+        if fresh {
+            // the 422 body never carries the id, so the client cannot
+            // release this session — dropping it is the only non-leak
+            state.sessions.remove(&id);
+        } else {
+            state.sessions.put(&id, sess); // unchanged — hand it back
+        }
         return Err(ApiError::new(422, msg));
     }
-    Ok((id, sess, prompt_tokens, max_tokens))
+    Ok((id, sess, prompt_tokens, max_tokens, fresh))
 }
 
 /// Run a prepared generate request through the prefill path and the shared
@@ -391,7 +405,8 @@ fn decode_generate(state: &ServeState, id: &str, mut sess: ServeSession,
 /// batch; `batch_occupancy` in the response reports the peak number of
 /// sessions this request's ticks were fused with.
 fn generate(state: &ServeState, req: &Request) -> Result<Response, ApiError> {
-    let (id, sess, prompt_tokens, max_tokens) = prepare_generate(state, req)?;
+    let (id, sess, prompt_tokens, max_tokens, _fresh) =
+        prepare_generate(state, req)?;
     let (mut sess, generated, occupancy) =
         decode_generate(state, &id, sess, &prompt_tokens, max_tokens,
                         &mut |_| Ok(()))?;
@@ -431,7 +446,7 @@ pub struct StreamOutcome {
 /// after commitment terminates the stream with an `{"error":…}` line.
 pub fn generate_stream(state: &ServeState, req: &Request,
                        w: &mut dyn Write, keep_alive: bool) -> StreamOutcome {
-    let (id, sess, prompt_tokens, max_tokens) =
+    let (id, sess, prompt_tokens, max_tokens, fresh) =
         match prepare_generate(state, req) {
             Ok(prepared) => prepared,
             Err(e) => {
@@ -445,8 +460,14 @@ pub fn generate_stream(state: &ServeState, req: &Request,
             }
         };
     if let Err(e) = write_stream_head(&mut *w, keep_alive) {
-        // client went away before the head: nothing decoded, keep session
-        state.sessions.put(&id, sess);
+        // client went away before the head: nothing decoded. A
+        // continuation is unchanged — hand it back; a fresh session's id
+        // never reached the client, so keeping it would leak the slot
+        if fresh {
+            state.sessions.remove(&id);
+        } else {
+            state.sessions.put(&id, sess);
+        }
         let _ = e; // socket is dead; nowhere to report
         return StreamOutcome { status: 500, session: id, tokens: 0, batch: 0 };
     }
@@ -700,6 +721,84 @@ mod tests {
         let resp = handle(&st, &req("POST", "/v1/generate",
                                     r#"{"prompt":"ef","max_tokens":2}"#));
         assert_eq!(resp.status, 200);
+    }
+
+    #[test]
+    fn context_window_422_drops_the_fresh_session() {
+        let st = state();
+        assert_eq!(st.sessions.len(), 0);
+        // fresh session, request larger than the window: the error body
+        // never carries the id, so the slot must not stay behind
+        let resp = handle(&st, &req("POST", "/v1/generate",
+                                    r#"{"prompt":"a","max_tokens":9999}"#));
+        assert_eq!(resp.status, 422);
+        assert!(!String::from_utf8_lossy(&resp.body).contains("session"));
+        assert_eq!(st.sessions.len(), 0, "fresh session leaked on 422");
+        assert_eq!(st.sessions.kv_bytes(), 0, "KV bytes leaked on 422");
+        // the streaming create path rejects identically, no leak either
+        let mut out = Vec::new();
+        let outcome = generate_stream(
+            &st, &req("POST", "/v1/generate",
+                      r#"{"prompt":"a","max_tokens":9999}"#),
+            &mut out, false);
+        assert_eq!(outcome.status, 422);
+        assert_eq!(st.sessions.len(), 0, "fresh session leaked on stream 422");
+        // a continuation hitting the same 422 keeps its session: the
+        // client holds the id and can retry with a smaller request
+        let resp = handle(&st, &req("POST", "/v1/generate",
+                                    r#"{"prompt":"ab","max_tokens":2}"#));
+        assert_eq!(resp.status, 200);
+        let sid = json_of(&resp)
+            .expect("session").unwrap().as_str().unwrap().to_string();
+        let over = format!(
+            r#"{{"prompt":"a","max_tokens":9999,"session":"{sid}"}}"#);
+        assert_eq!(handle(&st, &req("POST", "/v1/generate", &over)).status,
+                   422);
+        assert_eq!(st.sessions.len(), 1, "continuation must survive its 422");
+        // and it went back idle, not stuck busy
+        let cont = format!(r#"{{"prompt":"c","max_tokens":1,"session":"{sid}"}}"#);
+        assert_eq!(handle(&st, &req("POST", "/v1/generate", &cont)).status,
+                   200);
+    }
+
+    /// A sink whose first write fails — the "client vanished before the
+    /// stream head" case.
+    struct FailWriter;
+
+    impl Write for FailWriter {
+        fn write(&mut self, _: &[u8]) -> std::io::Result<usize> {
+            Err(std::io::Error::new(std::io::ErrorKind::BrokenPipe, "gone"))
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn stream_head_failure_drops_fresh_but_keeps_continuations() {
+        let st = state();
+        let outcome = generate_stream(
+            &st, &req("POST", "/v1/generate",
+                      r#"{"prompt":"ab","max_tokens":2}"#),
+            &mut FailWriter, false);
+        assert_eq!(outcome.status, 500);
+        assert_eq!(st.sessions.len(), 0, "fresh session leaked on dead socket");
+        assert_eq!(st.sessions.kv_bytes(), 0);
+        // a continuation whose head write fails keeps its unchanged session
+        let resp = handle(&st, &req("POST", "/v1/generate",
+                                    r#"{"prompt":"ab","max_tokens":2}"#));
+        assert_eq!(resp.status, 200);
+        let sid = json_of(&resp)
+            .expect("session").unwrap().as_str().unwrap().to_string();
+        let cont = format!(r#"{{"prompt":"c","max_tokens":1,"session":"{sid}"}}"#);
+        let outcome = generate_stream(&st, &req("POST", "/v1/generate", &cont),
+                                      &mut FailWriter, false);
+        assert_eq!(outcome.status, 500);
+        assert_eq!(outcome.session, sid);
+        assert_eq!(st.sessions.len(), 1);
+        // the handed-back session is idle and continues normally
+        assert_eq!(handle(&st, &req("POST", "/v1/generate", &cont)).status,
+                   200);
     }
 
     #[test]

@@ -44,7 +44,7 @@ use crate::obs::{metrics, trace};
 use crate::util::json::Json;
 use crate::util::parallel::with_thread_budget;
 
-use super::http::{read_request_opt, Response};
+use super::http::{read_request_opt, HttpError, Response};
 use super::router::{generate_stream, handle, route_label, ServeState};
 
 /// How long the accept loop sleeps when no connection is pending — the
@@ -226,7 +226,9 @@ fn observe_request(path: &str, status: u16, started: Instant) {
 
 /// One connection: parse → route → respond → log, repeated while the
 /// client keeps the connection alive. Returns the number of requests
-/// served. Parse failures answer 400 and close; a clean close (or an idle
+/// served. Parse failures answer 400 (or the typed [`HttpError`] status —
+/// 501 for `Transfer-Encoding` request bodies) and close; a clean close
+/// (or an idle
 /// keep-alive timeout) between requests ends the loop silently; nothing
 /// here panics on client input. Streamed generates (`?stream=true`) write
 /// the chunked response themselves, straight onto the socket.
@@ -249,13 +251,19 @@ fn handle_connection(state: &ServeState, stream: TcpStream,
             Ok(Some(req)) => req,
             Ok(None) => break, // clean close or idle timeout between requests
             Err(e) => {
+                // refused protocol features carry their own status (501
+                // for Transfer-Encoding bodies); plain syntax errors → 400
+                let status = e
+                    .downcast_ref::<HttpError>()
+                    .map(|he| he.status)
+                    .unwrap_or(400);
                 let body =
                     Json::obj(vec![("error", Json::Str(format!("{e:#}")))]);
-                let resp = Response::json(400, &body);
+                let resp = Response::json(status, &body);
                 let _ = resp.write_to(&mut writer);
-                log_request(state.log_json, &trace_id, "-", "-", 400, "-", 0,
-                            0, started);
-                observe_request("-", 400, started);
+                log_request(state.log_json, &trace_id, "-", "-", status, "-",
+                            0, 0, started);
+                observe_request("-", status, started);
                 served += 1;
                 break;
             }

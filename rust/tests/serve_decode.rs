@@ -653,3 +653,56 @@ fn streamed_generate_emits_exact_tokens_over_chunked_wire() {
     // the streamed session was put back just like a buffered one
     assert_eq!(server.state().sessions.len(), 1);
 }
+
+#[test]
+fn unsupported_body_framing_closes_instead_of_desyncing_keep_alive() {
+    let cfg = lm_cfg();
+    let ck = awp::trainer::init_checkpoint(&cfg, 36);
+    let server =
+        Server::new(lm_state(&ck, 64, 4, 4), Executor::with_workers(1));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let handle = scope.spawn(|| server.serve(listener, &stop).unwrap());
+        // a chunked request body: the pre-fix parser ignored the
+        // Transfer-Encoding header, took the body length as 0 and then
+        // read the chunk bytes as the *next* request — the smuggled
+        // "GET /v1/inspect" below would have been answered 200. The fix
+        // refuses the framing outright: typed 501, connection closed,
+        // smuggled bytes never parsed.
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        write!(stream,
+               "POST /v1/generate HTTP/1.1\r\nHost: t\r\n\
+                Transfer-Encoding: chunked\r\n\r\n\
+                2\r\n{{}}\r\n0\r\n\r\n\
+                GET /v1/inspect HTTP/1.1\r\nHost: t\r\n\r\n")
+            .unwrap();
+        let (status, head, body) = read_response(&mut reader);
+        assert_eq!(status, 501, "{body:?}");
+        assert!(body.contains("Transfer-Encoding"), "{body:?}");
+        assert!(head.contains("Connection: close"), "{head:?}");
+        let mut rest = String::new();
+        stream.set_read_timeout(Some(std::time::Duration::from_secs(5)))
+            .unwrap();
+        // EOF, or a reset because the server closed on unread smuggled
+        // bytes — either way nothing more was answered
+        let _ = reader.read_to_string(&mut rest);
+        assert!(rest.is_empty(), "smuggled request was answered: {rest:?}");
+        // conflicting Content-Length headers: same desync family, 400
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        write!(stream,
+               "POST /v1/perplexity HTTP/1.1\r\nHost: t\r\n\
+                Content-Length: 12\r\nContent-Length: 2\r\n\r\n{{\"text\":\"a\"}}")
+            .unwrap();
+        let (status, head, body) = read_response(&mut reader);
+        assert_eq!(status, 400, "{body:?}");
+        assert!(body.contains("Content-Length"), "{body:?}");
+        assert!(head.contains("Connection: close"), "{head:?}");
+        stop.store(true, Ordering::SeqCst);
+        // both refused requests were logged as served responses
+        assert_eq!(handle.join().unwrap(), 2);
+    });
+}
